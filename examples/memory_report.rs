@@ -1,0 +1,72 @@
+//! Regenerate the paper's memory exhibits from the analytic model:
+//! Tables 8–12 grid, Figure 6 composition/pies, and the Appendix-B
+//! closed form — without touching a GPU.
+//!
+//! ```bash
+//! cargo run --release --example memory_report
+//! cargo run --release --example memory_report -- --model llama-7b --batch 1
+//! ```
+
+use hift::cli::Args;
+use hift::memmodel::{account, appendix_b_ratio, by_name, zoo, Dtype, Method, Workload, GIB, MIB};
+use hift::optim::OptimKind;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let w = Workload {
+        batch: args.get_num("batch").unwrap_or(8.0) as usize,
+        seq: args.get_num("seq").unwrap_or(512.0) as usize,
+    };
+    let models: Vec<String> = match args.get("model") {
+        Some(m) => vec![m.to_string()],
+        None => vec!["roberta-base".into(), "roberta-large".into(), "gpt2-large".into(),
+                     "gpt-neo-2.7b".into(), "llama-7b".into()],
+    };
+
+    for name in &models {
+        let a = by_name(name).expect("unknown model");
+        println!("\n### {name} — b={} s={} ###", w.batch, w.seq);
+        println!("{:<10} {:<8} {:<5} {:>9} {:>11} {:>10} {:>10} {:>9} {:>9} {:>9}",
+                 "optim", "dtype", "ftype", "#Train(M)", "#Para(MiB)", "#Gra(MiB)",
+                 "#Sta(MiB)", "PGS(GiB)", "Res(GiB)", "Tot(GiB)");
+        for opt in OptimKind::ALL {
+            for (dt, meth) in [
+                (Dtype::Fp32, Method::Fpft),
+                (Dtype::Fp32, Method::Hift { m: 1 }),
+                (Dtype::Mixed, Method::Fpft),
+                (Dtype::Mixed, Method::Hift { m: 1 }),
+                (Dtype::MixedHi, Method::Hift { m: 1 }),
+            ] {
+                let r = account(&a, opt, dt, meth, w);
+                println!("{:<10} {:<8} {:<5} {:>9.2} {:>11.2} {:>10.2} {:>10.2} {:>9.2} {:>9.2} {:>9.2}",
+                         opt.name(), dt.name(),
+                         if matches!(meth, Method::Fpft) { "FPFT" } else { "HiFT" },
+                         r.trainable as f64 / 1e6, r.para / MIB, r.gra / MIB, r.sta / MIB,
+                         r.pgs / GIB, r.residual / GIB, r.total / GIB);
+            }
+        }
+    }
+
+    // Figure 6(e): peak-trainable fraction curve.
+    println!("\n### Figure 6(e): peak trainable fraction (m=1) ###");
+    for a in zoo() {
+        println!("  {:<14} {:>9.1}M total  {:>7.2}M peak  {:>6.2}%",
+                 a.name, a.total_params() as f64 / 1e6, a.peak_group_params(1) as f64 / 1e6,
+                 a.peak_group_params(1) as f64 / a.total_params() as f64 * 100.0);
+    }
+
+    // Headline: 7B on 24G.
+    let llama = by_name("llama-7b").unwrap();
+    let r = account(&llama, OptimKind::AdamW, Dtype::MixedHi, Method::Hift { m: 1 },
+                    Workload { batch: 1, seq: 512 });
+    println!("\nheadline: LLaMA-7B, HiFT + adapted mixed precision, batch 1: {:.2} GiB (fits 24G: {})",
+             r.total / GIB, r.total / GIB < 24.0);
+
+    println!("\nAppendix B — ζ_hift/ζ_fpft = (k+3)/4k:");
+    for k in [2usize, 4, 8, 14, 26, 34] {
+        println!("  k={k:<3} ratio={:.3} (saves {:.1}%)", appendix_b_ratio(k),
+                 (1.0 - appendix_b_ratio(k)) * 100.0);
+    }
+    Ok(())
+}

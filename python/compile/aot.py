@@ -1,0 +1,195 @@
+"""AOT compile path: lower the L2 model to HLO-text artifacts for Rust.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the
+training path.  For a model preset this emits, under
+``artifacts/<preset>/``:
+
+  manifest.json      everything Rust needs: config, parameter specs
+                     (name/shape/unit/offset), artifact inventory with
+                     exact input orderings, VMEM kernel report.
+  params.bin         initial base parameters, concatenated f32 LE.
+  adapters_<v>.bin   initial adapter parameters per PEFT variant.
+  fwd_<variant>.hlo.txt          (loss, ncorrect)
+  grad_<variant>_u<i>.hlo.txt    (loss, ncorrect, grads of unit i)   [base]
+  grad_<variant>_adapter.hlo.txt (loss, ncorrect, grads of adapters) [peft]
+  grad_base_bitfit.hlo.txt       (loss, ncorrect, grads of bias/LN params)
+  grad_base_full.hlo.txt         (…, grads of everything)            [FPFT]
+
+Interchange is HLO **text**, never ``.serialize()``: jax>=0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.flash_attention import vmem_estimate
+
+VARIANTS = ("base", "lora", "ia3", "prefix")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps a single tuple literal)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, specs: Sequence[M.ParamSpec], cfg: M.ModelConfig) -> str:
+    param_structs = [jax.ShapeDtypeStruct(sp.shape, np.float32) for sp in specs]
+    batch = M.example_batch(cfg)
+    lowered = jax.jit(fn).lower(*param_structs, *batch)
+    return to_hlo_text(lowered)
+
+
+def write_bin(path: str, arrays: Sequence[jax.Array]) -> List[int]:
+    """Concatenate f32 arrays little-endian; return per-tensor byte offsets."""
+    offsets, off = [], 0
+    with open(path, "wb") as f:
+        for a in arrays:
+            buf = np.asarray(a, dtype="<f4").tobytes()
+            offsets.append(off)
+            f.write(buf)
+            off += len(buf)
+    return offsets
+
+
+def spec_json(sp: M.ParamSpec, offset: int) -> dict:
+    return {
+        "name": sp.name,
+        "shape": list(sp.shape),
+        "unit": sp.unit,
+        "bitfit": sp.bitfit,
+        "offset": offset,
+        "size": sp.size,
+    }
+
+
+def build_preset(preset: str, out_root: str, kernels: str, variants: Sequence[str],
+                 seed: int, verbose: bool = True) -> dict:
+    cfg = M.PRESETS[preset]
+    use_pallas = kernels == "pallas"
+    out_dir = os.path.join(out_root, preset)
+    os.makedirs(out_dir, exist_ok=True)
+
+    base_specs = M.param_specs(cfg)
+    base_params = M.init_params(cfg, base_specs, seed=seed)
+    base_offsets = write_bin(os.path.join(out_dir, "params.bin"), base_params)
+
+    artifacts: List[dict] = []
+
+    def emit(name: str, text: str, inputs: List[str], outputs: List[str]):
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        artifacts.append({"name": name, "path": path, "inputs": inputs, "outputs": outputs})
+        if verbose:
+            print(f"  wrote {path} ({len(text)} chars)", flush=True)
+
+    manifest: Dict = {
+        "schema": 1,
+        "preset": preset,
+        "kernels": kernels,
+        "seed": seed,
+        "config": cfg.to_json_dict(),
+        "n_units": cfg.n_units,
+        "variants": {},
+        "artifacts": artifacts,
+        "vmem_report": vmem_estimate(cfg.batch, cfg.n_heads,
+                                     cfg.seq_len + cfg.n_prefix, cfg.d_head),
+    }
+
+    batch_inputs = ["tokens", "targets", "weights"]
+    for variant in variants:
+        t0 = time.time()
+        specs, fwd_fn, grad_factory = M.make_fns(cfg, variant, use_pallas)
+        names = [sp.name for sp in specs]
+        adapters = specs[len(base_specs):]
+        if variant != "base":
+            ad_params = M.init_params(cfg, adapters, seed=seed + 1)
+            ad_offsets = write_bin(os.path.join(out_dir, f"adapters_{variant}.bin"), ad_params)
+        else:
+            ad_offsets = []
+
+        manifest["variants"][variant] = {
+            "params": [spec_json(sp, base_offsets[i]) for i, sp in enumerate(base_specs)]
+            + [spec_json(sp, ad_offsets[i]) for i, sp in enumerate(adapters)],
+            "n_base_params": len(base_specs),
+        }
+
+        emit(f"fwd_{variant}", lower_fn(fwd_fn, specs, cfg),
+             names + batch_inputs, ["loss", "ncorrect"])
+
+        if variant == "base":
+            # One grad artifact per layer unit (HiFT composes these), plus
+            # the FPFT full gradient and the BitFit subset.
+            for u in range(cfg.n_units):
+                idxs = [i for i, sp in enumerate(specs) if sp.unit == u]
+                g = grad_factory(idxs)
+                emit(f"grad_base_u{u}", lower_fn(g, specs, cfg), names + batch_inputs,
+                     ["loss", "ncorrect"] + [names[i] for i in idxs])
+            full = list(range(len(specs)))
+            emit("grad_base_full", lower_fn(grad_factory(full), specs, cfg),
+                 names + batch_inputs, ["loss", "ncorrect"] + names)
+            bitf = [i for i, sp in enumerate(specs) if sp.bitfit]
+            emit("grad_base_bitfit", lower_fn(grad_factory(bitf), specs, cfg),
+                 names + batch_inputs, ["loss", "ncorrect"] + [names[i] for i in bitf])
+        else:
+            idxs = [i for i, sp in enumerate(specs) if sp.unit == -1]
+            emit(f"grad_{variant}_adapter", lower_fn(grad_factory(idxs), specs, cfg),
+                 names + batch_inputs, ["loss", "ncorrect"] + [names[i] for i in idxs])
+        if verbose:
+            print(f"  variant {variant}: {time.time()-t0:.1f}s", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny,small", help="comma-separated preset names")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--kernels", default="pallas", choices=("pallas", "ref"))
+    ap.add_argument("--variants", default="base,lora,ia3,prefix")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--report", action="store_true", help="print VMEM kernel report only")
+    args = ap.parse_args(argv)
+
+    presets = [p.strip() for p in args.preset.split(",") if p.strip()]
+    variants = [v.strip() for v in args.variants.split(",") if v.strip()]
+    for p in presets:
+        if p not in M.PRESETS:
+            print(f"unknown preset {p!r}; have {sorted(M.PRESETS)}", file=sys.stderr)
+            return 2
+    if args.report:
+        for p in presets:
+            cfg = M.PRESETS[p]
+            print(p, vmem_estimate(cfg.batch, cfg.n_heads,
+                                   cfg.seq_len + cfg.n_prefix, cfg.d_head))
+        return 0
+    for p in presets:
+        print(f"[aot] building preset {p} (kernels={args.kernels})", flush=True)
+        t0 = time.time()
+        build_preset(p, args.out_dir, args.kernels, variants, args.seed)
+        print(f"[aot] preset {p} done in {time.time()-t0:.1f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from . import ref  # noqa: F401
+from .flash_attention import attention, vmem_estimate  # noqa: F401
+from .fused_ce import softmax_xent  # noqa: F401
+from .layernorm import layernorm  # noqa: F401

@@ -1,0 +1,152 @@
+"""L1 Pallas kernel: tiled (flash-style) causal attention.
+
+TPU rethink of the GPU training hot-spot (DESIGN.md §Hardware-Adaptation):
+instead of CUDA threadblocks staging tiles through shared memory, the
+HBM->VMEM schedule is expressed with ``BlockSpec``s — the grid walks
+``(batch*heads, q-blocks)`` and each program streams the K/V sequence in
+``blk_kv``-sized VMEM tiles with an online-softmax accumulator, so the
+``[S, S]`` score matrix is never materialized.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO through the Pallas
+interpreter.  Real-TPU VMEM/MXU characteristics are *estimated* from the
+block shapes (``vmem_estimate``) and recorded in DESIGN.md, not measured.
+
+The backward pass is supplied by ``jax.custom_vjp`` against the exact
+reference math (``ref.attention_ref``): the recomputation-based flash
+backward adds nothing numerically and the interpreter gives it no speed
+advantage, while keeping the fwd artifact Pallas-tiled end to end.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_kv: int, causal: bool, q_offset_blocks: int):
+    """One grid program: attend one q-block against all kv-blocks.
+
+    Refs (VMEM views selected by the BlockSpecs below):
+      q_ref: [1, blk_q, dh]   the active query tile
+      k_ref: [1, S, dh]       full key sequence for this (batch, head)
+      v_ref: [1, S, dh]       full value sequence
+      o_ref: [1, blk_q, dh]   output tile
+    """
+    blk_q, dh = q_ref.shape[1], q_ref.shape[2]
+    s = k_ref.shape[1]
+    n_kv = s // blk_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [blk_q, dh]
+    qi = pl.program_id(1)
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (0, pl.ds(j * blk_kv, blk_kv), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.ds(j * blk_kv, blk_kv), slice(None))).astype(jnp.float32)
+        logits = q @ k.T  # [blk_q, blk_kv] — MXU tile on real hardware
+        if causal:
+            kv_pos = j * blk_kv + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1)
+            logits = jnp.where(q_pos >= kv_pos, logits, NEG_INF)
+        # Online softmax: fold this tile into the running (max, sum, acc).
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((blk_q, dh), dtype=jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((blk_q,), dtype=jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_fwd_pallas(q, k, v, *, blk_q: int, blk_kv: int, causal: bool):
+    b, h, s, dh = q.shape
+    bh = b * h
+    qf = q.reshape(bh, s, dh)
+    kf = k.reshape(bh, s, dh)
+    vf = v.reshape(bh, s, dh)
+    n_q = s // blk_q
+    kernel = functools.partial(
+        _attn_kernel, blk_kv=blk_kv, causal=causal, q_offset_blocks=0
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_q),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)
+
+
+def pick_blocks(s: int, dh: int) -> Tuple[int, int]:
+    """Choose (blk_q, blk_kv) dividing S, sized for a ~128-lane VMEM tile."""
+
+    def best(target: int) -> int:
+        cand = [b for b in (128, 64, 32, 16, 8, 4, 2, 1) if s % b == 0 and b <= target]
+        return cand[0] if cand else 1
+
+    return best(128), best(128)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Flash-style causal attention; Pallas forward, reference-math backward."""
+    blk_q, blk_kv = pick_blocks(q.shape[2], q.shape[3])
+    return _attention_fwd_pallas(q, k, v, blk_q=blk_q, blk_kv=blk_kv, causal=causal)
+
+
+def _attention_vjp_fwd(q, k, v, causal):
+    out = attention(q, k, v, causal)
+    return out, (q, k, v)
+
+
+def _attention_vjp_bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)
+
+
+def vmem_estimate(b: int, h: int, s: int, dh: int, dtype_bytes: int = 4) -> dict:
+    """Static VMEM-footprint estimate for one grid program (DESIGN.md §Perf).
+
+    Returns bytes held in VMEM simultaneously: q tile, one kv tile pair,
+    accumulator + softmax stats, output tile.  Used to verify the block
+    choice fits a 16 MiB TPU VMEM with double-buffering headroom.
+    """
+    blk_q, blk_kv = pick_blocks(s, dh)
+    q_tile = blk_q * dh * dtype_bytes
+    kv_tile = 2 * blk_kv * dh * dtype_bytes
+    acc = blk_q * dh * 4 + 2 * blk_q * 4  # f32 accumulator + m/l stats
+    out = blk_q * dh * dtype_bytes
+    total = q_tile + 2 * kv_tile + acc + out  # x2 kv: double buffering
+    return {
+        "blk_q": blk_q,
+        "blk_kv": blk_kv,
+        "bytes_per_program": total,
+        "fits_16MiB_vmem": total < 16 * 1024 * 1024 // 2,
+        "mxu_tile_aligned": blk_q % 128 == 0 and dh % 128 == 0,
+    }

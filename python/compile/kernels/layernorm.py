@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: LayerNorm over the last axis.
+
+Grid walks row-blocks of the flattened ``[N, D]`` input; each program
+normalizes its rows in one VMEM tile (mean/variance in f32 regardless of
+input dtype).  Forward is Pallas; backward comes from ``jax.custom_vjp``
+against the reference math so grad artifacts stay interpreter-friendly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ln_kernel(x_ref, scale_ref, bias_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [blk_n, D]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * inv * scale_ref[...].astype(jnp.float32) + bias_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pick_blk(n: int) -> int:
+    for b in (128, 64, 32, 16, 8, 4, 2, 1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _ln_fwd_pallas(x2d, scale, bias, eps: float):
+    n, d = x2d.shape
+    blk_n = _pick_blk(n)
+    import functools
+
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x2d.dtype),
+        interpret=True,
+    )(x2d, scale, bias)
+
+
+@jax.custom_vjp
+def layernorm(x, scale, bias):
+    """LayerNorm over the last axis; Pallas forward, reference backward."""
+    shp = x.shape
+    y = _ln_fwd_pallas(x.reshape(-1, shp[-1]), scale, bias, 1e-5)
+    return y.reshape(shp)
+
+
+def _ln_vjp_fwd(x, scale, bias):
+    return layernorm(x, scale, bias), (x, scale, bias)
+
+
+def _ln_vjp_bwd(res, g):
+    x, scale, bias = res
+    _, vjp = jax.vjp(lambda x_, s_, b_: ref.layernorm_ref(x_, s_, b_), x, scale, bias)
+    return vjp(g)
+
+
+layernorm.defvjp(_ln_vjp_fwd, _ln_vjp_bwd)

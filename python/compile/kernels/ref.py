@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness gate).
+
+Every Pallas kernel in this package has an exact mathematical twin here,
+written with plain ``jax.numpy`` ops only.  ``python/tests`` sweeps shapes
+and dtypes asserting ``assert_allclose(kernel, ref)``.  The L2 model can be
+lowered against either implementation (``--kernels=ref|pallas``) so the
+numerical agreement of the two paths is itself testable end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative used for causal masking (f32-safe)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Scaled dot-product attention, optionally causal.
+
+    Args:
+      q, k, v: ``[B, H, S, Dh]``.
+      causal: apply lower-triangular mask.
+
+    Returns:
+      ``[B, H, S, Dh]`` attention output.
+    """
+    *_, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def layernorm_ref(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis. x: [..., D]; scale/bias: [D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * scale + bias
+
+
+def softmax_xent_ref(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-row softmax cross-entropy.
+
+    Args:
+      logits: ``[N, V]``.
+      targets: ``[N]`` int32 class ids.
+
+    Returns:
+      ``[N]`` negative log-likelihood per row.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return logz - gold
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (matches the kernel's polynomial)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))

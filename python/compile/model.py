@@ -1,0 +1,329 @@
+"""L2: the JAX transformer LM whose fwd/bwd HiFT schedules (build-time only).
+
+A decoder-only, pre-LN transformer with learned positions and an untied LM
+head.  Attention / layernorm / cross-entropy call the L1 Pallas kernels
+(``--kernels=pallas``) or their pure-jnp oracles (``--kernels=ref``) — the
+two lowerings must agree numerically, which ``python/tests`` asserts.
+
+Parameters are an ordered flat list of named f32 tensors partitioned into
+**layer units** exactly as the paper prescribes (§F "Implementation
+Details"): all embeddings are one unit, each transformer block is one unit,
+and the head (final LN + LM head) is one unit.  ``aot.py`` lowers one
+gradient artifact *per unit* (``jax.grad`` w.r.t. that subset only, so XLA
+truncates backprop below the deepest active layer — the §4.3 speed effect);
+the Rust coordinator composes units into groups of ``m`` at run time.
+
+PEFT baselines the paper compares against are separate *variants* of the
+same graph with extra adapter inputs:
+  - ``lora``:   rank-r updates on W_q / W_v   (Hu et al., 2022)
+  - ``ia3``:    learned rescaling of K / V / FFN hidden (Liu et al., 2022)
+  - ``prefix``: trainable virtual-token embeddings   (Lester et al., 2021)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref as kref
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + batch geometry (baked into each artifact)."""
+
+    name: str = "tiny"
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 128
+    seq_len: int = 32
+    batch: int = 4
+    # PEFT variant knobs
+    lora_rank: int = 4
+    lora_alpha: float = 8.0
+    n_prefix: int = 16
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_units(self) -> int:
+        """Layer units: embeddings + each block + head (paper §F)."""
+        return self.n_layers + 2
+
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(name="tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                        d_ff=64, seq_len=16, batch=4, lora_rank=2, n_prefix=4),
+    "small": ModelConfig(name="small", vocab=256, d_model=128, n_layers=4, n_heads=4,
+                         d_ff=256, seq_len=64, batch=8, lora_rank=4, n_prefix=16),
+    "base": ModelConfig(name="base", vocab=512, d_model=256, n_layers=6, n_heads=8,
+                        d_ff=1024, seq_len=64, batch=8, lora_rank=8, n_prefix=16),
+    "e2e": ModelConfig(name="e2e", vocab=4096, d_model=512, n_layers=8, n_heads=8,
+                       d_ff=2048, seq_len=64, batch=8, lora_rank=8, n_prefix=16),
+    "e2e100m": ModelConfig(name="e2e100m", vocab=32768, d_model=768, n_layers=12,
+                           n_heads=12, d_ff=3072, seq_len=128, batch=4,
+                           lora_rank=8, n_prefix=16),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter specification
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    unit: int          # layer-unit index (0=embed, 1..L=blocks, L+1=head)
+    init: str          # "normal" | "zeros" | "ones"
+    bitfit: bool = False  # updated by the BitFit baseline (biases + LN params)
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Ordered flat parameter list; order == artifact input order."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    out: List[ParamSpec] = [
+        ParamSpec("tok_emb", (v, d), 0, "normal"),
+        ParamSpec("pos_emb", (s + cfg.n_prefix, d), 0, "normal"),
+    ]
+    for i in range(cfg.n_layers):
+        u = i + 1
+        p = f"l{i}."
+        out += [
+            ParamSpec(p + "ln1.scale", (d,), u, "ones", bitfit=True),
+            ParamSpec(p + "ln1.bias", (d,), u, "zeros", bitfit=True),
+            ParamSpec(p + "attn.wq", (d, d), u, "normal"),
+            ParamSpec(p + "attn.bq", (d,), u, "zeros", bitfit=True),
+            ParamSpec(p + "attn.wk", (d, d), u, "normal"),
+            ParamSpec(p + "attn.bk", (d,), u, "zeros", bitfit=True),
+            ParamSpec(p + "attn.wv", (d, d), u, "normal"),
+            ParamSpec(p + "attn.bv", (d,), u, "zeros", bitfit=True),
+            ParamSpec(p + "attn.wo", (d, d), u, "normal"),
+            ParamSpec(p + "attn.bo", (d,), u, "zeros", bitfit=True),
+            ParamSpec(p + "ln2.scale", (d,), u, "ones", bitfit=True),
+            ParamSpec(p + "ln2.bias", (d,), u, "zeros", bitfit=True),
+            ParamSpec(p + "ffn.w1", (d, f), u, "normal"),
+            ParamSpec(p + "ffn.b1", (f,), u, "zeros", bitfit=True),
+            ParamSpec(p + "ffn.w2", (f, d), u, "normal"),
+            ParamSpec(p + "ffn.b2", (d,), u, "zeros", bitfit=True),
+        ]
+    u = cfg.n_layers + 1
+    out += [
+        ParamSpec("ln_f.scale", (d,), u, "ones", bitfit=True),
+        ParamSpec("ln_f.bias", (d,), u, "zeros", bitfit=True),
+        ParamSpec("head.w", (d, v), u, "normal"),
+        ParamSpec("head.b", (v,), u, "zeros", bitfit=True),
+    ]
+    return out
+
+
+def adapter_specs(cfg: ModelConfig, variant: str) -> List[ParamSpec]:
+    """Extra trainable inputs for PEFT variants (unit = -1: 'adapter')."""
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.lora_rank
+    out: List[ParamSpec] = []
+    if variant == "lora":
+        for i in range(cfg.n_layers):
+            p = f"l{i}.lora."
+            out += [
+                ParamSpec(p + "aq", (d, r), -1, "normal"),
+                ParamSpec(p + "bq", (r, d), -1, "zeros"),
+                ParamSpec(p + "av", (d, r), -1, "normal"),
+                ParamSpec(p + "bv", (r, d), -1, "zeros"),
+            ]
+    elif variant == "ia3":
+        for i in range(cfg.n_layers):
+            p = f"l{i}.ia3."
+            out += [
+                ParamSpec(p + "lk", (d,), -1, "ones"),
+                ParamSpec(p + "lv", (d,), -1, "ones"),
+                ParamSpec(p + "lff", (f,), -1, "ones"),
+            ]
+    elif variant == "prefix":
+        out.append(ParamSpec("prefix.emb", (cfg.n_prefix, d), -1, "normal"))
+    elif variant == "base":
+        pass
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return out
+
+
+def init_params(cfg: ModelConfig, specs: Sequence[ParamSpec], seed: int = 0) -> List[Array]:
+    """Deterministic init (fan-in-scaled normal / zeros / ones)."""
+    key = jax.random.PRNGKey(seed)
+    out: List[Array] = []
+    for i, sp in enumerate(specs):
+        if sp.init == "zeros":
+            out.append(jnp.zeros(sp.shape, jnp.float32))
+        elif sp.init == "ones":
+            out.append(jnp.ones(sp.shape, jnp.float32))
+        else:
+            sub = jax.random.fold_in(key, i)
+            fan_in = sp.shape[0] if len(sp.shape) > 1 else sp.shape[-1]
+            std = 0.02 if "emb" in sp.name else (1.0 / jnp.sqrt(fan_in))
+            out.append(std * jax.random.normal(sub, sp.shape, jnp.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _ops(use_pallas: bool):
+    if use_pallas:
+        return kernels.attention, kernels.layernorm, kernels.softmax_xent, kref.gelu_ref
+    return (
+        lambda q, k, v, causal=True: kref.attention_ref(q, k, v, causal=causal),
+        kref.layernorm_ref,
+        kref.softmax_xent_ref,
+        kref.gelu_ref,
+    )
+
+
+def forward(
+    cfg: ModelConfig,
+    variant: str,
+    params: Dict[str, Array],
+    tokens: Array,      # [B, S] int32
+    targets: Array,     # [B, S] int32 (already shifted by the data pipeline)
+    weights: Array,     # [B, S] f32 loss mask
+    use_pallas: bool = True,
+) -> Tuple[Array, Array]:
+    """Returns (mean masked loss, masked #correct) — one artifact serves
+    training (loss, grads), evaluation (loss + accuracy) and MeZO (loss)."""
+    attention, layernorm, softmax_xent, gelu = _ops(use_pallas)
+    b, s = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None, :, :]
+    n_pre = 0
+    if variant == "prefix":
+        n_pre = cfg.n_prefix
+        pre = params["prefix.emb"] + params["pos_emb"][s : s + n_pre]
+        x = jnp.concatenate([jnp.broadcast_to(pre[None], (b, n_pre, d)), x], axis=1)
+    t = s + n_pre  # total sequence length seen by the blocks
+
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        hx = layernorm(x, params[p + "ln1.scale"], params[p + "ln1.bias"])
+        wq, wv = params[p + "attn.wq"], params[p + "attn.wv"]
+        if variant == "lora":
+            sc = cfg.lora_alpha / cfg.lora_rank
+            wq = wq + sc * (params[p + "lora.aq"] @ params[p + "lora.bq"])
+            wv = wv + sc * (params[p + "lora.av"] @ params[p + "lora.bv"])
+        q = hx @ wq + params[p + "attn.bq"]
+        k = hx @ params[p + "attn.wk"] + params[p + "attn.bk"]
+        v = hx @ wv + params[p + "attn.bv"]
+        if variant == "ia3":
+            k = k * params[p + "ia3.lk"]
+            v = v * params[p + "ia3.lv"]
+        # [B, T, D] -> [B, H, T, Dh]
+        q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        o = attention(q, k, v, True)
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+        x = x + o @ params[p + "attn.wo"] + params[p + "attn.bo"]
+        hx = layernorm(x, params[p + "ln2.scale"], params[p + "ln2.bias"])
+        mid = gelu(hx @ params[p + "ffn.w1"] + params[p + "ffn.b1"])
+        if variant == "ia3":
+            mid = mid * params[p + "ia3.lff"]
+        x = x + mid @ params[p + "ffn.w2"] + params[p + "ffn.b2"]
+
+    hx = layernorm(x, params["ln_f.scale"], params["ln_f.bias"])
+    logits = hx @ params["head.w"] + params["head.b"]  # [B, T, V]
+    if n_pre:
+        logits = logits[:, n_pre:, :]
+
+    flat_logits = logits.reshape(b * s, cfg.vocab)
+    flat_tgt = targets.reshape(b * s).astype(jnp.int32)
+    flat_w = weights.reshape(b * s)
+    nll = softmax_xent(flat_logits, flat_tgt)
+    denom = jnp.maximum(jnp.sum(flat_w), 1e-6)
+    loss = jnp.sum(nll * flat_w) / denom
+    preds = jnp.argmax(flat_logits, axis=-1).astype(jnp.int32)
+    ncorrect = jnp.sum((preds == flat_tgt).astype(jnp.float32) * flat_w)
+    return loss, ncorrect
+
+
+# --------------------------------------------------------------------------
+# Lowerable entry points (flat positional params — AOT input order)
+# --------------------------------------------------------------------------
+
+def make_fns(
+    cfg: ModelConfig, variant: str, use_pallas: bool
+) -> Tuple[List[ParamSpec], Callable, Callable]:
+    """Returns (all_specs, fwd_fn, grad_fn_factory).
+
+    ``fwd_fn(*params, tokens, targets, weights) -> (loss, ncorrect)``.
+    ``grad_fn_factory(idxs)`` builds a function additionally returning the
+    gradients w.r.t. ``params[i] for i in idxs`` (a layer unit or adapter
+    set) — grads for anything else are never formed, which is exactly the
+    HiFT memory story at the XLA level.
+    """
+    specs = param_specs(cfg) + adapter_specs(cfg, variant)
+    names = [sp.name for sp in specs]
+
+    def as_dict(flat: Sequence[Array]) -> Dict[str, Array]:
+        return dict(zip(names, flat))
+
+    def fwd_fn(*args):
+        *flat, tokens, targets, weights = args
+        return forward(cfg, variant, as_dict(flat), tokens, targets, weights, use_pallas)
+
+    def grad_fn_factory(idxs: Sequence[int]) -> Callable:
+        idxs = tuple(idxs)
+
+        def loss_of_subset(subset, rest, tokens, targets, weights):
+            flat: List[Array] = []
+            it_s, it_r = iter(subset), iter(rest)
+            for i in range(len(specs)):
+                flat.append(next(it_s) if i in idxs else next(it_r))
+            loss, ncorrect = forward(
+                cfg, variant, as_dict(flat), tokens, targets, weights, use_pallas
+            )
+            return loss, ncorrect
+
+        def grad_fn(*args):
+            *flat, tokens, targets, weights = args
+            subset = [flat[i] for i in idxs]
+            rest = [flat[i] for i in range(len(specs)) if i not in idxs]
+            rest = [jax.lax.stop_gradient(r) for r in rest]
+            (loss, ncorrect), grads = jax.value_and_grad(loss_of_subset, has_aux=True)(
+                subset, rest, tokens, targets, weights
+            )
+            return (loss, ncorrect, *grads)
+
+        return grad_fn
+
+    return specs, fwd_fn, grad_fn_factory
+
+
+def example_batch(cfg: ModelConfig):
+    """Shape/dtype structs for lowering."""
+    b, s = cfg.batch, cfg.seq_len
+    return (
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s), jnp.float32),
+    )

@@ -1,0 +1,97 @@
+"""AOT pipeline tests: manifest integrity, params.bin layout, HLO-text
+round-trip through XlaComputation (the exact interchange Rust consumes)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_schema(manifest):
+    assert manifest["schema"] == 1
+    assert manifest["preset"] == "tiny"
+    cfg = manifest["config"]
+    assert manifest["n_units"] == cfg["n_layers"] + 2
+    assert set(manifest["variants"]) == {"base", "lora", "ia3", "prefix"}
+
+
+def test_manifest_units_partition_base_params(manifest):
+    base = manifest["variants"]["base"]["params"]
+    units = {p["unit"] for p in base}
+    assert units == set(range(manifest["n_units"]))
+    # offsets are ascending and distinct per tensor
+    offsets = [p["offset"] for p in base]
+    assert offsets == sorted(offsets)
+    assert len(set(offsets)) == len(offsets)
+
+
+def test_params_bin_matches_manifest_sizes(manifest):
+    base = manifest["variants"]["base"]["params"]
+    total_bytes = sum(p["size"] * 4 for p in base)
+    assert os.path.getsize(os.path.join(ART, "params.bin")) == total_bytes
+    last = base[-1]
+    assert last["offset"] + last["size"] * 4 == total_bytes
+
+
+def test_params_bin_roundtrips_init(manifest):
+    cfg = M.PRESETS["tiny"]
+    specs = M.param_specs(cfg)
+    params = M.init_params(cfg, specs, seed=manifest["seed"])
+    raw = open(os.path.join(ART, "params.bin"), "rb").read()
+    for sp, arr, info in zip(specs, params, manifest["variants"]["base"]["params"]):
+        got = np.frombuffer(raw, dtype="<f4", count=sp.size, offset=info["offset"])
+        np.testing.assert_array_equal(got, np.asarray(arr).reshape(-1), err_msg=sp.name)
+
+
+def test_every_artifact_inputs_are_params_plus_batch(manifest):
+    for art in manifest["artifacts"]:
+        variant = art["name"].split("_")[1]
+        params = manifest["variants"][variant]["params"]
+        names = [p["name"] for p in params]
+        assert art["inputs"] == names + ["tokens", "targets", "weights"], art["name"]
+        assert art["outputs"][:2] == ["loss", "ncorrect"]
+        # grad outputs must reference real parameters
+        for g in art["outputs"][2:]:
+            assert g in names, f"{art['name']}: {g}"
+
+
+def test_hlo_text_parses_back_to_xla_computation(manifest):
+    from jax._src.lib import xla_client as xc
+
+    path = os.path.join(ART, manifest["artifacts"][0]["path"])
+    text = open(path).read()
+    assert text.startswith("HloModule"), "artifact must be HLO text, not a serialized proto"
+    # jax's bundled XLA can re-parse the text — same parser family the
+    # xla crate uses via HloModuleProto::from_text_file.
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_lower_fn_is_deterministic():
+    cfg = M.PRESETS["tiny"]
+    specs, fwd, _ = M.make_fns(cfg, "base", use_pallas=False)
+    a = aot.lower_fn(fwd, specs, cfg)
+    b = aot.lower_fn(fwd, specs, cfg)
+    assert a == b
+
+
+def test_vmem_report_present(manifest):
+    rep = manifest["vmem_report"]
+    assert rep["bytes_per_program"] > 0
+    assert rep["fits_16MiB_vmem"] is True

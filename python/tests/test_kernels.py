@@ -1,0 +1,147 @@
+"""L1 correctness gate: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every kernel must match ``ref`` to
+tolerance on both the forward value and (via custom_vjp) its gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, softmax_xent, ref
+from compile.kernels.flash_attention import pick_blocks, vmem_estimate
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 8, 16, 32, 48]),
+    dh=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_attention_matches_ref(b, h, s, dh, causal, seed):
+    q = rand(seed, (b, h, s, dh))
+    k = rand(seed + 1, (b, h, s, dh))
+    v = rand(seed + 2, (b, h, s, dh))
+    got = attention(q, k, v, causal)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_grads_match_ref():
+    q, k, v = rand(0, (2, 2, 16, 8)), rand(1, (2, 2, 16, 8)), rand(2, (2, 2, 16, 8))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(attention(q, k, v, True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causality():
+    """Future tokens must not influence earlier outputs."""
+    q, k, v = rand(0, (1, 1, 16, 8)), rand(1, (1, 1, 16, 8)), rand(2, (1, 1, 16, 8))
+    base = attention(q, k, v, True)
+    k2 = k.at[0, 0, -1].set(99.0)
+    v2 = v.at[0, 0, -1].set(-99.0)
+    pert = attention(q, k2, v2, True)
+    np.testing.assert_allclose(base[0, 0, :-1], pert[0, 0, :-1], rtol=RTOL, atol=ATOL)
+    assert not np.allclose(base[0, 0, -1], pert[0, 0, -1])
+
+
+def test_pick_blocks_divides():
+    for s in (4, 16, 30, 48, 80, 128, 384):
+        bq, bkv = pick_blocks(s, 8)
+        assert s % bq == 0 and s % bkv == 0
+
+
+def test_vmem_estimate_fits():
+    rep = vmem_estimate(8, 8, 512, 64)
+    assert rep["fits_16MiB_vmem"]
+    assert rep["bytes_per_program"] > 0
+
+
+# ----------------------------------------------------------------------- ce
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 8, 32, 64]),
+    v=st.sampled_from([8, 32, 64, 512]),
+    seed=st.integers(0, 10_000),
+)
+def test_ce_matches_ref(n, v, seed):
+    logits = rand(seed, (n, v)) * 3.0
+    tgt = jax.random.randint(jax.random.PRNGKey(seed + 7), (n,), 0, v)
+    np.testing.assert_allclose(
+        softmax_xent(logits, tgt), ref.softmax_xent_ref(logits, tgt), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_ce_grad_is_softmax_minus_onehot():
+    logits = rand(3, (8, 16))
+    tgt = jax.random.randint(jax.random.PRNGKey(9), (8,), 0, 16)
+    g = jax.grad(lambda l: jnp.sum(softmax_xent(l, tgt)))(logits)
+    want = jax.nn.softmax(logits, -1) - jax.nn.one_hot(tgt, 16)
+    np.testing.assert_allclose(g, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ce_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0, 3.0]] * 4, jnp.float32)
+    tgt = jnp.array([0, 1, 2, 3], jnp.int32)
+    out = softmax_xent(logits, tgt)
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, ref.softmax_xent_ref(logits, tgt), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- layernorm
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 8, 32, 96]),
+    d=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_layernorm_matches_ref(n, d, seed):
+    x = rand(seed, (n, d)) * 2.0 + 0.5
+    scale = rand(seed + 1, (d,)) * 0.1 + 1.0
+    bias = rand(seed + 2, (d,)) * 0.1
+    np.testing.assert_allclose(
+        layernorm(x, scale, bias), ref.layernorm_ref(x, scale, bias), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_layernorm_3d_and_grads():
+    x = rand(0, (2, 4, 16))
+    s, b = jnp.ones(16), jnp.zeros(16)
+    np.testing.assert_allclose(
+        layernorm(x, s, b), ref.layernorm_ref(x, s, b), rtol=1e-5, atol=1e-5
+    )
+    gk = jax.grad(lambda x: jnp.sum(layernorm(x, s, b) ** 2))(x)
+    gr = jax.grad(lambda x: jnp.sum(ref.layernorm_ref(x, s, b) ** 2))(x)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_output_normalized():
+    x = rand(5, (8, 32)) * 7 + 3
+    y = layernorm(x, jnp.ones(32), jnp.zeros(32))
+    np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(y), -1), 1.0, atol=1e-2)

@@ -1,0 +1,168 @@
+"""L2 model tests: shapes, unit partition, per-unit grads == full grads,
+variant behaviour, pallas-vs-ref lowering parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(name="t", vocab=32, d_model=16, n_layers=2, n_heads=2,
+                    d_ff=32, seq_len=8, batch=2, lora_rank=2, n_prefix=4)
+
+
+def make_batch(seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (CFG.batch, CFG.seq_len), 0, CFG.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    weights = jnp.ones((CFG.batch, CFG.seq_len), jnp.float32)
+    return tokens, targets, weights
+
+
+def flat_params(variant="base", seed=0):
+    specs = M.param_specs(CFG) + M.adapter_specs(CFG, variant)
+    return specs, M.init_params(CFG, specs, seed=seed)
+
+
+# ------------------------------------------------------------------- specs
+
+def test_unit_partition_covers_all_params():
+    specs = M.param_specs(CFG)
+    units = {sp.unit for sp in specs}
+    assert units == set(range(CFG.n_units))
+    # embeddings first, head last
+    assert specs[0].unit == 0 and specs[-1].unit == CFG.n_units - 1
+
+
+def test_param_count_formula():
+    specs = M.param_specs(CFG)
+    total = sum(sp.size for sp in specs)
+    d, f, v, s, p = CFG.d_model, CFG.d_ff, CFG.vocab, CFG.seq_len, CFG.n_prefix
+    per_layer = 4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d
+    want = v * d + (s + p) * d + CFG.n_layers * per_layer + 2 * d + d * v + v
+    assert total == want
+
+
+def test_bitfit_marks_only_vectors():
+    for sp in M.param_specs(CFG):
+        if sp.bitfit:
+            assert len(sp.shape) == 1
+
+
+@pytest.mark.parametrize("variant,nadapter", [("lora", 8), ("ia3", 6), ("prefix", 1)])
+def test_adapter_specs(variant, nadapter):
+    ads = M.adapter_specs(CFG, variant)
+    assert len(ads) == nadapter
+    assert all(sp.unit == -1 for sp in ads)
+
+
+# ----------------------------------------------------------------- forward
+
+@pytest.mark.parametrize("variant", ["base", "lora", "ia3", "prefix"])
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_forward_finite(variant, use_pallas):
+    specs, fwd, _ = M.make_fns(CFG, variant, use_pallas)
+    params = M.init_params(CFG, specs)
+    loss, ncorrect = fwd(*params, *make_batch())
+    assert np.isfinite(loss) and loss > 0
+    assert 0 <= ncorrect <= CFG.batch * CFG.seq_len
+
+
+@pytest.mark.parametrize("variant", ["base", "lora", "prefix"])
+def test_pallas_ref_parity(variant):
+    """The two kernel paths must lower to the same numbers."""
+    specs, fwd_p, _ = M.make_fns(CFG, variant, True)
+    _, fwd_r, _ = M.make_fns(CFG, variant, False)
+    params = M.init_params(CFG, specs)
+    batch = make_batch()
+    lp, cp = fwd_p(*params, *batch)
+    lr, cr = fwd_r(*params, *batch)
+    np.testing.assert_allclose(lp, lr, rtol=5e-5, atol=5e-5)
+    assert cp == cr
+
+
+def test_lora_zero_b_is_identity():
+    """LoRA with B=0 must equal the base model exactly."""
+    specs, fwd, _ = M.make_fns(CFG, "lora", False)
+    params = M.init_params(CFG, specs)  # b-matrices init to zeros
+    _, fwd_base, _ = M.make_fns(CFG, "base", False)
+    base_params = params[: len(M.param_specs(CFG))]
+    batch = make_batch()
+    np.testing.assert_allclose(fwd(*params, *batch)[0], fwd_base(*base_params, *batch)[0],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ia3_ones_is_identity():
+    specs, fwd, _ = M.make_fns(CFG, "ia3", False)
+    params = M.init_params(CFG, specs)  # ia3 scales init to ones
+    _, fwd_base, _ = M.make_fns(CFG, "base", False)
+    base_params = params[: len(M.param_specs(CFG))]
+    batch = make_batch()
+    np.testing.assert_allclose(fwd(*params, *batch)[0], fwd_base(*base_params, *batch)[0],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_weights_mask_selects_positions():
+    """Loss with a one-position mask equals that position's NLL."""
+    specs, fwd, _ = M.make_fns(CFG, "base", False)
+    params = M.init_params(CFG, specs)
+    tokens, targets, _ = make_batch()
+    w = jnp.zeros((CFG.batch, CFG.seq_len)).at[:, -1].set(1.0)
+    loss_last, _ = fwd(*params, tokens, targets, w)
+    loss_all, _ = fwd(*params, tokens, targets, jnp.ones_like(w))
+    assert not np.allclose(loss_last, loss_all)
+    assert np.isfinite(loss_last)
+
+
+# ------------------------------------------------------------------- grads
+
+def test_unit_grads_concat_equals_full_grad():
+    """HiFT's foundation: per-unit gradients are *slices* of the full
+    gradient (same loss, same point), so composing units reconstructs FPFT's
+    gradient exactly."""
+    specs, _, factory = M.make_fns(CFG, "base", False)
+    params = M.init_params(CFG, specs)
+    batch = make_batch()
+    full = factory(list(range(len(specs))))(*params, *batch)
+    full_grads = full[2:]
+    for u in range(CFG.n_units):
+        idxs = [i for i, sp in enumerate(specs) if sp.unit == u]
+        out = factory(idxs)(*params, *batch)
+        np.testing.assert_allclose(out[0], full[0], rtol=1e-5, atol=1e-5)
+        for j, i in enumerate(idxs):
+            np.testing.assert_allclose(out[2 + j], full_grads[i], rtol=1e-4, atol=1e-5,
+                                       err_msg=specs[i].name)
+
+
+def test_grad_descent_step_reduces_loss():
+    specs, fwd, factory = M.make_fns(CFG, "base", False)
+    params = M.init_params(CFG, specs)
+    batch = make_batch()
+    out = factory(list(range(len(specs))))(*params, *batch)
+    loss0, grads = out[0], out[2:]
+    new = [p - 0.1 * g for p, g in zip(params, grads)]
+    loss1, _ = fwd(*new, *batch)
+    assert loss1 < loss0
+
+
+def test_adapter_grads_nonzero_lora():
+    specs, _, factory = M.make_fns(CFG, "lora", False)
+    params = M.init_params(CFG, specs)
+    idxs = [i for i, sp in enumerate(specs) if sp.unit == -1]
+    out = factory(idxs)(*params, *make_batch())
+    grads = out[2:]
+    # A-grads are zero at init only if B==0 kills the path; B-grads nonzero.
+    bnorm = sum(float(jnp.abs(g).sum()) for g, i in zip(grads, idxs)
+                if ".b" in specs[i].name)
+    assert bnorm > 0
+
+
+def test_grad_wrt_single_unit_is_cheaper_graph():
+    """Backprop truncation: grad of the head unit must not touch tok_emb's
+    gradient at all (it is never an output)."""
+    specs, _, factory = M.make_fns(CFG, "base", False)
+    head_idxs = [i for i, sp in enumerate(specs) if sp.unit == CFG.n_units - 1]
+    g = factory(head_idxs)
+    out = g(*M.init_params(CFG, specs), *make_batch())
+    assert len(out) == 2 + len(head_idxs)

@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_table4` — regenerates the paper's table4 exhibit
+//! (see DESIGN.md §4 and hift::bench::exhibits).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::table4(&mut b)?;
+    eprintln!("[bench_table4] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

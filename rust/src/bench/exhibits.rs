@@ -1,0 +1,567 @@
+//! One harness per paper exhibit (see DESIGN.md §4 for the mapping).
+//!
+//! Training-based exhibits (Tables 1–4, Fig. 2/3/4/5, the speed half of
+//! Table 5) run the real three-layer stack on synthetic stand-in tasks;
+//! accounting-based exhibits (the memory half of Table 5, Tables 8–12,
+//! Fig. 6) come from [`crate::memmodel`] over the paper's architectures.
+
+use anyhow::Result;
+
+use super::{acc_cell, default_spec, print_table, Bench};
+use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
+use crate::optim::OptimKind;
+use crate::coordinator::strategy::UpdateStrategy;
+use crate::ser::Value;
+
+/// Table 1 — few-shot prompt-style comparison: gradient-free (MeZO family)
+/// vs gradient-based (FPFT/LoRA/prefix/HiFT), at two data scales
+/// (paper Num=16 / Num=512 ⇒ short / long training budgets here).
+pub fn table1(b: &mut Bench) -> Result<()> {
+    let tasks = ["motif2", "motif4", "motif8"];
+    let seeds: &[u64] = if b.quick { &[1] } else { &[1, 2] };
+    let mut json_rows = Vec::new();
+    for (num, steps) in [(16u64, b.steps(64)), (512u64, b.steps(360))] {
+        let mut rows = Vec::new();
+        // zero-shot row
+        let mut zrow = vec!["Zero-shot".to_string()];
+        for t in tasks {
+            zrow.push(format!("{:.1}", b.zero_shot(t, 1)? * 100.0));
+        }
+        rows.push(zrow);
+        for strat in ["lp", "mezo", "mezo-adam", "fpft", "lora", "prefix", "hift"] {
+            let mut row = vec![strat.to_string()];
+            for t in tasks {
+                let spec = default_spec(strat, steps);
+                let (m, s, recs) = b.run_avg(&spec, t, steps, seeds)?;
+                row.push(acc_cell(m, s));
+                json_rows.push(Value::obj(vec![
+                    ("num", (num as usize).into()),
+                    ("strategy", strat.into()),
+                    ("task", t.into()),
+                    ("acc_mean", m.into()),
+                    ("acc_std", s.into()),
+                    ("final_loss", recs[0].losses.tail_mean(8).into()),
+                ]));
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["method"];
+        headers.extend(tasks);
+        print_table(&format!("Table 1 analogue — few-shot (Num={num}, {steps} steps)"), &headers, &rows);
+    }
+    b.save("table1", &Value::Arr(json_rows))
+}
+
+/// Table 2 — task-type sweep (classification / generation / reasoning):
+/// HiFT should win or tie the majority of columns.
+pub fn table2(b: &mut Bench) -> Result<()> {
+    let tasks = ["motif2", "motif8", "motif16", "copy", "sort", "modsum"];
+    let steps = b.steps(360);
+    let seeds: &[u64] = &[1]; // paper's Table 2 reports point estimates
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut zrow = vec!["Zero-shot".to_string()];
+    for t in tasks {
+        zrow.push(format!("{:.1}", b.zero_shot(t, 1)? * 100.0));
+    }
+    rows.push(zrow);
+    let mut best: Vec<(f64, String)> = vec![(0.0, String::new()); tasks.len()];
+    for strat in ["lp", "mezo", "fpft", "lora", "ia3", "prefix", "hift"] {
+        let mut row = vec![strat.to_string()];
+        for (ti, t) in tasks.iter().enumerate() {
+            let spec = default_spec(strat, steps);
+            let (m, s, _) = b.run_avg(&spec, t, steps, seeds)?;
+            row.push(acc_cell(m, s));
+            if m > best[ti].0 {
+                best[ti] = (m, strat.to_string());
+            }
+            json.push(Value::obj(vec![
+                ("strategy", strat.into()),
+                ("task", (*t).into()),
+                ("acc_mean", m.into()),
+                ("acc_std", s.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    // Equal-steps HiFT updates each unit only steps/k times; the paper's
+    // regime (fine-tuning pretrained models to saturation) is closer to
+    // equal per-parameter updates, so also report HiFT at k× steps.
+    {
+        let k = b.rt.manifest().n_units as u64;
+        let mut row = vec!["hift(eq)".to_string()];
+        for (ti, t) in tasks.iter().enumerate() {
+            let spec = default_spec("hift", steps * k);
+            let (m, s, _) = b.run_avg(&spec, t, steps * k, seeds)?;
+            row.push(acc_cell(m, s));
+            if m > best[ti].0 {
+                best[ti] = (m, "hift(eq)".to_string());
+            }
+            json.push(Value::obj(vec![
+                ("strategy", "hift(eq)".into()),
+                ("task", (*t).into()),
+                ("acc_mean", m.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["method"];
+    headers.extend(tasks);
+    print_table(&format!("Table 2 analogue — task sweep ({steps} steps; hift(eq) = k×)"), &headers, &rows);
+    let hift_wins = best.iter().filter(|(_, s)| s.starts_with("hift")).count();
+    println!("best-per-task: {:?}  (hift wins {hift_wins}/{})", best, tasks.len());
+    b.save("table2", &Value::Arr(json))
+}
+
+/// Table 3 — generation (E2E-NLG stand-ins): FPFT vs LoRA vs HiFT token
+/// accuracy on copy/sort.
+pub fn table3(b: &mut Bench) -> Result<()> {
+    let tasks = ["copy", "sort"];
+    let steps = b.steps(360);
+    let seeds: &[u64] = if b.quick { &[1] } else { &[1, 2] };
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for strat in ["fpft", "lora", "prefix", "hift"] {
+        let mut row = vec![strat.to_string()];
+        for t in tasks {
+            let spec = default_spec(strat, steps);
+            let (m, s, _) = b.run_avg(&spec, t, steps, seeds)?;
+            row.push(acc_cell(m, s));
+            json.push(Value::obj(vec![
+                ("strategy", strat.into()),
+                ("task", t.into()),
+                ("acc_mean", m.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    print_table(
+        &format!("Table 3 analogue — generation token-accuracy ({steps} steps)"),
+        &["method", "copy", "sort"],
+        &rows,
+    );
+    b.save("table3", &Value::Arr(json))
+}
+
+/// Table 4 — "hard" compositional tasks: full-parameter methods (FPFT,
+/// HiFT) should beat LoRA clearly (the paper's capacity argument).
+pub fn table4(b: &mut Bench) -> Result<()> {
+    let tasks = ["modsum", "modsum6", "sort"];
+    let steps = b.steps(400);
+    let seeds: &[u64] = if b.quick { &[1] } else { &[1, 2] };
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut acc = std::collections::HashMap::new();
+    for strat in ["fpft", "lora", "hift"] {
+        let mut row = vec![strat.to_string()];
+        for t in tasks {
+            let spec = default_spec(strat, steps);
+            let (m, s, _) = b.run_avg(&spec, t, steps, seeds)?;
+            row.push(acc_cell(m, s));
+            acc.insert((strat, t), m);
+            json.push(Value::obj(vec![
+                ("strategy", strat.into()),
+                ("task", t.into()),
+                ("acc_mean", m.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    print_table(
+        &format!("Table 4 analogue — hard tasks ({steps} steps)"),
+        &["method", "modsum", "modsum6", "sort"],
+        &rows,
+    );
+    let lora_losses = tasks
+        .iter()
+        .filter(|t| acc[&("hift", **t)] >= acc[&("lora", **t)] - 0.02)
+        .count();
+    println!("hift >= lora on {lora_losses}/{} hard tasks (paper: full-param wins)", tasks.len());
+    b.save("table4", &Value::Arr(json))
+}
+
+/// Figure 2 / Table 7 — instruction-tuning proxy: per-category accuracy on
+/// the multi-task instruct mixture.
+pub fn mtbench(b: &mut Bench) -> Result<()> {
+    use crate::coordinator::trainer::{evaluate, train, TrainCfg};
+    use crate::data::InstructTask;
+    let steps = b.steps(360);
+    let cats = ["classify", "copy", "reason"];
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for strat in ["fpft", "lora", "prefix", "hift"] {
+        let spec = default_spec(strat, steps);
+        let mut strategy = spec.build(b.rt.manifest())?;
+        let mut params = b.rt.load_params(strategy.variant())?;
+        let mut task = InstructTask::new(b.geom(), 1);
+        train(&mut b.rt, strategy.as_mut(), &mut params, &mut task,
+              TrainCfg { steps, eval_every: 0, log_every: 0 })?;
+        let fwd = strategy.fwd_artifact();
+        let mut row = vec![strat.to_string()];
+        let mut sum = 0.0;
+        for c in 0..cats.len() {
+            let ev = evaluate(&mut b.rt, &fwd, &params, &task.eval_category(c))?;
+            row.push(format!("{:.1}", ev.acc * 100.0));
+            sum += ev.acc;
+            json.push(Value::obj(vec![
+                ("strategy", strat.into()),
+                ("category", cats[c].into()),
+                ("acc", ev.acc.into()),
+            ]));
+        }
+        row.push(format!("{:.1}", sum / cats.len() as f64 * 100.0));
+        rows.push(row);
+    }
+    print_table(
+        &format!("Figure 2 / Table 7 analogue — instruction FT per category ({steps} steps)"),
+        &["method", "classify", "copy", "reason", "AVG"],
+        &rows,
+    );
+    b.save("mtbench", &Value::Arr(json))
+}
+
+/// Figure 3 — HiFT loss curves on four datasets (m=1): smooth, stable
+/// convergence under the delayed-LR schedule.
+pub fn fig3(b: &mut Bench) -> Result<()> {
+    let tasks = ["markovlm", "motif4", "copy", "modsum"];
+    let steps = b.steps(320);
+    let mut json = Vec::new();
+    for t in tasks {
+        let spec = default_spec("hift", steps);
+        let rec = b.run_one(&spec, t, steps, 1)?;
+        let slope = rec.losses.slope();
+        println!("\n--- Figure 3: HiFT loss on {t} (slope {slope:+.5}/step) ---");
+        for (i, v) in rec.losses.downsample(16) {
+            let bar = "#".repeat((v * 12.0).min(80.0) as usize);
+            println!("  step {i:>4}  loss {v:7.4}  {bar}");
+        }
+        assert!(slope < 0.0, "{t}: HiFT loss must trend down (slope {slope})");
+        json.push(Value::obj(vec![("task", t.into()), ("record", rec.to_json())]));
+    }
+    b.save("fig3", &Value::Arr(json))
+}
+
+/// Figure 4 — left: update-order ablation (B2U/T2D/RAN); right: group-size
+/// ablation (m).  Both axes should be ~flat.
+pub fn fig4(b: &mut Bench) -> Result<()> {
+    let steps = b.steps(320);
+    let seeds: &[u64] = if b.quick { &[1] } else { &[1, 2] };
+    let tasks = ["motif4", "copy"];
+    // left: strategies
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for (label, order) in [
+        ("B2U", UpdateStrategy::Bottom2Up),
+        ("T2D", UpdateStrategy::Top2Down),
+        ("RAN", UpdateStrategy::Random { seed: 7 }),
+    ] {
+        let mut row = vec![label.to_string()];
+        for t in tasks {
+            let mut spec = default_spec("hift", steps);
+            spec.order = order;
+            let (m, s, _) = b.run_avg(&spec, t, steps, seeds)?;
+            row.push(acc_cell(m, s));
+            json.push(Value::obj(vec![
+                ("axis", "order".into()),
+                ("setting", label.into()),
+                ("task", t.into()),
+                ("acc_mean", m.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    print_table("Figure 4 (left) — update order ablation", &["order", "motif4", "copy"], &rows);
+
+    // right: grouping m (tiny model has n_layers+2 units)
+    let n_units = b.rt.manifest().n_units;
+    let mut rows = Vec::new();
+    for m in [1usize, 2, n_units.div_ceil(2), n_units] {
+        let mut row = vec![format!("m={m}")];
+        for t in tasks {
+            let mut spec = default_spec("hift", steps);
+            spec.m = m;
+            let (mean, s, _) = b.run_avg(&spec, t, steps, seeds)?;
+            row.push(acc_cell(mean, s));
+            json.push(Value::obj(vec![
+                ("axis", "m".into()),
+                ("setting", m.into()),
+                ("task", t.into()),
+                ("acc_mean", mean.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    print_table("Figure 4 (right) — group size ablation", &["m", "motif4", "copy"], &rows);
+    b.save("fig4", &Value::Arr(json))
+}
+
+/// Figure 5 — the no-prompt GLUE-style grid: FPFT vs HiFT(3 orders) vs
+/// PEFT (BitFit/LoRA/IA3/prefix) across eight tasks.
+pub fn fig5(b: &mut Bench) -> Result<()> {
+    let tasks =
+        ["motif2", "motif4", "motif8", "motif16", "copy", "sort", "modsum", "markovlm"];
+    let steps = b.steps(320);
+    let seeds: &[u64] = &[1];
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let configs: Vec<(String, crate::strategies::StrategySpec)> = vec![
+        ("FPFT".into(), default_spec("fpft", steps)),
+        ("HiFT-B2U".into(), default_spec("hift", steps)),
+        ("HiFT-T2D".into(), {
+            let mut s = default_spec("hift", steps);
+            s.order = UpdateStrategy::Top2Down;
+            s
+        }),
+        ("HiFT-RAN".into(), {
+            let mut s = default_spec("hift", steps);
+            s.order = UpdateStrategy::Random { seed: 7 };
+            s
+        }),
+        ("BitFit".into(), default_spec("bitfit", steps)),
+        ("LoRA".into(), default_spec("lora", steps)),
+        ("IA3".into(), default_spec("ia3", steps)),
+        ("Prefix".into(), default_spec("prefix", steps)),
+    ];
+    for (label, spec) in configs {
+        let mut row = vec![label.clone()];
+        for t in tasks {
+            let (m, _, _) = b.run_avg(&spec, t, steps, seeds)?;
+            row.push(format!("{:.1}", m * 100.0));
+            json.push(Value::obj(vec![
+                ("method", label.as_str().into()),
+                ("task", t.into()),
+                ("acc", m.into()),
+            ]));
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["method"];
+    headers.extend(tasks);
+    print_table(&format!("Figure 5 analogue — 8-task grid ({steps} steps)"), &headers, &rows);
+    b.save("fig5", &Value::Arr(json))
+}
+
+/// Figure 6 — (a–d) memory pies for LLaMA-7B under FPFT/HiFT × fp32/mixed;
+/// (e) peak-trainable fraction vs model size.
+pub fn fig6(b: &Bench) -> Result<()> {
+    let a = by_name("llama-7b").unwrap();
+    let w = Workload { batch: 6, seq: 512 };
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for (label, dtype, method) in [
+        ("(a) fp32 FPFT", Dtype::Fp32, Method::Fpft),
+        ("(b) fp32 HiFT", Dtype::Fp32, Method::Hift { m: 1 }),
+        ("(c) mixed FPFT", Dtype::Mixed, Method::Fpft),
+        ("(d) mixed HiFT", Dtype::Mixed, Method::Hift { m: 1 }),
+    ] {
+        let r = account(&a, OptimKind::AdamW, dtype, method, w);
+        let pct = |x: f64| format!("{:.1}%", x / r.total * 100.0);
+        rows.push(vec![
+            label.to_string(),
+            pct(r.para),
+            pct(r.gra),
+            pct(r.sta),
+            pct(r.residual),
+            format!("{:.1} GiB", r.total / GIB),
+        ]);
+        json.push(Value::obj(vec![
+            ("panel", label.into()),
+            ("para", r.para.into()),
+            ("gra", r.gra.into()),
+            ("sta", r.sta.into()),
+            ("residual", r.residual.into()),
+            ("total", r.total.into()),
+        ]));
+    }
+    print_table(
+        "Figure 6 (a–d) — LLaMA-7B memory composition (AdamW)",
+        &["panel", "params", "grads", "optim state", "residual", "total"],
+        &rows,
+    );
+
+    let mut rows = Vec::new();
+    for name in ["opt-125m", "roberta-large", "opt-1.3b", "gpt-neo-2.7b", "llama-7b", "opt-13b", "llama-13b"] {
+        let a = by_name(name).unwrap();
+        let frac = a.peak_group_params(1) as f64 / a.total_params() as f64 * 100.0;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}M", a.total_params() as f64 / 1e6),
+            format!("{:.2}%", frac),
+        ]);
+        json.push(Value::obj(vec![
+            ("model", name.into()),
+            ("total_params", a.total_params().into()),
+            ("peak_frac_pct", frac.into()),
+        ]));
+    }
+    print_table(
+        "Figure 6 (e) — peak trainable fraction vs model size (m=1)",
+        &["model", "params", "peak trainable %"],
+        &rows,
+    );
+    b.save("fig6", &Value::Arr(json))
+}
+
+/// Tables 8–12 — the full per-optimizer memory grid over the paper's five
+/// profiled models.
+pub fn tables8_12(b: &Bench) -> Result<()> {
+    let mut json = Vec::new();
+    for (name, batch) in [
+        ("roberta-base", 8usize),
+        ("roberta-large", 8),
+        ("gpt2-large", 8),
+        ("gpt-neo-2.7b", 8),
+        ("llama-7b", 6),
+    ] {
+        let a = by_name(name).unwrap();
+        let w = Workload { batch, seq: 512 };
+        let mut rows = Vec::new();
+        for opt in OptimKind::ALL {
+            for (dtype, method) in [
+                (Dtype::Fp32, Method::Fpft),
+                (Dtype::Fp32, Method::Hift { m: 1 }),
+                (Dtype::Mixed, Method::Fpft),
+                (Dtype::Mixed, Method::Hift { m: 1 }),
+                (Dtype::MixedHi, Method::Hift { m: 1 }),
+            ] {
+                let r = account(&a, opt, dtype, method, w);
+                let ftype = match method {
+                    Method::Fpft => "FPFT",
+                    Method::Hift { .. } => "HiFT",
+                    Method::Peft { .. } => "PEFT",
+                };
+                rows.push(vec![
+                    opt.name().to_string(),
+                    dtype.name().to_string(),
+                    ftype.to_string(),
+                    format!("{:.2}M", r.trainable as f64 / 1e6),
+                    format!("{:.2}", r.para / MIB),
+                    format!("{:.2}", r.gra / MIB),
+                    format!("{:.2}", r.sta / MIB),
+                    format!("{:.2}", r.pgs / GIB),
+                    format!("{:.2}", r.residual / GIB),
+                    format!("{:.2}", r.total / GIB),
+                ]);
+                json.push(Value::obj(vec![
+                    ("model", name.into()),
+                    ("optimizer", opt.name().into()),
+                    ("dtype", dtype.name().into()),
+                    ("ftype", ftype.into()),
+                    ("trainable", r.trainable.into()),
+                    ("para_mib", (r.para / MIB).into()),
+                    ("gra_mib", (r.gra / MIB).into()),
+                    ("sta_mib", (r.sta / MIB).into()),
+                    ("pgs_gib", (r.pgs / GIB).into()),
+                    ("residual_gib", (r.residual / GIB).into()),
+                    ("total_gib", (r.total / GIB).into()),
+                ]));
+            }
+        }
+        print_table(
+            &format!("Tables 8–12 analogue — {name} (b={batch}, s=512)"),
+            &["optim", "dtype", "ftype", "#Train", "#Para(MiB)", "#Gra(MiB)", "#Sta(MiB)",
+              "#PGS(GiB)", "Residual(GiB)", "Total(GiB)"],
+            &rows,
+        );
+    }
+    b.save("tables8_12", &Value::Arr(json))
+}
+
+/// Table 5 — memory (paper architectures, analytic) and speed (our stack,
+/// measured steps/s) for FPFT / LoRA / IA3 / Prefix / HiFT × AdamW / SGD.
+pub fn table5(b: &mut Bench) -> Result<()> {
+    // --- memory half (analytic, RoBERTa-base/large + LLaMA-7B, b=8 s=512) ---
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let w = Workload { batch: 8, seq: 512 };
+    for model in ["roberta-base", "roberta-large", "llama-7b"] {
+        let a = by_name(model).unwrap();
+        // LoRA r=8 on q,v; IA3; prefix 128 virtual tokens — paper's setups.
+        let lora_params = 4 * a.n_layers * a.d_model * 8;
+        let ia3_params = a.n_layers * (2 * a.d_model + a.d_ff);
+        let prefix_params = 128 * a.d_model;
+        for opt in [OptimKind::AdamW, OptimKind::Sgd] {
+            for (label, dtype, method) in [
+                ("FPFT", Dtype::Mixed, Method::Fpft),
+                ("LoRA(r=8)", Dtype::Mixed, Method::Peft { adapter_params: lora_params }),
+                ("IA3", Dtype::Mixed, Method::Peft { adapter_params: ia3_params }),
+                ("Prefix", Dtype::Mixed, Method::Peft { adapter_params: prefix_params }),
+                ("HiFT", Dtype::MixedHi, Method::Hift { m: 1 }),
+            ] {
+                let r = account(&a, opt, dtype, method, w);
+                let total = r.total / GIB;
+                let oom = model == "llama-7b" && label == "FPFT";
+                rows.push(vec![
+                    model.to_string(),
+                    opt.name().to_string(),
+                    label.to_string(),
+                    if oom { "OOM(>80G)".into() } else { format!("{total:.2}") },
+                ]);
+                json.push(Value::obj(vec![
+                    ("model", model.into()),
+                    ("optimizer", opt.name().into()),
+                    ("method", label.into()),
+                    ("memory_gib", total.into()),
+                ]));
+            }
+        }
+    }
+    print_table(
+        "Table 5 analogue (memory, mixed precision)",
+        &["model", "optim", "method", "Memory(GiB)"],
+        &rows,
+    );
+
+    // --- speed half (measured on our stack) ---
+    let steps = b.steps(100);
+    let mut rows = Vec::new();
+    for opt in [OptimKind::AdamW, OptimKind::Sgd] {
+        for strat in ["fpft", "lora", "ia3", "prefix", "hift"] {
+            let mut spec = default_spec(strat, steps);
+            spec.optim = opt;
+            // Warm the executable cache so one-time XLA compiles don't
+            // pollute the steps/s measurement (HiFT touches one artifact
+            // per unit — warm a full sweep plus slack).
+            let warm = b.rt.manifest().n_units as u64 + 2;
+            let _ = b.run_one(&spec, "markovlm", warm, 1)?;
+            let rec = b.run_one(&spec, "markovlm", steps, 1)?;
+            rows.push(vec![
+                opt.name().to_string(),
+                strat.to_string(),
+                format!("{:.2}", rec.steps_per_sec),
+                format!("{:.1}", rec.exec_secs / rec.wall_secs * 100.0),
+            ]);
+            json.push(Value::obj(vec![
+                ("optimizer", opt.name().into()),
+                ("method", strat.into()),
+                ("steps_per_sec", rec.steps_per_sec.into()),
+                ("exec_frac", (rec.exec_secs / rec.wall_secs).into()),
+            ]));
+        }
+    }
+    print_table(
+        &format!("Table 5 analogue (speed on this substrate, {steps} steps)"),
+        &["optim", "method", "steps/s", "XLA-exec %"],
+        &rows,
+    );
+    b.save("table5", &Value::Arr(json))
+}
+
+/// Appendix-B sanity print: closed-form ratio vs k.
+pub fn appendix_b(b: &Bench) -> Result<()> {
+    let mut rows = Vec::new();
+    for k in [1usize, 2, 4, 8, 14, 26, 34, 42] {
+        rows.push(vec![
+            k.to_string(),
+            format!("{:.3}", crate::memmodel::appendix_b_ratio(k)),
+            format!("{:.1}%", (1.0 - crate::memmodel::appendix_b_ratio(k)) * 100.0),
+        ]);
+    }
+    print_table(
+        "Appendix B — ζ_hift/ζ_fpft = (k+3)/4k (AdamW, params+grads+state)",
+        &["k", "ratio", "savings"],
+        &rows,
+    );
+    let _ = b;
+    Ok(())
+}

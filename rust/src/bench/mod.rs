@@ -1,0 +1,187 @@
+//! Benchmark harnesses — one function per table/figure of the paper's
+//! evaluation (DESIGN.md §4 maps each exhibit to its function).
+//!
+//! Every harness prints the paper-shaped table to stdout and writes the
+//! underlying [`RunRecord`]s as JSON under `runs/`.  Absolute numbers come
+//! from *our* substrate (small transformers on CPU-PJRT, synthetic tasks,
+//! the analytic memory model); what must match the paper is the **shape**:
+//! who wins, roughly by how much, where the crossovers are.
+//!
+//! Env knobs:
+//! * `HIFT_ARTIFACTS` — artifact dir (default `artifacts/tiny`)
+//! * `HIFT_QUICK=1`   — trim steps/seeds for smoke runs
+//! * `HIFT_OUT`       — output dir for JSON records (default `runs`)
+
+pub mod exhibits;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{self, RunRecord, TrainCfg};
+use crate::data::{build_task, TaskGeom};
+use crate::metrics::Series;
+use crate::optim::OptimKind;
+use crate::runtime::Runtime;
+use crate::ser::{emit_pretty, Value};
+use crate::strategies::StrategySpec;
+
+/// Shared bench context: one Runtime (executable cache persists across
+/// runs), output dir, quick-mode flag.
+pub struct Bench {
+    pub rt: Runtime,
+    pub out_dir: PathBuf,
+    pub quick: bool,
+}
+
+impl Bench {
+    /// Construct from env (see module docs).
+    pub fn from_env() -> Result<Self> {
+        let artifacts =
+            std::env::var("HIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".to_string());
+        let out_dir = PathBuf::from(std::env::var("HIFT_OUT").unwrap_or_else(|_| "runs".to_string()));
+        std::fs::create_dir_all(&out_dir)?;
+        let quick = std::env::var("HIFT_QUICK").map(|v| v == "1").unwrap_or(false);
+        Ok(Bench { rt: Runtime::load(artifacts)?, out_dir, quick })
+    }
+
+    pub fn geom(&self) -> TaskGeom {
+        let c = &self.rt.manifest().config;
+        TaskGeom::new(c.vocab, c.batch, c.seq_len)
+    }
+
+    /// Scale a step budget down in quick mode.
+    pub fn steps(&self, full: u64) -> u64 {
+        if self.quick {
+            (full / 8).max(4)
+        } else {
+            full
+        }
+    }
+
+    /// Train one (strategy, task, seed) combination.
+    pub fn run_one(
+        &mut self,
+        spec: &StrategySpec,
+        task_name: &str,
+        steps: u64,
+        seed: u64,
+    ) -> Result<RunRecord> {
+        let mut spec = spec.clone();
+        spec.seed = seed;
+        spec.total = steps as usize;
+        let mut strategy = spec.build(self.rt.manifest())?;
+        let mut params = self.rt.load_params(strategy.variant())?;
+        let mut task = build_task(task_name, self.geom(), seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
+        trainer::train(
+            &mut self.rt,
+            strategy.as_mut(),
+            &mut params,
+            task.as_mut(),
+            TrainCfg { steps, eval_every: 0, log_every: 0 },
+        )
+    }
+
+    /// Mean ± std of final eval accuracy over seeds.
+    pub fn run_avg(
+        &mut self,
+        spec: &StrategySpec,
+        task: &str,
+        steps: u64,
+        seeds: &[u64],
+    ) -> Result<(f64, f64, Vec<RunRecord>)> {
+        let mut accs = Series::new("acc");
+        let mut recs = Vec::new();
+        for &seed in seeds {
+            let r = self.run_one(spec, task, steps, seed)?;
+            accs.push(r.final_eval.acc);
+            recs.push(r);
+        }
+        Ok((accs.mean(), accs.std(), recs))
+    }
+
+    /// Zero-shot (untrained) accuracy on a task.
+    pub fn zero_shot(&mut self, task_name: &str, seed: u64) -> Result<f64> {
+        let params = self.rt.load_params("base")?;
+        let task = build_task(task_name, self.geom(), seed).unwrap();
+        let ev = trainer::evaluate(&mut self.rt, "fwd_base", &params, task.eval_batches())?;
+        Ok(ev.acc)
+    }
+
+    /// Persist a JSON exhibit record.
+    pub fn save(&self, name: &str, value: &Value) -> Result<()> {
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, emit_pretty(value))?;
+        eprintln!("  [saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// Default per-strategy hyperparameters at tiny/small scale — the analogue
+/// of the paper's per-method LR grids (Table 6).
+pub fn default_spec(strategy: &str, steps: u64) -> StrategySpec {
+    let (optim, lr) = match strategy {
+        "hift" | "fpft" | "lomo" => (OptimKind::AdamW, 4e-3),
+        "lora" | "ia3" | "prefix" | "bitfit" | "lp" => (OptimKind::AdamW, 1.5e-2),
+        // SPSA pseudo-gradients have norm ∝ √N·proj — tiny LRs, like the
+        // paper's MeZO grids (1e-6/1e-7 at 13B scale).
+        "mezo" => (OptimKind::Sgd, 3e-4),
+        "mezo-adam" => (OptimKind::AdamW, 3e-4),
+        _ => (OptimKind::AdamW, 4e-3),
+    };
+    StrategySpec::new(strategy, optim, lr, steps as usize)
+}
+
+// ---------------------------------------------------------------------------
+// Table rendering
+// ---------------------------------------------------------------------------
+
+/// Print an aligned text table (the paper-row format used by all benches).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+/// `mean (std)` accuracy cell in the paper's percent format.
+pub fn acc_cell(mean: f64, std: f64) -> String {
+    format!("{:.1} ({:.1})", mean * 100.0, std * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_specs_cover_all_strategies() {
+        for name in crate::strategies::STRATEGY_NAMES {
+            let s = default_spec(name, 100);
+            assert_eq!(s.name, name);
+            assert!(s.lr > 0.0);
+        }
+    }
+
+    #[test]
+    fn acc_cell_formats_like_paper() {
+        assert_eq!(acc_cell(0.919, 0.018), "91.9 (1.8)");
+    }
+}

@@ -1,0 +1,90 @@
+//! Tiny `--flag value` / `--flag=value` argument parser.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed flags + positional arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value`, `--key=value`, and bare positionals.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // boolean flag
+                    out.flags.insert(stripped.to_string(), "1".to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short flags not supported: {a}");
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--steps", "200", "--lr=0.001", "table1"]);
+        assert_eq!(a.get("steps"), Some("200"));
+        assert_eq!(a.get_num("lr"), Some(0.001));
+        assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["--quick", "--out", "x.json"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["--min-lr", "-0.5"]);
+        // "-0.5" starts with '-' so it's treated as the next token only if
+        // it doesn't match "--"; our parser treats it as a value.
+        assert_eq!(a.get_num("min-lr"), Some(-0.5));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let a = parse(&[]);
+        assert_eq!(a.get("x"), None);
+        assert_eq!(a.get_num("x"), None);
+    }
+}

@@ -1,0 +1,235 @@
+//! The `hift` command-line launcher (hand-rolled parsing — no clap in the
+//! offline vendor set).
+//!
+//! ```text
+//! hift train  --artifacts DIR --strategy hift --task motif4 --steps 200
+//!             [--optim adamw] [--lr 4e-3] [--m 1] [--order b2u] [--seed 0]
+//!             [--eval-every 50] [--log-every 10] [--out runs/run.json]
+//! hift eval   --artifacts DIR [--variant base] --task motif4
+//! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
+//! hift info   --artifacts DIR
+//! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6|tables8_12|all>
+//! ```
+
+mod args;
+
+pub use args::Args;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::{exhibits, Bench};
+use crate::coordinator::strategy::UpdateStrategy;
+use crate::coordinator::trainer::{self, TrainCfg};
+use crate::data::{build_task, TaskGeom, TASK_NAMES};
+use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
+use crate::optim::OptimKind;
+use crate::runtime::Runtime;
+use crate::ser::emit_pretty;
+use crate::strategies::{StrategySpec, STRATEGY_NAMES};
+
+const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
+  (see `hift help` or the module docs of hift::cli for flag lists)";
+
+/// Binary entrypoint.
+pub fn main_entry() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "memory-report" => cmd_memory_report(&args),
+        "info" => cmd_info(&args),
+        "bench" => cmd_bench(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn geom(rt: &Runtime) -> TaskGeom {
+    let c = &rt.manifest().config;
+    TaskGeom::new(c.vocab, c.batch, c.seq_len)
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let artifacts = a.get("artifacts").unwrap_or("artifacts/tiny");
+    let strategy_name = a.get("strategy").unwrap_or("hift");
+    let task_name = a.get("task").unwrap_or("motif4");
+    let steps: u64 = a.get_num("steps").unwrap_or(200.0) as u64;
+    let seed: u64 = a.get_num("seed").unwrap_or(0.0) as u64;
+
+    let mut rt = Runtime::load(artifacts)?;
+    let optim = OptimKind::parse(a.get("optim").unwrap_or("adamw"))
+        .context("bad --optim (adamw|sgd|sgdm|adagrad|adafactor)")?;
+    let mut spec = StrategySpec::new(strategy_name, optim, a.get_num("lr").unwrap_or(4e-3) as f32,
+                                     steps as usize);
+    spec.m = a.get_num("m").unwrap_or(1.0) as usize;
+    spec.order = UpdateStrategy::parse(a.get("order").unwrap_or("b2u"), seed)
+        .context("bad --order (b2u|t2d|ran)")?;
+    spec.warmup = a.get_num("warmup").unwrap_or(0.0) as usize;
+    spec.seed = seed;
+
+    let mut strategy = spec.build(rt.manifest())?;
+    let mut params = rt.load_params(strategy.variant())?;
+    let mut task = build_task(task_name, geom(&rt), seed)
+        .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
+    eprintln!(
+        "training {} on {} for {steps} steps ({} params, platform {})",
+        strategy.name(),
+        task.name(),
+        params.total_params(),
+        rt.platform()
+    );
+    let rec = trainer::train(
+        &mut rt,
+        strategy.as_mut(),
+        &mut params,
+        task.as_mut(),
+        TrainCfg {
+            steps,
+            eval_every: a.get_num("eval-every").unwrap_or(0.0) as u64,
+            log_every: a.get_num("log-every").unwrap_or(10.0) as u64,
+        },
+    )?;
+    println!("{}", emit_pretty(&rec.to_json()));
+    if let Some(out) = a.get("out") {
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(out, emit_pretty(&rec.to_json()))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    let artifacts = a.get("artifacts").unwrap_or("artifacts/tiny");
+    let variant = a.get("variant").unwrap_or("base");
+    let task_name = a.get("task").unwrap_or("motif4");
+    let mut rt = Runtime::load(artifacts)?;
+    let params = rt.load_params(variant)?;
+    let task = build_task(task_name, geom(&rt), a.get_num("seed").unwrap_or(0.0) as u64)
+        .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
+    let ev = trainer::evaluate(&mut rt, &format!("fwd_{variant}"), &params, task.eval_batches())?;
+    println!("task={task_name} variant={variant} acc={:.4} loss={:.4}", ev.acc, ev.loss);
+    Ok(())
+}
+
+fn cmd_memory_report(a: &Args) -> Result<()> {
+    let w = Workload {
+        batch: a.get_num("batch").unwrap_or(8.0) as usize,
+        seq: a.get_num("seq").unwrap_or(512.0) as usize,
+    };
+    let m = a.get_num("m").unwrap_or(1.0) as usize;
+    let models: Vec<String> = match a.get("model") {
+        Some(one) => vec![one.to_string()],
+        None => crate::memmodel::zoo().iter().map(|z| z.name.clone()).collect(),
+    };
+    for name in models {
+        let arch = by_name(&name).with_context(|| format!("unknown model {name}"))?;
+        println!(
+            "\n{name}: {:.2}M params, {} units, peak group (m={m}) {:.2}M ({:.2}%)",
+            arch.total_params() as f64 / 1e6,
+            arch.n_units(),
+            arch.peak_group_params(m) as f64 / 1e6,
+            arch.peak_group_params(m) as f64 / arch.total_params() as f64 * 100.0,
+        );
+        println!(
+            "  {:<10} {:<8} {:<5} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
+            "optim", "dtype", "ftype", "#Para(MiB)", "#Gra(MiB)", "#Sta(MiB)", "PGS(GiB)",
+            "Res(GiB)", "Tot(GiB)"
+        );
+        for opt in OptimKind::ALL {
+            for (dt, meth) in [
+                (Dtype::Fp32, Method::Fpft),
+                (Dtype::Fp32, Method::Hift { m }),
+                (Dtype::Mixed, Method::Fpft),
+                (Dtype::Mixed, Method::Hift { m }),
+                (Dtype::MixedHi, Method::Hift { m }),
+            ] {
+                let r = account(&arch, opt, dt, meth, w);
+                let f = match meth {
+                    Method::Fpft => "FPFT",
+                    _ => "HiFT",
+                };
+                println!(
+                    "  {:<10} {:<8} {:<5} {:>10.2} {:>10.2} {:>10.2} {:>9.2} {:>9.2} {:>9.2}",
+                    opt.name(),
+                    dt.name(),
+                    f,
+                    r.para / MIB,
+                    r.gra / MIB,
+                    r.sta / MIB,
+                    r.pgs / GIB,
+                    r.residual / GIB,
+                    r.total / GIB
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let artifacts = a.get("artifacts").unwrap_or("artifacts/tiny");
+    let rt = Runtime::load(artifacts)?;
+    let m = rt.manifest();
+    println!("preset:   {} (kernels={}, seed={})", m.preset, m.kernels, m.seed);
+    let c = &m.config;
+    println!(
+        "model:    vocab={} d={} L={} H={} ff={} seq={} batch={} ({} units)",
+        c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seq_len, c.batch, m.n_units
+    );
+    for (name, v) in m.variants.iter() {
+        println!("variant {name}: {} tensors, {:.3}M params", v.params.len(),
+                 v.total_params() as f64 / 1e6);
+    }
+    println!("artifacts ({}):", m.artifacts.len());
+    for art in &m.artifacts {
+        println!("  {:<24} {} inputs -> {} outputs", art.name, art.inputs.len(), art.outputs.len());
+    }
+    println!("strategies: {STRATEGY_NAMES:?}");
+    println!("tasks:      {TASK_NAMES:?}");
+    Ok(())
+}
+
+fn cmd_bench(a: &Args) -> Result<()> {
+    let which = a.positional.first().map(String::as_str).unwrap_or("all");
+    if let Some(dir) = a.get("artifacts") {
+        std::env::set_var("HIFT_ARTIFACTS", dir);
+    }
+    let mut b = Bench::from_env()?;
+    let run = |b: &mut Bench, name: &str| -> Result<()> {
+        match name {
+            "table1" => exhibits::table1(b),
+            "table2" => exhibits::table2(b),
+            "table3" => exhibits::table3(b),
+            "table4" => exhibits::table4(b),
+            "table5" => exhibits::table5(b),
+            "mtbench" | "fig2" | "table7" => exhibits::mtbench(b),
+            "fig3" => exhibits::fig3(b),
+            "fig4" => exhibits::fig4(b),
+            "fig5" => exhibits::fig5(b),
+            "fig6" => exhibits::fig6(b),
+            "tables8_12" => exhibits::tables8_12(b),
+            "appendix_b" => exhibits::appendix_b(b),
+            other => bail!("unknown exhibit {other:?}"),
+        }
+    };
+    if which == "all" {
+        for name in ["tables8_12", "fig6", "appendix_b", "table5", "fig3", "fig4", "table3",
+                     "table4", "mtbench", "table2", "table1", "fig5"] {
+            run(&mut b, name)?;
+        }
+        Ok(())
+    } else {
+        run(&mut b, which)
+    }
+}

@@ -1,0 +1,110 @@
+//! Grouping: n layer units → k groups of m (paper §3 Notation).
+//!
+//! `k = n/m` when m | n, else `⌊n/m⌋ + 1` with a short final group.  The
+//! paper's §4.7 (Figure 4-right) shows quality is insensitive to m;
+//! `bench_fig4` reproduces that, and the memory model consumes `k` for the
+//! Appendix-B identity ζ_hift = (k+3)/k · ζ₁.
+
+/// Static partition of strategy-ordered units into contiguous groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grouping {
+    pub n_units: usize,
+    pub m: usize,
+    /// Unit ids per group, in update order.
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Grouping {
+    /// Partition `order` (a strategy-ordered unit permutation) into groups
+    /// of `m`.
+    pub fn new(order: &[usize], m: usize) -> Self {
+        assert!(m >= 1, "m must be >= 1");
+        let groups: Vec<Vec<usize>> = order.chunks(m).map(|c| c.to_vec()).collect();
+        Grouping { n_units: order.len(), m, groups }
+    }
+
+    /// Number of groups k.
+    pub fn k(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The paper's k formula — must agree with the actual partition.
+    pub fn k_formula(n: usize, m: usize) -> usize {
+        if n % m == 0 {
+            n / m
+        } else {
+            n / m + 1
+        }
+    }
+
+    /// Which group contains unit `u`.
+    pub fn group_of(&self, u: usize) -> Option<usize> {
+        self.groups.iter().position(|g| g.contains(&u))
+    }
+
+    /// Largest group size (drives peak per-step trainable parameters).
+    pub fn max_group_len(&self) -> usize {
+        self.groups.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, run};
+
+    #[test]
+    fn divisible_grouping() {
+        let g = Grouping::new(&[0, 1, 2, 3, 4, 5], 2);
+        assert_eq!(g.k(), 3);
+        assert_eq!(g.groups, vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+    }
+
+    #[test]
+    fn non_divisible_has_short_tail() {
+        let g = Grouping::new(&[0, 1, 2, 3, 4], 2);
+        assert_eq!(g.k(), 3);
+        assert_eq!(g.groups[2], vec![4]);
+        assert_eq!(g.max_group_len(), 2);
+    }
+
+    #[test]
+    fn group_of_lookup() {
+        let g = Grouping::new(&[5, 3, 1, 0], 3);
+        assert_eq!(g.group_of(3), Some(0));
+        assert_eq!(g.group_of(0), Some(1));
+        assert_eq!(g.group_of(9), None);
+    }
+
+    #[test]
+    fn prop_k_matches_paper_formula() {
+        run(300, |g| {
+            let n = g.usize_in(1, 100);
+            let m = g.usize_in(1, 100);
+            let order: Vec<usize> = (0..n).collect();
+            let grouping = Grouping::new(&order, m);
+            prop_assert(
+                grouping.k() == Grouping::k_formula(n, m),
+                format!("k mismatch n={n} m={m}"),
+            )?;
+            // groups partition the units
+            let mut all: Vec<usize> = grouping.groups.concat();
+            all.sort_unstable();
+            prop_assert(all == order, "groups must partition units")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn m_one_gives_one_unit_per_group() {
+        let g = Grouping::new(&[0, 1, 2], 1);
+        assert_eq!(g.k(), 3);
+        assert!(g.groups.iter().all(|gr| gr.len() == 1));
+    }
+
+    #[test]
+    fn m_geq_n_gives_fpft_like_single_group() {
+        let g = Grouping::new(&[0, 1, 2], 8);
+        assert_eq!(g.k(), 1, "m >= n degenerates to one group = FPFT schedule");
+    }
+}

@@ -1,0 +1,185 @@
+//! Learning-rate schedules with HiFT's **delayed update** (§3.1).
+//!
+//! Standard training advances the LR every optimizer step.  Under HiFT that
+//! would give different groups different LRs within one sweep — the
+//! inconsistent-amplitude problem the paper calls out.  [`DelayedLr`]
+//! therefore advances the underlying schedule only when *all* layers have
+//! been updated once (`IsAllLayerUpdate(t, n, m)` in Algorithm 1): every
+//! group in a sweep sees the identical LR.
+
+/// The underlying schedule, indexed by *sweep* (delayed) or *step* (FPFT).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Const { lr: f32 },
+    /// Linear warmup then linear decay to zero over `total` indices.
+    Linear { lr: f32, warmup: usize, total: usize },
+    /// Linear warmup then cosine decay to `min_lr`.
+    Cosine { lr: f32, warmup: usize, total: usize, min_lr: f32 },
+}
+
+impl LrSchedule {
+    /// LR at schedule index `i` (a sweep under HiFT, a step under FPFT).
+    pub fn at(&self, i: usize) -> f32 {
+        match *self {
+            LrSchedule::Const { lr } => lr,
+            LrSchedule::Linear { lr, warmup, total } => {
+                if warmup > 0 && i < warmup {
+                    return lr * (i + 1) as f32 / warmup as f32;
+                }
+                let total = total.max(warmup + 1);
+                let frac = (total - i.min(total)) as f32 / (total - warmup) as f32;
+                lr * frac.clamp(0.0, 1.0)
+            }
+            LrSchedule::Cosine { lr, warmup, total, min_lr } => {
+                if warmup > 0 && i < warmup {
+                    return lr * (i + 1) as f32 / warmup as f32;
+                }
+                let total = total.max(warmup + 1);
+                let p = ((i - warmup.min(i)) as f32 / (total - warmup) as f32).clamp(0.0, 1.0);
+                min_lr + 0.5 * (lr - min_lr) * (1.0 + (std::f32::consts::PI * p).cos())
+            }
+        }
+    }
+}
+
+/// Algorithm 1's `IsAllLayerUpdate`: true at steps that complete a sweep.
+///
+/// With n units in groups of m there are `k = ⌈n/m⌉` steps per sweep; step
+/// indices are 1-based as in the paper.
+pub fn is_all_layer_update(t: u64, n: usize, m: usize) -> bool {
+    let k = n.div_ceil(m) as u64;
+    t % k == 0
+}
+
+/// The delayed-LR state machine: `lr()` is constant within a sweep and the
+/// schedule index advances only at sweep boundaries.
+#[derive(Debug, Clone)]
+pub struct DelayedLr {
+    schedule: LrSchedule,
+    k: usize,
+    step: u64,
+    sweep: usize,
+}
+
+impl DelayedLr {
+    pub fn new(schedule: LrSchedule, k: usize) -> Self {
+        assert!(k >= 1);
+        DelayedLr { schedule, k, step: 0, sweep: 0 }
+    }
+
+    /// The LR for the *next* training step.
+    pub fn lr(&self) -> f32 {
+        self.schedule.at(self.sweep)
+    }
+
+    /// Record a completed step; advances the sweep at boundaries.
+    /// Returns true if a sweep just completed.
+    pub fn tick(&mut self) -> bool {
+        self.step += 1;
+        if self.step % self.k as u64 == 0 {
+            self.sweep += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn sweep(&self) -> usize {
+        self.sweep
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, run};
+
+    #[test]
+    fn const_schedule_is_flat() {
+        let s = LrSchedule::Const { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(999), 0.1);
+    }
+
+    #[test]
+    fn linear_warms_then_decays() {
+        let s = LrSchedule::Linear { lr: 1.0, warmup: 10, total: 110 };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!(s.at(50) < 1.0 && s.at(50) > 0.0);
+        assert_eq!(s.at(110), 0.0);
+    }
+
+    #[test]
+    fn cosine_hits_endpoints() {
+        let s = LrSchedule::Cosine { lr: 1.0, warmup: 0, total: 100, min_lr: 0.1 };
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!((s.at(100) - 0.1).abs() < 1e-6);
+        assert!(s.at(50) > 0.1 && s.at(50) < 1.0);
+    }
+
+    #[test]
+    fn is_all_layer_update_matches_k() {
+        // n=5, m=2 -> k=3: sweep completes at t = 3, 6, 9 …
+        assert!(!is_all_layer_update(1, 5, 2));
+        assert!(!is_all_layer_update(2, 5, 2));
+        assert!(is_all_layer_update(3, 5, 2));
+        assert!(is_all_layer_update(6, 5, 2));
+    }
+
+    #[test]
+    fn delayed_lr_constant_within_sweep() {
+        let mut d = DelayedLr::new(LrSchedule::Linear { lr: 1.0, warmup: 0, total: 10 }, 4);
+        let lr0 = d.lr();
+        for i in 0..4 {
+            assert_eq!(d.lr(), lr0, "same LR for all {} steps of the sweep", 4);
+            let boundary = d.tick();
+            assert_eq!(boundary, i == 3);
+        }
+        assert!(d.lr() < lr0, "LR advances only after the sweep");
+        assert_eq!(d.sweep(), 1);
+    }
+
+    #[test]
+    fn prop_delayed_lr_changes_exactly_once_per_k_steps() {
+        run(100, |g| {
+            let k = g.usize_in(1, 20);
+            let sweeps = g.usize_in(1, 10);
+            let mut d = DelayedLr::new(LrSchedule::Linear { lr: 1.0, warmup: 0, total: 1000 }, k);
+            let mut changes = 0;
+            let mut prev = d.lr();
+            for _ in 0..k * sweeps {
+                d.tick();
+                if (d.lr() - prev).abs() > 0.0 {
+                    changes += 1;
+                    prev = d.lr();
+                }
+            }
+            prop_assert(changes == sweeps, format!("k={k}: {changes} changes != {sweeps} sweeps"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_schedules_are_bounded_and_nonnegative() {
+        run(200, |g| {
+            let lr = g.f32_in(1e-6, 1.0);
+            let warmup = g.usize_in(0, 50);
+            let total = warmup + g.usize_in(1, 200);
+            let i = g.usize_in(0, 400);
+            for s in [
+                LrSchedule::Const { lr },
+                LrSchedule::Linear { lr, warmup, total },
+                LrSchedule::Cosine { lr, warmup, total, min_lr: 0.0 },
+            ] {
+                let v = s.at(i);
+                prop_assert(v >= 0.0 && v <= lr + 1e-6, format!("{s:?} at {i} -> {v}"))?;
+            }
+            Ok(())
+        });
+    }
+}

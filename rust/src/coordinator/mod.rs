@@ -1,0 +1,30 @@
+//! The HiFT coordinator — Algorithm 1 of the paper, in Rust.
+//!
+//! HiFT divides the model's layer units into `k = ⌈n/m⌉` groups and updates
+//! exactly one group per training step, rotating through a queue whose
+//! initial order is fixed by the update strategy (bottom2up / top2down /
+//! random).  The learning rate advances *once per full sweep* (delayed LR),
+//! keeping the update amplitude of every group consistent.
+//!
+//! Module layout mirrors the algorithm:
+//! * [`strategy`] — S ∈ {B2U, T2D, RAN} (the `UpdateStrategy(Q, S)` line)
+//! * [`queue`] — the rotating layer queue (steps c, d)
+//! * [`grouping`] — n layers → k groups of m (the `group` operation)
+//! * [`lr`] — schedules + the delayed `IsAllLayerUpdate` advancement
+//! * [`scheduler`] — the per-step group selection state machine
+//! * [`trainer`] — drives any [`crate::strategies::FineTuneStrategy`]
+//!   (HiFT or a baseline) over data with eval + metrics
+
+pub mod grouping;
+pub mod lr;
+pub mod queue;
+pub mod scheduler;
+pub mod strategy;
+pub mod trainer;
+
+pub use grouping::Grouping;
+pub use lr::{DelayedLr, LrSchedule};
+pub use queue::LayerQueue;
+pub use scheduler::{HiftScheduler, SchedulerCfg};
+pub use strategy::UpdateStrategy;
+pub use trainer::{RunRecord, TrainCfg, Trainer};

@@ -1,0 +1,127 @@
+//! The rotating layer queue of Algorithm 1.
+//!
+//! `Q` stores unit identifiers in strategy order.  Each step the scheduler
+//! pops the next `m` (step c, `QueueGetAndRemove`) and pushes them back at
+//! the tail (step d, `QueueAddTail`), so after a full sweep the queue is
+//! back in its initial order — groups are *stable* across sweeps.
+
+use std::collections::VecDeque;
+
+/// FIFO of layer-unit ids with the Algorithm-1 rotation ops.
+#[derive(Debug, Clone)]
+pub struct LayerQueue {
+    q: VecDeque<usize>,
+}
+
+impl LayerQueue {
+    /// Initialize from a strategy order (the `UpdateStrategy(Q, S)` line).
+    pub fn new(order: &[usize]) -> Self {
+        LayerQueue { q: order.iter().copied().collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Step c: remove and return up to `m` ids from the head.
+    pub fn get_and_remove(&mut self, m: usize) -> Vec<usize> {
+        let take = m.min(self.q.len());
+        self.q.drain(..take).collect()
+    }
+
+    /// Step d: append ids at the tail (to be revisited next sweep).
+    pub fn add_tail(&mut self, ids: &[usize]) {
+        self.q.extend(ids.iter().copied());
+    }
+
+    /// Convenience: pop-rotate in one call.
+    pub fn rotate(&mut self, m: usize) -> Vec<usize> {
+        let ids = self.get_and_remove(m);
+        self.add_tail(&ids);
+        ids
+    }
+
+    /// Current contents, head first (diagnostics/tests).
+    pub fn snapshot(&self) -> Vec<usize> {
+        self.q.iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, run};
+
+    #[test]
+    fn rotation_cycles_through_all() {
+        let mut q = LayerQueue::new(&[0, 1, 2, 3, 4]);
+        assert_eq!(q.rotate(2), vec![0, 1]);
+        assert_eq!(q.rotate(2), vec![2, 3]);
+        assert_eq!(q.rotate(2), vec![4, 0]); // m ∤ n wraps
+        assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn full_sweep_restores_order_when_m_divides() {
+        let order = vec![3, 1, 4, 0, 2, 5];
+        let mut q = LayerQueue::new(&order);
+        for _ in 0..3 {
+            q.rotate(2);
+        }
+        assert_eq!(q.snapshot(), order, "after k rotations the queue is unchanged");
+    }
+
+    #[test]
+    fn get_and_remove_clamps_to_len() {
+        let mut q = LayerQueue::new(&[7, 8]);
+        assert_eq!(q.get_and_remove(5), vec![7, 8]);
+        assert!(q.is_empty());
+        q.add_tail(&[7, 8]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn prop_rotation_preserves_multiset_and_length() {
+        run(200, |g| {
+            let n = g.usize_in(1, 40);
+            let m = g.usize_in(1, 40);
+            let steps = g.usize_in(0, 50);
+            let order: Vec<usize> = (0..n).collect();
+            let mut q = LayerQueue::new(&order);
+            for _ in 0..steps {
+                let ids = q.rotate(m);
+                prop_assert(ids.len() == m.min(n), "pop size")?;
+            }
+            let mut snap = q.snapshot();
+            snap.sort_unstable();
+            prop_assert(snap == order, "queue must stay a permutation of the units")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_every_unit_visited_once_per_sweep() {
+        run(200, |g| {
+            let n = g.usize_in(1, 32);
+            let m = g.usize_in(1, n);
+            let k = n.div_ceil(m);
+            let mut q = LayerQueue::new(&(0..n).collect::<Vec<_>>());
+            let mut seen = vec![0usize; n];
+            let mut popped = 0;
+            // one paper-sweep = pops until every unit appeared once
+            while popped < n {
+                let take = m.min(n - popped);
+                for id in q.rotate(take) {
+                    seen[id] += 1;
+                }
+                popped += take;
+            }
+            prop_assert(seen.iter().all(|&c| c == 1), format!("sweep visits each once; k={k}"))?;
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! The per-step group-selection state machine (Algorithm 1's loop body,
+//! minus the actual forward/backward which [`crate::strategies::hift`]
+//! dispatches to the runtime).
+//!
+//! Pure (no PJRT dependency) so its invariants are property-testable:
+//! * each sweep visits every unit exactly once, in strategy order;
+//! * groups are identical from sweep to sweep (`m ∤ n` handled with the
+//!   paper's short final group, not a drifting window);
+//! * the LR is constant within a sweep and advances at sweep boundaries.
+
+use super::grouping::Grouping;
+use super::lr::{DelayedLr, LrSchedule};
+use super::queue::LayerQueue;
+use super::strategy::UpdateStrategy;
+
+/// Scheduler configuration (the HiFT-specific hyperparameters).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerCfg {
+    /// Layers per group (paper's m).
+    pub m: usize,
+    pub strategy: UpdateStrategy,
+    pub schedule: LrSchedule,
+}
+
+/// One planned training step: which units to train and at what LR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedStep {
+    /// 1-based step index (paper's t).
+    pub step: u64,
+    /// Sweep index (how many full passes completed before this step).
+    pub sweep: usize,
+    /// Layer units whose parameters are trainable this step.
+    pub units: Vec<usize>,
+    /// The (delayed) learning rate for this step.
+    pub lr: f32,
+    /// True if this step completes a sweep (LR advances after it).
+    pub sweep_boundary: bool,
+}
+
+/// HiFT's group scheduler.
+#[derive(Debug, Clone)]
+pub struct HiftScheduler {
+    queue: LayerQueue,
+    lr: DelayedLr,
+    n_units: usize,
+    m: usize,
+    k: usize,
+    pos_in_sweep: usize,
+    step: u64,
+}
+
+impl HiftScheduler {
+    pub fn new(cfg: SchedulerCfg, n_units: usize) -> Self {
+        assert!(n_units >= 1 && cfg.m >= 1);
+        let order = cfg.strategy.order(n_units);
+        let k = Grouping::k_formula(n_units, cfg.m);
+        HiftScheduler {
+            queue: LayerQueue::new(&order),
+            lr: DelayedLr::new(cfg.schedule, k),
+            n_units,
+            m: cfg.m,
+            k,
+            pos_in_sweep: 0,
+            step: 0,
+        }
+    }
+
+    /// Number of groups (steps per sweep).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Plan and commit the next step.
+    pub fn next(&mut self) -> PlannedStep {
+        self.step += 1;
+        // Clamp the pop at the sweep end so groups stay fixed when m ∤ n
+        // (the paper's short final group).
+        let take = self.m.min(self.n_units - self.pos_in_sweep);
+        let units = self.queue.rotate(take);
+        let lr = self.lr.lr();
+        let sweep = self.lr.sweep();
+        self.pos_in_sweep += take;
+        let boundary = self.pos_in_sweep >= self.n_units;
+        if boundary {
+            self.pos_in_sweep = 0;
+        }
+        let advanced = self.lr.tick();
+        debug_assert_eq!(advanced, boundary, "DelayedLr and sweep position must agree");
+        PlannedStep { step: self.step, sweep, units, lr, sweep_boundary: boundary }
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, run};
+
+    fn cfg(m: usize, lr: f32) -> SchedulerCfg {
+        SchedulerCfg {
+            m,
+            strategy: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Linear { lr, warmup: 0, total: 100 },
+        }
+    }
+
+    #[test]
+    fn m1_visits_units_in_order() {
+        let mut s = HiftScheduler::new(cfg(1, 1.0), 4);
+        let units: Vec<Vec<usize>> = (0..8).map(|_| s.next().units).collect();
+        assert_eq!(units[..4], [vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(units[4..], [vec![0], vec![1], vec![2], vec![3]], "second sweep identical");
+    }
+
+    #[test]
+    fn short_final_group_is_stable_across_sweeps() {
+        // n=5, m=2 -> groups [0,1], [2,3], [4] every sweep.
+        let mut s = HiftScheduler::new(cfg(2, 1.0), 5);
+        for sweep in 0..3 {
+            assert_eq!(s.next().units, vec![0, 1], "sweep {sweep}");
+            assert_eq!(s.next().units, vec![2, 3], "sweep {sweep}");
+            let last = s.next();
+            assert_eq!(last.units, vec![4], "sweep {sweep}");
+            assert!(last.sweep_boundary);
+        }
+    }
+
+    #[test]
+    fn lr_constant_within_sweep_advances_after() {
+        let mut s = HiftScheduler::new(cfg(1, 1.0), 3);
+        let first: Vec<f32> = (0..3).map(|_| s.next().lr).collect();
+        assert!(first.windows(2).all(|w| w[0] == w[1]), "sweep-constant LR");
+        let next_lr = s.next().lr;
+        assert!(next_lr < first[0], "delayed LR decays after sweep");
+    }
+
+    #[test]
+    fn t2d_reverses_visit_order() {
+        let mut s = HiftScheduler::new(
+            SchedulerCfg { m: 1, strategy: UpdateStrategy::Top2Down, schedule: LrSchedule::Const { lr: 0.1 } },
+            3,
+        );
+        assert_eq!(s.next().units, vec![2]);
+        assert_eq!(s.next().units, vec![1]);
+        assert_eq!(s.next().units, vec![0]);
+    }
+
+    #[test]
+    fn prop_sweep_visits_each_unit_exactly_once() {
+        run(200, |g| {
+            let n = g.usize_in(1, 24);
+            let m = g.usize_in(1, 24);
+            let seed = g.i64_in(0, 1 << 30) as u64;
+            let strat = *g.choose(&[
+                UpdateStrategy::Bottom2Up,
+                UpdateStrategy::Top2Down,
+                UpdateStrategy::Random { seed },
+            ]);
+            let mut s = HiftScheduler::new(
+                SchedulerCfg { m, strategy: strat, schedule: LrSchedule::Const { lr: 0.1 } },
+                n,
+            );
+            let k = s.k();
+            for sweep in 0..3 {
+                let mut seen = vec![0usize; n];
+                let mut boundaries = 0;
+                for _ in 0..k {
+                    let p = s.next();
+                    prop_assert(p.sweep == sweep, "sweep counter")?;
+                    for u in &p.units {
+                        seen[*u] += 1;
+                    }
+                    boundaries += p.sweep_boundary as usize;
+                }
+                prop_assert(seen.iter().all(|&c| c == 1), format!("n={n} m={m} {strat:?}"))?;
+                prop_assert(boundaries == 1, "exactly one boundary per sweep")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_group_pattern_identical_across_sweeps() {
+        run(100, |g| {
+            let n = g.usize_in(1, 20);
+            let m = g.usize_in(1, 20);
+            let mut s = HiftScheduler::new(cfg(m, 1.0), n);
+            let k = s.k();
+            let sweep1: Vec<Vec<usize>> = (0..k).map(|_| s.next().units).collect();
+            let sweep2: Vec<Vec<usize>> = (0..k).map(|_| s.next().units).collect();
+            prop_assert(sweep1 == sweep2, format!("groups drift: n={n} m={m}"))?;
+            Ok(())
+        });
+    }
+}

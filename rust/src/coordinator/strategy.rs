@@ -1,0 +1,99 @@
+//! Update strategies (paper Figure 1): the *order* in which layer units are
+//! visited.  The paper's finding (§4.6, Figure 4-left) is that this order
+//! does not affect final quality; `bench_fig4` reproduces that.
+
+use crate::rng::Pcg32;
+
+/// S ∈ {bottom2up, top2down, random} (Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateStrategy {
+    /// Embedding layer first, head last (paper default).
+    Bottom2Up,
+    /// Head first, embedding last.
+    Top2Down,
+    /// One seeded shuffle *before* training; the order then stays fixed for
+    /// the whole run ("avoids the instability caused by constant changes in
+    /// the update order", §3.1).
+    Random { seed: u64 },
+}
+
+impl UpdateStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdateStrategy::Bottom2Up => "bottom2up",
+            UpdateStrategy::Top2Down => "top2down",
+            UpdateStrategy::Random { .. } => "random",
+        }
+    }
+
+    pub fn parse(s: &str, seed: u64) -> Option<UpdateStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "b2u" | "bottom2up" => Some(UpdateStrategy::Bottom2Up),
+            "t2d" | "top2down" => Some(UpdateStrategy::Top2Down),
+            "ran" | "random" => Some(UpdateStrategy::Random { seed }),
+            _ => None,
+        }
+    }
+
+    /// The initial unit visit order for a model with `n_units` layer units
+    /// (unit 0 = embeddings … unit n-1 = head, matching the manifest).
+    pub fn order(&self, n_units: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = (0..n_units).collect();
+        match self {
+            UpdateStrategy::Bottom2Up => {}
+            UpdateStrategy::Top2Down => ids.reverse(),
+            UpdateStrategy::Random { seed } => Pcg32::seeded(*seed).shuffle(&mut ids),
+        }
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, run};
+
+    #[test]
+    fn b2u_and_t2d_are_reverses() {
+        let b = UpdateStrategy::Bottom2Up.order(6);
+        let mut t = UpdateStrategy::Top2Down.order(6);
+        t.reverse();
+        assert_eq!(b, t);
+        assert_eq!(b, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn random_is_fixed_per_seed() {
+        let a = UpdateStrategy::Random { seed: 3 }.order(10);
+        let b = UpdateStrategy::Random { seed: 3 }.order(10);
+        let c = UpdateStrategy::Random { seed: 4 }.order(10);
+        assert_eq!(a, b, "same seed = same order (stability requirement §3.1)");
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prop_every_order_is_a_permutation() {
+        run(100, |g| {
+            let n = g.usize_in(1, 64);
+            let seed = g.i64_in(0, 1 << 40) as u64;
+            for s in [
+                UpdateStrategy::Bottom2Up,
+                UpdateStrategy::Top2Down,
+                UpdateStrategy::Random { seed },
+            ] {
+                let mut o = s.order(n);
+                o.sort_unstable();
+                prop_assert(o == (0..n).collect::<Vec<_>>(), format!("{s:?} not a permutation"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(UpdateStrategy::parse("B2U", 0), Some(UpdateStrategy::Bottom2Up));
+        assert_eq!(UpdateStrategy::parse("top2down", 0), Some(UpdateStrategy::Top2Down));
+        assert!(matches!(UpdateStrategy::parse("ran", 7), Some(UpdateStrategy::Random { seed: 7 })));
+        assert_eq!(UpdateStrategy::parse("zigzag", 0), None);
+    }
+}

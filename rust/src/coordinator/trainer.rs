@@ -1,0 +1,207 @@
+//! Strategy-agnostic training driver: loops batches from a [`Task`] through
+//! any [`FineTuneStrategy`], tracks loss/accuracy/throughput, runs periodic
+//! held-out evaluation, and emits a JSON [`RunRecord`] — the unit of
+//! evidence every bench harness builds its tables from.
+
+use anyhow::Result;
+
+use crate::data::Task;
+use crate::metrics::{Accuracy, Series, Throughput};
+use crate::ser::Value;
+use crate::strategies::FineTuneStrategy;
+use crate::runtime::{Batch, Runtime};
+use crate::tensor::TensorSet;
+
+/// Driver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainCfg {
+    pub steps: u64,
+    /// 0 = eval only at the end.
+    pub eval_every: u64,
+    /// 0 = no progress logging.
+    pub log_every: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { steps: 100, eval_every: 0, log_every: 0 }
+    }
+}
+
+/// Held-out evaluation result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub acc: f64,
+    pub loss: f64,
+}
+
+/// Evaluate `params` on fixed batches with a forward artifact.
+pub fn evaluate(
+    rt: &mut Runtime,
+    fwd_artifact: &str,
+    params: &TensorSet,
+    batches: &[Batch],
+) -> Result<EvalResult> {
+    let mut acc = Accuracy::default();
+    let mut loss_sum = 0.0f64;
+    for b in batches {
+        let out = rt.run(fwd_artifact, params, b)?;
+        let wsum: f64 = b.weights.iter().map(|&w| w as f64).sum();
+        acc.add(out.ncorrect as f64, wsum);
+        loss_sum += out.loss as f64;
+    }
+    Ok(EvalResult { acc: acc.value(), loss: loss_sum / batches.len().max(1) as f64 })
+}
+
+/// Everything one training run produced.
+#[derive(Debug)]
+pub struct RunRecord {
+    pub strategy: String,
+    pub task: String,
+    pub losses: Series,
+    /// (step, eval accuracy, eval loss) checkpoints.
+    pub evals: Vec<(u64, f64, f64)>,
+    pub final_eval: EvalResult,
+    pub train_acc: f64,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    pub exec_secs: f64,
+    pub peak_trainable_params: usize,
+    pub optimizer_state_bytes: usize,
+    /// Paging ledger summary (HiFT only): (h2d, d2h, max_inflight, peak_device).
+    pub paging: Option<(u64, u64, u64, u64)>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("strategy", self.strategy.as_str().into()),
+            ("task", self.task.as_str().into()),
+            ("steps", (self.steps as usize).into()),
+            ("final_eval_acc", self.final_eval.acc.into()),
+            ("final_eval_loss", self.final_eval.loss.into()),
+            ("train_acc", self.train_acc.into()),
+            ("final_train_loss", self.losses.tail_mean(10).into()),
+            ("wall_secs", self.wall_secs.into()),
+            ("steps_per_sec", self.steps_per_sec.into()),
+            ("exec_secs", self.exec_secs.into()),
+            ("peak_trainable_params", self.peak_trainable_params.into()),
+            ("optimizer_state_bytes", self.optimizer_state_bytes.into()),
+            (
+                "loss_curve",
+                Value::Arr(
+                    self.losses
+                        .downsample(64)
+                        .into_iter()
+                        .map(|(i, v)| Value::Arr(vec![(i as f64).into(), v.into()]))
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Value::Arr(
+                    self.evals
+                        .iter()
+                        .map(|(s, a, l)| Value::Arr(vec![(*s as f64).into(), (*a).into(), (*l).into()]))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some((h2d, d2h, inflight, peak)) = self.paging {
+            pairs.push((
+                "paging",
+                Value::obj(vec![
+                    ("h2d_bytes", (h2d as usize).into()),
+                    ("d2h_bytes", (d2h as usize).into()),
+                    ("max_inflight_bytes", (inflight as usize).into()),
+                    ("peak_device_state_bytes", (peak as usize).into()),
+                ]),
+            ));
+        }
+        Value::obj(pairs)
+    }
+}
+
+/// Run `strategy` on `task` for `cfg.steps` steps.
+///
+/// `params` must have been loaded for `strategy.variant()`
+/// (see [`Runtime::load_params`]).
+pub fn train(
+    rt: &mut Runtime,
+    strategy: &mut dyn FineTuneStrategy,
+    params: &mut TensorSet,
+    task: &mut dyn Task,
+    cfg: TrainCfg,
+) -> Result<RunRecord> {
+    let fwd = strategy.fwd_artifact();
+    let mut losses = Series::new("train_loss");
+    let mut train_acc = Accuracy::default();
+    let mut evals = Vec::new();
+    let mut thr = Throughput::new();
+    let mut exec_secs = 0.0f64;
+
+    for step in 1..=cfg.steps {
+        let batch = task.train_batch();
+        let stats = strategy.step(rt, params, &batch)?;
+        losses.push(stats.loss as f64);
+        train_acc.add(stats.ncorrect as f64, stats.weight_sum as f64);
+        exec_secs += stats.exec_time.as_secs_f64();
+        thr.step();
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!(
+                "[{}] step {step}/{} loss={:.4} lr={:.2e} trainable={} ({:.2} steps/s)",
+                strategy.name(),
+                cfg.steps,
+                losses.tail_mean(cfg.log_every as usize),
+                stats.lr,
+                stats.trainable_params,
+                thr.steps_per_sec(),
+            );
+        }
+        if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+            let ev = evaluate(rt, &fwd, params, task.eval_batches())?;
+            evals.push((step, ev.acc, ev.loss));
+            if cfg.log_every > 0 {
+                eprintln!("[{}]   eval@{step}: acc={:.4} loss={:.4}", strategy.name(), ev.acc, ev.loss);
+            }
+        }
+    }
+
+    let final_eval = evaluate(rt, &fwd, params, task.eval_batches())?;
+    let wall = thr.elapsed_secs();
+    Ok(RunRecord {
+        strategy: strategy.name().to_string(),
+        task: task.name().to_string(),
+        losses,
+        evals,
+        final_eval,
+        train_acc: train_acc.value(),
+        steps: cfg.steps,
+        wall_secs: wall,
+        steps_per_sec: if wall > 0.0 { cfg.steps as f64 / wall } else { 0.0 },
+        exec_secs,
+        peak_trainable_params: strategy.peak_trainable_params(),
+        optimizer_state_bytes: strategy.optimizer_state_bytes(),
+        paging: strategy
+            .ledger()
+            .map(|l| (l.h2d_bytes, l.d2h_bytes, l.max_inflight_bytes, l.peak_device_bytes)),
+    })
+}
+
+/// Alias kept for the public API surface described in DESIGN.md.
+pub struct Trainer;
+
+impl Trainer {
+    /// See [`train`].
+    pub fn run(
+        rt: &mut Runtime,
+        strategy: &mut dyn FineTuneStrategy,
+        params: &mut TensorSet,
+        task: &mut dyn Task,
+        cfg: TrainCfg,
+    ) -> Result<RunRecord> {
+        train(rt, strategy, params, task, cfg)
+    }
+}

@@ -1,0 +1,579 @@
+//! Synthetic tasks standing in for the paper's datasets (DESIGN.md §2).
+//!
+//! The paper's quality claims are *relative* — HiFT vs FPFT vs PEFT on the
+//! same task — so deterministic planted-signal generators give a clean
+//! accuracy axis at laptop scale while exercising the identical training
+//! code path.  Mapping:
+//!
+//! | paper dataset family | stand-in | task type |
+//! |---|---|---|
+//! | SST-2/5, TREC, MNLI… (Tables 1–2) | [`MotifClass`] | sequence classification |
+//! | E2E NLG (Table 3) | [`CopyTask`] / [`SortTask`] | seq2seq generation |
+//! | ViGGO/SQL/GSM8K (Table 4) | [`ModSumTask`] | compositional "reasoning" |
+//! | Alpaca instruction FT (Fig. 2) | [`InstructTask`] | multi-task with task-id prefix |
+//! | LM pre-training corpora (Fig. 3) | [`MarkovLm`] | language modelling |
+//!
+//! Every task emits [`Batch`]es: `tokens` (input), `targets` (gold,
+//! position-aligned) and `weights` (loss mask — 1 only where the task
+//! defines supervision).
+
+use crate::rng::Pcg32;
+use crate::runtime::Batch;
+
+/// A supervised task: a train-batch sampler plus a fixed eval set.
+pub trait Task {
+    fn name(&self) -> &str;
+
+    /// Sample a fresh training batch (deterministic in the task's RNG).
+    fn train_batch(&mut self) -> Batch;
+
+    /// The held-out evaluation set (fixed at construction).
+    fn eval_batches(&self) -> &[Batch];
+
+    /// Sum of loss-mask weights in a batch (accuracy denominator).
+    fn weight_sum(batch: &Batch) -> f64
+    where
+        Self: Sized,
+    {
+        batch.weights.iter().map(|&w| w as f64).sum()
+    }
+}
+
+/// Geometry every generator needs: vocab and batch shape from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskGeom {
+    pub vocab: usize,
+    pub b: usize,
+    pub s: usize,
+}
+
+impl TaskGeom {
+    pub fn new(vocab: usize, b: usize, s: usize) -> Self {
+        assert!(vocab >= 16, "tasks reserve the first 16 tokens for control symbols");
+        TaskGeom { vocab, b, s }
+    }
+}
+
+// Reserved control tokens (always < 16 < vocab).
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+/// Classification answers use tokens 2..2+n_classes.
+pub const CLS_BASE: i32 = 2;
+
+// ---------------------------------------------------------------------------
+// MotifClass — planted-motif sequence classification
+// ---------------------------------------------------------------------------
+
+/// Classification with a planted motif: class c's motif (a fixed trigram) is
+/// embedded at a random position in noise tokens; the model must emit the
+/// class token at the final position.  Difficulty rises with `n_classes`
+/// and `noise` (probability of corrupting one motif token).
+pub struct MotifClass {
+    geom: TaskGeom,
+    n_classes: usize,
+    motifs: Vec<[i32; 3]>,
+    noise: f32,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+impl MotifClass {
+    pub fn new(geom: TaskGeom, n_classes: usize, noise: f32, seed: u64) -> Self {
+        assert!(n_classes >= 2 && (CLS_BASE as usize + n_classes) < geom.vocab);
+        let mut rng = Pcg32::new(seed, 101);
+        let lo = 16 + n_classes; // motif alphabet sits above control+class tokens
+        let motifs: Vec<[i32; 3]> = (0..n_classes)
+            .map(|_| {
+                [
+                    (lo + rng.below(geom.vocab - lo)) as i32,
+                    (lo + rng.below(geom.vocab - lo)) as i32,
+                    (lo + rng.below(geom.vocab - lo)) as i32,
+                ]
+            })
+            .collect();
+        let mut t = MotifClass {
+            geom,
+            n_classes,
+            motifs,
+            noise,
+            rng,
+            eval: Vec::new(),
+            name: format!("motif{n_classes}"),
+        };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        t
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { vocab, b, s } = self.geom;
+        let mut batch = Batch::new(b, s);
+        let lo = 16 + self.n_classes;
+        for row in 0..b {
+            let class = self.rng.below(self.n_classes);
+            let motif = self.motifs[class];
+            // noise background
+            for col in 0..s {
+                batch.tokens[row * s + col] = (lo + self.rng.below(vocab - lo)) as i32;
+            }
+            // plant the motif away from the answer slot
+            let pos = self.rng.below(s.saturating_sub(4).max(1));
+            for (j, &m) in motif.iter().enumerate() {
+                let tok = if self.rng.next_f32() < self.noise {
+                    (lo + self.rng.below(vocab - lo)) as i32
+                } else {
+                    m
+                };
+                batch.tokens[row * s + pos + j] = tok;
+            }
+            // last position: SEP input, class-token target, weight 1
+            batch.tokens[row * s + s - 1] = SEP;
+            batch.targets[row * s + s - 1] = CLS_BASE + class as i32;
+            batch.weights[row * s + s - 1] = 1.0;
+        }
+        batch
+    }
+}
+
+impl Task for MotifClass {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MarkovLm — language modelling on a seeded order-2 Markov "corpus"
+// ---------------------------------------------------------------------------
+
+/// LM objective over sequences drawn from a random (but fixed) order-2
+/// Markov chain — a tiny corpus with real statistical structure, so loss
+/// falls smoothly as the model learns the transition table (the Figure-3
+/// stability workload).
+pub struct MarkovLm {
+    geom: TaskGeom,
+    /// transitions[a][b] = preferred successors of bigram (a, b)
+    succ: Vec<i32>,
+    branch: usize,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+impl MarkovLm {
+    pub fn new(geom: TaskGeom, branch: usize, seed: u64) -> Self {
+        let v = geom.vocab;
+        let mut rng = Pcg32::new(seed, 202);
+        // For each (a, b) pick `branch` allowed successors.
+        let mut succ = vec![0i32; v * v * branch];
+        for i in 0..v * v {
+            for j in 0..branch {
+                succ[i * branch + j] = (16 + rng.below(v - 16)) as i32;
+            }
+        }
+        let mut t = MarkovLm { geom, succ, branch, rng, eval: Vec::new(), name: "markovlm".into() };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        t
+    }
+
+    fn next_tok(&mut self, a: i32, b: i32) -> i32 {
+        let idx = (a as usize * self.geom.vocab + b as usize) * self.branch;
+        let j = self.rng.below(self.branch);
+        self.succ[idx + j]
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { vocab, b, s } = self.geom;
+        let mut batch = Batch::new(b, s);
+        for row in 0..b {
+            let mut a = (16 + self.rng.below(vocab - 16)) as i32;
+            let mut bb = (16 + self.rng.below(vocab - 16)) as i32;
+            let mut seq = Vec::with_capacity(s + 1);
+            seq.push(a);
+            seq.push(bb);
+            for _ in 2..=s {
+                let c = self.next_tok(a, bb);
+                seq.push(c);
+                a = bb;
+                bb = c;
+            }
+            for col in 0..s {
+                batch.tokens[row * s + col] = seq[col];
+                batch.targets[row * s + col] = seq[col + 1];
+                // first position is unpredictable; start supervision at 1
+                batch.weights[row * s + col] = if col == 0 { 0.0 } else { 1.0 };
+            }
+        }
+        batch
+    }
+}
+
+impl Task for MarkovLm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CopyTask / SortTask — seq2seq generation
+// ---------------------------------------------------------------------------
+
+/// `x₁…x_L SEP` → the model must reproduce `x₁…x_L` (E2E-NLG stand-in:
+/// faithful surface realization of given content).
+pub struct CopyTask {
+    geom: TaskGeom,
+    src_len: usize,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    sorted: bool,
+    name: String,
+}
+
+impl CopyTask {
+    pub fn new(geom: TaskGeom, sorted: bool, seed: u64) -> Self {
+        let src_len = (geom.s - 2) / 2;
+        let mut t = CopyTask {
+            geom,
+            src_len,
+            rng: Pcg32::new(seed, 303),
+            eval: Vec::new(),
+            sorted,
+            name: if sorted { "sort" } else { "copy" }.into(),
+        };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        t
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { vocab, b, s } = self.geom;
+        let l = self.src_len;
+        let mut batch = Batch::new(b, s);
+        for row in 0..b {
+            let mut src: Vec<i32> =
+                (0..l).map(|_| (16 + self.rng.below(vocab - 16)) as i32).collect();
+            let mut out = src.clone();
+            if self.sorted {
+                out.sort_unstable();
+            }
+            // layout: src … SEP out … (padding)
+            for (col, &tok) in src.iter().enumerate() {
+                batch.tokens[row * s + col] = tok;
+            }
+            batch.tokens[row * s + l] = SEP;
+            for (j, &tok) in out.iter().enumerate() {
+                let col = l + 1 + j;
+                batch.tokens[row * s + col] = tok;
+                // next-token supervision: predict out[j] at position col-1
+                batch.targets[row * s + col - 1] = tok;
+                batch.weights[row * s + col - 1] = 1.0;
+            }
+            let _ = &mut src;
+        }
+        batch
+    }
+}
+
+impl Task for CopyTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+/// Sorted-copy variant (harder: requires global order reasoning).
+pub type SortTask = CopyTask;
+
+// ---------------------------------------------------------------------------
+// ModSumTask — compositional "reasoning" (GSM8K stand-in)
+// ---------------------------------------------------------------------------
+
+/// `a₁ a₂ … a_L SEP` → answer token `(Σ aᵢ) mod base`.  Requires combining
+/// *all* input positions, which linear probes and low-capacity adapters
+/// visibly fail at — the Table-4 "hard task" axis.
+pub struct ModSumTask {
+    geom: TaskGeom,
+    n_terms: usize,
+    base: usize,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+impl ModSumTask {
+    pub fn new(geom: TaskGeom, n_terms: usize, base: usize, seed: u64) -> Self {
+        assert!(16 + base <= geom.vocab);
+        assert!(n_terms + 2 <= geom.s);
+        let mut t = ModSumTask {
+            geom,
+            n_terms,
+            base,
+            rng: Pcg32::new(seed, 404),
+            eval: Vec::new(),
+            name: format!("modsum{n_terms}"),
+        };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        t
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { b, s, .. } = self.geom;
+        let mut batch = Batch::new(b, s);
+        for row in 0..b {
+            let mut sum = 0usize;
+            for j in 0..self.n_terms {
+                let digit = self.rng.below(self.base);
+                sum += digit;
+                batch.tokens[row * s + j] = (16 + digit) as i32;
+            }
+            batch.tokens[row * s + self.n_terms] = SEP;
+            // pad rest with PAD; supervise only at the SEP position
+            let col = self.n_terms;
+            batch.targets[row * s + col] = (16 + (sum % self.base)) as i32;
+            batch.weights[row * s + col] = 1.0;
+            for j in self.n_terms + 1..s {
+                batch.tokens[row * s + j] = PAD;
+            }
+        }
+        batch
+    }
+}
+
+impl Task for ModSumTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// InstructTask — multi-task with a task-id prefix (instruction-FT stand-in)
+// ---------------------------------------------------------------------------
+
+/// A mixture of sub-tasks, each announced by a distinct "instruction" token
+/// at position 0 — the model must dispatch on it (Alpaca/MT-bench proxy;
+/// quality = held-out masked accuracy per category, Figure 2 / Table 7).
+pub struct InstructTask {
+    subs: Vec<Box<dyn Task>>,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+impl InstructTask {
+    pub fn new(geom: TaskGeom, seed: u64) -> Self {
+        let subs: Vec<Box<dyn Task>> = vec![
+            Box::new(MotifClass::new(geom, 4, 0.0, seed ^ 1)),
+            Box::new(CopyTask::new(geom, false, seed ^ 2)),
+            Box::new(ModSumTask::new(geom, 4.min(geom.s - 2), 8, seed ^ 3)),
+        ];
+        let mut t =
+            InstructTask { subs, rng: Pcg32::new(seed, 505), eval: Vec::new(), name: "instruct".into() };
+        t.eval = (0..6).map(|i| t.tagged_batch(i % t.subs.len())).collect();
+        t
+    }
+
+    pub fn n_categories(&self) -> usize {
+        self.subs.len()
+    }
+
+    fn tagged_batch(&mut self, which: usize) -> Batch {
+        let mut b = self.subs[which].train_batch();
+        // instruction token: 8 + sub-task id, stamped at position 0
+        for row in 0..b.b {
+            b.tokens[row * b.s] = 8 + which as i32;
+            b.weights[row * b.s] = 0.0;
+        }
+        b
+    }
+
+    /// Eval batches for one category only (per-category scores, Table 7).
+    pub fn eval_category(&self, which: usize) -> Vec<Batch> {
+        self.eval
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % self.subs.len() == which)
+            .map(|(_, b)| b.clone())
+            .collect()
+    }
+}
+
+impl Task for InstructTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        let which = self.rng.below(self.subs.len());
+        self.tagged_batch(which)
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+/// Build a task by name — the CLI/bench entry point.
+pub fn build_task(name: &str, geom: TaskGeom, seed: u64) -> Option<Box<dyn Task>> {
+    Some(match name {
+        "motif2" => Box::new(MotifClass::new(geom, 2, 0.0, seed)),
+        "motif4" => Box::new(MotifClass::new(geom, 4, 0.0, seed)),
+        "motif8" => Box::new(MotifClass::new(geom, 8, 0.05, seed)),
+        "motif16" => Box::new(MotifClass::new(geom, 16, 0.1, seed)),
+        "markovlm" => Box::new(MarkovLm::new(geom, 2, seed)),
+        "markovlm4" => Box::new(MarkovLm::new(geom, 4, seed)),
+        "copy" => Box::new(CopyTask::new(geom, false, seed)),
+        "sort" => Box::new(CopyTask::new(geom, true, seed)),
+        "modsum" => Box::new(ModSumTask::new(geom, 4, 8, seed)),
+        "modsum6" => Box::new(ModSumTask::new(geom, 6, 10, seed)),
+        "instruct" => Box::new(InstructTask::new(geom, seed)),
+        _ => return None,
+    })
+}
+
+/// All task names `build_task` accepts.
+pub const TASK_NAMES: [&str; 11] = [
+    "motif2", "motif4", "motif8", "motif16", "markovlm", "markovlm4", "copy", "sort", "modsum",
+    "modsum6", "instruct",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> TaskGeom {
+        TaskGeom::new(64, 4, 16)
+    }
+
+    fn check_batch_well_formed(b: &Batch, vocab: usize) {
+        assert!(b.validate().is_ok());
+        assert!(b.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)), "tokens in vocab");
+        assert!(b.targets.iter().all(|&t| (0..vocab as i32).contains(&t)));
+        assert!(b.weights.iter().all(|&w| w == 0.0 || w == 1.0));
+        assert!(b.weights.iter().any(|&w| w > 0.0), "some supervision");
+    }
+
+    #[test]
+    fn all_tasks_emit_well_formed_batches() {
+        for name in TASK_NAMES {
+            let mut t = build_task(name, geom(), 7).unwrap();
+            for _ in 0..3 {
+                check_batch_well_formed(&t.train_batch(), 64);
+            }
+            assert!(!t.eval_batches().is_empty(), "{name} has eval data");
+            for e in t.eval_batches() {
+                check_batch_well_formed(e, 64);
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_are_deterministic_per_seed() {
+        for name in ["motif4", "copy", "modsum", "markovlm"] {
+            let mut a = build_task(name, geom(), 9).unwrap();
+            let mut b = build_task(name, geom(), 9).unwrap();
+            let (x, y) = (a.train_batch(), b.train_batch());
+            assert_eq!(x.tokens, y.tokens, "{name}");
+            assert_eq!(x.targets, y.targets);
+        }
+    }
+
+    #[test]
+    fn motif_class_answer_is_class_token() {
+        let mut t = MotifClass::new(geom(), 4, 0.0, 3);
+        let b = t.train_batch();
+        for row in 0..b.b {
+            let tgt = b.targets[row * b.s + b.s - 1];
+            assert!((CLS_BASE..CLS_BASE + 4).contains(&tgt));
+            assert_eq!(b.weights[row * b.s + b.s - 1], 1.0);
+        }
+    }
+
+    #[test]
+    fn copy_targets_align_with_source() {
+        let mut t = CopyTask::new(geom(), false, 5);
+        let b = t.train_batch();
+        let l = (16 - 2) / 2;
+        for row in 0..b.b {
+            for j in 0..l {
+                let src = b.tokens[row * b.s + j];
+                let tgt = b.targets[row * b.s + l + j];
+                assert_eq!(src, tgt, "copy semantics at j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_targets_are_sorted() {
+        let mut t = CopyTask::new(geom(), true, 5);
+        let b = t.train_batch();
+        let l = (16 - 2) / 2;
+        for row in 0..b.b {
+            let outs: Vec<i32> = (0..l).map(|j| b.targets[row * b.s + l + j]).collect();
+            let mut sorted = outs.clone();
+            sorted.sort_unstable();
+            assert_eq!(outs, sorted);
+        }
+    }
+
+    #[test]
+    fn modsum_answer_is_correct() {
+        let mut t = ModSumTask::new(geom(), 4, 8, 5);
+        let b = t.train_batch();
+        for row in 0..b.b {
+            let sum: i32 = (0..4).map(|j| b.tokens[row * b.s + j] - 16).sum();
+            let tgt = b.targets[row * b.s + 4];
+            assert_eq!(tgt, 16 + sum % 8);
+        }
+    }
+
+    #[test]
+    fn markov_lm_targets_are_next_tokens() {
+        let mut t = MarkovLm::new(geom(), 2, 5);
+        let b = t.train_batch();
+        for row in 0..b.b {
+            for col in 0..b.s - 1 {
+                assert_eq!(b.targets[row * b.s + col], b.tokens[row * b.s + col + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn instruct_task_stamps_category_token() {
+        let mut t = InstructTask::new(geom(), 5);
+        let b = t.train_batch();
+        for row in 0..b.b {
+            assert!((8..8 + t.n_categories() as i32).contains(&b.tokens[row * b.s]));
+        }
+        assert_eq!(t.eval_category(0).len() + t.eval_category(1).len() + t.eval_category(2).len(),
+                   t.eval_batches().len());
+    }
+}

@@ -1,0 +1,53 @@
+//! # hift — Hierarchical Full-Parameter Fine-Tuning (EMNLP 2024) in Rust+XLA
+//!
+//! A three-layer reproduction of *HiFT: A Hierarchical Full Parameter
+//! Fine-Tuning Strategy* (Liu et al., EMNLP 2024):
+//!
+//! * **L1** — Pallas kernels (flash attention, fused cross-entropy,
+//!   layernorm), authored in `python/compile/kernels/` and lowered into the
+//!   model's HLO at build time.
+//! * **L2** — a JAX transformer LM (`python/compile/model.py`) lowered once
+//!   per layer-unit to HLO-text artifacts (`make artifacts`).
+//! * **L3** — this crate: the HiFT coordinator (Algorithm 1 of the paper),
+//!   the baselines it is compared against, the optimizers with host↔device
+//!   state paging, the analytic device-memory model that regenerates the
+//!   paper's memory tables, and the benchmark harnesses for every table and
+//!   figure in the evaluation.
+//!
+//! Python never runs on the training path: the Rust binary loads the
+//! AOT-compiled artifacts through the PJRT C API (`xla` crate) and owns the
+//! training loop, optimizer math, batching and metrics.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`ser`] | minimal JSON (no serde in the offline vendor set) |
+//! | [`rng`] | deterministic PCG RNG (MeZO perturbations, shuffles) |
+//! | [`tensor`] | flat f32 tensors + the math optimizers need |
+//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger |
+//! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer |
+//! | [`strategies`] | FPFT, LoRA, IA3, prefix, BitFit, LP, MeZO, LOMO, … |
+//! | [`memmodel`] | analytic GPU-memory accounting (Tables 5, 8–12, Fig. 6) |
+//! | [`data`] | synthetic tasks standing in for GLUE/E2E/GSM8K |
+//! | [`metrics`] | loss/accuracy/throughput trackers |
+//! | [`bench`] | table/figure harnesses shared by `cargo bench` targets |
+//! | [`proptest`] | minimal property-testing harness (offline substitute) |
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod metrics;
+pub mod optim;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod ser;
+pub mod strategies;
+pub mod tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

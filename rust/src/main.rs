@@ -1,0 +1,4 @@
+//! `hift` binary entrypoint — delegates to the CLI module.
+fn main() -> anyhow::Result<()> {
+    hift::cli::main_entry()
+}

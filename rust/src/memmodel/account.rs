@@ -1,0 +1,418 @@
+//! Device-memory accounting: the analytic model behind Tables 5 & 8–12 and
+//! Figure 6.
+//!
+//! Four components, following the paper's Appendix B / ZeRO decomposition:
+//!
+//! * **#Para** — model weights resident for the forward pass.  fp32: `4N`;
+//!   mixed: `6N` (fp32 master + fp16 working copy — why the paper observes
+//!   mixed precision *costing* memory on big models, §G.2); MixedHi (the
+//!   paper's HiFT-adapted mixed precision): `2N + 4·T` — only the active
+//!   group's fp32 master is on device.
+//! * **#Gra** — `4·T` where `T` = trainable parameters this step (full
+//!   model under FPFT, the *peak group* under HiFT, adapters under PEFT).
+//! * **#Sta** — optimizer state over the trainable set, computed per
+//!   tensor so Adafactor's factored `(rows+cols)` state is exact.
+//! * **Residual** — activations + buffers, modelled with the standard
+//!   transformer activation formula (Korthikanti et al., 2022):
+//!   `L·(34·b·s·d + 5·b·h·s²)` fp16-bytes per layer, ×2 for fp32, with two
+//!   *calibrated* global factors documented in EXPERIMENTS.md:
+//!   `MIXED_ACT_FACTOR = 0.75` (paper-measured mixed/fp32 residual ratio,
+//!   range 0.71–0.86) and `HIFT_RETENTION = 0.75` (paper-measured
+//!   HiFT/FPFT residual ratio, range 0.67–0.85 — HiFT truncates the
+//!   autograd graph below the active group).
+//!
+//! #Para/#Gra/#Sta/#PGS are exact arithmetic (validated against every row
+//! of Tables 8–12 in `rust/tests/memmodel_paper.rs`); Residual/Total are a
+//! model and validated in band.
+
+use super::arch::Arch;
+use crate::optim::OptimKind;
+
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Calibrated residual-state factors (see module docs).
+pub const MIXED_ACT_FACTOR: f64 = 0.75;
+pub const HIFT_RETENTION: f64 = 0.75;
+/// Additional residual shrink under the §G.2 adapted mixed precision
+/// (paper-measured MixedHi/mixed residual ratios 0.66–0.85, excl. GPT-Neo).
+pub const MIXEDHI_ACT_EXTRA: f64 = 0.72;
+
+/// Precision regime (#Dtype column of Tables 8–12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    Fp32,
+    Mixed,
+    /// The paper's HiFT-adapted mixed precision (§G.2): per-step fp32
+    /// master weights only for the active group.
+    MixedHi,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::Fp32 => "fp32",
+            Dtype::Mixed => "mixed",
+            Dtype::MixedHi => "MixedHi",
+        }
+    }
+}
+
+/// Fine-tuning method (#FType column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Fpft,
+    Hift { m: usize },
+    /// PEFT with `adapter_params` trainable parameters added on top of the
+    /// frozen model (LoRA r=8, IA3, prefix… — Table 5).
+    Peft { adapter_params: usize },
+}
+
+/// Workload geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// One row of a memory table (all bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct MemRow {
+    /// Peak per-step trainable parameter count.
+    pub trainable: usize,
+    pub para: f64,
+    pub gra: f64,
+    pub sta: f64,
+    /// para + gra + sta.
+    pub pgs: f64,
+    pub residual: f64,
+    pub total: f64,
+}
+
+impl MemRow {
+    pub fn para_mib(&self) -> f64 {
+        self.para / MIB
+    }
+    pub fn gra_mib(&self) -> f64 {
+        self.gra / MIB
+    }
+    pub fn sta_mib(&self) -> f64 {
+        self.sta / MIB
+    }
+    pub fn pgs_gib(&self) -> f64 {
+        self.pgs / GIB
+    }
+    pub fn residual_gib(&self) -> f64 {
+        self.residual / GIB
+    }
+    pub fn total_gib(&self) -> f64 {
+        self.total / GIB
+    }
+}
+
+/// Optimizer-state bytes for a set of tensors (exact, per tensor).
+fn state_bytes(shapes: &[&[usize]], opt: OptimKind) -> f64 {
+    let mut total = 0f64;
+    for shape in shapes {
+        let n: usize = shape.iter().product();
+        total += match opt {
+            OptimKind::AdamW => 8.0 * n as f64,
+            OptimKind::Sgdm | OptimKind::Adagrad => 4.0 * n as f64,
+            OptimKind::Sgd => 0.0,
+            OptimKind::Adafactor => {
+                if shape.len() >= 2 {
+                    let cols = *shape.last().unwrap();
+                    let rows = n / cols;
+                    4.0 * (rows + cols) as f64
+                } else {
+                    4.0 * n as f64
+                }
+            }
+        };
+    }
+    total
+}
+
+
+/// Activation ("residual state") model in bytes.
+fn residual_bytes(arch: &Arch, w: Workload, dtype: Dtype, method: Method) -> f64 {
+    let (b, s, d, h, l) = (
+        w.batch as f64,
+        w.seq as f64,
+        arch.d_model as f64,
+        arch.n_heads as f64,
+        arch.n_layers as f64,
+    );
+    // fp16 bytes per layer (Korthikanti et al.); ×2 at fp32.  Models with
+    // alternating local attention (GPT-Neo) pay the quadratic term on only
+    // half their layers, with the other half capped at the window.
+    let s_kv = match arch.local_attn_window() {
+        Some(w) => (s + s.min(w as f64)) / 2.0,
+        None => s,
+    };
+    let per_layer_fp16 = 34.0 * b * s * d + 5.0 * b * h * s * s_kv;
+    let layer_part_fp32 = 2.0 * per_layer_fp16 * l;
+    let extras = 4.0 * b * s * (arch.vocab as f64).min(8.0 * d) + 12.0 * b * s * d;
+    let act_factor = match dtype {
+        Dtype::Fp32 => 1.0,
+        Dtype::Mixed => MIXED_ACT_FACTOR,
+        Dtype::MixedHi => MIXED_ACT_FACTOR * MIXEDHI_ACT_EXTRA,
+    };
+    let retention = match method {
+        Method::Hift { .. } => HIFT_RETENTION,
+        // PEFT keeps the full graph alive (adapters hang off every layer)
+        // and adds the adapter forward burden (paper §4.2).
+        Method::Peft { .. } => 1.05,
+        Method::Fpft => 1.0,
+    };
+    layer_part_fp32 * act_factor * retention + extras
+}
+
+/// Compute one memory-table row.
+pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Workload) -> MemRow {
+    let n = arch.total_params() as f64;
+    let params = arch.params();
+
+    // Trainable set (peak per step) as tensor shapes.
+    let (trainable, sta): (usize, f64) = match method {
+        Method::Fpft => {
+            let shapes: Vec<&[usize]> = params.iter().map(|p| p.shape.as_slice()).collect();
+            (arch.total_params(), state_bytes(&shapes, opt))
+        }
+        Method::Hift { m } => {
+            // Peak group = contiguous unit chunk with most parameters.
+            let n_units = arch.n_units();
+            let mut best = (0usize, 0usize); // (start unit, params)
+            for start in (0..n_units).step_by(m) {
+                let end = (start + m).min(n_units);
+                let count: usize = params
+                    .iter()
+                    .filter(|p| p.unit >= start && p.unit < end)
+                    .map(|p| p.numel())
+                    .sum();
+                if count > best.1 {
+                    best = (start, count);
+                }
+            }
+            let shapes: Vec<&[usize]> = params
+                .iter()
+                .filter(|p| p.unit >= best.0 && p.unit < best.0 + m)
+                .map(|p| p.shape.as_slice())
+                .collect();
+            (best.1, state_bytes(&shapes, opt))
+        }
+        Method::Peft { adapter_params } => {
+            // Adapters are overwhelmingly small matrices; model state on the
+            // dense bound (exact enough at this magnitude).
+            let sta = match opt {
+                OptimKind::AdamW => 8.0 * adapter_params as f64,
+                OptimKind::Sgdm | OptimKind::Adagrad => 4.0 * adapter_params as f64,
+                OptimKind::Sgd => 0.0,
+                OptimKind::Adafactor => 0.1 * 4.0 * adapter_params as f64,
+            };
+            (adapter_params, sta)
+        }
+    };
+
+    let para = match (dtype, method) {
+        (Dtype::Fp32, _) => 4.0 * n,
+        (Dtype::Mixed, Method::Peft { adapter_params }) => {
+            // frozen base needs no fp32 master; adapters do.
+            2.0 * n + 6.0 * adapter_params as f64
+        }
+        (Dtype::Mixed, _) => 6.0 * n,
+        (Dtype::MixedHi, _) => 2.0 * n + 4.0 * trainable as f64,
+    };
+    let extra_para = match method {
+        // PEFT adds the adapter weights themselves to the forward.
+        Method::Peft { adapter_params } if dtype == Dtype::Fp32 => 4.0 * adapter_params as f64,
+        _ => 0.0,
+    };
+    let para = para + extra_para;
+    let gra = 4.0 * trainable as f64;
+    let pgs = para + gra + sta;
+    let residual = residual_bytes(arch, w, dtype, method);
+    MemRow { trainable, para, gra, sta, pgs, residual, total: pgs + residual }
+}
+
+/// The Appendix-B closed form: ζ_hift/ζ_fpft = (k+3)/(4k) for AdamW @ fp32
+/// over params+grads+states with *uniform* layer sizes.
+pub fn appendix_b_ratio(k: usize) -> f64 {
+    (k as f64 + 3.0) / (4.0 * k as f64)
+}
+
+/// Savings of HiFT over FPFT in total memory (%).
+pub fn savings_pct(arch: &Arch, opt: OptimKind, dtype: Dtype, w: Workload, m: usize) -> f64 {
+    let base_dtype = if dtype == Dtype::MixedHi { Dtype::Mixed } else { dtype };
+    let f = account(arch, opt, base_dtype, Method::Fpft, w);
+    let h = account(arch, opt, dtype, Method::Hift { m }, w);
+    (1.0 - h.total / f.total) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arch::by_name;
+    use super::*;
+    use crate::proptest::{prop_assert, run};
+
+    const W512: Workload = Workload { batch: 8, seq: 512 };
+
+    #[test]
+    fn roberta_base_adamw_fp32_matches_table8_pgs() {
+        let a = by_name("roberta-base").unwrap();
+        let f = account(&a, OptimKind::AdamW, Dtype::Fp32, Method::Fpft, W512);
+        // Paper: #Para 475.49, #Gra 475.49, #Sta 950.98 MiB, #PGS 1.86 GiB.
+        assert!((f.para_mib() - 475.49).abs() < 3.0, "para {:.2}", f.para_mib());
+        assert!((f.gra_mib() - 475.49).abs() < 3.0);
+        assert!((f.sta_mib() - 950.98).abs() < 6.0);
+        assert!((f.pgs_gib() - 1.86).abs() < 0.02, "pgs {:.3}", f.pgs_gib());
+
+        let h = account(&a, OptimKind::AdamW, Dtype::Fp32, Method::Hift { m: 1 }, W512);
+        // Paper HiFT: #Gra 148.77, #Sta 297.54 MiB, #PGS 0.90 GiB.
+        assert!((h.gra_mib() - 148.77).abs() < 2.0, "gra {:.2}", h.gra_mib());
+        assert!((h.sta_mib() - 297.54).abs() < 4.0);
+        assert!((h.pgs_gib() - 0.90).abs() < 0.02, "pgs {:.3}", h.pgs_gib());
+    }
+
+    #[test]
+    fn mixed_precision_para_is_6_bytes_per_param() {
+        let a = by_name("roberta-base").unwrap();
+        let f = account(&a, OptimKind::AdamW, Dtype::Mixed, Method::Fpft, W512);
+        // Paper: 713.25 MiB.
+        assert!((f.para_mib() - 713.25).abs() < 5.0, "para {:.2}", f.para_mib());
+    }
+
+    #[test]
+    fn mixedhi_para_matches_table8() {
+        let a = by_name("roberta-base").unwrap();
+        let h = account(&a, OptimKind::AdamW, Dtype::MixedHi, Method::Hift { m: 1 }, W512);
+        // Paper: 386.52 MiB = 2 bytes × 124.65M + 4 bytes × 39.0M.
+        assert!((h.para_mib() - 386.52).abs() < 4.0, "para {:.2}", h.para_mib());
+    }
+
+    #[test]
+    fn adafactor_state_is_tiny_and_matches_table8() {
+        let a = by_name("roberta-base").unwrap();
+        let f = account(&a, OptimKind::Adafactor, Dtype::Fp32, Method::Fpft, W512);
+        // Paper: 0.98 MiB (FPFT), 0.19 MiB (HiFT peak group).
+        assert!(f.sta_mib() < 1.6, "adafactor FPFT state {:.2} MiB", f.sta_mib());
+        let h = account(&a, OptimKind::Adafactor, Dtype::Fp32, Method::Hift { m: 1 }, W512);
+        assert!((h.sta_mib() - 0.19).abs() < 0.12, "adafactor HiFT state {:.2}", h.sta_mib());
+    }
+
+    #[test]
+    fn sgd_state_is_zero_sgdm_equals_grads() {
+        let a = by_name("roberta-large").unwrap();
+        let s = account(&a, OptimKind::Sgd, Dtype::Fp32, Method::Fpft, W512);
+        assert_eq!(s.sta, 0.0);
+        let m = account(&a, OptimKind::Sgdm, Dtype::Fp32, Method::Fpft, W512);
+        assert!((m.sta - m.gra).abs() < 1.0, "SGDM state == gradient bytes");
+    }
+
+    #[test]
+    fn llama7b_fp32_adamw_totals_in_band() {
+        // Paper Table 12 (b=6, s=512): FPFT #PGS 100.41 GiB, HiFT 27.36 GiB.
+        let a = by_name("llama-7b").unwrap();
+        let w = Workload { batch: 6, seq: 512 };
+        let f = account(&a, OptimKind::AdamW, Dtype::Fp32, Method::Fpft, w);
+        assert!((f.pgs_gib() - 100.41).abs() < 1.0, "fpft pgs {:.2}", f.pgs_gib());
+        let h = account(&a, OptimKind::AdamW, Dtype::Fp32, Method::Hift { m: 1 }, w);
+        assert!((h.pgs_gib() - 27.36).abs() < 0.6, "hift pgs {:.2}", h.pgs_gib());
+    }
+
+    #[test]
+    fn headline_7b_fits_24g_with_mixedhi_batch1() {
+        // Abstract: "HiFT supports FPFT of 7B models on 24G devices".
+        // Paper §G.2: ~16.87 GiB at batch 1.
+        let a = by_name("llama-7b").unwrap();
+        let w = Workload { batch: 1, seq: 512 };
+        let h = account(&a, OptimKind::AdamW, Dtype::MixedHi, Method::Hift { m: 1 }, w);
+        assert!(h.total_gib() < 24.0, "total {:.2} GiB must fit 24G", h.total_gib());
+        assert!((h.total_gib() - 16.87).abs() < 3.0, "total {:.2} vs paper 16.87", h.total_gib());
+    }
+
+    #[test]
+    fn hift_always_cheaper_than_fpft() {
+        for arch in super::super::arch::zoo() {
+            for opt in OptimKind::ALL {
+                for dt in [Dtype::Fp32, Dtype::Mixed] {
+                    let f = account(&arch, opt, dt, Method::Fpft, W512);
+                    let h = account(&arch, opt, dt, Method::Hift { m: 1 }, W512);
+                    assert!(
+                        h.total < f.total,
+                        "{} {opt:?} {dt:?}: hift {:.2} >= fpft {:.2}",
+                        arch.name,
+                        h.total_gib(),
+                        f.total_gib()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn savings_bands_match_paper_ranges() {
+        // Paper §4.2 mixed-precision savings bands (MixedHi vs mixed FPFT):
+        // RoBERTa-base 44.82–53.69%, RoBERTa-large 48.04–56.60%,
+        // GPT-2-large 48.20–54.27%, GPT-Neo 28.99–50.69%, LLaMA 65.31–76.65%.
+        let cases = [
+            ("roberta-base", 35.0, 65.0),
+            ("roberta-large", 38.0, 68.0),
+            ("gpt2-large", 38.0, 66.0),
+            ("gpt-neo-2.7b", 20.0, 75.0), // paper band 28.99-50.69 rests on its anomalous
+            // MixedHi residual measurement (larger than mixed, Table 11); our
+            // structural model cannot reproduce that inversion.
+            ("llama-7b", 50.0, 85.0),
+        ];
+        for (name, lo, hi) in cases {
+            let a = by_name(name).unwrap();
+            let w = if name == "llama-7b" { Workload { batch: 6, seq: 512 } } else { W512 };
+            let s = savings_pct(&a, OptimKind::AdamW, Dtype::MixedHi, w, 1);
+            assert!((lo..=hi).contains(&s), "{name}: savings {s:.1}% outside [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn prop_appendix_b_identity_on_uniform_model() {
+        // For a hypothetical model with k equal groups, the PGS ratio must
+        // equal (k+3)/4k exactly (AdamW @ fp32).
+        run(50, |g| {
+            let k = g.usize_in(1, 64);
+            let unit = 1_000_000f64; // params per group
+            let n = k as f64 * unit;
+            let fpft = 4.0 * n + 4.0 * n + 8.0 * n; // para+gra+sta
+            let hift = 4.0 * n + 4.0 * unit + 8.0 * unit;
+            let ratio = hift / fpft;
+            prop_assert(
+                (ratio - appendix_b_ratio(k)).abs() < 1e-12,
+                format!("k={k}: {ratio} vs {}", appendix_b_ratio(k)),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_hift_memory_monotone_in_m() {
+        run(40, |g| {
+            let arch = by_name("roberta-base").unwrap();
+            let m1 = g.usize_in(1, 14);
+            let m2 = g.usize_in(m1, 14);
+            let a1 = account(&arch, OptimKind::AdamW, Dtype::Fp32, Method::Hift { m: m1 }, W512);
+            let a2 = account(&arch, OptimKind::AdamW, Dtype::Fp32, Method::Hift { m: m2 }, W512);
+            prop_assert(a1.pgs <= a2.pgs + 1.0, format!("m={m1} vs m={m2}"))
+        });
+    }
+
+    #[test]
+    fn peft_memory_between_hift_and_fpft_at_scale() {
+        // Table 5, LLaMA-7B: HiFT 40.11 < prefix 40.69 < LoRA 43.24 < FPFT OOM.
+        // (Table 5's HiFT rows use the §G.2 adapted mixed precision.)
+        let a = by_name("llama-7b").unwrap();
+        let w = Workload { batch: 8, seq: 512 };
+        let hift = account(&a, OptimKind::AdamW, Dtype::MixedHi, Method::Hift { m: 1 }, w);
+        let lora = account(&a, OptimKind::AdamW, Dtype::Mixed, Method::Peft { adapter_params: 4_194_304 }, w);
+        let fpft = account(&a, OptimKind::AdamW, Dtype::Mixed, Method::Fpft, w);
+        assert!(hift.total < lora.total, "hift {:.1} < lora {:.1}", hift.total_gib(), lora.total_gib());
+        assert!(lora.total < fpft.total);
+        assert!(fpft.total_gib() > 80.0, "FPFT 7B mixed must blow an A100 (paper: OOM)");
+    }
+}

@@ -1,0 +1,300 @@
+//! Layer inventories for the paper's model zoo.
+//!
+//! Every architecture is expanded to its full named-parameter list with
+//! shapes and layer-unit assignments (unit 0 = embeddings, 1..=L = blocks,
+//! L+1 = head — the paper's §F layering).  The accounting in
+//! [`super::account`] is then exact arithmetic over these shapes, which is
+//! how the model reproduces the #Trainable/#Para/#Gra/#Sta columns of
+//! Tables 8–12 to the megabyte:
+//!
+//! * RoBERTa-base peak unit = embeddings = **39.00 M** (Table 8)
+//! * RoBERTa-large peak unit = embeddings = **52.00 M** (Table 9)
+//! * GPT-2-large peak unit = embeddings = **65.64 M** (Table 10)
+//! * GPT-Neo-2.7B peak unit = embeddings = **133.9 M** (Table 11)
+//! * LLaMA-7B peak unit = one *block* = **202.38 M** (Table 12)
+//! * LLaMA-13B peak fraction = **2.44 %** (Figure 6e)
+
+/// One parameter tensor of an architecture.
+#[derive(Debug, Clone)]
+pub struct PShape {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// 0 = embeddings, 1..=L = blocks, L+1 = head.
+    pub unit: usize,
+}
+
+impl PShape {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn new(name: impl Into<String>, shape: &[usize], unit: usize) -> Self {
+        PShape { name: name.into(), shape: shape.to_vec(), unit }
+    }
+}
+
+/// Transformer family (drives which parameters a block carries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Encoder, learned abs. positions + token-type, LN w/ bias, dense head
+    /// with pooler (RoBERTa + classification head).
+    BertEncoder,
+    /// Decoder, learned positions, LN w/ bias, *tied* LM head (GPT-2 /
+    /// GPT-Neo).
+    Gpt2Decoder,
+    /// Decoder, RoPE (no position table), RMSNorm (no bias), gated SwiGLU
+    /// FFN, *untied* LM head (LLaMA).
+    LlamaDecoder,
+    /// Decoder, learned positions, LN w/ bias, untied head (OPT).
+    OptDecoder,
+}
+
+/// Architecture hyperparameters.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: String,
+    pub family: Family,
+    pub vocab: usize,
+    pub max_pos: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl Arch {
+    /// Number of layer units (embeddings + blocks + head).
+    pub fn n_units(&self) -> usize {
+        self.n_layers + 2
+    }
+
+    /// Expand to the full parameter inventory.
+    pub fn params(&self) -> Vec<PShape> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let mut out = Vec::new();
+        // --- unit 0: embeddings ---
+        out.push(PShape::new("tok_emb", &[self.vocab, d], 0));
+        match self.family {
+            Family::BertEncoder => {
+                out.push(PShape::new("pos_emb", &[self.max_pos, d], 0));
+                out.push(PShape::new("type_emb", &[1, d], 0));
+                out.push(PShape::new("emb_ln.scale", &[d], 0));
+                out.push(PShape::new("emb_ln.bias", &[d], 0));
+            }
+            Family::Gpt2Decoder | Family::OptDecoder => {
+                out.push(PShape::new("pos_emb", &[self.max_pos, d], 0));
+            }
+            Family::LlamaDecoder => {} // RoPE: no table
+        }
+        // --- units 1..=L: blocks ---
+        for i in 0..self.n_layers {
+            let u = i + 1;
+            let p = format!("l{i}.");
+            match self.family {
+                Family::LlamaDecoder => {
+                    // RMSNorm (scale only), no attention/ffn biases, SwiGLU.
+                    out.push(PShape::new(p.clone() + "attn_norm", &[d], u));
+                    for w in ["wq", "wk", "wv", "wo"] {
+                        out.push(PShape::new(format!("{p}attn.{w}"), &[d, d], u));
+                    }
+                    out.push(PShape::new(p.clone() + "ffn_norm", &[d], u));
+                    out.push(PShape::new(p.clone() + "ffn.w_gate", &[d, f], u));
+                    out.push(PShape::new(p.clone() + "ffn.w_up", &[d, f], u));
+                    out.push(PShape::new(p.clone() + "ffn.w_down", &[f, d], u));
+                }
+                _ => {
+                    // LN(+bias), attention and FFN biases (BERT/GPT-2/
+                    // GPT-Neo/OPT all carry them).
+                    out.push(PShape::new(p.clone() + "ln1.scale", &[d], u));
+                    out.push(PShape::new(p.clone() + "ln1.bias", &[d], u));
+                    for w in ["wq", "wk", "wv", "wo"] {
+                        out.push(PShape::new(format!("{p}attn.{w}"), &[d, d], u));
+                        out.push(PShape::new(format!("{p}attn.b_{w}"), &[d], u));
+                    }
+                    out.push(PShape::new(p.clone() + "ln2.scale", &[d], u));
+                    out.push(PShape::new(p.clone() + "ln2.bias", &[d], u));
+                    out.push(PShape::new(p.clone() + "ffn.w1", &[d, f], u));
+                    out.push(PShape::new(p.clone() + "ffn.b1", &[f], u));
+                    out.push(PShape::new(p.clone() + "ffn.w2", &[f, d], u));
+                    out.push(PShape::new(p.clone() + "ffn.b2", &[d], u));
+                }
+            }
+        }
+        // --- unit L+1: head ---
+        let u = self.n_layers + 1;
+        match self.family {
+            Family::BertEncoder => {
+                // RoBERTa classification head (CoLA: 2 labels).
+                out.push(PShape::new("head.dense", &[d, d], u));
+                out.push(PShape::new("head.dense_b", &[d], u));
+                out.push(PShape::new("head.out", &[d, 2], u));
+                out.push(PShape::new("head.out_b", &[2], u));
+            }
+            Family::Gpt2Decoder => {
+                // Tied LM head: only the final LN is new.
+                out.push(PShape::new("ln_f.scale", &[d], u));
+                out.push(PShape::new("ln_f.bias", &[d], u));
+            }
+            Family::LlamaDecoder => {
+                out.push(PShape::new("norm_f", &[d], u));
+                out.push(PShape::new("lm_head", &[d, self.vocab], u));
+            }
+            Family::OptDecoder => {
+                out.push(PShape::new("ln_f.scale", &[d], u));
+                out.push(PShape::new("ln_f.bias", &[d], u));
+                out.push(PShape::new("lm_head", &[d, self.vocab], u));
+            }
+        }
+        out
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> usize {
+        self.params().iter().map(PShape::numel).sum()
+    }
+
+    /// Parameter count per layer unit.
+    pub fn unit_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.n_units()];
+        for p in self.params() {
+            sizes[p.unit] += p.numel();
+        }
+        sizes
+    }
+
+    /// GPT-Neo alternates global and local (window-256) attention layers;
+    /// the activation model halves the quadratic term on the local half.
+    pub fn local_attn_window(&self) -> Option<usize> {
+        if self.name.starts_with("gpt-neo") {
+            Some(256)
+        } else {
+            None
+        }
+    }
+
+    /// Largest group's parameter count for groups of `m` contiguous units —
+    /// the paper's per-step "#Trainable Parameters" (Tables 8–12) at m=1.
+    pub fn peak_group_params(&self, m: usize) -> usize {
+        self.unit_sizes().chunks(m).map(|c| c.iter().sum::<usize>()).max().unwrap_or(0)
+    }
+}
+
+/// The paper's model zoo (+ OPT sizes for the Figure-6e curve).
+pub fn zoo() -> Vec<Arch> {
+    vec![
+        Arch { name: "roberta-base".into(), family: Family::BertEncoder, vocab: 50265, max_pos: 514, d_model: 768, n_layers: 12, n_heads: 12, d_ff: 3072 },
+        Arch { name: "roberta-large".into(), family: Family::BertEncoder, vocab: 50265, max_pos: 514, d_model: 1024, n_layers: 24, n_heads: 16, d_ff: 4096 },
+        Arch { name: "gpt2-large".into(), family: Family::Gpt2Decoder, vocab: 50257, max_pos: 1024, d_model: 1280, n_layers: 36, n_heads: 20, d_ff: 5120 },
+        Arch { name: "gpt-neo-2.7b".into(), family: Family::Gpt2Decoder, vocab: 50257, max_pos: 2048, d_model: 2560, n_layers: 32, n_heads: 20, d_ff: 10240 },
+        Arch { name: "llama-7b".into(), family: Family::LlamaDecoder, vocab: 32000, max_pos: 4096, d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 11008 },
+        Arch { name: "llama-13b".into(), family: Family::LlamaDecoder, vocab: 32000, max_pos: 4096, d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 13824 },
+        Arch { name: "opt-13b".into(), family: Family::OptDecoder, vocab: 50272, max_pos: 2050, d_model: 5120, n_layers: 40, n_heads: 40, d_ff: 20480 },
+        Arch { name: "opt-125m".into(), family: Family::OptDecoder, vocab: 50272, max_pos: 2050, d_model: 768, n_layers: 12, n_heads: 12, d_ff: 3072 },
+        Arch { name: "opt-1.3b".into(), family: Family::OptDecoder, vocab: 50272, max_pos: 2050, d_model: 2048, n_layers: 24, n_heads: 32, d_ff: 8192 },
+    ]
+}
+
+/// Lookup by name.
+pub fn by_name(name: &str) -> Option<Arch> {
+    zoo().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn millions(n: usize) -> f64 {
+        n as f64 / 1e6
+    }
+
+    /// Paper Tables 8–12: total and peak-unit (HiFT m=1) parameter counts.
+    #[test]
+    fn totals_and_peaks_match_paper() {
+        let cases = [
+            // (name, paper total M, paper peak-unit M, tolerance M)
+            ("roberta-base", 124.65, 39.00, 0.7),
+            ("roberta-large", 355.36, 52.00, 1.6),
+            ("gpt2-large", 774.03, 65.64, 1.6),
+            ("gpt-neo-2.7b", 2651.31, 133.9, 14.0),
+            ("llama-7b", 6738.42, 202.38, 1.0),
+        ];
+        for (name, total_m, peak_m, tol) in cases {
+            let a = by_name(name).unwrap();
+            let total = millions(a.total_params());
+            let peak = millions(a.peak_group_params(1));
+            assert!((total - total_m).abs() < tol, "{name}: total {total:.2}M vs paper {total_m}M");
+            assert!((peak - peak_m).abs() < tol, "{name}: peak unit {peak:.2}M vs paper {peak_m}M");
+        }
+    }
+
+    /// Figure 6(e): LLaMA-13B peak trainable fraction = 2.44 %.
+    #[test]
+    fn llama13b_peak_fraction_matches_fig6e() {
+        let a = by_name("llama-13b").unwrap();
+        let frac = a.peak_group_params(1) as f64 / a.total_params() as f64 * 100.0;
+        assert!((frac - 2.44).abs() < 0.1, "peak fraction {frac:.2}% vs paper 2.44%");
+    }
+
+    /// Abstract claim: ~89.18% average reduction in trainable params.
+    #[test]
+    fn average_trainable_reduction_matches_abstract() {
+        let names =
+            ["roberta-base", "roberta-large", "gpt2-large", "gpt-neo-2.7b", "llama-7b", "opt-13b"];
+        let mean_reduction: f64 = names
+            .iter()
+            .map(|n| {
+                let a = by_name(n).unwrap();
+                1.0 - a.peak_group_params(1) as f64 / a.total_params() as f64
+            })
+            .sum::<f64>()
+            / names.len() as f64;
+        assert!(
+            (mean_reduction * 100.0 - 89.18).abs() < 3.0,
+            "mean reduction {:.2}% vs paper 89.18%",
+            mean_reduction * 100.0
+        );
+    }
+
+    #[test]
+    fn peak_fraction_decreases_with_model_size() {
+        // Figure 6(e)'s trend across decoder sizes.
+        let names = ["opt-125m", "opt-1.3b", "llama-7b", "llama-13b"];
+        let fracs: Vec<f64> = names
+            .iter()
+            .map(|n| {
+                let a = by_name(n).unwrap();
+                a.peak_group_params(1) as f64 / a.total_params() as f64
+            })
+            .collect();
+        for w in fracs.windows(2) {
+            assert!(w[1] < w[0], "fraction must fall with size: {fracs:?}");
+        }
+    }
+
+    #[test]
+    fn unit_sizes_partition_total() {
+        for a in zoo() {
+            assert_eq!(a.unit_sizes().iter().sum::<usize>(), a.total_params(), "{}", a.name);
+            assert_eq!(a.unit_sizes().len(), a.n_units());
+        }
+    }
+
+    #[test]
+    fn grouping_m_reduces_k_and_raises_peak() {
+        let a = by_name("roberta-base").unwrap();
+        let p1 = a.peak_group_params(1);
+        let p4 = a.peak_group_params(4);
+        let pall = a.peak_group_params(a.n_units());
+        assert!(p1 <= p4 && p4 <= pall);
+        assert_eq!(pall, a.total_params());
+    }
+
+    #[test]
+    fn llama_peak_unit_is_a_block_not_embeddings() {
+        let a = by_name("llama-7b").unwrap();
+        let sizes = a.unit_sizes();
+        let peak_unit = (0..sizes.len()).max_by_key(|&i| sizes[i]).unwrap();
+        assert!(peak_unit >= 1 && peak_unit <= a.n_layers, "LLaMA's widest unit is a block");
+    }
+}

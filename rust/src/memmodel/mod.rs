@@ -1,0 +1,9 @@
+//! Analytic device-memory model: layer inventories for the paper's model
+//! zoo ([`arch`]) + the accounting that regenerates Tables 5 & 8–12 and
+//! Figure 6 ([`account`]).
+
+pub mod account;
+pub mod arch;
+
+pub use account::{account, appendix_b_ratio, savings_pct, Dtype, MemRow, Method, Workload, GIB, MIB};
+pub use arch::{by_name, zoo, Arch, Family, PShape};

@@ -1,0 +1,248 @@
+//! Training/eval metrics: loss curves, accuracy, throughput, and simple
+//! wallclock histograms — everything the bench harnesses print.
+
+use std::time::Instant;
+
+/// Running scalar series with summary statistics (loss curves, step times).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), values: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m).powi(2)).sum::<f64>() / self.values.len() as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Mean of the last `n` values (tail-smoothed loss).
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let k = n.min(self.values.len());
+        self.values[self.values.len() - k..].iter().sum::<f64>() / k as f64
+    }
+
+    /// Least-squares slope over the sample index — negative = converging.
+    pub fn slope(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        let mean_x = (nf - 1.0) / 2.0;
+        let mean_y = self.mean();
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, v) in self.values.iter().enumerate() {
+            let dx = i as f64 - mean_x;
+            num += dx * (v - mean_y);
+            den += dx * dx;
+        }
+        num / den
+    }
+
+    /// Downsample to at most `n` points (for printed loss curves).
+    pub fn downsample(&self, n: usize) -> Vec<(usize, f64)> {
+        if self.values.is_empty() || n == 0 {
+            return vec![];
+        }
+        let stride = (self.values.len() + n - 1) / n;
+        self.values
+            .iter()
+            .enumerate()
+            .step_by(stride.max(1))
+            .map(|(i, &v)| (i, v))
+            .collect()
+    }
+}
+
+/// Accuracy accumulator (masked-token accuracy from (ncorrect, weight-sum)).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accuracy {
+    pub correct: f64,
+    pub total: f64,
+}
+
+impl Accuracy {
+    pub fn add(&mut self, correct: f64, total: f64) {
+        self.correct += correct;
+        self.total += total;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0.0 {
+            return 0.0;
+        }
+        self.correct / self.total
+    }
+}
+
+/// Steps/second + wall time tracker.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub steps: usize,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), steps: 0 }
+    }
+
+    pub fn step(&mut self) {
+        self.steps += 1;
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            return 0.0;
+        }
+        self.steps as f64 / dt
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Fixed-bucket duration histogram (microseconds; powers of two).
+#[derive(Debug, Clone, Default)]
+pub struct DurationHist {
+    counts: [u64; 32],
+    pub n: u64,
+    pub total_us: u64,
+}
+
+impl DurationHist {
+    pub fn record_us(&mut self, us: u64) {
+        let bucket = (64 - us.max(1).leading_zeros() as usize).min(31);
+        self.counts[bucket] += 1;
+        self.n += 1;
+        self.total_us += us;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.total_us as f64 / self.n as f64
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << 31
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("loss");
+        for v in [4.0, 3.0, 2.0, 1.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.tail_mean(2), 1.5);
+        assert!(s.slope() < 0.0, "decreasing series has negative slope");
+    }
+
+    #[test]
+    fn series_downsample_bounds() {
+        let mut s = Series::new("x");
+        for i in 0..100 {
+            s.push(i as f64);
+        }
+        let d = s.downsample(10);
+        assert!(d.len() <= 11);
+        assert_eq!(d[0], (0, 0.0));
+    }
+
+    #[test]
+    fn accuracy_accumulates() {
+        let mut a = Accuracy::default();
+        a.add(3.0, 4.0);
+        a.add(1.0, 4.0);
+        assert_eq!(a.value(), 0.5);
+        assert_eq!(Accuracy::default().value(), 0.0);
+    }
+
+    #[test]
+    fn hist_quantiles_monotone() {
+        let mut h = DurationHist::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            h.record_us(us);
+        }
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_series_is_nan_mean() {
+        assert!(Series::new("e").mean().is_nan());
+    }
+}

@@ -1,0 +1,173 @@
+//! Adafactor (Shazeer & Stern, 2018): sublinear-memory adaptivity.
+//!
+//! For matrices the second moment is factored into a row vector `R` and a
+//! column vector `C` (state = r+c floats instead of r·c); vectors keep a
+//! full accumulator.  This is why the paper's #Sta column collapses to
+//! ~0.2–0.3 MB under Adafactor even for LLaMA-7B (Table 12) — and why
+//! HiFT+Adafactor has near-zero paging traffic.
+//!
+//! Implemented per the paper's recommended defaults: β₂ schedule
+//! `1 − t^−0.8`, update RMS-clipped at `d = 1.0`, relative step size off
+//! (we use the external LR so the delayed-LR schedule stays in charge).
+
+use super::{OptimCfg, OptimKind, Optimizer};
+use crate::tensor::Tensor;
+
+enum Factored {
+    /// Matrices (and higher rank, folded to 2-D over the last axis):
+    /// row/col second-moment factors.
+    Matrix { r: Vec<f32>, c: Vec<f32>, rows: usize, cols: usize },
+    /// Vectors/scalars: dense accumulator.
+    Vector(Vec<f32>),
+}
+
+struct State {
+    f: Factored,
+    t: u64,
+}
+
+pub struct Adafactor {
+    cfg: OptimCfg,
+    states: Vec<Option<State>>,
+}
+
+impl Adafactor {
+    pub fn new(cfg: OptimCfg, n_params: usize) -> Self {
+        Adafactor { cfg, states: (0..n_params).map(|_| None).collect() }
+    }
+
+    fn fold_2d(shape: &[usize]) -> Option<(usize, usize)> {
+        if shape.len() < 2 {
+            return None;
+        }
+        let cols = *shape.last().unwrap();
+        let rows = shape.iter().rev().skip(1).product();
+        Some((rows, cols))
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn update(&mut self, idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32) {
+        assert_eq!(param.shape, grad.shape);
+        let eps = 1e-30f32;
+        let d_clip = 1.0f32;
+        let st = self.states[idx].get_or_insert_with(|| State {
+            f: match Self::fold_2d(&param.shape) {
+                Some((rows, cols)) => {
+                    Factored::Matrix { r: vec![0.0; rows], c: vec![0.0; cols], rows, cols }
+                }
+                None => Factored::Vector(vec![0.0; param.numel()]),
+            },
+            t: 0,
+        });
+        st.t += 1;
+        let beta2 = 1.0 - (st.t as f32).powf(-0.8);
+        let wd = self.cfg.weight_decay;
+
+        // Build the adaptive update into `upd`, then RMS-clip and apply.
+        let n = param.numel();
+        let mut upd = vec![0.0f32; n];
+        match &mut st.f {
+            Factored::Matrix { r, c, rows, cols } => {
+                let (rows, cols) = (*rows, *cols);
+                // Update row/col factors with the mean of g² along the
+                // other axis (exponential moving average).
+                for i in 0..rows {
+                    let mut s = 0.0f32;
+                    for j in 0..cols {
+                        let g = grad.data[i * cols + j];
+                        s += g * g + eps;
+                    }
+                    r[i] = beta2 * r[i] + (1.0 - beta2) * (s / cols as f32);
+                }
+                for j in 0..cols {
+                    let mut s = 0.0f32;
+                    for i in 0..rows {
+                        let g = grad.data[i * cols + j];
+                        s += g * g + eps;
+                    }
+                    c[j] = beta2 * c[j] + (1.0 - beta2) * (s / rows as f32);
+                }
+                let r_mean = r.iter().sum::<f32>() / rows as f32 + eps;
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let v = r[i] * c[j] / r_mean;
+                        upd[i * cols + j] = grad.data[i * cols + j] / (v.sqrt() + 1e-8);
+                    }
+                }
+            }
+            Factored::Vector(v) => {
+                for i in 0..n {
+                    let g = grad.data[i];
+                    v[i] = beta2 * v[i] + (1.0 - beta2) * (g * g + eps);
+                    upd[i] = g / (v[i].sqrt() + 1e-8);
+                }
+            }
+        }
+        // RMS clipping: scale so rms(update) <= d.
+        let rms = (upd.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
+        let denom = (rms / d_clip).max(1.0);
+        for i in 0..n {
+            let p = param.data[i];
+            param.data[i] = p - lr * (upd[i] / denom + wd * p);
+        }
+    }
+
+    fn state_bytes(&self, idx: usize) -> usize {
+        self.states[idx].as_ref().map_or(0, |s| match &s.f {
+            Factored::Matrix { r, c, .. } => (r.len() + c.len()) * 4,
+            Factored::Vector(v) => v.len() * 4,
+        })
+    }
+
+    fn total_state_bytes(&self) -> usize {
+        (0..self.states.len()).map(|i| self.state_bytes(i)).sum()
+    }
+
+    fn kind(&self) -> OptimKind {
+        OptimKind::Adafactor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_state_is_sublinear() {
+        let mut opt = Adafactor::new(OptimCfg::new(OptimKind::Adafactor), 1);
+        let mut p = Tensor::zeros(&[64, 32]);
+        let g = Tensor::ones(&[64, 32]);
+        opt.update(0, &mut p, &g, 0.01);
+        assert_eq!(opt.state_bytes(0), (64 + 32) * 4);
+        assert!(opt.state_bytes(0) < p.bytes() / 5, "factored ≪ dense");
+    }
+
+    #[test]
+    fn vector_state_is_dense() {
+        let mut opt = Adafactor::new(OptimCfg::new(OptimKind::Adafactor), 1);
+        let mut p = Tensor::zeros(&[10]);
+        let g = Tensor::ones(&[10]);
+        opt.update(0, &mut p, &g, 0.01);
+        assert_eq!(opt.state_bytes(0), 40);
+    }
+
+    #[test]
+    fn update_rms_is_clipped() {
+        let mut opt = Adafactor::new(OptimCfg::new(OptimKind::Adafactor), 1);
+        let mut p = Tensor::zeros(&[4, 4]);
+        let g = Tensor::from_vec(vec![1000.0; 16], &[4, 4]);
+        opt.update(0, &mut p, &g, 0.1);
+        let rms = (p.data.iter().map(|x| x * x).sum::<f32>() / 16.0).sqrt();
+        assert!(rms <= 0.1 + 1e-4, "rms(Δ) ≤ lr·d, got {rms}");
+    }
+
+    #[test]
+    fn higher_rank_folds_to_2d() {
+        let mut opt = Adafactor::new(OptimCfg::new(OptimKind::Adafactor), 1);
+        let mut p = Tensor::zeros(&[2, 3, 4]);
+        let g = Tensor::ones(&[2, 3, 4]);
+        opt.update(0, &mut p, &g, 0.01);
+        assert_eq!(opt.state_bytes(0), (6 + 4) * 4);
+    }
+}

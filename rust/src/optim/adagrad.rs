@@ -1,0 +1,72 @@
+//! Adagrad (Duchi et al., 2010): per-element accumulated squared gradients.
+//!
+//! State: one accumulator per element (ζ₂ = ζ₁; "Adagrad" rows of
+//! Tables 8–12).
+
+use super::{OptimCfg, OptimKind, Optimizer};
+use crate::tensor::Tensor;
+
+pub struct Adagrad {
+    cfg: OptimCfg,
+    states: Vec<Option<Vec<f32>>>,
+}
+
+impl Adagrad {
+    pub fn new(cfg: OptimCfg, n_params: usize) -> Self {
+        Adagrad { cfg, states: (0..n_params).map(|_| None).collect() }
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn update(&mut self, idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32) {
+        assert_eq!(param.shape, grad.shape);
+        let eps = self.cfg.eps.max(1e-10);
+        let wd = self.cfg.weight_decay;
+        let acc = self.states[idx].get_or_insert_with(|| vec![0.0; param.numel()]);
+        for i in 0..param.data.len() {
+            let g = grad.data[i] + wd * param.data[i];
+            acc[i] += g * g;
+            param.data[i] -= lr * g / (acc[i].sqrt() + eps);
+        }
+    }
+
+    fn state_bytes(&self, idx: usize) -> usize {
+        self.states[idx].as_ref().map_or(0, |b| b.len() * 4)
+    }
+
+    fn total_state_bytes(&self) -> usize {
+        (0..self.states.len()).map(|i| self.state_bytes(i)).sum()
+    }
+
+    fn kind(&self) -> OptimKind {
+        OptimKind::Adagrad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut opt = Adagrad::new(OptimCfg::new(OptimKind::Adagrad), 1);
+        let mut p = Tensor::zeros(&[1]);
+        let g = Tensor::from_vec(vec![7.0], &[1]);
+        opt.update(0, &mut p, &g, 0.1);
+        // step = lr * g / sqrt(g²) = lr
+        assert!((p.data[0] + 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn steps_shrink_over_time() {
+        let mut opt = Adagrad::new(OptimCfg::new(OptimKind::Adagrad), 1);
+        let mut p = Tensor::zeros(&[1]);
+        let g = Tensor::ones(&[1]);
+        opt.update(0, &mut p, &g, 0.1);
+        let d1 = p.data[0].abs();
+        let before = p.data[0];
+        opt.update(0, &mut p, &g, 0.1);
+        let d2 = (p.data[0] - before).abs();
+        assert!(d2 < d1, "adagrad step sizes must be non-increasing");
+    }
+}

@@ -1,0 +1,111 @@
+//! AdamW (Loshchilov & Hutter, 2017) — decoupled weight decay.
+//!
+//! State: first (`m`) and second (`v`) moment per element = 2× parameter
+//! bytes, the worst case the paper's memory analysis centres on
+//! (Appendix B: ζ₂ = 2ζ₁).  Bias correction uses a *per-tensor* step count:
+//! under HiFT each tensor is updated once per sweep, so its own `t` — not
+//! the global step — is the mathematically right correction.
+
+use super::{OptimCfg, OptimKind, Optimizer};
+use crate::tensor::Tensor;
+
+struct State {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+/// AdamW with lazily-allocated per-tensor state.
+pub struct AdamW {
+    cfg: OptimCfg,
+    states: Vec<Option<State>>,
+}
+
+impl AdamW {
+    pub fn new(cfg: OptimCfg, n_params: usize) -> Self {
+        AdamW { cfg, states: (0..n_params).map(|_| None).collect() }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn update(&mut self, idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32) {
+        assert_eq!(param.shape, grad.shape, "param/grad shape mismatch");
+        let slot = &mut self.states[idx];
+        let st = slot.get_or_insert_with(|| State {
+            m: vec![0.0; param.numel()],
+            v: vec![0.0; param.numel()],
+            t: 0,
+        });
+        st.t += 1;
+        let (b1, b2, eps, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.cfg.weight_decay);
+        let bc1 = 1.0 - b1.powi(st.t as i32);
+        let bc2 = 1.0 - b2.powi(st.t as i32);
+        // Single fused loop over the tensor — the L3 hot path.
+        for i in 0..param.data.len() {
+            let g = grad.data[i];
+            let m = b1 * st.m[i] + (1.0 - b1) * g;
+            let v = b2 * st.v[i] + (1.0 - b2) * g * g;
+            st.m[i] = m;
+            st.v[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            let p = param.data[i];
+            param.data[i] = p - lr * (mhat / (vhat.sqrt() + eps) + wd * p);
+        }
+    }
+
+    fn state_bytes(&self, idx: usize) -> usize {
+        self.states[idx].as_ref().map_or(0, |s| (s.m.len() + s.v.len()) * 4)
+    }
+
+    fn total_state_bytes(&self) -> usize {
+        (0..self.states.len()).map(|i| self.state_bytes(i)).sum()
+    }
+
+    fn kind(&self) -> OptimKind {
+        OptimKind::AdamW
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_by_lr() {
+        // With bias correction, |Δ| of step 1 ≈ lr regardless of grad scale.
+        let mut opt = AdamW::new(OptimCfg::new(OptimKind::AdamW), 1);
+        let mut p = Tensor::zeros(&[1]);
+        let g = Tensor::from_vec(vec![1234.0], &[1]);
+        opt.update(0, &mut p, &g, 0.1);
+        assert!((p.data[0] + 0.1).abs() < 1e-4, "step-1 magnitude ≈ lr, got {}", p.data[0]);
+    }
+
+    #[test]
+    fn weight_decay_is_decoupled() {
+        let mut cfg = OptimCfg::new(OptimKind::AdamW);
+        cfg.weight_decay = 0.5;
+        let mut opt = AdamW::new(cfg, 1);
+        let mut p = Tensor::from_vec(vec![1.0], &[1]);
+        let g = Tensor::zeros(&[1]);
+        opt.update(0, &mut p, &g, 0.1);
+        // pure decay: p -= lr * wd * p  -> 1 - 0.05
+        assert!((p.data[0] - 0.95).abs() < 1e-6, "got {}", p.data[0]);
+    }
+
+    #[test]
+    fn per_tensor_step_counts_are_independent() {
+        let mut opt = AdamW::new(OptimCfg::new(OptimKind::AdamW), 2);
+        let mut a = Tensor::zeros(&[1]);
+        let mut b = Tensor::zeros(&[1]);
+        let g = Tensor::ones(&[1]);
+        for _ in 0..5 {
+            opt.update(0, &mut a, &g, 0.01);
+        }
+        opt.update(1, &mut b, &g, 0.01);
+        // tensor 1's bias correction is that of t=1, so its step ≈ lr.
+        assert!((b.data[0] + 0.01).abs() < 1e-5);
+        assert_eq!(opt.state_bytes(0), 8);
+        assert_eq!(opt.state_bytes(1), 8);
+    }
+}

@@ -1,0 +1,290 @@
+//! Optimizers over Rust-owned f32 parameter buffers, plus the host↔device
+//! paging ledger that realizes the paper's "optimizer states live on CPU,
+//! only the active group's states visit the GPU" discipline (Algorithm 1
+//! steps i/k).
+//!
+//! HiFT is *optimizer-independent* (paper §1): the coordinator only sees the
+//! [`Optimizer`] trait.  All five optimizers the paper evaluates are here —
+//! AdamW, SGD, SGD-with-momentum, Adagrad, Adafactor — each with its
+//! distinctive state footprint, which is what Tables 8–12 account for:
+//!
+//! | optimizer | state per param (f32) | #Sta multiplier |
+//! |---|---|---|
+//! | AdamW     | m + v                 | 2× |
+//! | SGDM      | momentum              | 1× |
+//! | SGD       | —                     | 0× |
+//! | Adagrad   | accumulator           | 1× |
+//! | Adafactor | row + col factors     | ~(r+c)/(r·c) ≪ 1× for matrices |
+//!
+//! Updates are applied *per parameter tensor* so the scheduler can page in
+//! exactly the active group's state; the update loops are the L3 hot path
+//! (profiled in EXPERIMENTS.md §Perf).
+
+mod adafactor;
+mod adagrad;
+mod adamw;
+mod sgd;
+
+pub use adafactor::Adafactor;
+pub use adagrad::Adagrad;
+pub use adamw::AdamW;
+pub use sgd::{Sgd, Sgdm};
+
+use crate::tensor::Tensor;
+
+/// Which optimizer (paper Appendix C "Optimizers").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptimKind {
+    AdamW,
+    Sgd,
+    Sgdm,
+    Adagrad,
+    Adafactor,
+}
+
+impl OptimKind {
+    pub const ALL: [OptimKind; 5] =
+        [OptimKind::AdamW, OptimKind::Sgdm, OptimKind::Sgd, OptimKind::Adafactor, OptimKind::Adagrad];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimKind::AdamW => "AdamW",
+            OptimKind::Sgd => "SGD",
+            OptimKind::Sgdm => "SGDM",
+            OptimKind::Adagrad => "Adagrad",
+            OptimKind::Adafactor => "Adafactor",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "adamw" | "adam" => Some(OptimKind::AdamW),
+            "sgd" => Some(OptimKind::Sgd),
+            "sgdm" => Some(OptimKind::Sgdm),
+            "adagrad" => Some(OptimKind::Adagrad),
+            "adafactor" => Some(OptimKind::Adafactor),
+            _ => None,
+        }
+    }
+
+    /// Optimizer-state f32 words per parameter *element* (matrices may be
+    /// cheaper for Adafactor; this is the dense upper bound used by the
+    /// closed-form memory identity).
+    pub fn state_multiplier(&self) -> f64 {
+        match self {
+            OptimKind::AdamW => 2.0,
+            OptimKind::Sgdm | OptimKind::Adagrad => 1.0,
+            OptimKind::Sgd => 0.0,
+            OptimKind::Adafactor => 0.0, // sublinear; exact bytes come from state_bytes()
+        }
+    }
+}
+
+/// Hyperparameters shared by all optimizers (unused fields ignored).
+#[derive(Debug, Clone, Copy)]
+pub struct OptimCfg {
+    pub kind: OptimKind,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub momentum: f32,
+    /// Gradient clipping by global-norm per tensor (0 = off).
+    pub grad_clip: f32,
+}
+
+impl OptimCfg {
+    pub fn new(kind: OptimKind) -> Self {
+        OptimCfg {
+            kind,
+            weight_decay: 0.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            momentum: 0.9,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+/// The coordinator-facing optimizer interface.
+///
+/// `idx` identifies the parameter tensor (stable across the run) so state is
+/// tracked per tensor — the granularity at which HiFT pages state between
+/// host and device.
+pub trait Optimizer {
+    /// Apply one update for parameter tensor `idx` in place.
+    fn update(&mut self, idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32);
+
+    /// Bytes of optimizer state currently held for tensor `idx`.
+    fn state_bytes(&self, idx: usize) -> usize;
+
+    /// Total state bytes across all tensors.
+    fn total_state_bytes(&self) -> usize;
+
+    fn kind(&self) -> OptimKind;
+}
+
+/// Construct an optimizer for `n_params` parameter tensors.
+pub fn build(cfg: OptimCfg, n_params: usize) -> Box<dyn Optimizer> {
+    match cfg.kind {
+        OptimKind::AdamW => Box::new(AdamW::new(cfg, n_params)),
+        OptimKind::Sgd => Box::new(Sgd::new(cfg)),
+        OptimKind::Sgdm => Box::new(Sgdm::new(cfg, n_params)),
+        OptimKind::Adagrad => Box::new(Adagrad::new(cfg, n_params)),
+        OptimKind::Adafactor => Box::new(Adafactor::new(cfg, n_params)),
+    }
+}
+
+/// Clip a gradient tensor to `max_norm` (no-op if 0); returns the pre-clip norm.
+pub fn clip_grad(grad: &mut Tensor, max_norm: f32) -> f32 {
+    let norm = grad.l2_norm();
+    if max_norm > 0.0 && norm > max_norm {
+        grad.scale(max_norm / (norm + 1e-12));
+    }
+    norm
+}
+
+// ---------------------------------------------------------------------------
+// Host↔device paging ledger (Algorithm 1 steps i and k)
+// ---------------------------------------------------------------------------
+
+/// Tracks simulated movement of optimizer state between host and device.
+///
+/// The paper's peak-communication claim (§4.3: "#Sta values in Tables 8–12")
+/// is checked against `max_inflight_bytes`; the memory claim against
+/// `peak_device_bytes`.
+#[derive(Debug, Clone, Default)]
+pub struct OffloadLedger {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    device_resident: u64,
+    pub peak_device_bytes: u64,
+    /// Largest single page-in (the per-step communication peak).
+    pub max_inflight_bytes: u64,
+    pub page_ins: u64,
+    pub page_outs: u64,
+}
+
+impl OffloadLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move `bytes` of optimizer state host → device (Algorithm 1 step i).
+    pub fn page_in(&mut self, bytes: u64) {
+        self.h2d_bytes += bytes;
+        self.device_resident += bytes;
+        self.peak_device_bytes = self.peak_device_bytes.max(self.device_resident);
+        self.max_inflight_bytes = self.max_inflight_bytes.max(bytes);
+        self.page_ins += 1;
+    }
+
+    /// Account state newly *allocated* on device (first visit of a group:
+    /// moments are created there, not copied from host).
+    pub fn alloc_on_device(&mut self, bytes: u64) {
+        self.device_resident += bytes;
+        self.peak_device_bytes = self.peak_device_bytes.max(self.device_resident);
+    }
+
+    /// Move `bytes` back device → host (Algorithm 1 step k).
+    pub fn page_out(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.device_resident, "paging out more than resident");
+        self.d2h_bytes += bytes;
+        self.device_resident = self.device_resident.saturating_sub(bytes);
+        self.page_outs += 1;
+    }
+
+    pub fn device_resident(&self) -> u64 {
+        self.device_resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    /// Every optimizer must descend a convex quadratic: f(x) = ||x - c||².
+    fn converges(kind: OptimKind, lr: f32) -> f32 {
+        let mut cfg = OptimCfg::new(kind);
+        cfg.weight_decay = 0.0;
+        let mut opt = build(cfg, 1);
+        let target = Tensor::from_vec(vec![1.0, -2.0, 3.0, 0.5], &[4]);
+        let mut rng = Pcg32::seeded(11);
+        let mut x = Tensor::randn(&[4], 1.0, &mut rng);
+        for _ in 0..400 {
+            let mut g = x.clone();
+            g.axpy(-1.0, &target); // grad = x - c
+            g.scale(2.0);
+            opt.update(0, &mut x, &g, lr);
+        }
+        let mut d = x;
+        d.axpy(-1.0, &target);
+        d.l2_norm()
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        assert!(converges(OptimKind::AdamW, 0.05) < 0.05, "adamw");
+        assert!(converges(OptimKind::Sgd, 0.05) < 0.05, "sgd");
+        assert!(converges(OptimKind::Sgdm, 0.02) < 0.05, "sgdm");
+        assert!(converges(OptimKind::Adagrad, 0.5) < 0.05, "adagrad");
+        assert!(converges(OptimKind::Adafactor, 0.05) < 0.2, "adafactor");
+    }
+
+    #[test]
+    fn state_multipliers_match_lazy_state() {
+        let t = Tensor::zeros(&[16, 8]);
+        let g = Tensor::ones(&[16, 8]);
+        for kind in OptimKind::ALL {
+            let mut opt = build(OptimCfg::new(kind), 2);
+            assert_eq!(opt.state_bytes(0), 0, "{kind:?} state is lazy");
+            let mut p = t.clone();
+            opt.update(0, &mut p, &g, 0.01);
+            let expect = (kind.state_multiplier() * t.bytes() as f64) as usize;
+            match kind {
+                OptimKind::Adafactor => {
+                    // row + col factors: (16 + 8) * 4 bytes ≪ dense 128*4
+                    assert_eq!(opt.state_bytes(0), (16 + 8) * 4);
+                }
+                _ => assert_eq!(opt.state_bytes(0), expect, "{kind:?}"),
+            }
+            assert_eq!(opt.total_state_bytes(), opt.state_bytes(0));
+        }
+    }
+
+    #[test]
+    fn ledger_tracks_peak_and_inflight() {
+        let mut l = OffloadLedger::new();
+        l.page_in(100);
+        l.page_in(50);
+        assert_eq!(l.device_resident(), 150);
+        assert_eq!(l.peak_device_bytes, 150);
+        l.page_out(150);
+        assert_eq!(l.device_resident(), 0);
+        l.page_in(80);
+        assert_eq!(l.peak_device_bytes, 150, "peak remembered");
+        assert_eq!(l.max_inflight_bytes, 100);
+        assert_eq!((l.page_ins, l.page_outs), (3, 1));
+    }
+
+    #[test]
+    fn clip_grad_caps_norm() {
+        let mut g = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        let pre = clip_grad(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((g.l2_norm() - 1.0).abs() < 1e-5);
+        let mut g2 = Tensor::from_vec(vec![0.3, 0.4], &[2]);
+        clip_grad(&mut g2, 1.0);
+        assert!((g2.l2_norm() - 0.5).abs() < 1e-6, "below threshold untouched");
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in OptimKind::ALL {
+            assert_eq!(OptimKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(OptimKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,107 @@
+//! SGD (Robbins & Monro, 1951) and SGD-with-momentum (Qian, 1999).
+//!
+//! SGD is the zero-state optimizer: the paper notes HiFT's peak CPU↔GPU
+//! communication is *zero* under SGD (§4.3) — the ledger test in the
+//! scheduler asserts exactly that.  SGDM carries one momentum buffer
+//! (ζ₂ = ζ₁ in the Appendix-B accounting, Tables 8–12 "SGDM" rows).
+
+use super::{OptimCfg, OptimKind, Optimizer};
+use crate::tensor::Tensor;
+
+/// Plain SGD: `p -= lr * (g + wd * p)`. No state at all.
+pub struct Sgd {
+    cfg: OptimCfg,
+}
+
+impl Sgd {
+    pub fn new(cfg: OptimCfg) -> Self {
+        Sgd { cfg }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn update(&mut self, _idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32) {
+        assert_eq!(param.shape, grad.shape);
+        let wd = self.cfg.weight_decay;
+        for i in 0..param.data.len() {
+            param.data[i] -= lr * (grad.data[i] + wd * param.data[i]);
+        }
+    }
+
+    fn state_bytes(&self, _idx: usize) -> usize {
+        0
+    }
+
+    fn total_state_bytes(&self) -> usize {
+        0
+    }
+
+    fn kind(&self) -> OptimKind {
+        OptimKind::Sgd
+    }
+}
+
+/// SGD with (heavy-ball) momentum: `u = μu + g; p -= lr * u`.
+pub struct Sgdm {
+    cfg: OptimCfg,
+    states: Vec<Option<Vec<f32>>>,
+}
+
+impl Sgdm {
+    pub fn new(cfg: OptimCfg, n_params: usize) -> Self {
+        Sgdm { cfg, states: (0..n_params).map(|_| None).collect() }
+    }
+}
+
+impl Optimizer for Sgdm {
+    fn update(&mut self, idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32) {
+        assert_eq!(param.shape, grad.shape);
+        let mu = self.cfg.momentum;
+        let wd = self.cfg.weight_decay;
+        let buf = self.states[idx].get_or_insert_with(|| vec![0.0; param.numel()]);
+        for i in 0..param.data.len() {
+            let g = grad.data[i] + wd * param.data[i];
+            let u = mu * buf[i] + g;
+            buf[i] = u;
+            param.data[i] -= lr * u;
+        }
+    }
+
+    fn state_bytes(&self, idx: usize) -> usize {
+        self.states[idx].as_ref().map_or(0, |b| b.len() * 4)
+    }
+
+    fn total_state_bytes(&self) -> usize {
+        (0..self.states.len()).map(|i| self.state_bytes(i)).sum()
+    }
+
+    fn kind(&self) -> OptimKind {
+        OptimKind::Sgdm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_is_exact() {
+        let mut opt = Sgd::new(OptimCfg::new(OptimKind::Sgd));
+        let mut p = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let g = Tensor::from_vec(vec![0.5, -0.5], &[2]);
+        opt.update(0, &mut p, &g, 0.1);
+        assert_eq!(p.data, vec![0.95, 2.05]);
+        assert_eq!(opt.total_state_bytes(), 0, "SGD carries no state — zero paging");
+    }
+
+    #[test]
+    fn sgdm_accumulates_momentum() {
+        let mut opt = Sgdm::new(OptimCfg::new(OptimKind::Sgdm), 1);
+        let mut p = Tensor::zeros(&[1]);
+        let g = Tensor::ones(&[1]);
+        opt.update(0, &mut p, &g, 1.0); // u=1, p=-1
+        opt.update(0, &mut p, &g, 1.0); // u=1.9, p=-2.9
+        assert!((p.data[0] + 2.9).abs() < 1e-6, "got {}", p.data[0]);
+        assert_eq!(opt.state_bytes(0), 4);
+    }
+}

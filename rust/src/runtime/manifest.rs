@@ -1,0 +1,254 @@
+//! Typed view of `artifacts/<preset>/manifest.json` (written by `aot.py`).
+//!
+//! The manifest is the only contract between the Python compile path and the
+//! Rust training path: model geometry, the ordered parameter list with
+//! byte offsets into `params.bin`, layer-unit assignments, and the artifact
+//! inventory with exact input/output orderings.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::Value;
+
+/// Model geometry (mirrors `ModelConfig` in `python/compile/model.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub n_prefix: usize,
+}
+
+impl ModelCfg {
+    /// Layer units: embeddings + blocks + head (paper §F).
+    pub fn n_units(&self) -> usize {
+        self.n_layers + 2
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let req = |k: &str| -> Result<usize> {
+            v.get(k).as_usize().with_context(|| format!("config.{k} missing"))
+        };
+        Ok(ModelCfg {
+            name: v.get("name").as_str().unwrap_or("?").to_string(),
+            vocab: req("vocab")?,
+            d_model: req("d_model")?,
+            n_layers: req("n_layers")?,
+            n_heads: req("n_heads")?,
+            d_ff: req("d_ff")?,
+            seq_len: req("seq_len")?,
+            batch: req("batch")?,
+            lora_rank: req("lora_rank")?,
+            lora_alpha: v.get("lora_alpha").as_f64().unwrap_or(8.0),
+            n_prefix: req("n_prefix")?,
+        })
+    }
+}
+
+/// One named parameter tensor: shape, layer unit, offset into the .bin file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Layer-unit index; `-1` marks PEFT adapter parameters.
+    pub unit: i64,
+    pub bitfit: bool,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// A model variant (base / lora / ia3 / prefix) = its full parameter list.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub params: Vec<ParamInfo>,
+    pub n_base_params: usize,
+}
+
+impl VariantInfo {
+    /// Indices of parameters belonging to layer unit `u`.
+    pub fn unit_indices(&self, u: usize) -> Vec<usize> {
+        self.params.iter().enumerate().filter(|(_, p)| p.unit == u as i64).map(|(i, _)| i).collect()
+    }
+
+    /// Indices of adapter parameters (unit == -1).
+    pub fn adapter_indices(&self) -> Vec<usize> {
+        self.params.iter().enumerate().filter(|(_, p)| p.unit == -1).map(|(i, _)| i).collect()
+    }
+
+    pub fn bitfit_indices(&self) -> Vec<usize> {
+        self.params.iter().enumerate().filter(|(_, p)| p.bitfit).map(|(i, _)| i).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.size).sum()
+    }
+}
+
+/// One lowered HLO artifact with its input/output name orderings.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub kernels: String,
+    pub seed: u64,
+    pub config: ModelCfg,
+    pub n_units: usize,
+    pub variants: HashMap<String, VariantInfo>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = crate::ser::parse(text).context("manifest.json parse")?;
+        if v.get("schema").as_usize() != Some(1) {
+            bail!("unsupported manifest schema {:?}", v.get("schema"));
+        }
+        let config = ModelCfg::from_json(v.get("config"))?;
+        let mut variants = HashMap::new();
+        if let Some(obj) = v.get("variants").as_obj() {
+            for (name, vv) in obj.iter() {
+                let params = vv
+                    .get("params")
+                    .as_arr()
+                    .context("variant.params")?
+                    .iter()
+                    .map(parse_param)
+                    .collect::<Result<Vec<_>>>()?;
+                let n_base_params =
+                    vv.get("n_base_params").as_usize().context("n_base_params")?;
+                variants.insert(name.clone(), VariantInfo { params, n_base_params });
+            }
+        }
+        let artifacts = v
+            .get("artifacts")
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactInfo {
+                    name: a.get("name").as_str().context("artifact.name")?.to_string(),
+                    path: a.get("path").as_str().context("artifact.path")?.to_string(),
+                    inputs: str_arr(a.get("inputs"))?,
+                    outputs: str_arr(a.get("outputs"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            preset: v.get("preset").as_str().unwrap_or("?").to_string(),
+            kernels: v.get("kernels").as_str().unwrap_or("?").to_string(),
+            seed: v.get("seed").as_i64().unwrap_or(0) as u64,
+            n_units: v.get("n_units").as_usize().context("n_units")?,
+            config,
+            variants,
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant {name:?} not in manifest"))
+    }
+}
+
+fn parse_param(v: &Value) -> Result<ParamInfo> {
+    Ok(ParamInfo {
+        name: v.get("name").as_str().context("param.name")?.to_string(),
+        shape: v
+            .get("shape")
+            .as_arr()
+            .context("param.shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?,
+        unit: v.get("unit").as_i64().context("param.unit")?,
+        bitfit: v.get("bitfit").as_bool().unwrap_or(false),
+        offset: v.get("offset").as_usize().context("param.offset")?,
+        size: v.get("size").as_usize().context("param.size")?,
+    })
+}
+
+fn str_arr(v: &Value) -> Result<Vec<String>> {
+    Ok(v.as_arr()
+        .context("string array")?
+        .iter()
+        .filter_map(|s| s.as_str().map(str::to_string))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "schema": 1, "preset": "t", "kernels": "pallas", "seed": 0,
+      "config": {"name":"t","vocab":8,"d_model":4,"n_layers":1,"n_heads":1,
+                 "d_ff":8,"seq_len":4,"batch":2,"lora_rank":2,"lora_alpha":8.0,"n_prefix":2},
+      "n_units": 3,
+      "variants": {"base": {"n_base_params": 2, "params": [
+         {"name":"tok_emb","shape":[8,4],"unit":0,"bitfit":false,"offset":0,"size":32},
+         {"name":"head.b","shape":[8],"unit":2,"bitfit":true,"offset":128,"size":8}]}},
+      "artifacts": [{"name":"fwd_base","path":"fwd_base.hlo.txt",
+                     "inputs":["tok_emb","head.b","tokens","targets","weights"],
+                     "outputs":["loss","ncorrect"]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.vocab, 8);
+        assert_eq!(m.n_units, 3);
+        let v = m.variant("base").unwrap();
+        assert_eq!(v.params.len(), 2);
+        assert_eq!(v.unit_indices(0), vec![0]);
+        assert_eq!(v.bitfit_indices(), vec![1]);
+        assert_eq!(v.total_params(), 40);
+        let a = m.artifact("fwd_base").unwrap();
+        assert_eq!(a.inputs.len(), 5);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let bad = SAMPLE.replace("\"schema\": 1", "\"schema\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

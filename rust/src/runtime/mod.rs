@@ -1,0 +1,264 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the L3 loop.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Executables are compiled lazily and
+//! cached for the life of the process (one compile per artifact, ever).
+//!
+//! Interchange is HLO *text*; all artifacts were lowered with
+//! `return_tuple=True`, so each execution returns a single tuple literal
+//! that we decompose into `(loss, ncorrect, grads…)`.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{Tensor, TensorSet};
+pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
+
+/// One training/eval batch, shaped `[B, S]` row-major.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub b: usize,
+    pub s: usize,
+}
+
+impl Batch {
+    pub fn new(b: usize, s: usize) -> Self {
+        Batch { tokens: vec![0; b * s], targets: vec![0; b * s], weights: vec![0.0; b * s], b, s }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.b * self.s;
+        if self.tokens.len() != n || self.targets.len() != n || self.weights.len() != n {
+            bail!("batch buffers disagree with [{}x{}]", self.b, self.s);
+        }
+        Ok(())
+    }
+}
+
+/// Result of one executed step.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Masked #correct (paired with the batch's weight sum for accuracy).
+    pub ncorrect: f32,
+    /// Gradients in artifact output order (empty for `fwd_*`).
+    pub grads: Vec<Tensor>,
+    /// Wallclock of the PJRT execute call.
+    pub exec_time: std::time::Duration,
+}
+
+/// Cumulative runtime statistics (perf pass bookkeeping).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    /// Parameter uploads skipped thanks to the device-buffer cache.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Device-resident copy of one parameter tensor, valid for a specific
+/// `(TensorSet lineage, version)` — the §Perf optimization that stops every
+/// step from re-uploading the (mostly frozen) model.
+struct CachedBuf {
+    key: (u64, u64),
+    buf: xla::PjRtBuffer,
+}
+
+/// PJRT-backed execution engine for one artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// name -> cached device buffer (keyed by TensorSet lineage+version).
+    param_bufs: HashMap<String, CachedBuf>,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Load `artifacts/<preset>` (manifest + lazily-compiled HLO).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: HashMap::new(),
+            param_bufs: HashMap::new(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&info.path);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_secs += t0.elapsed().as_secs_f64();
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (amortize startup, e.g. all HiFT units).
+    pub fn warmup(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `artifact` with `params` (must match the artifact's input
+    /// order prefix) and a batch; decompose `(loss, ncorrect, grads…)`.
+    pub fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput> {
+        batch.validate()?;
+        self.ensure_compiled(artifact)?;
+        let info = self.manifest.artifact(artifact)?;
+        let n_inputs = info.inputs.len();
+        if params.len() + 3 != n_inputs {
+            bail!(
+                "artifact {artifact} expects {} inputs, got {} params + 3 batch",
+                n_inputs,
+                params.len()
+            );
+        }
+        let n_grads = info.outputs.len().saturating_sub(2);
+        let grad_shapes: Vec<Vec<usize>> = info.outputs[2..]
+            .iter()
+            .map(|out_name| {
+                params
+                    .get(out_name)
+                    .map(|t| t.shape.clone())
+                    .with_context(|| format!("grad output {out_name} not among params"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // Marshal inputs.  Parameters go through the device-buffer cache:
+        // a tensor is re-uploaded only when its (lineage, version) changed —
+        // under HiFT that's one layer group per step, so h2d traffic is
+        // O(group) instead of O(model) (EXPERIMENTS.md §Perf).
+        for (i, t) in params.tensors.iter().enumerate() {
+            let key = params.cache_key(i);
+            let name = &params.names[i];
+            let hit = self.param_bufs.get(name).map(|c| c.key == key).unwrap_or(false);
+            if hit {
+                self.stats.cache_hits += 1;
+            } else {
+                let buf = self.client.buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?;
+                self.param_bufs.insert(name.clone(), CachedBuf { key, buf });
+                self.stats.h2d_bytes += t.bytes() as u64;
+                self.stats.cache_misses += 1;
+            }
+        }
+        let bdims = [batch.b, batch.s];
+        let tok_buf = self.client.buffer_from_host_buffer::<i32>(&batch.tokens, &bdims, None)?;
+        let tgt_buf = self.client.buffer_from_host_buffer::<i32>(&batch.targets, &bdims, None)?;
+        let w_buf = self.client.buffer_from_host_buffer::<f32>(&batch.weights, &bdims, None)?;
+        self.stats.h2d_bytes += (batch.tokens.len() * 12) as u64;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n_inputs);
+        for name in &params.names {
+            args.push(&self.param_bufs[name].buf);
+        }
+        args.push(&tok_buf);
+        args.push(&tgt_buf);
+        args.push(&w_buf);
+
+        let exe = self.exes.get(artifact).expect("ensured above");
+        let t0 = Instant::now();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let exec_time = t0.elapsed();
+        self.stats.executions += 1;
+        self.stats.exec_secs += exec_time.as_secs_f64();
+
+        let mut parts = result.to_tuple()?;
+        if parts.len() != info.outputs.len() {
+            bail!("artifact {artifact}: expected {} outputs, got {}", info.outputs.len(), parts.len());
+        }
+        let loss: f32 = parts[0].to_vec::<f32>()?[0];
+        let ncorrect: f32 = parts[1].to_vec::<f32>()?[0];
+        let mut grads = Vec::with_capacity(n_grads);
+        for (i, lit) in parts.drain(..).enumerate().skip(2) {
+            let shape = &grad_shapes[i - 2];
+            let data = lit.to_vec::<f32>()?;
+            self.stats.d2h_bytes += (data.len() * 4) as u64;
+            grads.push(Tensor::from_vec(data, shape));
+        }
+        Ok(StepOutput { loss, ncorrect, grads, exec_time })
+    }
+
+    /// Load the initial parameters for `variant` from the .bin files.
+    pub fn load_params(&self, variant: &str) -> Result<TensorSet> {
+        let vinfo = self.manifest.variant(variant)?;
+        let base_bytes = std::fs::read(self.dir.join("params.bin"))
+            .with_context(|| "reading params.bin")?;
+        let adapter_bytes = if variant != "base" {
+            std::fs::read(self.dir.join(format!("adapters_{variant}.bin")))
+                .with_context(|| format!("reading adapters_{variant}.bin"))?
+        } else {
+            Vec::new()
+        };
+        let mut set = TensorSet::new();
+        for (i, p) in vinfo.params.iter().enumerate() {
+            let bytes: &[u8] = if i < vinfo.n_base_params { &base_bytes } else { &adapter_bytes };
+            set.push(p.name.clone(), Tensor::from_le_bytes(&bytes[p.offset..], &p.shape));
+        }
+        Ok(set)
+    }
+
+    /// Grad-artifact name for one layer unit of the base model.
+    pub fn unit_artifact(u: usize) -> String {
+        format!("grad_base_u{u}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_validation() {
+        let b = Batch::new(2, 3);
+        assert!(b.validate().is_ok());
+        let mut bad = Batch::new(2, 3);
+        bad.tokens.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn unit_artifact_names() {
+        assert_eq!(Runtime::unit_artifact(0), "grad_base_u0");
+        assert_eq!(Runtime::unit_artifact(13), "grad_base_u13");
+    }
+}

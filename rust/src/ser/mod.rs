@@ -1,0 +1,9 @@
+//! Minimal JSON: parser + emitter (the offline vendor set has no serde).
+//!
+//! Covers everything the repo needs — `manifest.json` from the AOT step,
+//! run records, bench outputs.  Object key order is preserved (insertion
+//! order) so emitted records diff cleanly.
+
+mod json;
+
+pub use json::{emit, emit_pretty, parse, JsonError, Value};

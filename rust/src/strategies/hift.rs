@@ -1,0 +1,167 @@
+//! HiFT itself (Algorithm 1) as a [`FineTuneStrategy`].
+//!
+//! Per training step:
+//!   a) all parameters are conceptually frozen;
+//!   c/d) the scheduler pops the next group of `m` layer units from the
+//!        rotating queue and requeues them at the tail;
+//!   e/f/g) the group's per-unit gradient artifacts are the *only* ones
+//!        executed — XLA never materializes any other gradient, which is
+//!        the memory contribution;
+//!   h) forward+backward run fused in the artifact;
+//!   i) optimizer state for exactly this group is paged host→device
+//!        (ledger-tracked — the #Sta communication column of Tables 8–12);
+//!   g') parameters update in place; gradients are dropped immediately;
+//!   k) state pages back device→host;
+//!   LR advances only at sweep boundaries (delayed LR, §3.1).
+//!
+//! For `m > 1` all unit gradients of the group are computed *before* any
+//! update, so the group updates jointly at the same parameter point —
+//! matching Eq. (2)'s single argmin over the whole group mask βᵢ.
+
+use anyhow::Result;
+
+use super::{FineTuneStrategy, StepStats};
+use crate::coordinator::lr::LrSchedule;
+use crate::coordinator::scheduler::{HiftScheduler, SchedulerCfg};
+use crate::coordinator::strategy::UpdateStrategy;
+use crate::optim::{self, OffloadLedger, OptimCfg, Optimizer};
+use crate::runtime::{Batch, Manifest, Runtime};
+use crate::tensor::TensorSet;
+
+/// HiFT hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct HiftCfg {
+    /// Layers per group (paper's m; m=1 in most paper experiments).
+    pub m: usize,
+    /// Update order S.
+    pub order: UpdateStrategy,
+    /// Underlying LR schedule (advanced per sweep).
+    pub schedule: LrSchedule,
+    pub optim: OptimCfg,
+}
+
+/// The HiFT strategy state.
+pub struct Hift {
+    cfg: HiftCfg,
+    scheduler: HiftScheduler,
+    optimizer: Box<dyn Optimizer>,
+    ledger: OffloadLedger,
+    /// Parameter indices per layer unit.
+    unit_params: Vec<Vec<usize>>,
+    /// Per-unit parameter element counts.
+    unit_sizes: Vec<usize>,
+    peak_trainable: usize,
+    name: String,
+}
+
+impl Hift {
+    pub fn new(cfg: HiftCfg, manifest: &Manifest) -> Result<Self> {
+        let vinfo = manifest.variant("base")?;
+        let n_units = manifest.n_units;
+        let unit_params: Vec<Vec<usize>> = (0..n_units).map(|u| vinfo.unit_indices(u)).collect();
+        let unit_sizes: Vec<usize> = unit_params
+            .iter()
+            .map(|idxs| idxs.iter().map(|&i| vinfo.params[i].size).sum())
+            .collect();
+        let scheduler = HiftScheduler::new(
+            SchedulerCfg { m: cfg.m, strategy: cfg.order, schedule: cfg.schedule },
+            n_units,
+        );
+        let optimizer = optim::build(cfg.optim, vinfo.params.len());
+        let name = format!("hift(m={},{},{})", cfg.m, cfg.order.name(), cfg.optim.kind.name());
+        Ok(Hift {
+            cfg,
+            scheduler,
+            optimizer,
+            ledger: OffloadLedger::new(),
+            unit_params,
+            unit_sizes,
+            peak_trainable: 0,
+            name,
+        })
+    }
+
+    /// Steps per sweep (k).
+    pub fn k(&self) -> usize {
+        self.scheduler.k()
+    }
+
+    pub fn scheduler(&self) -> &HiftScheduler {
+        &self.scheduler
+    }
+}
+
+impl FineTuneStrategy for Hift {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn variant(&self) -> &str {
+        "base"
+    }
+
+    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch) -> Result<StepStats> {
+        let plan = self.scheduler.next();
+
+        // Phase 1 — gradients for every unit in the group, at the *current*
+        // parameter point (no update interleaving).
+        let mut exec_time = std::time::Duration::ZERO;
+        let mut loss = 0.0f32;
+        let mut ncorrect = 0.0f32;
+        let mut grads: Vec<(usize, crate::tensor::Tensor)> = Vec::new();
+        for (gi, &u) in plan.units.iter().enumerate() {
+            let out = rt.run(&Runtime::unit_artifact(u), params, batch)?;
+            exec_time += out.exec_time;
+            if gi == 0 {
+                loss = out.loss;
+                ncorrect = out.ncorrect;
+            }
+            for (slot, g) in self.unit_params[u].iter().zip(out.grads) {
+                grads.push((*slot, g));
+            }
+        }
+
+        // Phase 2 — page in exactly this group's optimizer state, update,
+        // page out (Algorithm 1 steps i, g', k).
+        let mut trainable = 0usize;
+        for (idx, mut g) in grads {
+            optim::clip_grad(&mut g, self.cfg.optim.grad_clip);
+            let pre = self.optimizer.state_bytes(idx) as u64;
+            self.ledger.page_in(pre);
+            let p = params.tensor_mut(idx);
+            trainable += p.numel();
+            self.optimizer.update(idx, p, &g, plan.lr);
+            let post = self.optimizer.state_bytes(idx) as u64;
+            self.ledger.alloc_on_device(post.saturating_sub(pre));
+            self.ledger.page_out(post);
+            // gradient dropped here — "Clear gradients" (step g)
+        }
+        self.peak_trainable = self.peak_trainable.max(trainable);
+        debug_assert_eq!(
+            trainable,
+            plan.units.iter().map(|&u| self.unit_sizes[u]).sum::<usize>()
+        );
+
+        let weight_sum: f32 = batch.weights.iter().sum();
+        Ok(StepStats {
+            loss,
+            ncorrect,
+            weight_sum,
+            lr: plan.lr,
+            trainable_params: trainable,
+            exec_time,
+        })
+    }
+
+    fn peak_trainable_params(&self) -> usize {
+        self.peak_trainable
+    }
+
+    fn ledger(&self) -> Option<&OffloadLedger> {
+        Some(&self.ledger)
+    }
+
+    fn optimizer_state_bytes(&self) -> usize {
+        self.optimizer.total_state_bytes()
+    }
+}

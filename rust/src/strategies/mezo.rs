@@ -1,0 +1,126 @@
+//! MeZO (Malladi et al., 2023): zeroth-order SPSA fine-tuning.
+//!
+//! Two forward passes per step, no gradients, no activation storage:
+//!
+//! ```text
+//! z ~ N(0, I)   (regenerated from the step seed, never stored)
+//! g̃ = [L(θ + εz) − L(θ − εz)] / 2ε        (a scalar)
+//! θ ← θ − η · g̃ · z
+//! ```
+//!
+//! The in-place ±ε walk and seed-regenerated `z` reproduce the paper's
+//! memory story: parameter memory only.  `mezo-adam` feeds `g̃·z` into
+//! AdamW instead of raw SGD (the MeZO-Adam row of Table 1).
+//!
+//! The quality gap the HiFT paper emphasizes (zeroth-order ≪ first-order,
+//! Tables 1–2) emerges naturally — `bench_table1` reproduces the ordering.
+
+use anyhow::Result;
+
+use super::{FineTuneStrategy, StepStats};
+use crate::coordinator::lr::LrSchedule;
+use crate::optim::{self, OptimCfg, OptimKind, Optimizer};
+use crate::rng::Pcg32;
+use crate::runtime::{Batch, Manifest, Runtime};
+use crate::tensor::{Tensor, TensorSet};
+
+pub struct Mezo {
+    name: String,
+    eps: f32,
+    schedule: LrSchedule,
+    step: u64,
+    seed: u64,
+    optimizer: Box<dyn Optimizer>,
+    grad_clip: f32,
+    n_params: usize,
+    total_params: usize,
+}
+
+impl Mezo {
+    pub fn new(manifest: &Manifest, ocfg: OptimCfg, schedule: LrSchedule, seed: u64) -> Result<Self> {
+        let vinfo = manifest.variant("base")?;
+        let name = match ocfg.kind {
+            OptimKind::Sgd => "mezo".to_string(),
+            k => format!("mezo-{}", k.name().to_ascii_lowercase()),
+        };
+        Ok(Mezo {
+            name,
+            eps: 1e-3,
+            schedule,
+            step: 0,
+            seed,
+            optimizer: optim::build(ocfg, vinfo.params.len()),
+            grad_clip: 0.0, // SPSA pseudo-grads are already tiny; no clip
+            n_params: vinfo.params.len(),
+            total_params: vinfo.total_params(),
+        })
+    }
+
+    /// Walk every parameter by `scale * z(step_seed)` in place, streaming
+    /// `z` from the RNG (never materialized beyond one tensor's worth).
+    fn perturb(&self, params: &mut TensorSet, step_seed: u64, scale: f32) {
+        for i in 0..params.len() {
+            let mut rng = Pcg32::new(step_seed, i as u64 + 1);
+            let t = params.tensor_mut(i); // bump version: device cache must refresh
+            for x in t.data.iter_mut() {
+                *x += scale * rng.normal();
+            }
+        }
+    }
+}
+
+impl FineTuneStrategy for Mezo {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn variant(&self) -> &str {
+        "base"
+    }
+
+    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch) -> Result<StepStats> {
+        let lr = self.schedule.at(self.step as usize);
+        let step_seed = self.seed ^ (0x9E37 + self.step).wrapping_mul(0x2545F4914F6CDD1D);
+        self.step += 1;
+
+        // L(θ + εz), L(θ − εz), restore — three in-place walks.
+        self.perturb(params, step_seed, self.eps);
+        let out_p = rt.run("fwd_base", params, batch)?;
+        self.perturb(params, step_seed, -2.0 * self.eps);
+        let out_m = rt.run("fwd_base", params, batch)?;
+        self.perturb(params, step_seed, self.eps);
+
+        let proj = (out_p.loss - out_m.loss) / (2.0 * self.eps);
+
+        // θ ← optimizer(θ, g̃·z) with z regenerated per tensor.
+        for i in 0..self.n_params {
+            let mut rng = Pcg32::new(step_seed, i as u64 + 1);
+            let t = params.tensor_mut(i);
+            let mut g = Tensor::zeros(&t.shape);
+            for x in g.data.iter_mut() {
+                *x = proj * rng.normal();
+            }
+            if self.grad_clip > 0.0 {
+                optim::clip_grad(&mut g, self.grad_clip);
+            }
+            self.optimizer.update(i, t, &g, lr);
+        }
+
+        Ok(StepStats {
+            loss: 0.5 * (out_p.loss + out_m.loss),
+            ncorrect: out_p.ncorrect,
+            weight_sum: batch.weights.iter().sum(),
+            lr,
+            trainable_params: self.total_params,
+            exec_time: out_p.exec_time + out_m.exec_time,
+        })
+    }
+
+    fn peak_trainable_params(&self) -> usize {
+        self.total_params
+    }
+
+    fn optimizer_state_bytes(&self) -> usize {
+        self.optimizer.total_state_bytes()
+    }
+}

@@ -1,0 +1,159 @@
+//! Fine-tuning strategies: HiFT plus every baseline the paper compares
+//! against (Appendix C).
+//!
+//! | strategy | kind | trainable set | grad artifact(s) |
+//! |---|---|---|---|
+//! | [`hift::Hift`] | the paper | one layer group per step, rotating | `grad_base_u{i}` per unit |
+//! | FPFT | standard | everything, every step | `grad_base_full` |
+//! | BitFit | selection PEFT | biases + LN params | `grad_base_bitfit` |
+//! | LoRA / IA3 / Prefix | addition/reparam PEFT | adapters only | `grad_<v>_adapter` |
+//! | LP (linear probe) | selection | head unit only | `grad_base_u{n-1}` |
+//! | LOMO (sim) | fused-SGD | everything, no optimizer state | `grad_base_full` + SGD |
+//! | [`mezo::Mezo`] | zeroth-order | everything, two forwards, no grads | `fwd_base` ×2 |
+//!
+//! All implement [`FineTuneStrategy`]; the trainer is strategy-agnostic.
+
+pub mod hift;
+pub mod mezo;
+pub mod subset;
+
+pub use hift::{Hift, HiftCfg};
+pub use mezo::Mezo;
+pub use subset::SubsetTune;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::lr::LrSchedule;
+use crate::coordinator::strategy::UpdateStrategy;
+use crate::optim::{OffloadLedger, OptimCfg, OptimKind};
+use crate::runtime::{Batch, Manifest, Runtime};
+use crate::tensor::TensorSet;
+
+/// Per-step outcome every strategy reports.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub weight_sum: f32,
+    pub lr: f32,
+    /// Parameters that received an update this step (the paper's
+    /// "#Trainable Parameters" axis).
+    pub trainable_params: usize,
+    /// XLA execute wallclock within the step.
+    pub exec_time: Duration,
+}
+
+/// A fine-tuning algorithm: owns its optimizer/LR policy, updates params
+/// in place given gradients (or forward passes) from the runtime.
+pub trait FineTuneStrategy {
+    fn name(&self) -> &str;
+
+    /// Which model variant's parameters/artifacts it trains on.
+    fn variant(&self) -> &str;
+
+    /// The eval forward artifact for this strategy.
+    fn fwd_artifact(&self) -> String {
+        format!("fwd_{}", self.variant())
+    }
+
+    /// One training step: compute gradients via `rt`, update `params`.
+    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch)
+        -> Result<StepStats>;
+
+    /// Peak per-step trainable parameter count seen so far.
+    fn peak_trainable_params(&self) -> usize;
+
+    /// The host↔device optimizer-state paging ledger, if the strategy
+    /// offloads (HiFT does; baselines keep state resident).
+    fn ledger(&self) -> Option<&OffloadLedger> {
+        None
+    }
+
+    /// Total optimizer-state bytes currently held (device + host).
+    fn optimizer_state_bytes(&self) -> usize;
+}
+
+/// Everything needed to construct any strategy by name (CLI/bench entry).
+#[derive(Debug, Clone)]
+pub struct StrategySpec {
+    pub name: String,
+    pub optim: OptimKind,
+    pub lr: f32,
+    pub warmup: usize,
+    pub total: usize,
+    /// HiFT's m (ignored by baselines).
+    pub m: usize,
+    /// HiFT's order (ignored by baselines).
+    pub order: UpdateStrategy,
+    pub seed: u64,
+}
+
+impl StrategySpec {
+    pub fn new(name: &str, optim: OptimKind, lr: f32, total: usize) -> Self {
+        StrategySpec {
+            name: name.to_string(),
+            optim,
+            lr,
+            warmup: 0,
+            total,
+            m: 1,
+            order: UpdateStrategy::Bottom2Up,
+            seed: 0,
+        }
+    }
+
+    pub fn schedule(&self) -> LrSchedule {
+        LrSchedule::Linear { lr: self.lr, warmup: self.warmup, total: self.total.max(1) * 2 }
+    }
+
+    /// Build the strategy. Names: `hift`, `fpft`, `lora`, `ia3`, `prefix`,
+    /// `bitfit`, `lp`, `lomo`, `mezo`, `mezo-adam`.
+    pub fn build(&self, manifest: &Manifest) -> Result<Box<dyn FineTuneStrategy>> {
+        let ocfg = OptimCfg::new(self.optim);
+        let sched = self.schedule();
+        Ok(match self.name.as_str() {
+            "hift" => Box::new(Hift::new(
+                HiftCfg { m: self.m, order: self.order, schedule: sched, optim: ocfg },
+                manifest,
+            )?),
+            "fpft" => Box::new(SubsetTune::fpft(manifest, ocfg, sched)?),
+            "bitfit" => Box::new(SubsetTune::bitfit(manifest, ocfg, sched)?),
+            "lora" => Box::new(SubsetTune::adapter(manifest, "lora", ocfg, sched)?),
+            "ia3" => Box::new(SubsetTune::adapter(manifest, "ia3", ocfg, sched)?),
+            "prefix" => Box::new(SubsetTune::adapter(manifest, "prefix", ocfg, sched)?),
+            "lp" => Box::new(SubsetTune::linear_probe(manifest, ocfg, sched)?),
+            "lomo" => Box::new(SubsetTune::lomo(manifest, sched)?),
+            "mezo" => Box::new(Mezo::new(manifest, OptimCfg::new(OptimKind::Sgd), sched, self.seed)?),
+            "mezo-adam" => {
+                Box::new(Mezo::new(manifest, OptimCfg::new(OptimKind::AdamW), sched, self.seed)?)
+            }
+            other => anyhow::bail!("unknown strategy {other:?}"),
+        })
+    }
+}
+
+/// All buildable strategy names (bench sweeps iterate this).
+pub const STRATEGY_NAMES: [&str; 10] =
+    ["hift", "fpft", "lora", "ia3", "prefix", "bitfit", "lp", "lomo", "mezo", "mezo-adam"];
+
+/// Map a grad artifact's gradient outputs to parameter indices in `variant`.
+pub(crate) fn grad_param_indices(
+    manifest: &Manifest,
+    artifact: &str,
+    variant: &str,
+) -> Result<Vec<usize>> {
+    let info = manifest.artifact(artifact)?;
+    let vinfo = manifest.variant(variant)?;
+    info.outputs[2..]
+        .iter()
+        .map(|name| {
+            vinfo
+                .params
+                .iter()
+                .position(|p| &p.name == name)
+                .ok_or_else(|| anyhow::anyhow!("grad output {name} not a {variant} param"))
+        })
+        .collect()
+}

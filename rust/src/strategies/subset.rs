@@ -1,0 +1,132 @@
+//! Fixed-subset baselines: one grad artifact, the same trainable set every
+//! step.  Instantiations cover the paper's comparison grid:
+//!
+//! * **FPFT** — `grad_base_full`, AdamW/SGD/…: the standard full fine-tune.
+//! * **BitFit** (Zaken et al., 2022) — biases + LN parameters only.
+//! * **LoRA / IA3 / Prefix** — adapter parameters of the corresponding
+//!   model variant only (base weights stay frozen *inputs*).
+//! * **LP** — linear probe: the head unit only.
+//! * **LOMO (sim)** — full gradients + stateless SGD applied tensor-by-
+//!   tensor as gradients stream, modelling LOMO's fused update (no
+//!   optimizer state ever exists; memory-wise only one tensor's gradient
+//!   is live at a time — the ledger-free analogue of Lv et al., 2023).
+
+use anyhow::Result;
+
+use super::{grad_param_indices, FineTuneStrategy, StepStats};
+use crate::coordinator::lr::LrSchedule;
+use crate::optim::{self, OptimCfg, OptimKind, Optimizer};
+use crate::runtime::{Batch, Manifest, Runtime};
+use crate::tensor::TensorSet;
+
+/// A baseline that always trains the same parameter subset.
+pub struct SubsetTune {
+    name: String,
+    variant: String,
+    artifact: String,
+    /// Parameter index (into the variant's param list) per grad output.
+    param_idxs: Vec<usize>,
+    optimizer: Box<dyn Optimizer>,
+    grad_clip: f32,
+    schedule: LrSchedule,
+    step: u64,
+    trainable: usize,
+    trainable_known: bool,
+}
+
+impl SubsetTune {
+    fn build(
+        manifest: &Manifest,
+        name: &str,
+        variant: &str,
+        artifact: &str,
+        ocfg: OptimCfg,
+        schedule: LrSchedule,
+    ) -> Result<Self> {
+        let param_idxs = grad_param_indices(manifest, artifact, variant)?;
+        let n_params = manifest.variant(variant)?.params.len();
+        Ok(SubsetTune {
+            name: name.to_string(),
+            variant: variant.to_string(),
+            artifact: artifact.to_string(),
+            param_idxs,
+            optimizer: optim::build(ocfg, n_params),
+            grad_clip: ocfg.grad_clip,
+            schedule,
+            step: 0,
+            trainable: 0,
+            trainable_known: false,
+        })
+    }
+
+    /// Standard full-parameter fine-tuning.
+    pub fn fpft(m: &Manifest, o: OptimCfg, s: LrSchedule) -> Result<Self> {
+        Self::build(m, &format!("fpft({})", o.kind.name()), "base", "grad_base_full", o, s)
+    }
+
+    /// BitFit: bias/LN subset.
+    pub fn bitfit(m: &Manifest, o: OptimCfg, s: LrSchedule) -> Result<Self> {
+        Self::build(m, "bitfit", "base", "grad_base_bitfit", o, s)
+    }
+
+    /// LoRA / IA3 / Prefix adapters.
+    pub fn adapter(m: &Manifest, variant: &str, o: OptimCfg, s: LrSchedule) -> Result<Self> {
+        Self::build(m, variant, variant, &format!("grad_{variant}_adapter"), o, s)
+    }
+
+    /// Linear probe: head unit only.
+    pub fn linear_probe(m: &Manifest, o: OptimCfg, s: LrSchedule) -> Result<Self> {
+        let head = m.n_units - 1;
+        Self::build(m, "lp", "base", &format!("grad_base_u{head}"), o, s)
+    }
+
+    /// LOMO-style fused SGD (full grads, zero optimizer state).
+    pub fn lomo(m: &Manifest, s: LrSchedule) -> Result<Self> {
+        let o = OptimCfg::new(OptimKind::Sgd);
+        Self::build(m, "lomo", "base", "grad_base_full", o, s)
+    }
+
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+}
+
+impl FineTuneStrategy for SubsetTune {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch) -> Result<StepStats> {
+        let lr = self.schedule.at(self.step as usize);
+        self.step += 1;
+        let out = rt.run(&self.artifact, params, batch)?;
+        if !self.trainable_known {
+            self.trainable = self.param_idxs.iter().map(|&i| params.tensors[i].numel()).sum();
+            self.trainable_known = true;
+        }
+        for (slot, mut g) in self.param_idxs.iter().zip(out.grads) {
+            optim::clip_grad(&mut g, self.grad_clip);
+            self.optimizer.update(*slot, params.tensor_mut(*slot), &g, lr);
+        }
+        Ok(StepStats {
+            loss: out.loss,
+            ncorrect: out.ncorrect,
+            weight_sum: batch.weights.iter().sum(),
+            lr,
+            trainable_params: self.trainable,
+            exec_time: out.exec_time,
+        })
+    }
+
+    fn peak_trainable_params(&self) -> usize {
+        self.trainable
+    }
+
+    fn optimizer_state_bytes(&self) -> usize {
+        self.optimizer.total_state_bytes()
+    }
+}

@@ -1,0 +1,128 @@
+//! Checkpointing: save/restore a [`TensorSet`] (+ run metadata) so long
+//! HiFT runs can resume — parameters are the only state that must survive
+//! (optimizer moments rebuild within one sweep; the paper's Algorithm 1
+//! carries no cross-sweep schedule state beyond the step counter, which we
+//! persist in the metadata).
+//!
+//! Format: `<dir>/ckpt.json` (names, shapes, step, extra metadata) +
+//! `<dir>/params.bin` (concatenated little-endian f32, manifest order) —
+//! the same layout `aot.py` emits, so a checkpoint is loadable anywhere an
+//! artifact bundle is.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Tensor, TensorSet};
+use crate::ser::{emit_pretty, parse, Value};
+
+/// Checkpoint metadata persisted alongside the weights.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CkptMeta {
+    pub step: u64,
+    pub strategy: String,
+    pub task: String,
+}
+
+/// Write `params` + metadata to `dir` (created if missing).
+pub fn save(dir: impl AsRef<Path>, params: &TensorSet, meta: &CkptMeta) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut bin = Vec::with_capacity(params.total_bytes());
+    let mut tensors = Vec::new();
+    let mut offset = 0usize;
+    for (name, t) in params.names.iter().zip(&params.tensors) {
+        bin.extend_from_slice(&t.to_le_bytes());
+        tensors.push(Value::obj(vec![
+            ("name", name.as_str().into()),
+            ("shape", Value::Arr(t.shape.iter().map(|&d| d.into()).collect())),
+            ("offset", offset.into()),
+        ]));
+        offset += t.bytes();
+    }
+    std::fs::write(dir.join("params.bin"), &bin)?;
+    let json = Value::obj(vec![
+        ("schema", 1usize.into()),
+        ("step", (meta.step as usize).into()),
+        ("strategy", meta.strategy.as_str().into()),
+        ("task", meta.task.as_str().into()),
+        ("total_bytes", offset.into()),
+        ("tensors", Value::Arr(tensors)),
+    ]);
+    std::fs::write(dir.join("ckpt.json"), emit_pretty(&json))?;
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(dir: impl AsRef<Path>) -> Result<(TensorSet, CkptMeta)> {
+    let dir = dir.as_ref();
+    let meta_text = std::fs::read_to_string(dir.join("ckpt.json"))
+        .with_context(|| format!("reading {}/ckpt.json", dir.display()))?;
+    let v = parse(&meta_text).context("ckpt.json parse")?;
+    if v.get("schema").as_usize() != Some(1) {
+        bail!("unsupported checkpoint schema");
+    }
+    let bin = std::fs::read(dir.join("params.bin"))?;
+    if Some(bin.len()) != v.get("total_bytes").as_usize() {
+        bail!("params.bin size {} != recorded {:?}", bin.len(), v.get("total_bytes"));
+    }
+    let mut set = TensorSet::new();
+    for t in v.get("tensors").as_arr().context("tensors")? {
+        let name = t.get("name").as_str().context("name")?;
+        let shape: Vec<usize> =
+            t.get("shape").as_arr().context("shape")?.iter().filter_map(|d| d.as_usize()).collect();
+        let offset = t.get("offset").as_usize().context("offset")?;
+        set.push(name, Tensor::from_le_bytes(&bin[offset..], &shape));
+    }
+    Ok((
+        set,
+        CkptMeta {
+            step: v.get("step").as_i64().unwrap_or(0) as u64,
+            strategy: v.get("strategy").as_str().unwrap_or("").to_string(),
+            task: v.get("task").as_str().unwrap_or("").to_string(),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn sample_set() -> TensorSet {
+        let mut rng = Pcg32::seeded(3);
+        let mut s = TensorSet::new();
+        s.push("a.w", Tensor::randn(&[4, 3], 0.5, &mut rng));
+        s.push("a.b", Tensor::randn(&[3], 0.5, &mut rng));
+        s.push("head", Tensor::randn(&[3, 7], 0.5, &mut rng));
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let dir = std::env::temp_dir().join(format!("hift_ckpt_{}", std::process::id()));
+        let set = sample_set();
+        let meta = CkptMeta { step: 123, strategy: "hift".into(), task: "motif4".into() };
+        save(&dir, &set, &meta).unwrap();
+        let (loaded, meta2) = load(&dir).unwrap();
+        assert_eq!(meta2, meta);
+        assert_eq!(loaded.names, set.names);
+        assert_eq!(loaded.tensors, set.tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_bin_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("hift_ckpt_t_{}", std::process::id()));
+        save(&dir, &sample_set(), &CkptMeta::default()).unwrap();
+        let bin = std::fs::read(dir.join("params.bin")).unwrap();
+        std::fs::write(dir.join("params.bin"), &bin[..bin.len() - 4]).unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        assert!(load("/nonexistent/hift/ckpt").is_err());
+    }
+}

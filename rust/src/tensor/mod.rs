@@ -1,0 +1,269 @@
+//! Flat f32 tensors — the parameter/gradient containers the optimizers and
+//! the MeZO perturbation path operate on.
+//!
+//! Parameters live in Rust (`Vec<f32>`), are marshalled to PJRT literals per
+//! step, and updated in place by the optimizers.  The math here (axpy-style
+//! loops) is the L3 hot path profiled in EXPERIMENTS.md §Perf.
+
+pub mod checkpoint;
+
+use crate::rng::Pcg32;
+
+/// A dense f32 tensor: contiguous data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { data: vec![1.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Normal(0, std) init, deterministic per (seed).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg32) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data);
+        for x in &mut t.data {
+            *x *= std;
+        }
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bytes at f32.
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// `self += alpha * other` (shape-checked).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Read a tensor slice out of a little-endian f32 byte buffer.
+    pub fn from_le_bytes(bytes: &[u8], shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert!(bytes.len() >= n * 4, "buffer too small: {} < {}", bytes.len(), n * 4);
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap()));
+        }
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Serialize as little-endian f32 bytes.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+}
+
+/// A named, ordered set of tensors (the model's flat parameter list).
+///
+/// Mutation through [`TensorSet::tensor_mut`] bumps a per-tensor version
+/// counter; the PJRT runtime uses `(set id, index, version)` to keep
+/// device-resident copies of *unchanged* tensors across steps — the reason
+/// HiFT's frozen-majority steps avoid re-uploading the whole model
+/// (EXPERIMENTS.md §Perf).  Mutating `tensors` directly is allowed but
+/// bypasses the cache (the runtime would keep serving the stale device
+/// copy), so all optimizer paths go through `tensor_mut`.
+#[derive(Debug, Default)]
+pub struct TensorSet {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    versions: Vec<u64>,
+    id: u64,
+}
+
+/// Global TensorSet id source (distinguishes cache lineages).
+static NEXT_SET_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+impl Clone for TensorSet {
+    /// Clones get a fresh cache lineage: the same `(id, version)` pair must
+    /// never refer to two different tensor contents.
+    fn clone(&self) -> Self {
+        TensorSet {
+            names: self.names.clone(),
+            tensors: self.tensors.clone(),
+            versions: self.versions.clone(),
+            id: NEXT_SET_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+}
+
+impl TensorSet {
+    pub fn new() -> Self {
+        TensorSet {
+            names: Vec::new(),
+            tensors: Vec::new(),
+            versions: Vec::new(),
+            id: NEXT_SET_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        self.names.push(name.into());
+        self.tensors.push(t);
+        self.versions.push(0);
+    }
+
+    /// Mutable access that invalidates the runtime's device-buffer cache
+    /// entry for tensor `i`.
+    pub fn tensor_mut(&mut self, i: usize) -> &mut Tensor {
+        self.versions[i] += 1;
+        &mut self.tensors[i]
+    }
+
+    /// Device-buffer cache key for tensor `i`: (set lineage id, version).
+    pub fn cache_key(&self, i: usize) -> (u64, u64) {
+        (self.id, self.versions[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index_of(name).map(|i| &self.tensors[i])
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::numel).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_params() * 4
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        let ss: f64 = self
+            .tensors
+            .iter()
+            .map(|t| t.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>())
+            .sum();
+        ss.sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_ones_shapes() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.numel(), 6);
+        assert_eq!(z.bytes(), 24);
+        assert_eq!(Tensor::ones(&[4]).data, vec![1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        Tensor::from_vec(vec![1.0, 2.0], &[3]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::ones(&[3]);
+        let b = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 5.0, 7.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = Tensor::from_vec(vec![1.5, -2.25, 1e-7, 3e8], &[2, 2]);
+        let b = t.to_le_bytes();
+        assert_eq!(Tensor::from_le_bytes(&b, &[2, 2]), t);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(t.abs_max(), 4.0);
+        assert!((t.mean() - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Pcg32::seeded(5);
+        let mut r2 = Pcg32::seeded(5);
+        assert_eq!(Tensor::randn(&[8], 0.1, &mut r1), Tensor::randn(&[8], 0.1, &mut r2));
+    }
+
+    #[test]
+    fn tensorset_lookup() {
+        let mut s = TensorSet::new();
+        s.push("a", Tensor::zeros(&[2]));
+        s.push("b", Tensor::ones(&[3]));
+        assert_eq!(s.index_of("b"), Some(1));
+        assert_eq!(s.total_params(), 5);
+        assert_eq!(s.total_bytes(), 20);
+        assert!(s.get("c").is_none());
+    }
+
+    #[test]
+    fn finite_detection() {
+        let mut t = Tensor::ones(&[2]);
+        assert!(t.is_finite());
+        t.data[1] = f32::NAN;
+        assert!(!t.is_finite());
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration tests over the real three-layer stack: HLO artifacts
+//! (Pallas kernels inside) loaded and executed through PJRT, driven by the
+//! Rust coordinator.  Requires `make artifacts` (preset `tiny`).
+
+use hift::coordinator::lr::LrSchedule;
+use hift::coordinator::trainer::{self, TrainCfg};
+use hift::coordinator::strategy::UpdateStrategy;
+use hift::data::{build_task, TaskGeom};
+use hift::optim::{OptimCfg, OptimKind};
+use hift::runtime::Runtime;
+use hift::strategies::{FineTuneStrategy, Hift, HiftCfg, StrategySpec, SubsetTune};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    root.join("artifacts").join("tiny")
+}
+
+fn runtime() -> Runtime {
+    Runtime::load(artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn geom(rt: &Runtime) -> TaskGeom {
+    let c = &rt.manifest().config;
+    TaskGeom::new(c.vocab, c.batch, c.seq_len)
+}
+
+#[test]
+fn manifest_and_params_load() {
+    let rt = runtime();
+    let m = rt.manifest();
+    assert_eq!(m.preset, "tiny");
+    assert_eq!(m.n_units, m.config.n_layers + 2);
+    let params = rt.load_params("base").unwrap();
+    assert_eq!(params.len(), m.variant("base").unwrap().params.len());
+    assert!(params.l2_norm() > 0.0, "params.bin is not all zeros");
+    for v in ["lora", "ia3", "prefix"] {
+        let p = rt.load_params(v).unwrap();
+        assert!(p.len() > params.len(), "{v} adds adapter tensors");
+    }
+}
+
+#[test]
+fn forward_artifact_executes_and_is_deterministic() {
+    let mut rt = runtime();
+    let params = rt.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&rt), 7).unwrap();
+    let batch = task.train_batch();
+    let a = rt.run("fwd_base", &params, &batch).unwrap();
+    let b = rt.run("fwd_base", &params, &batch).unwrap();
+    assert!(a.loss.is_finite() && a.loss > 0.0);
+    assert_eq!(a.loss, b.loss, "same params+batch ⇒ identical loss");
+    assert!(a.grads.is_empty());
+    // untrained model ≈ uniform: loss ≈ ln(vocab)
+    let uniform = (rt.manifest().config.vocab as f32).ln();
+    assert!((a.loss - uniform).abs() < 1.5, "loss {} vs ln(V)={}", a.loss, uniform);
+}
+
+#[test]
+fn unit_grads_are_slices_of_full_grad() {
+    // The HiFT foundation at the artifact level: per-unit grad artifacts
+    // produce exactly the corresponding slices of grad_base_full.
+    let mut rt = runtime();
+    let params = rt.load_params("base").unwrap();
+    let mut task = build_task("markovlm", geom(&rt), 3).unwrap();
+    let batch = task.train_batch();
+    let full = rt.run("grad_base_full", &params, &batch).unwrap();
+    let vinfo = rt.manifest().variant("base").unwrap().clone();
+    for u in 0..rt.manifest().n_units {
+        let out = rt.run(&Runtime::unit_artifact(u), &params, &batch).unwrap();
+        assert!((out.loss - full.loss).abs() < 1e-5);
+        let idxs = vinfo.unit_indices(u);
+        assert_eq!(out.grads.len(), idxs.len());
+        for (g, &i) in out.grads.iter().zip(&idxs) {
+            let fg = &full.grads[i];
+            assert_eq!(g.shape, fg.shape);
+            let mut diff = g.clone();
+            diff.axpy(-1.0, fg);
+            assert!(
+                diff.abs_max() < 1e-4 * (1.0 + fg.abs_max()),
+                "unit {u} param {} grad mismatch: {} vs full",
+                vinfo.params[i].name,
+                diff.abs_max()
+            );
+        }
+    }
+}
+
+#[test]
+fn hift_training_reduces_loss_and_pages_state() {
+    let mut rt = runtime();
+    let mut params = rt.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&rt), 11).unwrap();
+    let mut hift = Hift::new(
+        HiftCfg {
+            m: 1,
+            order: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Const { lr: 5e-3 },
+            optim: OptimCfg::new(OptimKind::AdamW),
+        },
+        rt.manifest(),
+    )
+    .unwrap();
+    let k = hift.k() as u64;
+    let rec = trainer::train(&mut rt, &mut hift, &mut params, &mut *task, TrainCfg {
+        steps: 6 * k,
+        eval_every: 0,
+        log_every: 0,
+    })
+    .unwrap();
+    let first = rec.losses.values[..k as usize].iter().sum::<f64>() / k as f64;
+    let last = rec.losses.tail_mean(k as usize);
+    assert!(last < first, "loss must fall: {first:.3} -> {last:.3}");
+    // Paging: AdamW state for the active group only; inflight < total state.
+    let (h2d, d2h, inflight, peak) = rec.paging.unwrap();
+    assert!(h2d > 0 && d2h > 0);
+    assert!(inflight > 0);
+    let total_state = rec.optimizer_state_bytes as u64;
+    assert!(peak < total_state, "peak device state {peak} must be < total {total_state}");
+    // Peak trainable ≪ all params (the headline claim, tiny-scale).
+    assert!(rec.peak_trainable_params < params.total_params());
+}
+
+#[test]
+fn hift_sgd_has_zero_state_paging() {
+    // §4.3: "When using SGD, the peak communication parameter is zero."
+    let mut rt = runtime();
+    let mut params = rt.load_params("base").unwrap();
+    let mut task = build_task("motif2", geom(&rt), 5).unwrap();
+    let mut hift = Hift::new(
+        HiftCfg {
+            m: 1,
+            order: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Const { lr: 1e-2 },
+            optim: OptimCfg::new(OptimKind::Sgd),
+        },
+        rt.manifest(),
+    )
+    .unwrap();
+    let rec = trainer::train(&mut rt, &mut hift, &mut params, &mut *task,
+        TrainCfg { steps: 8, eval_every: 0, log_every: 0 }).unwrap();
+    let (h2d, _, inflight, peak) = rec.paging.unwrap();
+    assert_eq!(h2d, 0, "SGD pages nothing");
+    assert_eq!(inflight, 0);
+    assert_eq!(peak, 0);
+}
+
+#[test]
+fn fpft_baseline_trains() {
+    let mut rt = runtime();
+    let mut params = rt.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&rt), 11).unwrap();
+    let mut fpft = SubsetTune::fpft(
+        rt.manifest(),
+        OptimCfg::new(OptimKind::AdamW),
+        LrSchedule::Const { lr: 5e-3 },
+    )
+    .unwrap();
+    let rec = trainer::train(&mut rt, &mut fpft, &mut params, &mut *task,
+        TrainCfg { steps: 24, eval_every: 0, log_every: 0 }).unwrap();
+    assert!(rec.losses.tail_mean(6) < rec.losses.values[0]);
+    assert_eq!(rec.peak_trainable_params, params.total_params(), "FPFT trains everything");
+}
+
+#[test]
+fn every_strategy_builds_and_steps() {
+    let mut rt = runtime();
+    let mut task = build_task("motif2", geom(&rt), 2).unwrap();
+    for name in hift::strategies::STRATEGY_NAMES {
+        let spec = StrategySpec::new(name, OptimKind::AdamW, 1e-3, 10);
+        let mut strat = spec.build(rt.manifest()).unwrap();
+        let mut params = rt.load_params(strat.variant()).unwrap();
+        let before = params.l2_norm();
+        let batch = task.train_batch();
+        let stats = strat.step(&mut rt, &mut params, &batch).unwrap();
+        assert!(stats.loss.is_finite(), "{name} loss finite");
+        assert!(stats.trainable_params > 0, "{name} trains something");
+        assert!(params.tensors.iter().all(|t| t.is_finite()), "{name} params finite");
+        assert_ne!(params.l2_norm(), before, "{name} changed parameters");
+    }
+}
+
+#[test]
+fn peft_trains_fewer_params_than_hift_peak() {
+    // Sanity on the Table-5 axis: adapter sets ≪ one HiFT group ≪ full.
+    let mut rt = runtime();
+    let mut task = build_task("motif2", geom(&rt), 2).unwrap();
+    let batch = task.train_batch();
+    let mut sizes = std::collections::HashMap::new();
+    for name in ["lora", "ia3", "hift", "fpft"] {
+        let spec = StrategySpec::new(name, OptimKind::AdamW, 1e-3, 10);
+        let mut strat = spec.build(rt.manifest()).unwrap();
+        let mut params = rt.load_params(strat.variant()).unwrap();
+        strat.step(&mut rt, &mut params, &batch).unwrap();
+        sizes.insert(name, strat.peak_trainable_params());
+    }
+    assert!(sizes["lora"] < sizes["hift"]);
+    assert!(sizes["ia3"] < sizes["hift"]);
+    assert!(sizes["hift"] < sizes["fpft"]);
+}
+
+#[test]
+fn evaluation_accuracy_is_in_unit_interval() {
+    let mut rt = runtime();
+    let params = rt.load_params("base").unwrap();
+    let task = build_task("motif4", geom(&rt), 7).unwrap();
+    let ev = trainer::evaluate(&mut rt, "fwd_base", &params, task.eval_batches()).unwrap();
+    assert!((0.0..=1.0).contains(&ev.acc));
+    assert!(ev.loss.is_finite());
+}

@@ -1,0 +1,181 @@
+//! Row-by-row validation of the analytic memory model against the paper's
+//! published Tables 8–12 (#Para / #Gra / #Sta / #PGS are exact accounting;
+//! Residual/Total are modelled and checked in band).
+//!
+//! Paper numbers are MiB for #Para/#Gra/#Sta and GiB for #PGS — the tables
+//! label them "MB"/"GB" but the arithmetic (124.65M × 4B = 475.49) only
+//! works in binary units.
+
+use hift::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
+use hift::optim::OptimKind;
+
+struct Row {
+    model: &'static str,
+    batch: usize,
+    opt: OptimKind,
+    dtype: Dtype,
+    hift: bool,
+    para_mib: f64,
+    gra_mib: f64,
+    sta_mib: f64,
+    pgs_gib: f64,
+    residual_gib: f64,
+}
+
+fn check(r: &Row) {
+    let a = by_name(r.model).unwrap();
+    let method = if r.hift { Method::Hift { m: 1 } } else { Method::Fpft };
+    let w = Workload { batch: r.batch, seq: 512 };
+    let got = account(&a, r.opt, r.dtype, method, w);
+    let name = format!("{} {:?} {:?} hift={}", r.model, r.opt, r.dtype, r.hift);
+    // Exact accounting: 1.5% tolerance (architecture minutiae like
+    // token-type embeddings / tied biases).
+    let tol = |x: f64| (x * 0.015).max(2.0);
+    assert!(
+        (got.para / MIB - r.para_mib).abs() < tol(r.para_mib),
+        "{name}: #Para {:.2} vs paper {:.2}",
+        got.para / MIB,
+        r.para_mib
+    );
+    assert!(
+        (got.gra / MIB - r.gra_mib).abs() < tol(r.gra_mib),
+        "{name}: #Gra {:.2} vs paper {:.2}",
+        got.gra / MIB,
+        r.gra_mib
+    );
+    assert!(
+        (got.sta / MIB - r.sta_mib).abs() < tol(r.sta_mib).max(1.0),
+        "{name}: #Sta {:.2} vs paper {:.2}",
+        got.sta / MIB,
+        r.sta_mib
+    );
+    assert!(
+        (got.pgs / GIB - r.pgs_gib).abs() < (r.pgs_gib * 0.02).max(0.03),
+        "{name}: #PGS {:.2} vs paper {:.2}",
+        got.pgs / GIB,
+        r.pgs_gib
+    );
+    // Modelled residual: ±50% band (the paper measures allocator peaks —
+    // fragmentation, caching, GPT-Neo's local-attention layers — that a
+    // closed-form model cannot capture; per-row deltas are tabulated in
+    // EXPERIMENTS.md §Memory).
+    assert!(
+        (got.residual / GIB - r.residual_gib).abs() < r.residual_gib * 0.5 + 0.3,
+        "{name}: residual {:.2} vs paper {:.2} (modelled, band ±50%)",
+        got.residual / GIB,
+        r.residual_gib
+    );
+}
+
+#[test]
+fn table8_roberta_base_adamw() {
+    // fp32 FPFT / HiFT rows.
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: false, para_mib: 475.49, gra_mib: 475.49, sta_mib: 950.98, pgs_gib: 1.86,
+        residual_gib: 5.02 });
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: true, para_mib: 475.49, gra_mib: 148.77, sta_mib: 297.54, pgs_gib: 0.90,
+        residual_gib: 3.61 });
+    // mixed
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Mixed,
+        hift: false, para_mib: 713.25, gra_mib: 475.49, sta_mib: 950.98, pgs_gib: 2.09,
+        residual_gib: 3.58 });
+    // MixedHi
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::MixedHi,
+        hift: true, para_mib: 386.52, gra_mib: 148.77, sta_mib: 297.54, pgs_gib: 0.81,
+        residual_gib: 1.81 });
+}
+
+#[test]
+fn table8_roberta_base_other_optimizers() {
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::Sgdm, dtype: Dtype::Fp32,
+        hift: false, para_mib: 475.49, gra_mib: 475.49, sta_mib: 475.49, pgs_gib: 1.39,
+        residual_gib: 5.00 });
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::Sgd, dtype: Dtype::Fp32,
+        hift: true, para_mib: 475.49, gra_mib: 148.77, sta_mib: 0.0, pgs_gib: 0.61,
+        residual_gib: 3.91 });
+    check(&Row { model: "roberta-base", batch: 8, opt: OptimKind::Adagrad, dtype: Dtype::Fp32,
+        hift: false, para_mib: 475.49, gra_mib: 475.49, sta_mib: 475.49, pgs_gib: 1.39,
+        residual_gib: 5.00 });
+    // Adafactor: factored state, sub-MiB.
+    let a = by_name("roberta-base").unwrap();
+    let f = account(&a, OptimKind::Adafactor, Dtype::Fp32, Method::Fpft,
+                    Workload { batch: 8, seq: 512 });
+    assert!(f.sta / MIB < 1.6, "paper: 0.98 MiB; got {:.2}", f.sta / MIB);
+}
+
+#[test]
+fn table9_roberta_large() {
+    check(&Row { model: "roberta-large", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: false, para_mib: 1355.60, gra_mib: 1355.60, sta_mib: 2711.20, pgs_gib: 5.30,
+        residual_gib: 13.08 });
+    check(&Row { model: "roberta-large", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: true, para_mib: 1355.60, gra_mib: 198.38, sta_mib: 396.73, pgs_gib: 1.90,
+        residual_gib: 9.97 });
+    check(&Row { model: "roberta-large", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::MixedHi,
+        hift: true, para_mib: 876.18, gra_mib: 198.38, sta_mib: 396.73, pgs_gib: 1.44,
+        residual_gib: 5.18 });
+}
+
+#[test]
+fn table10_gpt2_large() {
+    check(&Row { model: "gpt2-large", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: false, para_mib: 2952.69, gra_mib: 2952.69, sta_mib: 5905.39, pgs_gib: 11.53,
+        residual_gib: 37.26 });
+    check(&Row { model: "gpt2-large", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: true, para_mib: 2952.69, gra_mib: 250.40, sta_mib: 500.79, pgs_gib: 3.62,
+        residual_gib: 31.73 });
+}
+
+#[test]
+fn table11_gpt_neo() {
+    check(&Row { model: "gpt-neo-2.7b", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: false, para_mib: 10113.95, gra_mib: 10113.95, sta_mib: 20227.89, pgs_gib: 39.51,
+        residual_gib: 22.69 });
+    check(&Row { model: "gpt-neo-2.7b", batch: 8, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: true, para_mib: 10113.95, gra_mib: 510.79, sta_mib: 1021.58, pgs_gib: 11.37,
+        residual_gib: 16.96 });
+}
+
+#[test]
+fn table12_llama_7b() {
+    check(&Row { model: "llama-7b", batch: 6, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: false, para_mib: 25705.04, gra_mib: 25705.04, sta_mib: 51410.08, pgs_gib: 100.41,
+        residual_gib: 41.7 });
+    check(&Row { model: "llama-7b", batch: 6, opt: OptimKind::AdamW, dtype: Dtype::Fp32,
+        hift: true, para_mib: 25705.04, gra_mib: 772.03, sta_mib: 1544.06, pgs_gib: 27.36,
+        residual_gib: 28.04 });
+    check(&Row { model: "llama-7b", batch: 6, opt: OptimKind::AdamW, dtype: Dtype::MixedHi,
+        hift: true, para_mib: 13624.53, gra_mib: 772.03, sta_mib: 1544.06, pgs_gib: 15.57,
+        residual_gib: 18.40 });
+    check(&Row { model: "llama-7b", batch: 6, opt: OptimKind::Adafactor, dtype: Dtype::Fp32,
+        hift: true, para_mib: 25705.04, gra_mib: 772.03, sta_mib: 0.33, pgs_gib: 25.86,
+        residual_gib: 29.55 });
+}
+
+#[test]
+fn hift_sgd_zero_communication_claim() {
+    // §4.3: "When using SGD, the peak communication parameter is zero."
+    for model in ["roberta-base", "roberta-large", "llama-7b"] {
+        let a = by_name(model).unwrap();
+        let r = account(&a, OptimKind::Sgd, Dtype::Fp32, Method::Hift { m: 1 },
+                        Workload { batch: 8, seq: 512 });
+        assert_eq!(r.sta, 0.0, "{model}");
+    }
+}
+
+#[test]
+fn adafactor_communication_peaks_match_4_3() {
+    // §4.3: peak communication 0.19 MB (RoBERTa-base), 0.21 MB (large),
+    // 0.33 MB (LLaMA-7B) under Adafactor — the HiFT #Sta column.
+    for (model, mib) in [("roberta-base", 0.19), ("roberta-large", 0.21), ("llama-7b", 0.33)] {
+        let a = by_name(model).unwrap();
+        let r = account(&a, OptimKind::Adafactor, Dtype::Fp32, Method::Hift { m: 1 },
+                        Workload { batch: 8, seq: 512 });
+        assert!(
+            (r.sta / MIB - mib).abs() < 0.08,
+            "{model}: {:.3} MiB vs paper {mib}",
+            r.sta / MIB
+        );
+    }
+}
