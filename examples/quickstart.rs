@@ -1,22 +1,25 @@
 //! Quickstart: HiFT-train a tiny transformer for a few sweeps and watch the
 //! loss fall, then compare the per-step trainable footprint against FPFT.
 //!
+//! Runs fully offline on the native CPU backend:
+//!
 //! ```bash
-//! make artifacts            # builds artifacts/tiny (once)
 //! cargo run --release --example quickstart
+//! # other geometries / engines:
+//! HIFT_PRESET=small cargo run --release --example quickstart
+//! HIFT_ARTIFACTS=artifacts/tiny cargo run --release --features pjrt --example quickstart
 //! ```
 
+use hift::backend::ExecBackend;
 use hift::coordinator::lr::LrSchedule;
 use hift::coordinator::strategy::UpdateStrategy;
 use hift::coordinator::trainer::{self, TrainCfg};
 use hift::data::{build_task, TaskGeom};
 use hift::optim::{OptimCfg, OptimKind};
-use hift::runtime::Runtime;
 use hift::strategies::{FineTuneStrategy, Hift, HiftCfg};
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::env::var("HIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".into());
-    let mut rt = Runtime::load(&dir)?;
+    let mut rt = hift::backend::from_env()?;
     let cfg = rt.manifest().config.clone();
     println!(
         "loaded {} (vocab={} d={} L={}) on {}",
@@ -39,7 +42,7 @@ fn main() -> anyhow::Result<()> {
 
     let k = hift.k() as u64;
     let steps = 8 * k; // eight full sweeps
-    let rec = trainer::train(&mut rt, &mut hift, &mut params, task.as_mut(), TrainCfg {
+    let rec = trainer::train(rt.as_mut(), &mut hift, &mut params, task.as_mut(), TrainCfg {
         steps,
         eval_every: 2 * k,
         log_every: k,

@@ -7,16 +7,16 @@
 //! cargo run --release --example strategy_ablation
 //! ```
 
+use hift::backend::ExecBackend;
 use hift::coordinator::lr::LrSchedule;
 use hift::coordinator::strategy::UpdateStrategy;
 use hift::coordinator::trainer::{self, TrainCfg};
 use hift::data::{build_task, TaskGeom};
 use hift::optim::{OptimCfg, OptimKind};
-use hift::runtime::Runtime;
 use hift::strategies::{FineTuneStrategy, Hift, HiftCfg};
 
 fn run(
-    rt: &mut Runtime,
+    rt: &mut dyn ExecBackend,
     order: UpdateStrategy,
     m: usize,
     steps: u64,
@@ -39,8 +39,7 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::env::var("HIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".into());
-    let mut rt = Runtime::load(&dir)?;
+    let mut rt = hift::backend::from_env()?;
     let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
 
     println!("-- update-order ablation (m=1, {steps} steps) --");
@@ -50,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         ("top2down", UpdateStrategy::Top2Down),
         ("random", UpdateStrategy::Random { seed: 7 }),
     ] {
-        let (acc, loss) = run(&mut rt, order, 1, steps)?;
+        let (acc, loss) = run(rt.as_mut(), order, 1, steps)?;
         println!("  {label:<10} acc={:.1}%  tail-loss={loss:.4}", acc * 100.0);
         accs.push(acc);
     }
@@ -61,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- group-size ablation (bottom2up, {steps} steps) --");
     let n_units = rt.manifest().n_units;
     for m in [1usize, 2, n_units] {
-        let (acc, loss) = run(&mut rt, UpdateStrategy::Bottom2Up, m, steps)?;
+        let (acc, loss) = run(rt.as_mut(), UpdateStrategy::Bottom2Up, m, steps)?;
         let k = n_units.div_ceil(m);
         println!("  m={m:<2} (k={k:<2}) acc={:.1}%  tail-loss={loss:.4}", acc * 100.0);
     }

@@ -1,35 +1,39 @@
 //! End-to-end driver (DESIGN.md §5): train a language model of real size
-//! through the full three-layer stack — Pallas-kernel HLO artifacts,
-//! PJRT execution, HiFT coordination — for a few hundred steps on the
-//! synthetic Markov corpus, logging the loss curve, throughput, and the
-//! paging ledger.  Results are recorded in EXPERIMENTS.md §E2E.
+//! for a few hundred steps on the synthetic Markov corpus, logging the loss
+//! curve, throughput, and the paging ledger.  Runs on the native CPU
+//! backend by default (preset `e2e`, ~27M params); with `--features pjrt`
+//! plus `--artifacts DIR` it drives the Pallas-kernel HLO artifacts through
+//! PJRT instead.  Results are recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```bash
-//! make artifacts-e2e        # builds artifacts/e2e (~27M params)
 //! cargo run --release --example train_lm -- --steps 300
-//! # or the ~124M-param config (slow on CPU):
-//! cd python && python -m compile.aot --preset e2e100m --out-dir ../artifacts
-//! HIFT_ARTIFACTS=artifacts/e2e100m cargo run --release --example train_lm
+//! # smaller/bigger native geometries:
+//! cargo run --release --example train_lm -- --preset base --steps 200
+//! # the PJRT path (make artifacts-e2e first):
+//! HIFT_ARTIFACTS=artifacts/e2e cargo run --release --features pjrt --example train_lm
 //! ```
 
+use hift::backend::ExecBackend;
 use hift::cli::Args;
 use hift::coordinator::lr::LrSchedule;
 use hift::coordinator::strategy::UpdateStrategy;
 use hift::coordinator::trainer::{self, TrainCfg};
 use hift::data::{build_task, TaskGeom};
 use hift::optim::{OptimCfg, OptimKind};
-use hift::runtime::Runtime;
 use hift::ser::emit_pretty;
 use hift::strategies::{FineTuneStrategy, Hift, HiftCfg};
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
-    let dir = std::env::var("HIFT_ARTIFACTS")
-        .unwrap_or_else(|_| args.get("artifacts").unwrap_or("artifacts/e2e").to_string());
+    let artifacts = std::env::var("HIFT_ARTIFACTS")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(|| args.get("artifacts").map(str::to_string));
+    let preset = args.get("preset").unwrap_or("e2e");
     let steps: u64 = args.get_num("steps").unwrap_or(300.0) as u64;
 
-    let mut rt = Runtime::load(&dir)?;
+    let mut rt = hift::backend::build_backend(artifacts.as_deref(), Some(preset), 0)?;
     let cfg = rt.manifest().config.clone();
     let mut hift = Hift::new(
         HiftCfg {
@@ -58,15 +62,15 @@ fn main() -> anyhow::Result<()> {
     let mut task =
         build_task("markovlm4", TaskGeom::new(cfg.vocab, cfg.batch, cfg.seq_len), 1234).unwrap();
     let k = hift.k() as u64;
-    let rec = trainer::train(&mut rt, &mut hift, &mut params, task.as_mut(), TrainCfg {
+    let rec = trainer::train(rt.as_mut(), &mut hift, &mut params, task.as_mut(), TrainCfg {
         steps,
         eval_every: (4 * k).min(steps),
         log_every: k,
     })?;
 
-    let st = rt.stats.clone();
+    let st = rt.stats().clone();
     println!(
-        "runtime: {} executes ({:.1}s), {} compiles ({:.1}s), h2d {:.1} MiB, d2h {:.1} MiB, param-cache {}/{} hits",
+        "backend: {} executes ({:.1}s), {} compiles ({:.1}s), h2d {:.1} MiB, d2h {:.1} MiB, param-cache {}/{} hits",
         st.executions, st.exec_secs, st.compiles, st.compile_secs,
         st.h2d_bytes as f64 / 1048576.0, st.d2h_bytes as f64 / 1048576.0,
         st.cache_hits, st.cache_hits + st.cache_misses

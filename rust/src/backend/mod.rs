@@ -1,0 +1,208 @@
+//! Pluggable execution backends.
+//!
+//! HiFT is backend-independent: the coordinator only needs, per step, the
+//! loss/metrics and the *active group's* gradients for a named artifact
+//! (paper §1).  This module owns that seam:
+//!
+//! * [`ExecBackend`] — the trait every engine implements: run an artifact
+//!   against a [`crate::tensor::TensorSet`] + [`Batch`] and hand back
+//!   `(loss, ncorrect, grads…)`, plus parameter loading and upload-cache
+//!   accounting ([`RuntimeStats`]).
+//! * [`manifest`] — the artifact/parameter contract shared by all backends
+//!   (for PJRT it is parsed from `manifest.json`; the native backend
+//!   synthesizes an identical one).
+//! * [`native`] — the default implementation: a pure-Rust decoder-only
+//!   transformer with hand-written forward/backward ([`model`]), so the
+//!   whole training loop builds, tests and benches offline.
+//! * `crate::runtime` (behind the `pjrt` cargo feature) — the XLA/PJRT
+//!   implementation executing AOT-compiled HLO artifacts.
+//! * [`par`] — `std::thread` chunking used by the native hot paths and the
+//!   optimizer update loops.
+//!
+//! Strategies, the trainer, the benches and the CLI all take
+//! `&mut dyn ExecBackend`, so switching engines is a constructor choice
+//! ([`build_backend`] / [`from_env`]), not a code change.
+
+pub mod manifest;
+pub mod model;
+pub mod native;
+pub mod par;
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{Tensor, TensorSet};
+pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
+pub use native::NativeBackend;
+
+/// One training/eval batch, shaped `[B, S]` row-major.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub b: usize,
+    pub s: usize,
+}
+
+impl Batch {
+    pub fn new(b: usize, s: usize) -> Self {
+        Batch { tokens: vec![0; b * s], targets: vec![0; b * s], weights: vec![0.0; b * s], b, s }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.b * self.s;
+        if self.tokens.len() != n || self.targets.len() != n || self.weights.len() != n {
+            bail!("batch buffers disagree with [{}x{}]", self.b, self.s);
+        }
+        Ok(())
+    }
+
+    /// Host→device bytes of one batch upload, from the actual buffer
+    /// element sizes (tokens/targets i32 + weights f32) — the single source
+    /// both backends account with, so stats stay honest if dtypes diverge.
+    pub fn h2d_bytes(&self) -> usize {
+        self.tokens.len() * std::mem::size_of::<i32>()
+            + self.targets.len() * std::mem::size_of::<i32>()
+            + self.weights.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Result of one executed step.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Masked #correct (paired with the batch's weight sum for accuracy).
+    pub ncorrect: f32,
+    /// Gradients in artifact output order (empty for `fwd_*`).
+    pub grads: Vec<Tensor>,
+    /// Wallclock of the backend execute call.
+    pub exec_time: Duration,
+}
+
+/// Cumulative execution statistics (perf pass bookkeeping).  `h2d`/`d2h` and
+/// the cache counters are real device traffic under PJRT and simulated
+/// (same accounting rules) under the native backend, so bench columns stay
+/// comparable.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    /// Parameter uploads skipped thanks to the device-buffer cache.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// An execution engine for the manifest's artifacts.
+///
+/// Implementations own "run artifact → `(loss, ncorrect, grads…)`" plus the
+/// parameter upload cache keyed on `(TensorSet lineage, version)` — the
+/// §Perf optimization that stops every step from re-marshalling the
+/// (mostly frozen) model.
+pub trait ExecBackend {
+    /// Short engine id (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string.
+    fn platform(&self) -> String;
+
+    /// The artifact/parameter contract this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute `artifact` with `params` (must match the artifact's input
+    /// order prefix) and a batch; returns `(loss, ncorrect, grads…)`.
+    fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput>;
+
+    /// Initial parameters for `variant`.
+    fn load_params(&self, variant: &str) -> Result<TensorSet>;
+
+    /// Prepare a set of artifacts ahead of time (compile caches etc.).
+    fn warmup(&mut self, _artifacts: &[&str]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Cumulative execution statistics.
+    fn stats(&self) -> &RuntimeStats;
+}
+
+/// Grad-artifact name for one layer unit of the base model.
+pub fn unit_artifact(u: usize) -> String {
+    format!("grad_base_u{u}")
+}
+
+/// Construct a backend: an artifact directory selects PJRT (requires the
+/// `pjrt` cargo feature), otherwise the native backend with the given
+/// preset (default `tiny`).
+pub fn build_backend(
+    artifacts: Option<&str>,
+    preset: Option<&str>,
+    seed: u64,
+) -> Result<Box<dyn ExecBackend>> {
+    if let Some(dir) = artifacts {
+        #[cfg(feature = "pjrt")]
+        {
+            return Ok(Box::new(crate::runtime::Runtime::load(dir)?));
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            bail!(
+                "artifact dir {dir:?} requested but this build has no PJRT engine; \
+                 rebuild with `--features pjrt` or drop the artifacts flag to use \
+                 the native backend"
+            );
+        }
+    }
+    Ok(Box::new(NativeBackend::preset(preset.unwrap_or("tiny"), seed)?))
+}
+
+/// [`build_backend`] from the environment: `HIFT_ARTIFACTS` (PJRT),
+/// `HIFT_PRESET` (native geometry, default `tiny`), `HIFT_SEED`.
+pub fn from_env() -> Result<Box<dyn ExecBackend>> {
+    // Empty values mean "unset" — `HIFT_ARTIFACTS= hift …` must fall back
+    // to the native backend, not request PJRT with an empty dir.
+    let artifacts = std::env::var("HIFT_ARTIFACTS").ok().filter(|s| !s.is_empty());
+    let preset = std::env::var("HIFT_PRESET").ok().filter(|s| !s.is_empty());
+    let seed = std::env::var("HIFT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0);
+    build_backend(artifacts.as_deref(), preset.as_deref(), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_validation() {
+        let b = Batch::new(2, 3);
+        assert!(b.validate().is_ok());
+        let mut bad = Batch::new(2, 3);
+        bad.tokens.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn unit_artifact_names() {
+        assert_eq!(unit_artifact(0), "grad_base_u0");
+        assert_eq!(unit_artifact(13), "grad_base_u13");
+    }
+
+    #[test]
+    fn build_backend_defaults_to_native_tiny() {
+        let be = build_backend(None, None, 0).unwrap();
+        assert_eq!(be.name(), "native");
+        assert_eq!(be.manifest().preset, "tiny");
+        let be = build_backend(None, Some("small"), 1).unwrap();
+        assert_eq!(be.manifest().preset, "small");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn artifacts_without_pjrt_is_a_clear_error() {
+        let err = build_backend(Some("artifacts/tiny"), None, 0).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,1041 @@
+//! The native CPU reference model: a decoder-only pre-LN transformer LM with
+//! hand-written forward *and* backward passes over [`Tensor`] buffers.
+//!
+//! It mirrors `python/compile/model.py` exactly — same parameter names, same
+//! layer-unit partition, same PEFT variants (LoRA on W_q/W_v, IA³ rescaling
+//! of K/V/FFN-hidden, prefix virtual tokens), same tanh-GELU and masked
+//! mean-loss — so every strategy and artifact name the manifest describes
+//! runs against it unchanged, with zero external dependencies.
+//!
+//! Backward is reverse-mode with explicit per-layer activation caches.  A
+//! [`GradSpec`] says which units' gradients to emit: the downward pass is
+//! truncated below the shallowest requested unit, and weight-gradient
+//! matmuls are skipped for unrequested layers along the way — the native
+//! analogue of the per-unit `jax.grad` artifacts, and the source of HiFT's
+//! per-step speed win (§4.3: backprop never descends past the active
+//! group, and never forms gradients outside it).
+//!
+//! Hot loops (matmuls, attention, GELU, softmax) run through the
+//! [`super::par`] thread-chunking helpers; all reductions are fixed-order,
+//! so results are bit-identical across thread counts.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ModelCfg;
+use super::par;
+use super::Batch;
+use crate::tensor::{Tensor, TensorSet};
+
+/// LayerNorm epsilon (matches `layernorm_ref` in the Python compile path).
+const LN_EPS: f32 = 1e-5;
+
+fn get<'a>(params: &'a TensorSet, name: &str) -> Result<&'a Tensor> {
+    params.get(name).with_context(|| format!("parameter {name:?} missing from TensorSet"))
+}
+
+fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d += a * s;
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Column sums of a row-major `[rows, cols]` buffer.
+fn colsum(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        axpy(&mut out, 1.0, &x[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Add `bias[j]` to every row of `x: [rows, cols]`.
+fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let cols = bias.len();
+    for row in x.chunks_mut(cols) {
+        axpy(row, 1.0, bias);
+    }
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+fn dgelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    let th = u.tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// Per-row LayerNorm statistics cached for backward.
+struct LnState {
+    mean: Vec<f32>,
+    inv: Vec<f32>,
+}
+
+fn ln_fwd(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> (Vec<f32>, LnState) {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut mean = vec![0.0f32; rows];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            var += (v - mu) * (v - mu);
+        }
+        var /= d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            yr[j] = (xr[j] - mu) * iv * scale[j] + bias[j];
+        }
+        mean[r] = mu;
+        inv[r] = iv;
+    }
+    (y, LnState { mean, inv })
+}
+
+/// Returns `(dx, dscale, dbias)` for `y = LN(x) * scale + bias`.
+fn ln_bwd(
+    dy: &[f32],
+    x: &[f32],
+    st: &LnState,
+    scale: &[f32],
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dscale = vec![0.0f32; d];
+    let mut dbias = vec![0.0f32; d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let (mu, iv) = (st.mean[r], st.inv[r]);
+        let mut g_mean = 0.0f32;
+        let mut gx_mean = 0.0f32;
+        for j in 0..d {
+            let xhat = (xr[j] - mu) * iv;
+            let g = dyr[j] * scale[j];
+            dscale[j] += dyr[j] * xhat;
+            dbias[j] += dyr[j];
+            g_mean += g;
+            gx_mean += g * xhat;
+        }
+        g_mean /= d as f32;
+        gx_mean /= d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let xhat = (xr[j] - mu) * iv;
+            let g = dyr[j] * scale[j];
+            dxr[j] = iv * (g - g_mean - xhat * gx_mean);
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+/// `[BT, D]` (b, t, head, dh) → head-major `[B*H, T*DH]`.
+fn gather_heads(src: &[f32], b: usize, t: usize, h: usize, dh: usize) -> Vec<f32> {
+    let d = h * dh;
+    let mut out = vec![0.0f32; b * h * t * dh];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let s = &src[(bi * t + ti) * d + hi * dh..][..dh];
+                let o = &mut out[((bi * h + hi) * t + ti) * dh..][..dh];
+                o.copy_from_slice(s);
+            }
+        }
+    }
+    out
+}
+
+/// Head-major `[B*H, T*DH]` → `[BT, D]` (inverse of [`gather_heads`]).
+fn scatter_heads(src: &[f32], b: usize, t: usize, h: usize, dh: usize) -> Vec<f32> {
+    let d = h * dh;
+    let mut out = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let s = &src[((bi * h + hi) * t + ti) * dh..][..dh];
+                let o = &mut out[(bi * t + ti) * d + hi * dh..][..dh];
+                o.copy_from_slice(s);
+            }
+        }
+    }
+    out
+}
+
+/// Per-layer activation cache.
+struct LayerState {
+    x_in: Vec<f32>,
+    h1: Vec<f32>,
+    ln1: LnState,
+    /// Effective W_q / W_v (LoRA-merged; plain copies otherwise).
+    wq_eff: Vec<f32>,
+    wv_eff: Vec<f32>,
+    /// Post-IA³ q/k/v, flat `[BT, D]`.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Pre-IA³ k/v (empty unless the variant is ia3).
+    k0: Vec<f32>,
+    v0: Vec<f32>,
+    /// Softmax attention probabilities, `[B*H, T*T]` (0 above the diagonal).
+    probs: Vec<f32>,
+    /// Attention output before the out-projection, `[BT, D]`.
+    attn: Vec<f32>,
+    x_mid: Vec<f32>,
+    h2: Vec<f32>,
+    ln2: LnState,
+    /// Pre-GELU FFN activation, `[BT, F]`.
+    a1: Vec<f32>,
+    mid0: Vec<f32>,
+    /// Post-IA³ FFN hidden (empty unless ia3).
+    mid_ia3: Vec<f32>,
+}
+
+/// Everything one forward pass produced (loss/metrics + backward caches).
+pub struct FwdState {
+    pub loss: f32,
+    pub ncorrect: f32,
+    layers: Vec<LayerState>,
+    x_fin: Vec<f32>,
+    hf: Vec<f32>,
+    lnf: LnState,
+    /// Final hidden states for the real (non-prefix) positions, `[BS, D]` —
+    /// empty when there are no prefix positions (`hf` is used directly).
+    hf_s: Vec<f32>,
+    /// Output softmax probabilities, `[BS, V]`.
+    probs_out: Vec<f32>,
+    denom: f32,
+    n_pre: usize,
+}
+
+/// Gradients keyed by parameter name.
+pub type Grads = HashMap<String, Tensor>;
+
+/// Which gradients a backward pass must produce.  Backward always
+/// propagates `dx` down to `min_unit`, but weight-gradient matmuls, bias
+/// column-sums and the (potentially huge) embedding scatter are only done
+/// for requested units — the native analogue of per-unit `jax.grad`.
+#[derive(Debug, Clone)]
+pub struct GradSpec {
+    /// Lowest layer unit whose `dx` must be formed (descent bound).
+    pub min_unit: usize,
+    /// Per-unit emit flags, indexed 0 (embeddings) ..= n_layers+1 (head).
+    pub units: Vec<bool>,
+    /// Emit adapter gradients (LoRA / IA³ / prefix).
+    pub adapters: bool,
+    /// Emit dense (≥2-D) weight gradients.  False for bias/LN-only
+    /// artifacts (BitFit), which then skip every weight matmul.
+    pub dense: bool,
+}
+
+impl GradSpec {
+    /// Everything: all units, plus adapters when the variant has them.
+    pub fn all(n_units: usize, adapters: bool) -> Self {
+        GradSpec { min_unit: 0, units: vec![true; n_units], adapters, dense: true }
+    }
+
+    /// Exactly one layer unit of the base model.
+    pub fn only_unit(n_units: usize, u: usize) -> Self {
+        let mut units = vec![false; n_units];
+        if u < n_units {
+            units[u] = true;
+        }
+        GradSpec { min_unit: u, units, adapters: false, dense: true }
+    }
+
+    fn emit(&self, u: usize) -> bool {
+        self.units.get(u).copied().unwrap_or(false)
+    }
+}
+
+fn check_variant(variant: &str) -> Result<()> {
+    match variant {
+        "base" | "lora" | "ia3" | "prefix" => Ok(()),
+        other => bail!("native backend: unknown variant {other:?}"),
+    }
+}
+
+/// Run the model forward; returns loss, masked #correct and the caches
+/// backward needs.
+pub fn forward(
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    batch: &Batch,
+) -> Result<FwdState> {
+    check_variant(variant)?;
+    batch.validate()?;
+    let (bsz, s) = (batch.b, batch.s);
+    let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
+    let v_ = cfg.vocab;
+    if d == 0 || heads == 0 || d % heads != 0 {
+        bail!("bad geometry: d_model={} n_heads={}", d, heads);
+    }
+    if s > cfg.seq_len {
+        bail!("batch seq {} exceeds model seq_len {}", s, cfg.seq_len);
+    }
+    for &t in batch.tokens.iter().chain(batch.targets.iter()) {
+        if t < 0 || t as usize >= v_ {
+            bail!("token id {t} outside vocab {v_}");
+        }
+    }
+    let dh = d / heads;
+    let p_ = if variant == "prefix" { cfg.n_prefix } else { 0 };
+    let t_ = s + p_;
+    let bt = bsz * t_;
+    let bs = bsz * s;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let lora = variant == "lora";
+    let ia3 = variant == "ia3";
+    let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
+
+    // --- embeddings ---------------------------------------------------
+    let tok_emb = get(params, "tok_emb")?;
+    let pos_emb = get(params, "pos_emb")?;
+    let mut x0 = vec![0.0f32; bt * d];
+    for b in 0..bsz {
+        for tt in 0..t_ {
+            let row = &mut x0[(b * t_ + tt) * d..][..d];
+            if tt < p_ {
+                // Prefix rows live in the reserved pos_emb block at
+                // seq_len..seq_len+n_prefix, independent of the batch's
+                // runtime length (s may be < seq_len).
+                let base = cfg.seq_len + tt;
+                let pre = get(params, "prefix.emb")?;
+                row.copy_from_slice(&pre.data[tt * d..(tt + 1) * d]);
+                axpy(row, 1.0, &pos_emb.data[base * d..(base + 1) * d]);
+            } else {
+                let tc = tt - p_;
+                let tok = batch.tokens[b * s + tc] as usize;
+                row.copy_from_slice(&tok_emb.data[tok * d..(tok + 1) * d]);
+                axpy(row, 1.0, &pos_emb.data[tc * d..(tc + 1) * d]);
+            }
+        }
+    }
+
+    // --- transformer blocks -------------------------------------------
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    let mut x = x0;
+    for i in 0..cfg.n_layers {
+        let pfx = format!("l{i}.");
+        let x_in = x;
+        let (h1, ln1) = ln_fwd(
+            &x_in,
+            &get(params, &format!("{pfx}ln1.scale"))?.data,
+            &get(params, &format!("{pfx}ln1.bias"))?.data,
+            d,
+        );
+
+        // effective projections (LoRA merges into W_q / W_v)
+        let mut wq_eff = get(params, &format!("{pfx}attn.wq"))?.data.clone();
+        let mut wv_eff = get(params, &format!("{pfx}attn.wv"))?.data.clone();
+        if lora {
+            let r = cfg.lora_rank;
+            let aq = get(params, &format!("{pfx}lora.aq"))?;
+            let bq = get(params, &format!("{pfx}lora.bq"))?;
+            let av = get(params, &format!("{pfx}lora.av"))?;
+            let bv = get(params, &format!("{pfx}lora.bv"))?;
+            let mut delta = vec![0.0f32; d * d];
+            par::matmul(&aq.data, &bq.data, &mut delta, d, r, d);
+            axpy(&mut wq_eff, lora_sc, &delta);
+            delta.iter_mut().for_each(|z| *z = 0.0);
+            par::matmul(&av.data, &bv.data, &mut delta, d, r, d);
+            axpy(&mut wv_eff, lora_sc, &delta);
+        }
+
+        let mut q = vec![0.0f32; bt * d];
+        par::matmul(&h1, &wq_eff, &mut q, bt, d, d);
+        add_bias(&mut q, &get(params, &format!("{pfx}attn.bq"))?.data);
+        let mut k = vec![0.0f32; bt * d];
+        par::matmul(&h1, &get(params, &format!("{pfx}attn.wk"))?.data, &mut k, bt, d, d);
+        add_bias(&mut k, &get(params, &format!("{pfx}attn.bk"))?.data);
+        let mut v = vec![0.0f32; bt * d];
+        par::matmul(&h1, &wv_eff, &mut v, bt, d, d);
+        add_bias(&mut v, &get(params, &format!("{pfx}attn.bv"))?.data);
+
+        let (mut k0, mut v0) = (Vec::new(), Vec::new());
+        if ia3 {
+            k0 = k.clone();
+            v0 = v.clone();
+            let lk = &get(params, &format!("{pfx}ia3.lk"))?.data;
+            let lv = &get(params, &format!("{pfx}ia3.lv"))?.data;
+            for row in k.chunks_mut(d) {
+                for (kj, &lj) in row.iter_mut().zip(lk.iter()) {
+                    *kj *= lj;
+                }
+            }
+            for row in v.chunks_mut(d) {
+                for (vj, &lj) in row.iter_mut().zip(lv.iter()) {
+                    *vj *= lj;
+                }
+            }
+        }
+
+        // causal attention, head-major
+        let q_hm = gather_heads(&q, bsz, t_, heads, dh);
+        let k_hm = gather_heads(&k, bsz, t_, heads, dh);
+        let v_hm = gather_heads(&v, bsz, t_, heads, dh);
+        let mut probs = vec![0.0f32; bsz * heads * t_ * t_];
+        let mut o_hm = vec![0.0f32; bsz * heads * t_ * dh];
+        par::par_items2(&mut probs, t_ * t_, &mut o_hm, t_ * dh, |bh, pch, och| {
+            let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
+            let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
+            let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
+            for ti in 0..t_ {
+                let qrow = &qb[ti * dh..][..dh];
+                let prow = &mut pch[ti * t_..][..t_];
+                let mut maxv = f32::NEG_INFINITY;
+                for (j, pj) in prow.iter_mut().enumerate().take(ti + 1) {
+                    let sc = dot(qrow, &kb[j * dh..][..dh]) * scale;
+                    *pj = sc;
+                    maxv = maxv.max(sc);
+                }
+                let mut sum = 0.0f32;
+                for pj in prow.iter_mut().take(ti + 1) {
+                    *pj = (*pj - maxv).exp();
+                    sum += *pj;
+                }
+                let inv = 1.0 / sum;
+                let orow = &mut och[ti * dh..][..dh];
+                for j in 0..=ti {
+                    prow[j] *= inv;
+                    let pij = prow[j];
+                    if pij != 0.0 {
+                        axpy(orow, pij, &vb[j * dh..][..dh]);
+                    }
+                }
+            }
+        });
+        let attn = scatter_heads(&o_hm, bsz, t_, heads, dh);
+
+        let mut x_mid = vec![0.0f32; bt * d];
+        par::matmul(&attn, &get(params, &format!("{pfx}attn.wo"))?.data, &mut x_mid, bt, d, d);
+        add_bias(&mut x_mid, &get(params, &format!("{pfx}attn.bo"))?.data);
+        axpy(&mut x_mid, 1.0, &x_in);
+
+        let (h2, ln2) = ln_fwd(
+            &x_mid,
+            &get(params, &format!("{pfx}ln2.scale"))?.data,
+            &get(params, &format!("{pfx}ln2.bias"))?.data,
+            d,
+        );
+        let mut a1 = vec![0.0f32; bt * f_];
+        par::matmul(&h2, &get(params, &format!("{pfx}ffn.w1"))?.data, &mut a1, bt, d, f_);
+        add_bias(&mut a1, &get(params, &format!("{pfx}ffn.b1"))?.data);
+        let mut mid0 = a1.clone();
+        par::par_rows(&mut mid0, f_, (32_768 / f_.max(1)).max(1), |_, chunk| {
+            for z in chunk.iter_mut() {
+                *z = gelu(*z);
+            }
+        });
+        let mut mid_ia3 = Vec::new();
+        if ia3 {
+            let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
+            mid_ia3 = mid0.clone();
+            for row in mid_ia3.chunks_mut(f_) {
+                for (mj, &lj) in row.iter_mut().zip(lff.iter()) {
+                    *mj *= lj;
+                }
+            }
+        }
+        let mid_ref: &[f32] = if ia3 { &mid_ia3 } else { &mid0 };
+        let mut x_out = vec![0.0f32; bt * d];
+        par::matmul(mid_ref, &get(params, &format!("{pfx}ffn.w2"))?.data, &mut x_out, bt, f_, d);
+        add_bias(&mut x_out, &get(params, &format!("{pfx}ffn.b2"))?.data);
+        axpy(&mut x_out, 1.0, &x_mid);
+
+        layers.push(LayerState {
+            x_in,
+            h1,
+            ln1,
+            wq_eff,
+            wv_eff,
+            q,
+            k,
+            v,
+            k0,
+            v0,
+            probs,
+            attn,
+            x_mid,
+            h2,
+            ln2,
+            a1,
+            mid0,
+            mid_ia3,
+        });
+        x = x_out;
+    }
+    let x_fin = x;
+
+    // --- head + masked loss -------------------------------------------
+    let (hf, lnf) =
+        ln_fwd(&x_fin, &get(params, "ln_f.scale")?.data, &get(params, "ln_f.bias")?.data, d);
+    let hf_s = if p_ == 0 {
+        Vec::new() // hf already is [BS, D]; avoid duplicating it
+    } else {
+        let mut out = vec![0.0f32; bs * d];
+        for b in 0..bsz {
+            for tc in 0..s {
+                let src = &hf[(b * t_ + p_ + tc) * d..][..d];
+                out[(b * s + tc) * d..][..d].copy_from_slice(src);
+            }
+        }
+        out
+    };
+    let hf_s_ref: &[f32] = if p_ == 0 { &hf } else { &hf_s };
+    let mut logits = vec![0.0f32; bs * v_];
+    par::matmul(hf_s_ref, &get(params, "head.w")?.data, &mut logits, bs, d, v_);
+    add_bias(&mut logits, &get(params, "head.b")?.data);
+
+    // In-place softmax; per-row (nll, correct) side-channel.
+    let mut rowstats = vec![0.0f32; bs * 2];
+    {
+        let targets = &batch.targets;
+        par::par_items2(&mut logits, v_, &mut rowstats, 2, |r, lrow, st| {
+            let tgt = targets[r] as usize;
+            let gold = lrow[tgt];
+            let mut maxv = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for (j, &z) in lrow.iter().enumerate() {
+                if z > maxv {
+                    maxv = z;
+                    arg = j;
+                }
+            }
+            let mut sum = 0.0f32;
+            for z in lrow.iter_mut() {
+                *z = (*z - maxv).exp();
+                sum += *z;
+            }
+            let inv = 1.0 / sum;
+            for z in lrow.iter_mut() {
+                *z *= inv;
+            }
+            st[0] = sum.ln() + maxv - gold; // logsumexp - gold logit
+            st[1] = (arg == tgt) as u8 as f32;
+        });
+    }
+    let mut wsum = 0.0f64;
+    let mut loss_acc = 0.0f64;
+    let mut ncorrect = 0.0f64;
+    for r in 0..bs {
+        let w = batch.weights[r] as f64;
+        wsum += w;
+        loss_acc += rowstats[r * 2] as f64 * w;
+        ncorrect += rowstats[r * 2 + 1] as f64 * w;
+    }
+    let denom = wsum.max(1e-6) as f32;
+    Ok(FwdState {
+        loss: (loss_acc / denom as f64) as f32,
+        ncorrect: ncorrect as f32,
+        layers,
+        x_fin,
+        hf,
+        lnf,
+        hf_s,
+        probs_out: logits,
+        denom,
+        n_pre: p_,
+    })
+}
+
+/// Reverse-mode gradients for the parameters `spec` requests.  `dx`
+/// propagates down to `spec.min_unit`; weight-gradient work is skipped for
+/// unrequested units.
+pub fn backward(
+    st: &FwdState,
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    batch: &Batch,
+    spec: &GradSpec,
+) -> Result<Grads> {
+    check_variant(variant)?;
+    let (bsz, s) = (batch.b, batch.s);
+    let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
+    let v_ = cfg.vocab;
+    let dh = d / heads;
+    let p_ = st.n_pre;
+    let t_ = s + p_;
+    let bt = bsz * t_;
+    let bs = bsz * s;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let lora = variant == "lora";
+    let ia3 = variant == "ia3";
+    let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
+    let head_unit = cfg.n_layers + 1;
+    let mut grads: Grads = HashMap::new();
+
+    // --- loss → logits -------------------------------------------------
+    let mut dlogits = st.probs_out.clone();
+    for r in 0..bs {
+        let w = batch.weights[r] / st.denom;
+        let row = &mut dlogits[r * v_..(r + 1) * v_];
+        row[batch.targets[r] as usize] -= 1.0;
+        for z in row.iter_mut() {
+            *z *= w;
+        }
+    }
+
+    // --- head ----------------------------------------------------------
+    let head_w = get(params, "head.w")?;
+    let hf_s: &[f32] = if p_ == 0 { &st.hf } else { &st.hf_s };
+    if spec.emit(head_unit) {
+        if spec.dense {
+            let mut dhead_w = vec![0.0f32; d * v_];
+            par::matmul_at(hf_s, &dlogits, &mut dhead_w, bs, d, v_);
+            grads.insert("head.w".into(), Tensor::from_vec(dhead_w, &[d, v_]));
+        }
+        grads.insert("head.b".into(), Tensor::from_vec(colsum(&dlogits, bs, v_), &[v_]));
+    }
+    let mut dhf_s = vec![0.0f32; bs * d];
+    par::matmul_bt(&dlogits, &head_w.data, &mut dhf_s, bs, v_, d);
+    drop(dlogits);
+
+    let dhf = if p_ == 0 {
+        dhf_s
+    } else {
+        let mut out = vec![0.0f32; bt * d];
+        for b in 0..bsz {
+            for tc in 0..s {
+                out[(b * t_ + p_ + tc) * d..][..d]
+                    .copy_from_slice(&dhf_s[(b * s + tc) * d..][..d]);
+            }
+        }
+        out
+    };
+    let (mut dx, dscale_f, dbias_f) =
+        ln_bwd(&dhf, &st.x_fin, &st.lnf, &get(params, "ln_f.scale")?.data, d);
+    if spec.emit(head_unit) {
+        grads.insert("ln_f.scale".into(), Tensor::from_vec(dscale_f, &[d]));
+        grads.insert("ln_f.bias".into(), Tensor::from_vec(dbias_f, &[d]));
+    }
+
+    // --- blocks, top-down ----------------------------------------------
+    for i in (0..cfg.n_layers).rev() {
+        if i + 1 < spec.min_unit {
+            // Truncated backprop: nothing below this unit was requested.
+            return Ok(grads);
+        }
+        let ls = &st.layers[i];
+        let pfx = format!("l{i}.");
+        let emit = spec.emit(i + 1);
+        let emit_w = emit && spec.dense;
+
+        // FFN
+        let w1 = get(params, &format!("{pfx}ffn.w1"))?;
+        let w2 = get(params, &format!("{pfx}ffn.w2"))?;
+        let mid_ref: &[f32] = if ia3 { &ls.mid_ia3 } else { &ls.mid0 };
+        let mut dmid = vec![0.0f32; bt * f_];
+        par::matmul_bt(&dx, &w2.data, &mut dmid, bt, d, f_);
+        if emit_w {
+            let mut dw2 = vec![0.0f32; f_ * d];
+            par::matmul_at(mid_ref, &dx, &mut dw2, bt, f_, d);
+            grads.insert(format!("{pfx}ffn.w2"), Tensor::from_vec(dw2, &[f_, d]));
+        }
+        if emit {
+            grads.insert(format!("{pfx}ffn.b2"), Tensor::from_vec(colsum(&dx, bt, d), &[d]));
+        }
+        if ia3 {
+            let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
+            if spec.adapters {
+                let mut dlff = vec![0.0f32; f_];
+                for r in 0..bt {
+                    for j in 0..f_ {
+                        dlff[j] += dmid[r * f_ + j] * ls.mid0[r * f_ + j];
+                    }
+                }
+                grads.insert(format!("{pfx}ia3.lff"), Tensor::from_vec(dlff, &[f_]));
+            }
+            for row in dmid.chunks_mut(f_) {
+                for (mj, &lj) in row.iter_mut().zip(lff.iter()) {
+                    *mj *= lj;
+                }
+            }
+        }
+        // GELU'
+        let mut da1 = dmid;
+        {
+            let a1 = &ls.a1;
+            par::par_rows(&mut da1, f_, (32_768 / f_.max(1)).max(1), |r0, chunk| {
+                let base = r0 * f_;
+                for (off, z) in chunk.iter_mut().enumerate() {
+                    *z *= dgelu(a1[base + off]);
+                }
+            });
+        }
+        if emit_w {
+            let mut dw1 = vec![0.0f32; d * f_];
+            par::matmul_at(&ls.h2, &da1, &mut dw1, bt, d, f_);
+            grads.insert(format!("{pfx}ffn.w1"), Tensor::from_vec(dw1, &[d, f_]));
+        }
+        if emit {
+            grads.insert(format!("{pfx}ffn.b1"), Tensor::from_vec(colsum(&da1, bt, f_), &[f_]));
+        }
+        let mut dh2 = vec![0.0f32; bt * d];
+        par::matmul_bt(&da1, &w1.data, &mut dh2, bt, f_, d);
+        drop(da1);
+        let (dx_ln2, dsc2, dbi2) =
+            ln_bwd(&dh2, &ls.x_mid, &ls.ln2, &get(params, &format!("{pfx}ln2.scale"))?.data, d);
+        if emit {
+            grads.insert(format!("{pfx}ln2.scale"), Tensor::from_vec(dsc2, &[d]));
+            grads.insert(format!("{pfx}ln2.bias"), Tensor::from_vec(dbi2, &[d]));
+        }
+        let mut dx_mid = dx;
+        axpy(&mut dx_mid, 1.0, &dx_ln2);
+
+        // attention out-projection
+        let wo = get(params, &format!("{pfx}attn.wo"))?;
+        let mut dattn = vec![0.0f32; bt * d];
+        par::matmul_bt(&dx_mid, &wo.data, &mut dattn, bt, d, d);
+        if emit_w {
+            let mut dwo = vec![0.0f32; d * d];
+            par::matmul_at(&ls.attn, &dx_mid, &mut dwo, bt, d, d);
+            grads.insert(format!("{pfx}attn.wo"), Tensor::from_vec(dwo, &[d, d]));
+        }
+        if emit {
+            grads.insert(format!("{pfx}attn.bo"), Tensor::from_vec(colsum(&dx_mid, bt, d), &[d]));
+        }
+
+        // attention core
+        let q_hm = gather_heads(&ls.q, bsz, t_, heads, dh);
+        let k_hm = gather_heads(&ls.k, bsz, t_, heads, dh);
+        let v_hm = gather_heads(&ls.v, bsz, t_, heads, dh);
+        let do_hm = gather_heads(&dattn, bsz, t_, heads, dh);
+        drop(dattn);
+        let mut dq_hm = vec![0.0f32; bsz * heads * t_ * dh];
+        let mut dk_hm = vec![0.0f32; bsz * heads * t_ * dh];
+        let mut dv_hm = vec![0.0f32; bsz * heads * t_ * dh];
+        par::par_items3(
+            &mut dq_hm,
+            t_ * dh,
+            &mut dk_hm,
+            t_ * dh,
+            &mut dv_hm,
+            t_ * dh,
+            |bh, dqc, dkc, dvc| {
+                let pch = &ls.probs[bh * t_ * t_..][..t_ * t_];
+                let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
+                let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
+                let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
+                let dob = &do_hm[bh * t_ * dh..][..t_ * dh];
+                let mut dp = vec![0.0f32; t_];
+                for ti in 0..t_ {
+                    let dorow = &dob[ti * dh..][..dh];
+                    let prow = &pch[ti * t_..][..t_];
+                    let mut pdp = 0.0f32;
+                    for j in 0..=ti {
+                        let pij = prow[j];
+                        if pij != 0.0 {
+                            axpy(&mut dvc[j * dh..][..dh], pij, dorow);
+                        }
+                        let dpj = dot(dorow, &vb[j * dh..][..dh]);
+                        dp[j] = dpj;
+                        pdp += pij * dpj;
+                    }
+                    for j in 0..=ti {
+                        let ds = prow[j] * (dp[j] - pdp) * scale;
+                        if ds != 0.0 {
+                            axpy(&mut dqc[ti * dh..][..dh], ds, &kb[j * dh..][..dh]);
+                            axpy(&mut dkc[j * dh..][..dh], ds, &qb[ti * dh..][..dh]);
+                        }
+                    }
+                }
+            },
+        );
+        let dq = scatter_heads(&dq_hm, bsz, t_, heads, dh);
+        let mut dk = scatter_heads(&dk_hm, bsz, t_, heads, dh);
+        let mut dv = scatter_heads(&dv_hm, bsz, t_, heads, dh);
+
+        // IA³ on k/v (gradients flow to the pre-scale activations)
+        if ia3 {
+            let lk = &get(params, &format!("{pfx}ia3.lk"))?.data;
+            let lv = &get(params, &format!("{pfx}ia3.lv"))?.data;
+            if spec.adapters {
+                let mut dlk = vec![0.0f32; d];
+                let mut dlv = vec![0.0f32; d];
+                for r in 0..bt {
+                    for j in 0..d {
+                        dlk[j] += dk[r * d + j] * ls.k0[r * d + j];
+                        dlv[j] += dv[r * d + j] * ls.v0[r * d + j];
+                    }
+                }
+                grads.insert(format!("{pfx}ia3.lk"), Tensor::from_vec(dlk, &[d]));
+                grads.insert(format!("{pfx}ia3.lv"), Tensor::from_vec(dlv, &[d]));
+            }
+            for row in dk.chunks_mut(d) {
+                for (kj, &lj) in row.iter_mut().zip(lk.iter()) {
+                    *kj *= lj;
+                }
+            }
+            for row in dv.chunks_mut(d) {
+                for (vj, &lj) in row.iter_mut().zip(lv.iter()) {
+                    *vj *= lj;
+                }
+            }
+        }
+
+        if emit {
+            grads.insert(format!("{pfx}attn.bq"), Tensor::from_vec(colsum(&dq, bt, d), &[d]));
+            grads.insert(format!("{pfx}attn.bk"), Tensor::from_vec(colsum(&dk, bt, d), &[d]));
+            grads.insert(format!("{pfx}attn.bv"), Tensor::from_vec(colsum(&dv, bt, d), &[d]));
+        }
+
+        // dW_q/dW_v drive both the base weight grads and (chain rule) the
+        // LoRA factor grads, so they're needed in either case.
+        let need_wfull = emit_w || (lora && spec.adapters);
+        let mut dwq_full = Vec::new();
+        let mut dwv_full = Vec::new();
+        if need_wfull {
+            dwq_full = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dq, &mut dwq_full, bt, d, d);
+            dwv_full = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dv, &mut dwv_full, bt, d, d);
+        }
+        if lora && spec.adapters {
+            let r = cfg.lora_rank;
+            let aq = get(params, &format!("{pfx}lora.aq"))?;
+            let bq = get(params, &format!("{pfx}lora.bq"))?;
+            let av = get(params, &format!("{pfx}lora.av"))?;
+            let bv = get(params, &format!("{pfx}lora.bv"))?;
+            let mut daq = vec![0.0f32; d * r];
+            par::matmul_bt(&dwq_full, &bq.data, &mut daq, d, d, r);
+            daq.iter_mut().for_each(|z| *z *= lora_sc);
+            let mut dbq = vec![0.0f32; r * d];
+            par::matmul_at(&aq.data, &dwq_full, &mut dbq, d, r, d);
+            dbq.iter_mut().for_each(|z| *z *= lora_sc);
+            let mut dav = vec![0.0f32; d * r];
+            par::matmul_bt(&dwv_full, &bv.data, &mut dav, d, d, r);
+            dav.iter_mut().for_each(|z| *z *= lora_sc);
+            let mut dbv = vec![0.0f32; r * d];
+            par::matmul_at(&av.data, &dwv_full, &mut dbv, d, r, d);
+            dbv.iter_mut().for_each(|z| *z *= lora_sc);
+            grads.insert(format!("{pfx}lora.aq"), Tensor::from_vec(daq, &[d, r]));
+            grads.insert(format!("{pfx}lora.bq"), Tensor::from_vec(dbq, &[r, d]));
+            grads.insert(format!("{pfx}lora.av"), Tensor::from_vec(dav, &[d, r]));
+            grads.insert(format!("{pfx}lora.bv"), Tensor::from_vec(dbv, &[r, d]));
+        }
+        let wk = get(params, &format!("{pfx}attn.wk"))?;
+        if emit_w {
+            let mut dwk = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dk, &mut dwk, bt, d, d);
+            grads.insert(format!("{pfx}attn.wq"), Tensor::from_vec(dwq_full, &[d, d]));
+            grads.insert(format!("{pfx}attn.wk"), Tensor::from_vec(dwk, &[d, d]));
+            grads.insert(format!("{pfx}attn.wv"), Tensor::from_vec(dwv_full, &[d, d]));
+        }
+
+        let mut dh1 = vec![0.0f32; bt * d];
+        par::matmul_bt(&dq, &ls.wq_eff, &mut dh1, bt, d, d);
+        par::matmul_bt(&dk, &wk.data, &mut dh1, bt, d, d);
+        par::matmul_bt(&dv, &ls.wv_eff, &mut dh1, bt, d, d);
+        let (dx_ln1, dsc1, dbi1) =
+            ln_bwd(&dh1, &ls.x_in, &ls.ln1, &get(params, &format!("{pfx}ln1.scale"))?.data, d);
+        if emit {
+            grads.insert(format!("{pfx}ln1.scale"), Tensor::from_vec(dsc1, &[d]));
+            grads.insert(format!("{pfx}ln1.bias"), Tensor::from_vec(dbi1, &[d]));
+        }
+        dx = dx_mid;
+        axpy(&mut dx, 1.0, &dx_ln1);
+    }
+
+    // --- embeddings (unit 0) + prefix adapter ---------------------------
+    let want_emb = spec.emit(0);
+    let want_prefix = p_ > 0 && spec.adapters;
+    if want_emb || want_prefix {
+        let pos_shape = get(params, "pos_emb")?.shape.clone();
+        let mut dtok = if want_emb { vec![0.0f32; v_ * d] } else { Vec::new() };
+        let mut dpos =
+            if want_emb { vec![0.0f32; pos_shape.iter().product()] } else { Vec::new() };
+        let mut dpre = if want_prefix { vec![0.0f32; p_ * d] } else { Vec::new() };
+        for b in 0..bsz {
+            for tt in 0..t_ {
+                let row = &dx[(b * t_ + tt) * d..][..d];
+                if tt < p_ {
+                    if want_prefix {
+                        axpy(&mut dpre[tt * d..(tt + 1) * d], 1.0, row);
+                    }
+                    if want_emb {
+                        let base = cfg.seq_len + tt;
+                        axpy(&mut dpos[base * d..(base + 1) * d], 1.0, row);
+                    }
+                } else if want_emb {
+                    let tc = tt - p_;
+                    let tok = batch.tokens[b * s + tc] as usize;
+                    axpy(&mut dtok[tok * d..(tok + 1) * d], 1.0, row);
+                    axpy(&mut dpos[tc * d..(tc + 1) * d], 1.0, row);
+                }
+            }
+        }
+        if want_emb {
+            grads.insert("tok_emb".into(), Tensor::from_vec(dtok, &[v_, d]));
+            grads.insert("pos_emb".into(), Tensor::from_vec(dpos, &pos_shape));
+        }
+        if want_prefix {
+            grads.insert("prefix.emb".into(), Tensor::from_vec(dpre, &[p_, d]));
+        }
+    }
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 4,
+            batch: 2,
+            lora_rank: 2,
+            lora_alpha: 8.0,
+            n_prefix: 2,
+        }
+    }
+
+    fn tiny_params(cfg: &ModelCfg) -> TensorSet {
+        let mut rng = Pcg32::seeded(9);
+        let d = cfg.d_model;
+        let mut set = TensorSet::new();
+        set.push("tok_emb", Tensor::randn(&[cfg.vocab, d], 0.1, &mut rng));
+        set.push("pos_emb", Tensor::randn(&[cfg.seq_len + cfg.n_prefix, d], 0.1, &mut rng));
+        for i in 0..cfg.n_layers {
+            let p = format!("l{i}.");
+            set.push(format!("{p}ln1.scale"), Tensor::ones(&[d]));
+            set.push(format!("{p}ln1.bias"), Tensor::zeros(&[d]));
+            set.push(format!("{p}attn.wq"), Tensor::randn(&[d, d], 0.3, &mut rng));
+            set.push(format!("{p}attn.bq"), Tensor::zeros(&[d]));
+            set.push(format!("{p}attn.wk"), Tensor::randn(&[d, d], 0.3, &mut rng));
+            set.push(format!("{p}attn.bk"), Tensor::zeros(&[d]));
+            set.push(format!("{p}attn.wv"), Tensor::randn(&[d, d], 0.3, &mut rng));
+            set.push(format!("{p}attn.bv"), Tensor::zeros(&[d]));
+            set.push(format!("{p}attn.wo"), Tensor::randn(&[d, d], 0.3, &mut rng));
+            set.push(format!("{p}attn.bo"), Tensor::zeros(&[d]));
+            set.push(format!("{p}ln2.scale"), Tensor::ones(&[d]));
+            set.push(format!("{p}ln2.bias"), Tensor::zeros(&[d]));
+            set.push(format!("{p}ffn.w1"), Tensor::randn(&[d, cfg.d_ff], 0.3, &mut rng));
+            set.push(format!("{p}ffn.b1"), Tensor::zeros(&[cfg.d_ff]));
+            set.push(format!("{p}ffn.w2"), Tensor::randn(&[cfg.d_ff, d], 0.3, &mut rng));
+            set.push(format!("{p}ffn.b2"), Tensor::zeros(&[d]));
+        }
+        set.push("ln_f.scale", Tensor::ones(&[d]));
+        set.push("ln_f.bias", Tensor::zeros(&[d]));
+        set.push("head.w", Tensor::randn(&[d, cfg.vocab], 0.3, &mut rng));
+        set.push("head.b", Tensor::zeros(&[cfg.vocab]));
+        set
+    }
+
+    fn tiny_batch(cfg: &ModelCfg, seed: u64) -> Batch {
+        let mut rng = Pcg32::seeded(seed);
+        let mut b = Batch::new(cfg.batch, cfg.seq_len);
+        for t in b.tokens.iter_mut() {
+            *t = rng.below(cfg.vocab) as i32;
+        }
+        for t in b.targets.iter_mut() {
+            *t = rng.below(cfg.vocab) as i32;
+        }
+        for w in b.weights.iter_mut() {
+            *w = 1.0;
+        }
+        b
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_finite() {
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 3);
+        let a = forward(&cfg, "base", &params, &batch).unwrap();
+        let b = forward(&cfg, "base", &params, &batch).unwrap();
+        assert!(a.loss.is_finite() && a.loss > 0.0);
+        assert_eq!(a.loss, b.loss);
+        // random targets on a random net ⇒ near-uniform loss
+        assert!((a.loss - (cfg.vocab as f32).ln()).abs() < 1.5, "loss {}", a.loss);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 5);
+        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        for row in st.probs_out.chunks(cfg.vocab) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn backward_truncation_matches_full_backward() {
+        let cfg = tiny_cfg();
+        let n_units = cfg.n_units();
+        let params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 7);
+        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        let full =
+            backward(&st, &cfg, "base", &params, &batch, &GradSpec::all(n_units, false)).unwrap();
+        let head_spec = GradSpec::only_unit(n_units, cfg.n_layers + 1);
+        let head_only = backward(&st, &cfg, "base", &params, &batch, &head_spec).unwrap();
+        assert!(head_only.contains_key("head.w"));
+        assert!(!head_only.contains_key("l0.attn.wq"), "truncated below the head");
+        assert!(!head_only.contains_key("tok_emb"));
+        for (name, g) in &head_only {
+            let fg = &full[name];
+            assert_eq!(g.shape, fg.shape);
+            for (a, b) in g.data.iter().zip(&fg.data) {
+                assert_eq!(a, b, "{name}: truncated grad must be bit-identical");
+            }
+        }
+        // A middle unit: emitted grads are bit-identical to the full pass
+        // even though the layers above it skip their weight-grad work.
+        let mid_spec = GradSpec::only_unit(n_units, 1);
+        let mid = backward(&st, &cfg, "base", &params, &batch, &mid_spec).unwrap();
+        assert!(mid.contains_key("l0.attn.wq"));
+        assert!(!mid.contains_key("head.w"), "head not requested");
+        for (name, g) in &mid {
+            let fg = &full[name];
+            for (a, b) in g.data.iter().zip(&fg.data) {
+                assert_eq!(a, b, "{name}: gated grad must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_give_zero_grads() {
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg);
+        let mut batch = tiny_batch(&cfg, 11);
+        batch.weights.iter_mut().for_each(|w| *w = 0.0);
+        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        assert_eq!(st.loss, 0.0);
+        let spec = GradSpec::all(cfg.n_units(), false);
+        let grads = backward(&st, &cfg, "base", &params, &batch, &spec).unwrap();
+        for (name, g) in &grads {
+            assert!(g.data.iter().all(|&x| x == 0.0), "{name} nonzero under zero mask");
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! The default execution backend: the pure-Rust reference transformer of
+//! [`super::model`] wrapped in the [`ExecBackend`] interface.
+//!
+//! Instead of reading `artifacts/<preset>/manifest.json`, the backend
+//! *synthesizes* a manifest with exactly the contract `aot.py` emits — the
+//! same parameter names/units/offsets and the same artifact inventory
+//! (`fwd_<variant>`, `grad_base_full`, `grad_base_u{i}`, `grad_base_bitfit`,
+//! `grad_<variant>_adapter`) — so strategies, trainer, benches and the CLI
+//! run unchanged with zero external dependencies or Python-generated files.
+//!
+//! Parameters are initialized deterministically from the backend seed with
+//! the same scheme as `model.init_params` (fan-in-scaled normals for
+//! weights, zeros for biases and LoRA B, ones for LN scales and IA³).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
+use super::model;
+use super::{unit_artifact, Batch, ExecBackend, RuntimeStats, StepOutput};
+use crate::rng::Pcg32;
+use crate::tensor::{Tensor, TensorSet};
+
+/// Model geometry presets, mirroring `PRESETS` in `python/compile/model.py`.
+pub fn preset_cfg(name: &str) -> Option<ModelCfg> {
+    let mk = |name: &str, vocab, d_model, n_layers, n_heads, d_ff, seq_len, batch, lora_rank,
+              n_prefix| ModelCfg {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        seq_len,
+        batch,
+        lora_rank,
+        lora_alpha: 8.0,
+        n_prefix,
+    };
+    Some(match name {
+        "tiny" => mk("tiny", 64, 32, 2, 2, 64, 16, 4, 2, 4),
+        "small" => mk("small", 256, 128, 4, 4, 256, 64, 8, 4, 16),
+        "base" => mk("base", 512, 256, 6, 8, 1024, 64, 8, 8, 16),
+        "e2e" => mk("e2e", 4096, 512, 8, 8, 2048, 64, 8, 8, 16),
+        "e2e100m" => mk("e2e100m", 32768, 768, 12, 12, 3072, 128, 4, 8, 16),
+        _ => return None,
+    })
+}
+
+/// Names of all presets [`preset_cfg`] accepts.
+pub const PRESET_NAMES: [&str; 5] = ["tiny", "small", "base", "e2e", "e2e100m"];
+
+struct Spec {
+    name: String,
+    shape: Vec<usize>,
+    unit: i64,
+    bitfit: bool,
+}
+
+fn spec(name: String, shape: &[usize], unit: i64, bitfit: bool) -> Spec {
+    Spec { name, shape: shape.to_vec(), unit, bitfit }
+}
+
+/// Base-model parameter list (order == artifact input order, `model.py`).
+fn base_specs(c: &ModelCfg) -> Vec<Spec> {
+    let (d, f, v, s) = (c.d_model, c.d_ff, c.vocab, c.seq_len);
+    let mut out = vec![
+        spec("tok_emb".into(), &[v, d], 0, false),
+        spec("pos_emb".into(), &[s + c.n_prefix, d], 0, false),
+    ];
+    for i in 0..c.n_layers {
+        let u = (i + 1) as i64;
+        let p = format!("l{i}.");
+        out.push(spec(format!("{p}ln1.scale"), &[d], u, true));
+        out.push(spec(format!("{p}ln1.bias"), &[d], u, true));
+        out.push(spec(format!("{p}attn.wq"), &[d, d], u, false));
+        out.push(spec(format!("{p}attn.bq"), &[d], u, true));
+        out.push(spec(format!("{p}attn.wk"), &[d, d], u, false));
+        out.push(spec(format!("{p}attn.bk"), &[d], u, true));
+        out.push(spec(format!("{p}attn.wv"), &[d, d], u, false));
+        out.push(spec(format!("{p}attn.bv"), &[d], u, true));
+        out.push(spec(format!("{p}attn.wo"), &[d, d], u, false));
+        out.push(spec(format!("{p}attn.bo"), &[d], u, true));
+        out.push(spec(format!("{p}ln2.scale"), &[d], u, true));
+        out.push(spec(format!("{p}ln2.bias"), &[d], u, true));
+        out.push(spec(format!("{p}ffn.w1"), &[d, f], u, false));
+        out.push(spec(format!("{p}ffn.b1"), &[f], u, true));
+        out.push(spec(format!("{p}ffn.w2"), &[f, d], u, false));
+        out.push(spec(format!("{p}ffn.b2"), &[d], u, true));
+    }
+    let u = (c.n_layers + 1) as i64;
+    out.push(spec("ln_f.scale".into(), &[d], u, true));
+    out.push(spec("ln_f.bias".into(), &[d], u, true));
+    out.push(spec("head.w".into(), &[d, v], u, false));
+    out.push(spec("head.b".into(), &[v], u, true));
+    out
+}
+
+/// Adapter parameters for a PEFT variant (unit = -1).
+fn adapter_specs(c: &ModelCfg, variant: &str) -> Vec<Spec> {
+    let (d, f, r) = (c.d_model, c.d_ff, c.lora_rank);
+    let mut out = Vec::new();
+    match variant {
+        "base" => {}
+        "lora" => {
+            for i in 0..c.n_layers {
+                let p = format!("l{i}.lora.");
+                out.push(spec(format!("{p}aq"), &[d, r], -1, false));
+                out.push(spec(format!("{p}bq"), &[r, d], -1, false));
+                out.push(spec(format!("{p}av"), &[d, r], -1, false));
+                out.push(spec(format!("{p}bv"), &[r, d], -1, false));
+            }
+        }
+        "ia3" => {
+            for i in 0..c.n_layers {
+                let p = format!("l{i}.ia3.");
+                out.push(spec(format!("{p}lk"), &[d], -1, false));
+                out.push(spec(format!("{p}lv"), &[d], -1, false));
+                out.push(spec(format!("{p}lff"), &[f], -1, false));
+            }
+        }
+        "prefix" => out.push(spec("prefix.emb".into(), &[c.n_prefix, d], -1, false)),
+        other => unreachable!("unknown variant {other}"),
+    }
+    out
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Init {
+    Normal,
+    Zeros,
+    Ones,
+}
+
+/// Init kind, derivable from the parameter name (same rules as `model.py`).
+fn init_kind(name: &str) -> Init {
+    let last = name.rsplit('.').next().unwrap_or(name);
+    if name.contains("ia3.") || last == "scale" {
+        Init::Ones
+    } else if last == "bias" || last.starts_with('b') {
+        // biases (bq/bk/bv/bo/b1/b2/head.b) and LoRA B matrices start at 0
+        Init::Zeros
+    } else {
+        Init::Normal
+    }
+}
+
+fn variant_info(c: &ModelCfg, variant: &str) -> VariantInfo {
+    let base = base_specs(c);
+    let n_base_params = base.len();
+    let adapters = adapter_specs(c, variant);
+    let mut params = Vec::with_capacity(n_base_params + adapters.len());
+    let mut base_off = 0usize;
+    for sp in &base {
+        let size: usize = sp.shape.iter().product();
+        params.push(ParamInfo {
+            name: sp.name.clone(),
+            shape: sp.shape.clone(),
+            unit: sp.unit,
+            bitfit: sp.bitfit,
+            offset: base_off,
+            size,
+        });
+        base_off += size * 4;
+    }
+    let mut ad_off = 0usize;
+    for sp in &adapters {
+        let size: usize = sp.shape.iter().product();
+        params.push(ParamInfo {
+            name: sp.name.clone(),
+            shape: sp.shape.clone(),
+            unit: sp.unit,
+            bitfit: sp.bitfit,
+            offset: ad_off,
+            size,
+        });
+        ad_off += size * 4;
+    }
+    VariantInfo { params, n_base_params }
+}
+
+/// Build the full synthetic manifest for `cfg`.
+fn synth_manifest(cfg: &ModelCfg, seed: u64) -> Manifest {
+    let mut variants = HashMap::new();
+    for v in ["base", "lora", "ia3", "prefix"] {
+        variants.insert(v.to_string(), variant_info(cfg, v));
+    }
+    let n_units = cfg.n_units();
+    let batch_inputs = ["tokens", "targets", "weights"];
+    let mk_artifact = |name: String, variant: &str, grad_names: Vec<String>| {
+        let vinfo = &variants[variant];
+        let mut inputs: Vec<String> = vinfo.params.iter().map(|p| p.name.clone()).collect();
+        inputs.extend(batch_inputs.iter().map(|s| s.to_string()));
+        let mut outputs = vec!["loss".to_string(), "ncorrect".to_string()];
+        outputs.extend(grad_names);
+        ArtifactInfo { name: name.clone(), path: format!("<native>/{name}"), inputs, outputs }
+    };
+    let mut artifacts = Vec::new();
+    for v in ["base", "lora", "ia3", "prefix"] {
+        artifacts.push(mk_artifact(format!("fwd_{v}"), v, Vec::new()));
+    }
+    let base = &variants["base"];
+    let all_base: Vec<String> =
+        base.params.iter().filter(|p| p.unit >= 0).map(|p| p.name.clone()).collect();
+    artifacts.push(mk_artifact("grad_base_full".into(), "base", all_base));
+    for u in 0..n_units {
+        let names: Vec<String> = base
+            .params
+            .iter()
+            .filter(|p| p.unit == u as i64)
+            .map(|p| p.name.clone())
+            .collect();
+        artifacts.push(mk_artifact(unit_artifact(u), "base", names));
+    }
+    let bitfit: Vec<String> =
+        base.params.iter().filter(|p| p.bitfit).map(|p| p.name.clone()).collect();
+    artifacts.push(mk_artifact("grad_base_bitfit".into(), "base", bitfit));
+    for v in ["lora", "ia3", "prefix"] {
+        let names: Vec<String> =
+            variants[v].params.iter().filter(|p| p.unit == -1).map(|p| p.name.clone()).collect();
+        artifacts.push(mk_artifact(format!("grad_{v}_adapter"), v, names));
+    }
+    Manifest {
+        preset: cfg.name.clone(),
+        kernels: "native".to_string(),
+        seed,
+        config: cfg.clone(),
+        n_units,
+        variants,
+        artifacts,
+    }
+}
+
+/// Native CPU reference backend.
+pub struct NativeBackend {
+    manifest: Manifest,
+    seed: u64,
+    /// Simulated device-buffer cache: name → last-seen `(lineage, version)`.
+    /// Keeps [`RuntimeStats`] meaningful (h2d per *changed* tensor only), so
+    /// bench columns compare across backends.
+    uploaded: HashMap<String, (u64, u64)>,
+    pub stats: RuntimeStats,
+}
+
+impl NativeBackend {
+    /// Build from an explicit geometry.
+    pub fn new(cfg: ModelCfg, seed: u64) -> Result<Self> {
+        if cfg.d_model == 0 || cfg.n_heads == 0 || cfg.d_model % cfg.n_heads != 0 {
+            bail!("d_model {} must be a positive multiple of n_heads {}", cfg.d_model, cfg.n_heads);
+        }
+        if cfg.vocab == 0 || cfg.seq_len == 0 || cfg.batch == 0 || cfg.d_ff == 0 {
+            bail!("degenerate model geometry: {cfg:?}");
+        }
+        Ok(NativeBackend {
+            manifest: synth_manifest(&cfg, seed),
+            seed,
+            uploaded: HashMap::new(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// Build one of the named presets (`tiny`, `small`, `base`, …).
+    pub fn preset(name: &str, seed: u64) -> Result<Self> {
+        let cfg = preset_cfg(name)
+            .with_context(|| format!("unknown preset {name:?} (have {PRESET_NAMES:?})"))?;
+        Self::new(cfg, seed)
+    }
+
+    fn init_tensor(&self, idx: usize, name: &str, shape: &[usize]) -> Tensor {
+        match init_kind(name) {
+            Init::Zeros => Tensor::zeros(shape),
+            Init::Ones => Tensor::ones(shape),
+            Init::Normal => {
+                let fan_in = if shape.len() > 1 { shape[0] } else { shape[shape.len() - 1] };
+                let std = if name.contains("emb") {
+                    0.02
+                } else {
+                    1.0 / (fan_in.max(1) as f32).sqrt()
+                };
+                let mut rng = Pcg32::new(self.seed, 1000 + idx as u64);
+                Tensor::randn(shape, std, &mut rng)
+            }
+        }
+    }
+
+    /// Simulated parameter-upload cache (mirrors the PJRT device-buffer
+    /// cache keyed by `(TensorSet lineage, version)`).
+    fn account_uploads(&mut self, params: &TensorSet) {
+        for i in 0..params.len() {
+            let key = params.cache_key(i);
+            let name = &params.names[i];
+            if self.uploaded.get(name) == Some(&key) {
+                self.stats.cache_hits += 1;
+            } else {
+                self.uploaded.insert(name.clone(), key);
+                self.stats.h2d_bytes += params.tensors[i].bytes() as u64;
+                self.stats.cache_misses += 1;
+            }
+        }
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        format!("native-cpu({} threads)", super::par::max_threads())
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput> {
+        batch.validate()?;
+        let info = self.manifest.artifact(artifact)?.clone();
+        let n_inputs = info.inputs.len();
+        if params.len() + 3 != n_inputs {
+            bail!(
+                "artifact {artifact} expects {} inputs, got {} params + 3 batch",
+                n_inputs,
+                params.len()
+            );
+        }
+        // "fwd_<variant>" / "grad_<variant>[_suffix]" → variant name.
+        let variant = artifact
+            .strip_prefix("fwd_")
+            .or_else(|| artifact.strip_prefix("grad_"))
+            .map(|rest| rest.split('_').next().unwrap_or(rest))
+            .with_context(|| format!("cannot infer variant from artifact {artifact:?}"))?
+            .to_string();
+        let vinfo = self.manifest.variant(&variant)?;
+        // Which gradients the artifact asks for: per-unit emit flags plus
+        // the descent bound (adapters live in every layer, so they force a
+        // full downward pass — but not the embedding-gradient scatter).
+        let mut gspec = model::GradSpec {
+            min_unit: usize::MAX,
+            units: vec![false; self.manifest.n_units],
+            adapters: false,
+            dense: false,
+        };
+        for out_name in &info.outputs[2..] {
+            let p = vinfo
+                .params
+                .iter()
+                .find(|p| &p.name == out_name)
+                .with_context(|| format!("grad output {out_name} not a {variant} param"))?;
+            if p.unit < 0 {
+                gspec.adapters = true;
+                gspec.min_unit = 0;
+            } else {
+                let u = p.unit as usize;
+                if u < gspec.units.len() {
+                    gspec.units[u] = true;
+                }
+                gspec.min_unit = gspec.min_unit.min(u);
+                // A bias/LN-only request (BitFit) never needs the dense
+                // weight matmuls.
+                gspec.dense |= p.shape.len() > 1;
+            }
+        }
+
+        self.account_uploads(params);
+        self.stats.h2d_bytes += batch.h2d_bytes() as u64;
+
+        let cfg = self.manifest.config.clone();
+        let t0 = std::time::Instant::now();
+        let fwd = model::forward(&cfg, &variant, params, batch)?;
+        let mut grads = Vec::with_capacity(info.outputs.len().saturating_sub(2));
+        if info.outputs.len() > 2 {
+            let mut all = model::backward(&fwd, &cfg, &variant, params, batch, &gspec)?;
+            for out_name in &info.outputs[2..] {
+                let g = all
+                    .remove(out_name)
+                    .with_context(|| format!("backward produced no grad for {out_name}"))?;
+                self.stats.d2h_bytes += g.bytes() as u64;
+                grads.push(g);
+            }
+        }
+        let exec_time = t0.elapsed();
+        self.stats.executions += 1;
+        self.stats.exec_secs += exec_time.as_secs_f64();
+        Ok(StepOutput { loss: fwd.loss, ncorrect: fwd.ncorrect, grads, exec_time })
+    }
+
+    fn load_params(&self, variant: &str) -> Result<TensorSet> {
+        let vinfo = self.manifest.variant(variant)?;
+        let mut set = TensorSet::new();
+        for (i, p) in vinfo.params.iter().enumerate() {
+            set.push(p.name.clone(), self.init_tensor(i, &p.name, &p.shape));
+        }
+        Ok(set)
+    }
+
+    fn stats(&self) -> &RuntimeStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build_and_expose_manifest() {
+        let be = NativeBackend::preset("tiny", 0).unwrap();
+        let m = be.manifest();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.n_units, m.config.n_layers + 2);
+        assert_eq!(m.kernels, "native");
+        // fwd ×4 + full + units + bitfit + adapters ×3
+        assert_eq!(m.artifacts.len(), 4 + 1 + m.n_units + 1 + 3);
+        for v in ["base", "lora", "ia3", "prefix"] {
+            assert!(m.variant(v).is_ok(), "{v}");
+            assert!(m.artifact(&format!("fwd_{v}")).is_ok());
+        }
+        assert!(NativeBackend::preset("nope", 0).is_err());
+    }
+
+    #[test]
+    fn unit_partition_covers_all_base_params() {
+        let be = NativeBackend::preset("tiny", 0).unwrap();
+        let v = be.manifest().variant("base").unwrap();
+        let total: usize = (0..be.manifest().n_units).map(|u| v.unit_indices(u).len()).sum();
+        assert_eq!(total, v.params.len(), "every base param belongs to exactly one unit");
+        assert!(v.adapter_indices().is_empty());
+        let lora = be.manifest().variant("lora").unwrap();
+        assert_eq!(lora.adapter_indices().len(), 4 * be.manifest().config.n_layers);
+    }
+
+    #[test]
+    fn init_rules_match_python_scheme() {
+        let be = NativeBackend::preset("tiny", 7).unwrap();
+        let p = be.load_params("ia3").unwrap();
+        assert!(p.get("l0.ln1.scale").unwrap().data.iter().all(|&x| x == 1.0));
+        assert!(p.get("l0.ia3.lff").unwrap().data.iter().all(|&x| x == 1.0));
+        assert!(p.get("l0.attn.bq").unwrap().data.iter().all(|&x| x == 0.0));
+        assert!(p.get("head.b").unwrap().data.iter().all(|&x| x == 0.0));
+        assert!(p.get("tok_emb").unwrap().l2_norm() > 0.0);
+        let lora = be.load_params("lora").unwrap();
+        assert!(lora.get("l0.lora.bq").unwrap().data.iter().all(|&x| x == 0.0), "LoRA B = 0");
+        assert!(lora.get("l0.lora.aq").unwrap().l2_norm() > 0.0, "LoRA A random");
+        // deterministic per seed
+        let be2 = NativeBackend::preset("tiny", 7).unwrap();
+        let q = be2.load_params("ia3").unwrap();
+        assert_eq!(p.get("tok_emb").unwrap(), q.get("tok_emb").unwrap());
+    }
+
+    #[test]
+    fn run_checks_param_arity() {
+        let mut be = NativeBackend::preset("tiny", 0).unwrap();
+        let params = be.load_params("base").unwrap();
+        let batch = Batch::new(2, 8);
+        assert!(be.run("fwd_lora", &params, &batch).is_err(), "base params ≠ lora inputs");
+        assert!(be.run("nope", &params, &batch).is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! `std::thread` chunking helpers for the native backend's hot loops.
+//!
+//! Everything here is deterministic regardless of thread count: work is
+//! split into disjoint output regions and every output element is produced
+//! by a sequential reduction in a fixed order, so a run with
+//! `HIFT_THREADS=1` is bit-identical to one with 32 threads — which the
+//! equivalence tests rely on.
+//!
+//! Small inputs fall back to the serial path (spawning threads costs more
+//! than a few thousand flops), so the tiny test models pay no overhead.
+
+use std::sync::OnceLock;
+
+/// Minimum flops of per-thread work before a loop is split across threads.
+const MIN_FLOPS: usize = 1 << 17;
+
+/// Minimum elements per thread for flat elementwise loops.
+const MIN_ELEMS: usize = 1 << 16;
+
+/// Worker count: `HIFT_THREADS` env override, else the machine's parallelism.
+pub fn max_threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("HIFT_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Split `data` into row-aligned chunks (`row_len` elements per row) and run
+/// `f(first_row, chunk)` on each chunk, using up to [`max_threads`] scoped
+/// threads.  Runs serially when fewer than `min_rows` rows per thread would
+/// be available.
+pub fn par_rows<F>(data: &mut [f32], row_len: usize, min_rows: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && data.len() % row_len == 0, "data not row-aligned");
+    let rows = data.len() / row_len;
+    if rows == 0 {
+        return;
+    }
+    let threads = max_threads().min(rows.div_ceil(min_rows.max(1)));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, chunk) in data.chunks_mut(per * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * per, chunk));
+        }
+    });
+}
+
+/// `c += a @ b` for row-major `a: [M,K]`, `b: [K,N]`, `c: [M,N]`, parallel
+/// over rows of `c`.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul: a");
+    assert_eq!(b.len(), k * n, "matmul: b");
+    assert_eq!(c.len(), m * n, "matmul: c");
+    let min_rows = MIN_FLOPS.div_ceil((k * n).max(1));
+    par_rows(c, n, min_rows, |r0, cc| {
+        for (ri, crow) in cc.chunks_mut(n).enumerate() {
+            let i = r0 + ri;
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik != 0.0 {
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `c += aᵀ @ b` for `a: [M,K]`, `b: [M,N]`, `c: [K,N]` — the weight-grad
+/// shape (`dW = Xᵀ dY`), parallel over rows of `c`.
+pub fn matmul_at(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_at: a");
+    assert_eq!(b.len(), m * n, "matmul_at: b");
+    assert_eq!(c.len(), k * n, "matmul_at: c");
+    let min_rows = MIN_FLOPS.div_ceil((m * n).max(1));
+    par_rows(c, n, min_rows, |r0, cc| {
+        for (ri, crow) in cc.chunks_mut(n).enumerate() {
+            let kk = r0 + ri;
+            for i in 0..m {
+                let aik = a[i * k + kk];
+                if aik != 0.0 {
+                    let brow = &b[i * n..(i + 1) * n];
+                    for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `c += a @ bᵀ` for `a: [M,K]`, `b: [N,K]`, `c: [M,N]` — the input-grad
+/// shape (`dX = dY Wᵀ`), parallel over rows of `c`.
+pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_bt: a");
+    assert_eq!(b.len(), n * k, "matmul_bt: b");
+    assert_eq!(c.len(), m * n, "matmul_bt: c");
+    let min_rows = MIN_FLOPS.div_ceil((k * n).max(1));
+    par_rows(c, n, min_rows, |r0, cc| {
+        for (ri, crow) in cc.chunks_mut(n).enumerate() {
+            let i = r0 + ri;
+            let arow = &a[i * k..(i + 1) * k];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow.iter()) {
+                    acc += x * y;
+                }
+                *cj += acc;
+            }
+        }
+    });
+}
+
+/// Process `n` independent items across threads, where item `i` owns the
+/// disjoint slices `a[i*a_item..][..a_item]` and `b[i*b_item..][..b_item]`.
+pub fn par_items2<F>(a: &mut [f32], a_item: usize, b: &mut [f32], b_item: usize, f: F)
+where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    assert!(a_item > 0 && b_item > 0);
+    let n = a.len() / a_item;
+    assert_eq!(a.len(), n * a_item, "par_items2: a not item-aligned");
+    assert_eq!(b.len(), n * b_item, "par_items2: b item count mismatch");
+    if n == 0 {
+        return;
+    }
+    let threads = max_threads().min(n).min((a.len() + b.len()).div_ceil(MIN_ELEMS));
+    if threads <= 1 {
+        for (i, (ai, bi)) in a.chunks_mut(a_item).zip(b.chunks_mut(b_item)).enumerate() {
+            f(i, ai, bi);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (g, (ac, bc)) in a.chunks_mut(per * a_item).zip(b.chunks_mut(per * b_item)).enumerate()
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (j, (ai, bi)) in ac.chunks_mut(a_item).zip(bc.chunks_mut(b_item)).enumerate() {
+                    f(g * per + j, ai, bi);
+                }
+            });
+        }
+    });
+}
+
+/// Three-output variant of [`par_items2`] (attention backward needs dq/dk/dv).
+pub fn par_items3<F>(
+    a: &mut [f32],
+    a_item: usize,
+    b: &mut [f32],
+    b_item: usize,
+    c: &mut [f32],
+    c_item: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    assert!(a_item > 0 && b_item > 0 && c_item > 0);
+    let n = a.len() / a_item;
+    assert_eq!(a.len(), n * a_item, "par_items3: a not item-aligned");
+    assert_eq!(b.len(), n * b_item, "par_items3: b item count mismatch");
+    assert_eq!(c.len(), n * c_item, "par_items3: c item count mismatch");
+    if n == 0 {
+        return;
+    }
+    let work = a.len() + b.len() + c.len();
+    let threads = max_threads().min(n).min(work.div_ceil(MIN_ELEMS));
+    if threads <= 1 {
+        for (i, ((ai, bi), ci)) in
+            a.chunks_mut(a_item).zip(b.chunks_mut(b_item)).zip(c.chunks_mut(c_item)).enumerate()
+        {
+            f(i, ai, bi, ci);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (g, ((ac, bc), cc)) in a
+            .chunks_mut(per * a_item)
+            .zip(b.chunks_mut(per * b_item))
+            .zip(c.chunks_mut(per * c_item))
+            .enumerate()
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (j, ((ai, bi), ci)) in
+                    ac.chunks_mut(a_item).zip(bc.chunks_mut(b_item)).zip(cc.chunks_mut(c_item)).enumerate()
+                {
+                    f(g * per + j, ai, bi, ci);
+                }
+            });
+        }
+    });
+}
+
+/// Elementwise `f(&mut p[i], g[i])` chunked across threads (SGD-style).
+pub fn par_apply2<F>(p: &mut [f32], g: &[f32], f: F)
+where
+    F: Fn(&mut f32, f32) + Sync,
+{
+    assert_eq!(p.len(), g.len());
+    let n = p.len();
+    let threads = max_threads().min(n.div_ceil(MIN_ELEMS));
+    if threads <= 1 {
+        for (pi, &gi) in p.iter_mut().zip(g.iter()) {
+            f(pi, gi);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (pc, gc) in p.chunks_mut(per).zip(g.chunks(per)) {
+            let f = &f;
+            s.spawn(move || {
+                for (pi, &gi) in pc.iter_mut().zip(gc.iter()) {
+                    f(pi, gi);
+                }
+            });
+        }
+    });
+}
+
+/// Elementwise `f(&mut p[i], &mut s[i], g[i])` (one state buffer: SGDM, Adagrad).
+pub fn par_apply3<F>(p: &mut [f32], st: &mut [f32], g: &[f32], f: F)
+where
+    F: Fn(&mut f32, &mut f32, f32) + Sync,
+{
+    assert_eq!(p.len(), g.len());
+    assert_eq!(p.len(), st.len());
+    let n = p.len();
+    let threads = max_threads().min(n.div_ceil(MIN_ELEMS));
+    if threads <= 1 {
+        for i in 0..n {
+            f(&mut p[i], &mut st[i], g[i]);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for ((pc, sc), gc) in p.chunks_mut(per).zip(st.chunks_mut(per)).zip(g.chunks(per)) {
+            let f = &f;
+            s.spawn(move || {
+                for i in 0..pc.len() {
+                    f(&mut pc[i], &mut sc[i], gc[i]);
+                }
+            });
+        }
+    });
+}
+
+/// Elementwise `f(&mut p[i], &mut m[i], &mut v[i], g[i])` (AdamW).
+pub fn par_apply4<F>(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], f: F)
+where
+    F: Fn(&mut f32, &mut f32, &mut f32, f32) + Sync,
+{
+    assert_eq!(p.len(), g.len());
+    assert_eq!(p.len(), m.len());
+    assert_eq!(p.len(), v.len());
+    let n = p.len();
+    let threads = max_threads().min(n.div_ceil(MIN_ELEMS));
+    if threads <= 1 {
+        for i in 0..n {
+            f(&mut p[i], &mut m[i], &mut v[i], g[i]);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (((pc, mc), vc), gc) in
+            p.chunks_mut(per).zip(m.chunks_mut(per)).zip(v.chunks_mut(per)).zip(g.chunks(per))
+        {
+            let f = &f;
+            s.spawn(move || {
+                for i in 0..pc.len() {
+                    f(&mut pc[i], &mut mc[i], &mut vc[i], gc[i]);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * scale - 0.4).collect()
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let (m, k, n) = (7, 5, 9);
+        let a = seq(m * k, 0.1);
+        let b = seq(k * n, 0.2);
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n);
+        let want = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_at_is_transposed_a() {
+        let (m, k, n) = (6, 4, 5);
+        let a = seq(m * k, 0.3);
+        let b = seq(m * n, 0.1);
+        // aT: [K,M]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let want = naive_matmul(&at, &b, k, m, n);
+        let mut c = vec![0.0; k * n];
+        matmul_at(&a, &b, &mut c, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_is_transposed_b() {
+        let (m, k, n) = (3, 6, 4);
+        let a = seq(m * k, 0.2);
+        let b = seq(n * k, 0.3); // [N,K]
+        let mut bt = vec![0.0; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                bt[j * n + i] = b[i * k + j];
+            }
+        }
+        let want = naive_matmul(&a, &bt, m, k, n);
+        let mut c = vec![0.0; m * n];
+        matmul_bt(&a, &b, &mut c, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        let mut data = vec![0.0f32; 13 * 4];
+        par_rows(&mut data, 4, 1, |r0, chunk| {
+            for (ri, row) in chunk.chunks_mut(4).enumerate() {
+                for x in row.iter_mut() {
+                    *x += (r0 + ri) as f32;
+                }
+            }
+        });
+        for (r, row) in data.chunks(4).enumerate() {
+            assert!(row.iter().all(|&x| x == r as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_items_assign_disjoint_slices() {
+        let mut a = vec![0.0f32; 6 * 3];
+        let mut b = vec![0.0f32; 6 * 2];
+        par_items2(&mut a, 3, &mut b, 2, |i, ai, bi| {
+            ai.fill(i as f32);
+            bi.fill(-(i as f32));
+        });
+        for (i, chunk) in a.chunks(3).enumerate() {
+            assert!(chunk.iter().all(|&x| x == i as f32));
+        }
+        for (i, chunk) in b.chunks(2).enumerate() {
+            assert!(chunk.iter().all(|&x| x == -(i as f32)));
+        }
+    }
+
+    #[test]
+    fn par_apply_updates_every_element() {
+        let mut p = vec![1.0f32; 100];
+        let g: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        par_apply2(&mut p, &g, |pi, gi| *pi += gi);
+        for (i, x) in p.iter().enumerate() {
+            assert_eq!(*x, 1.0 + i as f32);
+        }
+    }
+}

@@ -8,9 +8,10 @@
 use anyhow::Result;
 
 use super::{acc_cell, default_spec, print_table, Bench};
+use crate::backend::ExecBackend;
+use crate::coordinator::strategy::UpdateStrategy;
 use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
 use crate::optim::OptimKind;
-use crate::coordinator::strategy::UpdateStrategy;
 use crate::ser::Value;
 
 /// Table 1 — few-shot prompt-style comparison: gradient-free (MeZO family)
@@ -194,13 +195,13 @@ pub fn mtbench(b: &mut Bench) -> Result<()> {
         let mut strategy = spec.build(b.rt.manifest())?;
         let mut params = b.rt.load_params(strategy.variant())?;
         let mut task = InstructTask::new(b.geom(), 1);
-        train(&mut b.rt, strategy.as_mut(), &mut params, &mut task,
+        train(b.rt.as_mut(), strategy.as_mut(), &mut params, &mut task,
               TrainCfg { steps, eval_every: 0, log_every: 0 })?;
         let fwd = strategy.fwd_artifact();
         let mut row = vec![strat.to_string()];
         let mut sum = 0.0;
         for c in 0..cats.len() {
-            let ev = evaluate(&mut b.rt, &fwd, &params, &task.eval_category(c))?;
+            let ev = evaluate(b.rt.as_mut(), &fwd, &params, &task.eval_category(c))?;
             row.push(format!("{:.1}", ev.acc * 100.0));
             sum += ev.acc;
             json.push(Value::obj(vec![

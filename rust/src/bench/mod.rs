@@ -8,7 +8,9 @@
 //! who wins, roughly by how much, where the crossovers are.
 //!
 //! Env knobs:
-//! * `HIFT_ARTIFACTS` — artifact dir (default `artifacts/tiny`)
+//! * `HIFT_ARTIFACTS` — artifact dir (selects the PJRT backend; needs the
+//!   `pjrt` cargo feature).  Unset ⇒ the native CPU backend.
+//! * `HIFT_PRESET`    — native-backend geometry (default `tiny`)
 //! * `HIFT_QUICK=1`   — trim steps/seeds for smoke runs
 //! * `HIFT_OUT`       — output dir for JSON records (default `runs`)
 
@@ -18,18 +20,18 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::backend::{self, ExecBackend};
 use crate::coordinator::trainer::{self, RunRecord, TrainCfg};
 use crate::data::{build_task, TaskGeom};
 use crate::metrics::Series;
 use crate::optim::OptimKind;
-use crate::runtime::Runtime;
 use crate::ser::{emit_pretty, Value};
 use crate::strategies::StrategySpec;
 
-/// Shared bench context: one Runtime (executable cache persists across
+/// Shared bench context: one backend (compile/upload caches persist across
 /// runs), output dir, quick-mode flag.
 pub struct Bench {
-    pub rt: Runtime,
+    pub rt: Box<dyn ExecBackend>,
     pub out_dir: PathBuf,
     pub quick: bool,
 }
@@ -37,12 +39,10 @@ pub struct Bench {
 impl Bench {
     /// Construct from env (see module docs).
     pub fn from_env() -> Result<Self> {
-        let artifacts =
-            std::env::var("HIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts/tiny".to_string());
         let out_dir = PathBuf::from(std::env::var("HIFT_OUT").unwrap_or_else(|_| "runs".to_string()));
         std::fs::create_dir_all(&out_dir)?;
         let quick = std::env::var("HIFT_QUICK").map(|v| v == "1").unwrap_or(false);
-        Ok(Bench { rt: Runtime::load(artifacts)?, out_dir, quick })
+        Ok(Bench { rt: backend::from_env()?, out_dir, quick })
     }
 
     pub fn geom(&self) -> TaskGeom {
@@ -75,7 +75,7 @@ impl Bench {
         let mut task = build_task(task_name, self.geom(), seed)
             .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
         trainer::train(
-            &mut self.rt,
+            self.rt.as_mut(),
             strategy.as_mut(),
             &mut params,
             task.as_mut(),
@@ -105,7 +105,7 @@ impl Bench {
     pub fn zero_shot(&mut self, task_name: &str, seed: u64) -> Result<f64> {
         let params = self.rt.load_params("base")?;
         let task = build_task(task_name, self.geom(), seed).unwrap();
-        let ev = trainer::evaluate(&mut self.rt, "fwd_base", &params, task.eval_batches())?;
+        let ev = trainer::evaluate(self.rt.as_mut(), "fwd_base", &params, task.eval_batches())?;
         Ok(ev.acc)
     }
 

@@ -1,13 +1,18 @@
 //! The `hift` command-line launcher (hand-rolled parsing — no clap in the
 //! offline vendor set).
 //!
+//! By default every command runs on the **native CPU backend** (no
+//! artifacts, no Python): `--preset tiny|small|base|e2e|e2e100m` picks the
+//! geometry.  Passing `--artifacts DIR` selects the PJRT engine instead
+//! (requires building with `--features pjrt`).
+//!
 //! ```text
-//! hift train  --artifacts DIR --strategy hift --task motif4 --steps 200
-//!             [--optim adamw] [--lr 4e-3] [--m 1] [--order b2u] [--seed 0]
-//!             [--eval-every 50] [--log-every 10] [--out runs/run.json]
-//! hift eval   --artifacts DIR [--variant base] --task motif4
+//! hift train  [--preset tiny | --artifacts DIR] --strategy hift --task motif4
+//!             [--steps 200] [--optim adamw] [--lr 4e-3] [--m 1] [--order b2u]
+//!             [--seed 0] [--eval-every 50] [--log-every 10] [--out runs/run.json]
+//! hift eval   [--preset tiny | --artifacts DIR] [--variant base] --task motif4
 //! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
-//! hift info   --artifacts DIR
+//! hift info   [--preset tiny | --artifacts DIR]
 //! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6|tables8_12|all>
 //! ```
 
@@ -17,17 +22,19 @@ pub use args::Args;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::{build_backend, ExecBackend};
 use crate::bench::{exhibits, Bench};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::coordinator::trainer::{self, TrainCfg};
 use crate::data::{build_task, TaskGeom, TASK_NAMES};
 use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
 use crate::optim::OptimKind;
-use crate::runtime::Runtime;
 use crate::ser::emit_pretty;
 use crate::strategies::{StrategySpec, STRATEGY_NAMES};
 
 const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
+  backends: --preset tiny|small|base|e2e|e2e100m (native CPU, default)
+            --artifacts DIR (PJRT; needs the `pjrt` cargo feature)
   (see `hift help` or the module docs of hift::cli for flag lists)";
 
 /// Binary entrypoint.
@@ -53,19 +60,22 @@ pub fn main_entry() -> Result<()> {
     }
 }
 
-fn geom(rt: &Runtime) -> TaskGeom {
-    let c = &rt.manifest().config;
+fn geom(be: &dyn ExecBackend) -> TaskGeom {
+    let c = &be.manifest().config;
     TaskGeom::new(c.vocab, c.batch, c.seq_len)
 }
 
+fn backend_from(a: &Args, seed: u64) -> Result<Box<dyn ExecBackend>> {
+    build_backend(a.get("artifacts"), a.get("preset"), seed)
+}
+
 fn cmd_train(a: &Args) -> Result<()> {
-    let artifacts = a.get("artifacts").unwrap_or("artifacts/tiny");
     let strategy_name = a.get("strategy").unwrap_or("hift");
     let task_name = a.get("task").unwrap_or("motif4");
     let steps: u64 = a.get_num("steps").unwrap_or(200.0) as u64;
     let seed: u64 = a.get_num("seed").unwrap_or(0.0) as u64;
 
-    let mut rt = Runtime::load(artifacts)?;
+    let mut be = backend_from(a, seed)?;
     let optim = OptimKind::parse(a.get("optim").unwrap_or("adamw"))
         .context("bad --optim (adamw|sgd|sgdm|adagrad|adafactor)")?;
     let mut spec = StrategySpec::new(strategy_name, optim, a.get_num("lr").unwrap_or(4e-3) as f32,
@@ -76,19 +86,19 @@ fn cmd_train(a: &Args) -> Result<()> {
     spec.warmup = a.get_num("warmup").unwrap_or(0.0) as usize;
     spec.seed = seed;
 
-    let mut strategy = spec.build(rt.manifest())?;
-    let mut params = rt.load_params(strategy.variant())?;
-    let mut task = build_task(task_name, geom(&rt), seed)
+    let mut strategy = spec.build(be.manifest())?;
+    let mut params = be.load_params(strategy.variant())?;
+    let mut task = build_task(task_name, geom(be.as_ref()), seed)
         .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
     eprintln!(
         "training {} on {} for {steps} steps ({} params, platform {})",
         strategy.name(),
         task.name(),
         params.total_params(),
-        rt.platform()
+        be.platform()
     );
     let rec = trainer::train(
-        &mut rt,
+        be.as_mut(),
         strategy.as_mut(),
         &mut params,
         task.as_mut(),
@@ -110,14 +120,15 @@ fn cmd_train(a: &Args) -> Result<()> {
 }
 
 fn cmd_eval(a: &Args) -> Result<()> {
-    let artifacts = a.get("artifacts").unwrap_or("artifacts/tiny");
     let variant = a.get("variant").unwrap_or("base");
     let task_name = a.get("task").unwrap_or("motif4");
-    let mut rt = Runtime::load(artifacts)?;
-    let params = rt.load_params(variant)?;
-    let task = build_task(task_name, geom(&rt), a.get_num("seed").unwrap_or(0.0) as u64)
+    let seed = a.get_num("seed").unwrap_or(0.0) as u64;
+    let mut be = backend_from(a, seed)?;
+    let params = be.load_params(variant)?;
+    let task = build_task(task_name, geom(be.as_ref()), seed)
         .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
-    let ev = trainer::evaluate(&mut rt, &format!("fwd_{variant}"), &params, task.eval_batches())?;
+    let ev =
+        trainer::evaluate(be.as_mut(), &format!("fwd_{variant}"), &params, task.eval_batches())?;
     println!("task={task_name} variant={variant} acc={:.4} loss={:.4}", ev.acc, ev.loss);
     Ok(())
 }
@@ -178,9 +189,9 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
 }
 
 fn cmd_info(a: &Args) -> Result<()> {
-    let artifacts = a.get("artifacts").unwrap_or("artifacts/tiny");
-    let rt = Runtime::load(artifacts)?;
-    let m = rt.manifest();
+    let be = backend_from(a, a.get_num("seed").unwrap_or(0.0) as u64)?;
+    let m = be.manifest();
+    println!("backend:  {} ({})", be.name(), be.platform());
     println!("preset:   {} (kernels={}, seed={})", m.preset, m.kernels, m.seed);
     let c = &m.config;
     println!(
@@ -204,6 +215,14 @@ fn cmd_bench(a: &Args) -> Result<()> {
     let which = a.positional.first().map(String::as_str).unwrap_or("all");
     if let Some(dir) = a.get("artifacts") {
         std::env::set_var("HIFT_ARTIFACTS", dir);
+    }
+    if let Some(preset) = a.get("preset") {
+        std::env::set_var("HIFT_PRESET", preset);
+        if a.get("artifacts").is_none() {
+            // An explicit --preset means the native backend: don't let an
+            // inherited HIFT_ARTIFACTS silently override it.
+            std::env::remove_var("HIFT_ARTIFACTS");
+        }
     }
     let mut b = Bench::from_env()?;
     let run = |b: &mut Bench, name: &str| -> Result<()> {

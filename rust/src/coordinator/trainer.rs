@@ -5,11 +5,11 @@
 
 use anyhow::Result;
 
+use crate::backend::{Batch, ExecBackend};
 use crate::data::Task;
 use crate::metrics::{Accuracy, Series, Throughput};
 use crate::ser::Value;
 use crate::strategies::FineTuneStrategy;
-use crate::runtime::{Batch, Runtime};
 use crate::tensor::TensorSet;
 
 /// Driver configuration.
@@ -36,21 +36,27 @@ pub struct EvalResult {
 }
 
 /// Evaluate `params` on fixed batches with a forward artifact.
+///
+/// Eval loss is weighted by each batch's loss-mask weight sum (each batch's
+/// loss is already a weighted mean over its own mask): a plain per-batch
+/// mean would bias the aggregate whenever batches carry uneven masking.
 pub fn evaluate(
-    rt: &mut Runtime,
+    be: &mut dyn ExecBackend,
     fwd_artifact: &str,
     params: &TensorSet,
     batches: &[Batch],
 ) -> Result<EvalResult> {
     let mut acc = Accuracy::default();
     let mut loss_sum = 0.0f64;
+    let mut weight_total = 0.0f64;
     for b in batches {
-        let out = rt.run(fwd_artifact, params, b)?;
+        let out = be.run(fwd_artifact, params, b)?;
         let wsum: f64 = b.weights.iter().map(|&w| w as f64).sum();
         acc.add(out.ncorrect as f64, wsum);
-        loss_sum += out.loss as f64;
+        loss_sum += out.loss as f64 * wsum;
+        weight_total += wsum;
     }
-    Ok(EvalResult { acc: acc.value(), loss: loss_sum / batches.len().max(1) as f64 })
+    Ok(EvalResult { acc: acc.value(), loss: loss_sum / weight_total.max(1e-9) })
 }
 
 /// Everything one training run produced.
@@ -126,9 +132,9 @@ impl RunRecord {
 /// Run `strategy` on `task` for `cfg.steps` steps.
 ///
 /// `params` must have been loaded for `strategy.variant()`
-/// (see [`Runtime::load_params`]).
+/// (see [`ExecBackend::load_params`]).
 pub fn train(
-    rt: &mut Runtime,
+    be: &mut dyn ExecBackend,
     strategy: &mut dyn FineTuneStrategy,
     params: &mut TensorSet,
     task: &mut dyn Task,
@@ -143,7 +149,7 @@ pub fn train(
 
     for step in 1..=cfg.steps {
         let batch = task.train_batch();
-        let stats = strategy.step(rt, params, &batch)?;
+        let stats = strategy.step(be, params, &batch)?;
         losses.push(stats.loss as f64);
         train_acc.add(stats.ncorrect as f64, stats.weight_sum as f64);
         exec_secs += stats.exec_time.as_secs_f64();
@@ -161,7 +167,7 @@ pub fn train(
             );
         }
         if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
-            let ev = evaluate(rt, &fwd, params, task.eval_batches())?;
+            let ev = evaluate(be, &fwd, params, task.eval_batches())?;
             evals.push((step, ev.acc, ev.loss));
             if cfg.log_every > 0 {
                 eprintln!("[{}]   eval@{step}: acc={:.4} loss={:.4}", strategy.name(), ev.acc, ev.loss);
@@ -169,7 +175,7 @@ pub fn train(
         }
     }
 
-    let final_eval = evaluate(rt, &fwd, params, task.eval_batches())?;
+    let final_eval = evaluate(be, &fwd, params, task.eval_batches())?;
     let wall = thr.elapsed_secs();
     Ok(RunRecord {
         strategy: strategy.name().to_string(),
@@ -196,12 +202,12 @@ pub struct Trainer;
 impl Trainer {
     /// See [`train`].
     pub fn run(
-        rt: &mut Runtime,
+        be: &mut dyn ExecBackend,
         strategy: &mut dyn FineTuneStrategy,
         params: &mut TensorSet,
         task: &mut dyn Task,
         cfg: TrainCfg,
     ) -> Result<RunRecord> {
-        train(rt, strategy, params, task, cfg)
+        train(be, strategy, params, task, cfg)
     }
 }

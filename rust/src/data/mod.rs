@@ -17,8 +17,8 @@
 //! position-aligned) and `weights` (loss mask — 1 only where the task
 //! defines supervision).
 
+use crate::backend::Batch;
 use crate::rng::Pcg32;
-use crate::runtime::Batch;
 
 /// A supervised task: a train-batch sampler plus a fixed eval set.
 pub trait Task {

@@ -1,22 +1,25 @@
-//! # hift — Hierarchical Full-Parameter Fine-Tuning (EMNLP 2024) in Rust+XLA
+//! # hift — Hierarchical Full-Parameter Fine-Tuning (EMNLP 2024) in Rust
 //!
-//! A three-layer reproduction of *HiFT: A Hierarchical Full Parameter
-//! Fine-Tuning Strategy* (Liu et al., EMNLP 2024):
+//! A reproduction of *HiFT: A Hierarchical Full Parameter Fine-Tuning
+//! Strategy* (Liu et al., EMNLP 2024) with a **pluggable execution
+//! backend**:
 //!
-//! * **L1** — Pallas kernels (flash attention, fused cross-entropy,
-//!   layernorm), authored in `python/compile/kernels/` and lowered into the
-//!   model's HLO at build time.
-//! * **L2** — a JAX transformer LM (`python/compile/model.py`) lowered once
-//!   per layer-unit to HLO-text artifacts (`make artifacts`).
-//! * **L3** — this crate: the HiFT coordinator (Algorithm 1 of the paper),
-//!   the baselines it is compared against, the optimizers with host↔device
-//!   state paging, the analytic device-memory model that regenerates the
-//!   paper's memory tables, and the benchmark harnesses for every table and
-//!   figure in the evaluation.
+//! * **native (default)** — a pure-Rust decoder-only transformer LM with
+//!   hand-written forward + backward ([`backend::model`]), organized into
+//!   the same per-layer-unit gradient artifacts the manifest names
+//!   (`grad_base_u{i}`, `grad_base_full`, `fwd_base`, …).  The whole
+//!   training loop — HiFT, every baseline, the trainer, all bench
+//!   harnesses — builds, tests and runs offline with zero external
+//!   dependencies: `cargo run --example quickstart`.
+//! * **pjrt (feature `pjrt`)** — the three-layer XLA path: Pallas kernels
+//!   (`python/compile/kernels/`) lowered into per-unit HLO artifacts
+//!   (`make artifacts`), loaded and executed through the PJRT C API
+//!   ([`runtime`]).  Python never runs on the training path.
 //!
-//! Python never runs on the training path: the Rust binary loads the
-//! AOT-compiled artifacts through the PJRT C API (`xla` crate) and owns the
-//! training loop, optimizer math, batching and metrics.
+//! Both engines implement [`backend::ExecBackend`]; strategies, trainer,
+//! benches and CLI take `&mut dyn ExecBackend`, so the coordinator code is
+//! identical either way — which is itself the paper's point: HiFT only
+//! needs per-group gradients, not a particular autodiff substrate.
 //!
 //! ## Module map
 //!
@@ -25,7 +28,8 @@
 //! | [`ser`] | minimal JSON (no serde in the offline vendor set) |
 //! | [`rng`] | deterministic PCG RNG (MeZO perturbations, shuffles) |
 //! | [`tensor`] | flat f32 tensors + the math optimizers need |
-//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`backend`] | the execution seam: `ExecBackend`, manifest, native CPU model, thread helpers |
+//! | [`runtime`] | PJRT client, artifact registry, executable cache (`pjrt` feature) |
 //! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger |
 //! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer |
 //! | [`strategies`] | FPFT, LoRA, IA3, prefix, BitFit, LP, MeZO, LOMO, … |
@@ -35,6 +39,7 @@
 //! | [`bench`] | table/figure harnesses shared by `cargo bench` targets |
 //! | [`proptest`] | minimal property-testing harness (offline substitute) |
 
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
@@ -44,6 +49,7 @@ pub mod metrics;
 pub mod optim;
 pub mod proptest;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod ser;
 pub mod strategies;

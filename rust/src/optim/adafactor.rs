@@ -11,6 +11,7 @@
 //! (we use the external LR so the delayed-LR schedule stays in charge).
 
 use super::{OptimCfg, OptimKind, Optimizer};
+use crate::backend::par;
 use crate::tensor::Tensor;
 
 enum Factored {
@@ -107,10 +108,9 @@ impl Optimizer for Adafactor {
         // RMS clipping: scale so rms(update) <= d.
         let rms = (upd.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
         let denom = (rms / d_clip).max(1.0);
-        for i in 0..n {
-            let p = param.data[i];
-            param.data[i] = p - lr * (upd[i] / denom + wd * p);
-        }
+        par::par_apply2(&mut param.data, &upd, |p, u| {
+            *p -= lr * (u / denom + wd * *p);
+        });
     }
 
     fn state_bytes(&self, idx: usize) -> usize {

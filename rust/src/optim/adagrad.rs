@@ -4,6 +4,7 @@
 //! Tables 8–12).
 
 use super::{OptimCfg, OptimKind, Optimizer};
+use crate::backend::par;
 use crate::tensor::Tensor;
 
 pub struct Adagrad {
@@ -23,11 +24,11 @@ impl Optimizer for Adagrad {
         let eps = self.cfg.eps.max(1e-10);
         let wd = self.cfg.weight_decay;
         let acc = self.states[idx].get_or_insert_with(|| vec![0.0; param.numel()]);
-        for i in 0..param.data.len() {
-            let g = grad.data[i] + wd * param.data[i];
-            acc[i] += g * g;
-            param.data[i] -= lr * g / (acc[i].sqrt() + eps);
-        }
+        par::par_apply3(&mut param.data, acc, &grad.data, |p, a, g| {
+            let g = g + wd * *p;
+            *a += g * g;
+            *p -= lr * g / (a.sqrt() + eps);
+        });
     }
 
     fn state_bytes(&self, idx: usize) -> usize {

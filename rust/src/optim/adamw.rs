@@ -7,6 +7,7 @@
 //! the global step — is the mathematically right correction.
 
 use super::{OptimCfg, OptimKind, Optimizer};
+use crate::backend::par;
 use crate::tensor::Tensor;
 
 struct State {
@@ -40,18 +41,19 @@ impl Optimizer for AdamW {
         let (b1, b2, eps, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.cfg.weight_decay);
         let bc1 = 1.0 - b1.powi(st.t as i32);
         let bc2 = 1.0 - b2.powi(st.t as i32);
-        // Single fused loop over the tensor — the L3 hot path.
-        for i in 0..param.data.len() {
-            let g = grad.data[i];
-            let m = b1 * st.m[i] + (1.0 - b1) * g;
-            let v = b2 * st.v[i] + (1.0 - b2) * g * g;
-            st.m[i] = m;
-            st.v[i] = v;
-            let mhat = m / bc1;
-            let vhat = v / bc2;
-            let p = param.data[i];
-            param.data[i] = p - lr * (mhat / (vhat.sqrt() + eps) + wd * p);
-        }
+        // Single fused loop over the tensor — the L3 hot path, chunked
+        // across threads for large tensors (element-independent, so the
+        // result is identical at any thread count).
+        let State { m, v, .. } = st;
+        par::par_apply4(&mut param.data, m, v, &grad.data, |p, mi, vi, g| {
+            let m_new = b1 * *mi + (1.0 - b1) * g;
+            let v_new = b2 * *vi + (1.0 - b2) * g * g;
+            *mi = m_new;
+            *vi = v_new;
+            let mhat = m_new / bc1;
+            let vhat = v_new / bc2;
+            *p -= lr * (mhat / (vhat.sqrt() + eps) + wd * *p);
+        });
     }
 
     fn state_bytes(&self, idx: usize) -> usize {

@@ -6,6 +6,7 @@
 //! (ζ₂ = ζ₁ in the Appendix-B accounting, Tables 8–12 "SGDM" rows).
 
 use super::{OptimCfg, OptimKind, Optimizer};
+use crate::backend::par;
 use crate::tensor::Tensor;
 
 /// Plain SGD: `p -= lr * (g + wd * p)`. No state at all.
@@ -23,9 +24,9 @@ impl Optimizer for Sgd {
     fn update(&mut self, _idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32) {
         assert_eq!(param.shape, grad.shape);
         let wd = self.cfg.weight_decay;
-        for i in 0..param.data.len() {
-            param.data[i] -= lr * (grad.data[i] + wd * param.data[i]);
-        }
+        par::par_apply2(&mut param.data, &grad.data, |p, g| {
+            *p -= lr * (g + wd * *p);
+        });
     }
 
     fn state_bytes(&self, _idx: usize) -> usize {
@@ -59,12 +60,11 @@ impl Optimizer for Sgdm {
         let mu = self.cfg.momentum;
         let wd = self.cfg.weight_decay;
         let buf = self.states[idx].get_or_insert_with(|| vec![0.0; param.numel()]);
-        for i in 0..param.data.len() {
-            let g = grad.data[i] + wd * param.data[i];
-            let u = mu * buf[i] + g;
-            buf[i] = u;
-            param.data[i] -= lr * u;
-        }
+        par::par_apply3(&mut param.data, buf, &grad.data, |p, b, g| {
+            let u = mu * *b + (g + wd * *p);
+            *b = u;
+            *p -= lr * u;
+        });
     }
 
     fn state_bytes(&self, idx: usize) -> usize {

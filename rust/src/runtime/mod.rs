@@ -1,4 +1,6 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute from the L3 loop.
+//! PJRT runtime (the `pjrt` cargo feature): load AOT artifacts, compile
+//! once, execute from the L3 loop — one implementation of
+//! [`ExecBackend`].
 //!
 //! Pattern follows `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
@@ -8,8 +10,10 @@
 //! Interchange is HLO *text*; all artifacts were lowered with
 //! `return_tuple=True`, so each execution returns a single tuple literal
 //! that we decompose into `(loss, ncorrect, grads…)`.
-
-pub mod manifest;
+//!
+//! The default build ships the vendored API-stub `xla` crate (so this
+//! module stays type-checked offline); point `rust/vendor/xla` at a real
+//! PJRT binding to actually execute artifacts.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -17,58 +21,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::{Batch, ExecBackend, Manifest, RuntimeStats, StepOutput};
 use crate::tensor::{Tensor, TensorSet};
-pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
-
-/// One training/eval batch, shaped `[B, S]` row-major.
-#[derive(Debug, Clone)]
-pub struct Batch {
-    pub tokens: Vec<i32>,
-    pub targets: Vec<i32>,
-    pub weights: Vec<f32>,
-    pub b: usize,
-    pub s: usize,
-}
-
-impl Batch {
-    pub fn new(b: usize, s: usize) -> Self {
-        Batch { tokens: vec![0; b * s], targets: vec![0; b * s], weights: vec![0.0; b * s], b, s }
-    }
-
-    pub fn validate(&self) -> Result<()> {
-        let n = self.b * self.s;
-        if self.tokens.len() != n || self.targets.len() != n || self.weights.len() != n {
-            bail!("batch buffers disagree with [{}x{}]", self.b, self.s);
-        }
-        Ok(())
-    }
-}
-
-/// Result of one executed step.
-#[derive(Debug)]
-pub struct StepOutput {
-    pub loss: f32,
-    /// Masked #correct (paired with the batch's weight sum for accuracy).
-    pub ncorrect: f32,
-    /// Gradients in artifact output order (empty for `fwd_*`).
-    pub grads: Vec<Tensor>,
-    /// Wallclock of the PJRT execute call.
-    pub exec_time: std::time::Duration,
-}
-
-/// Cumulative runtime statistics (perf pass bookkeeping).
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub executions: u64,
-    pub exec_secs: f64,
-    pub compiles: u64,
-    pub compile_secs: f64,
-    pub h2d_bytes: u64,
-    pub d2h_bytes: u64,
-    /// Parameter uploads skipped thanks to the device-buffer cache.
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-}
 
 /// Device-resident copy of one parameter tensor, valid for a specific
 /// `(TensorSet lineage, version)` — the §Perf optimization that stops every
@@ -185,7 +139,7 @@ impl Runtime {
         let tok_buf = self.client.buffer_from_host_buffer::<i32>(&batch.tokens, &bdims, None)?;
         let tgt_buf = self.client.buffer_from_host_buffer::<i32>(&batch.targets, &bdims, None)?;
         let w_buf = self.client.buffer_from_host_buffer::<f32>(&batch.weights, &bdims, None)?;
-        self.stats.h2d_bytes += (batch.tokens.len() * 12) as u64;
+        self.stats.h2d_bytes += batch.h2d_bytes() as u64;
 
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n_inputs);
         for name in &params.names {
@@ -239,26 +193,36 @@ impl Runtime {
 
     /// Grad-artifact name for one layer unit of the base model.
     pub fn unit_artifact(u: usize) -> String {
-        format!("grad_base_u{u}")
+        crate::backend::unit_artifact(u)
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn batch_validation() {
-        let b = Batch::new(2, 3);
-        assert!(b.validate().is_ok());
-        let mut bad = Batch::new(2, 3);
-        bad.tokens.pop();
-        assert!(bad.validate().is_err());
+impl ExecBackend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 
-    #[test]
-    fn unit_artifact_names() {
-        assert_eq!(Runtime::unit_artifact(0), "grad_base_u0");
-        assert_eq!(Runtime::unit_artifact(13), "grad_base_u13");
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        Runtime::manifest(self)
+    }
+
+    fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput> {
+        Runtime::run(self, artifact, params, batch)
+    }
+
+    fn load_params(&self, variant: &str) -> Result<TensorSet> {
+        Runtime::load_params(self, variant)
+    }
+
+    fn warmup(&mut self, artifacts: &[&str]) -> Result<()> {
+        Runtime::warmup(self, artifacts)
+    }
+
+    fn stats(&self) -> &RuntimeStats {
+        &self.stats
     }
 }

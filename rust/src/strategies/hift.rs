@@ -21,11 +21,11 @@
 use anyhow::Result;
 
 use super::{FineTuneStrategy, StepStats};
+use crate::backend::{unit_artifact, Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::scheduler::{HiftScheduler, SchedulerCfg};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::optim::{self, OffloadLedger, OptimCfg, Optimizer};
-use crate::runtime::{Batch, Manifest, Runtime};
 use crate::tensor::TensorSet;
 
 /// HiFT hyperparameters.
@@ -100,7 +100,12 @@ impl FineTuneStrategy for Hift {
         "base"
     }
 
-    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch) -> Result<StepStats> {
+    fn step(
+        &mut self,
+        be: &mut dyn ExecBackend,
+        params: &mut TensorSet,
+        batch: &Batch,
+    ) -> Result<StepStats> {
         let plan = self.scheduler.next();
 
         // Phase 1 — gradients for every unit in the group, at the *current*
@@ -110,7 +115,7 @@ impl FineTuneStrategy for Hift {
         let mut ncorrect = 0.0f32;
         let mut grads: Vec<(usize, crate::tensor::Tensor)> = Vec::new();
         for (gi, &u) in plan.units.iter().enumerate() {
-            let out = rt.run(&Runtime::unit_artifact(u), params, batch)?;
+            let out = be.run(&unit_artifact(u), params, batch)?;
             exec_time += out.exec_time;
             if gi == 0 {
                 loss = out.loss;

@@ -18,10 +18,10 @@
 use anyhow::Result;
 
 use super::{FineTuneStrategy, StepStats};
+use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::optim::{self, OptimCfg, OptimKind, Optimizer};
 use crate::rng::Pcg32;
-use crate::runtime::{Batch, Manifest, Runtime};
 use crate::tensor::{Tensor, TensorSet};
 
 pub struct Mezo {
@@ -78,16 +78,21 @@ impl FineTuneStrategy for Mezo {
         "base"
     }
 
-    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch) -> Result<StepStats> {
+    fn step(
+        &mut self,
+        be: &mut dyn ExecBackend,
+        params: &mut TensorSet,
+        batch: &Batch,
+    ) -> Result<StepStats> {
         let lr = self.schedule.at(self.step as usize);
         let step_seed = self.seed ^ (0x9E37 + self.step).wrapping_mul(0x2545F4914F6CDD1D);
         self.step += 1;
 
         // L(θ + εz), L(θ − εz), restore — three in-place walks.
         self.perturb(params, step_seed, self.eps);
-        let out_p = rt.run("fwd_base", params, batch)?;
+        let out_p = be.run("fwd_base", params, batch)?;
         self.perturb(params, step_seed, -2.0 * self.eps);
-        let out_m = rt.run("fwd_base", params, batch)?;
+        let out_m = be.run("fwd_base", params, batch)?;
         self.perturb(params, step_seed, self.eps);
 
         let proj = (out_p.loss - out_m.loss) / (2.0 * self.eps);

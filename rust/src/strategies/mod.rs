@@ -25,10 +25,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::optim::{OffloadLedger, OptimCfg, OptimKind};
-use crate::runtime::{Batch, Manifest, Runtime};
 use crate::tensor::TensorSet;
 
 /// Per-step outcome every strategy reports.
@@ -41,12 +41,12 @@ pub struct StepStats {
     /// Parameters that received an update this step (the paper's
     /// "#Trainable Parameters" axis).
     pub trainable_params: usize,
-    /// XLA execute wallclock within the step.
+    /// Backend execute wallclock within the step.
     pub exec_time: Duration,
 }
 
 /// A fine-tuning algorithm: owns its optimizer/LR policy, updates params
-/// in place given gradients (or forward passes) from the runtime.
+/// in place given gradients (or forward passes) from an execution backend.
 pub trait FineTuneStrategy {
     fn name(&self) -> &str;
 
@@ -58,8 +58,8 @@ pub trait FineTuneStrategy {
         format!("fwd_{}", self.variant())
     }
 
-    /// One training step: compute gradients via `rt`, update `params`.
-    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch)
+    /// One training step: compute gradients via `be`, update `params`.
+    fn step(&mut self, be: &mut dyn ExecBackend, params: &mut TensorSet, batch: &Batch)
         -> Result<StepStats>;
 
     /// Peak per-step trainable parameter count seen so far.

@@ -14,9 +14,9 @@
 use anyhow::Result;
 
 use super::{grad_param_indices, FineTuneStrategy, StepStats};
+use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::optim::{self, OptimCfg, OptimKind, Optimizer};
-use crate::runtime::{Batch, Manifest, Runtime};
 use crate::tensor::TensorSet;
 
 /// A baseline that always trains the same parameter subset.
@@ -100,10 +100,15 @@ impl FineTuneStrategy for SubsetTune {
         &self.variant
     }
 
-    fn step(&mut self, rt: &mut Runtime, params: &mut TensorSet, batch: &Batch) -> Result<StepStats> {
+    fn step(
+        &mut self,
+        be: &mut dyn ExecBackend,
+        params: &mut TensorSet,
+        batch: &Batch,
+    ) -> Result<StepStats> {
         let lr = self.schedule.at(self.step as usize);
         self.step += 1;
-        let out = rt.run(&self.artifact, params, batch)?;
+        let out = be.run(&self.artifact, params, batch)?;
         if !self.trainable_known {
             self.trainable = self.param_idxs.iter().map(|&i| params.tensors[i].numel()).sum();
             self.trainable_known = true;

@@ -1,53 +1,53 @@
-//! Schedule-equivalence and cross-strategy invariants over the real stack.
+//! Schedule-equivalence and cross-strategy invariants over the real stack
+//! (native CPU backend — runs offline).
 //!
 //! The strongest correctness statement for the coordinator: with a single
 //! group (m ≥ n_units) HiFT's step IS standard FPFT — same gradients, same
 //! optimizer sequence, same delayed-LR index — so the two trajectories must
 //! coincide numerically.  Plus variant-parity checks for the PEFT models.
 
+use hift::backend::{ExecBackend, NativeBackend};
 use hift::coordinator::lr::LrSchedule;
 use hift::coordinator::strategy::UpdateStrategy;
 use hift::coordinator::trainer::{self, TrainCfg};
 use hift::data::{build_task, TaskGeom};
 use hift::optim::{OptimCfg, OptimKind};
-use hift::runtime::Runtime;
 use hift::strategies::{Hift, HiftCfg, SubsetTune};
 
-fn runtime() -> Runtime {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
-    Runtime::load(root.join("artifacts").join("tiny")).expect("run `make artifacts` first")
+fn backend() -> NativeBackend {
+    NativeBackend::preset("tiny", 0).expect("tiny preset")
 }
 
-fn geom(rt: &Runtime) -> TaskGeom {
-    let c = &rt.manifest().config;
+fn geom(be: &dyn ExecBackend) -> TaskGeom {
+    let c = &be.manifest().config;
     TaskGeom::new(c.vocab, c.batch, c.seq_len)
 }
 
 #[test]
 fn hift_single_group_equals_fpft_trajectory() {
-    let mut rt = runtime();
-    let n_units = rt.manifest().n_units;
+    let mut be = backend();
+    let n_units = be.manifest().n_units;
     let sched = LrSchedule::Const { lr: 3e-3 };
     let ocfg = OptimCfg::new(OptimKind::AdamW);
     let steps = 10u64;
 
     // FPFT trajectory.
-    let mut fpft = SubsetTune::fpft(rt.manifest(), ocfg, sched).unwrap();
-    let mut p_f = rt.load_params("base").unwrap();
-    let mut task = build_task("motif4", geom(&rt), 3).unwrap();
-    let rec_f = trainer::train(&mut rt, &mut fpft, &mut p_f, task.as_mut(),
+    let mut fpft = SubsetTune::fpft(be.manifest(), ocfg, sched).unwrap();
+    let mut p_f = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 3).unwrap();
+    let rec_f = trainer::train(&mut be, &mut fpft, &mut p_f, task.as_mut(),
         TrainCfg { steps, eval_every: 0, log_every: 0 }).unwrap();
 
     // HiFT with m = n_units (one group = everything; k = 1 so the delayed
     // LR advances every step, exactly like FPFT).
     let mut hift = Hift::new(
         HiftCfg { m: n_units, order: UpdateStrategy::Bottom2Up, schedule: sched, optim: ocfg },
-        rt.manifest(),
+        be.manifest(),
     )
     .unwrap();
-    let mut p_h = rt.load_params("base").unwrap();
-    let mut task = build_task("motif4", geom(&rt), 3).unwrap();
-    let rec_h = trainer::train(&mut rt, &mut hift, &mut p_h, task.as_mut(),
+    let mut p_h = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 3).unwrap();
+    let rec_h = trainer::train(&mut be, &mut hift, &mut p_h, task.as_mut(),
         TrainCfg { steps, eval_every: 0, log_every: 0 }).unwrap();
 
     for (i, (lf, lh)) in rec_f.losses.values.iter().zip(&rec_h.losses.values).enumerate() {
@@ -67,7 +67,7 @@ fn hift_single_group_equals_fpft_trajectory() {
 #[test]
 fn update_order_converges_for_all_strategies() {
     // Fig 4-left at test scale: all three orders reach a similar loss.
-    let mut rt = runtime();
+    let mut be = backend();
     let mut finals = Vec::new();
     for order in [
         UpdateStrategy::Bottom2Up,
@@ -81,12 +81,12 @@ fn update_order_converges_for_all_strategies() {
                 schedule: LrSchedule::Const { lr: 4e-3 },
                 optim: OptimCfg::new(OptimKind::AdamW),
             },
-            rt.manifest(),
+            be.manifest(),
         )
         .unwrap();
-        let mut params = rt.load_params("base").unwrap();
-        let mut task = build_task("motif4", geom(&rt), 9).unwrap();
-        let rec = trainer::train(&mut rt, &mut hift, &mut params, task.as_mut(),
+        let mut params = be.load_params("base").unwrap();
+        let mut task = build_task("motif4", geom(&be), 9).unwrap();
+        let rec = trainer::train(&mut be, &mut hift, &mut params, task.as_mut(),
             TrainCfg { steps: 48, eval_every: 0, log_every: 0 }).unwrap();
         let tail = rec.losses.tail_mean(8);
         assert!(tail < rec.losses.values[0], "{order:?} did not descend");
@@ -99,7 +99,7 @@ fn update_order_converges_for_all_strategies() {
 
 #[test]
 fn every_optimizer_descends_under_hift() {
-    let mut rt = runtime();
+    let mut be = backend();
     for (kind, lr) in [
         (OptimKind::AdamW, 4e-3f32),
         (OptimKind::Sgd, 3e-2),
@@ -114,12 +114,12 @@ fn every_optimizer_descends_under_hift() {
                 schedule: LrSchedule::Const { lr },
                 optim: OptimCfg::new(kind),
             },
-            rt.manifest(),
+            be.manifest(),
         )
         .unwrap();
-        let mut params = rt.load_params("base").unwrap();
-        let mut task = build_task("markovlm", geom(&rt), 13).unwrap();
-        let rec = trainer::train(&mut rt, &mut hift, &mut params, task.as_mut(),
+        let mut params = be.load_params("base").unwrap();
+        let mut task = build_task("markovlm", geom(&be), 13).unwrap();
+        let rec = trainer::train(&mut be, &mut hift, &mut params, task.as_mut(),
             TrainCfg { steps: 32, eval_every: 0, log_every: 0 }).unwrap();
         assert!(
             rec.losses.tail_mean(8) < rec.losses.values[..4].iter().sum::<f64>() / 4.0,
@@ -134,7 +134,7 @@ fn every_optimizer_descends_under_hift() {
 #[test]
 fn delayed_lr_is_constant_within_sweep_on_real_run() {
     use hift::strategies::FineTuneStrategy;
-    let mut rt = runtime();
+    let mut be = backend();
     let mut hift = Hift::new(
         HiftCfg {
             m: 1,
@@ -142,16 +142,16 @@ fn delayed_lr_is_constant_within_sweep_on_real_run() {
             schedule: LrSchedule::Linear { lr: 1e-3, warmup: 0, total: 10 },
             optim: OptimCfg::new(OptimKind::Sgd),
         },
-        rt.manifest(),
+        be.manifest(),
     )
     .unwrap();
     let k = hift.k();
-    let mut params = rt.load_params("base").unwrap();
-    let mut task = build_task("motif2", geom(&rt), 1).unwrap();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif2", geom(&be), 1).unwrap();
     let mut lrs = Vec::new();
     for _ in 0..2 * k {
         let b = task.train_batch();
-        let stats = hift.step(&mut rt, &mut params, &b).unwrap();
+        let stats = hift.step(&mut be, &mut params, &b).unwrap();
         lrs.push(stats.lr);
     }
     let first_sweep: Vec<f32> = lrs[..k].to_vec();
@@ -163,19 +163,19 @@ fn delayed_lr_is_constant_within_sweep_on_real_run() {
 fn mezo_preserves_params_when_lr_zero() {
     // The ±ε walk must restore parameters exactly (up to f32 rounding).
     use hift::strategies::{FineTuneStrategy, Mezo};
-    let mut rt = runtime();
+    let mut be = backend();
     let mut mezo = Mezo::new(
-        rt.manifest(),
+        be.manifest(),
         OptimCfg::new(OptimKind::Sgd),
         LrSchedule::Const { lr: 0.0 },
         7,
     )
     .unwrap();
-    let mut params = rt.load_params("base").unwrap();
+    let mut params = be.load_params("base").unwrap();
     let before = params.clone();
-    let mut task = build_task("motif2", geom(&rt), 2).unwrap();
+    let mut task = build_task("motif2", geom(&be), 2).unwrap();
     let b = task.train_batch();
-    mezo.step(&mut rt, &mut params, &b).unwrap();
+    mezo.step(&mut be, &mut params, &b).unwrap();
     for (a, b_) in before.tensors.iter().zip(&params.tensors) {
         let mut d = a.clone();
         d.axpy(-1.0, b_);

@@ -1,57 +1,54 @@
-//! Integration tests over the real three-layer stack: HLO artifacts
-//! (Pallas kernels inside) loaded and executed through PJRT, driven by the
-//! Rust coordinator.  Requires `make artifacts` (preset `tiny`).
+//! Integration tests over the full training stack, driven end-to-end
+//! through the [`ExecBackend`] seam on the native CPU backend — no
+//! artifacts, no Python, no network.  (With `--features pjrt` plus `make
+//! artifacts` the same coordinator code runs against PJRT; these tests
+//! deliberately depend only on the trait.)
 
+use hift::backend::{unit_artifact, ExecBackend, NativeBackend};
 use hift::coordinator::lr::LrSchedule;
-use hift::coordinator::trainer::{self, TrainCfg};
 use hift::coordinator::strategy::UpdateStrategy;
+use hift::coordinator::trainer::{self, TrainCfg};
 use hift::data::{build_task, TaskGeom};
 use hift::optim::{OptimCfg, OptimKind};
-use hift::runtime::Runtime;
 use hift::strategies::{FineTuneStrategy, Hift, HiftCfg, StrategySpec, SubsetTune};
 
-fn artifacts_dir() -> std::path::PathBuf {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
-    root.join("artifacts").join("tiny")
+fn backend() -> NativeBackend {
+    NativeBackend::preset("tiny", 0).expect("tiny preset")
 }
 
-fn runtime() -> Runtime {
-    Runtime::load(artifacts_dir()).expect("run `make artifacts` first")
-}
-
-fn geom(rt: &Runtime) -> TaskGeom {
-    let c = &rt.manifest().config;
+fn geom(be: &dyn ExecBackend) -> TaskGeom {
+    let c = &be.manifest().config;
     TaskGeom::new(c.vocab, c.batch, c.seq_len)
 }
 
 #[test]
 fn manifest_and_params_load() {
-    let rt = runtime();
-    let m = rt.manifest();
+    let be = backend();
+    let m = be.manifest();
     assert_eq!(m.preset, "tiny");
     assert_eq!(m.n_units, m.config.n_layers + 2);
-    let params = rt.load_params("base").unwrap();
+    let params = be.load_params("base").unwrap();
     assert_eq!(params.len(), m.variant("base").unwrap().params.len());
-    assert!(params.l2_norm() > 0.0, "params.bin is not all zeros");
+    assert!(params.l2_norm() > 0.0, "init is not all zeros");
     for v in ["lora", "ia3", "prefix"] {
-        let p = rt.load_params(v).unwrap();
+        let p = be.load_params(v).unwrap();
         assert!(p.len() > params.len(), "{v} adds adapter tensors");
     }
 }
 
 #[test]
 fn forward_artifact_executes_and_is_deterministic() {
-    let mut rt = runtime();
-    let params = rt.load_params("base").unwrap();
-    let mut task = build_task("motif4", geom(&rt), 7).unwrap();
+    let mut be = backend();
+    let params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 7).unwrap();
     let batch = task.train_batch();
-    let a = rt.run("fwd_base", &params, &batch).unwrap();
-    let b = rt.run("fwd_base", &params, &batch).unwrap();
+    let a = be.run("fwd_base", &params, &batch).unwrap();
+    let b = be.run("fwd_base", &params, &batch).unwrap();
     assert!(a.loss.is_finite() && a.loss > 0.0);
     assert_eq!(a.loss, b.loss, "same params+batch ⇒ identical loss");
     assert!(a.grads.is_empty());
     // untrained model ≈ uniform: loss ≈ ln(vocab)
-    let uniform = (rt.manifest().config.vocab as f32).ln();
+    let uniform = (be.manifest().config.vocab as f32).ln();
     assert!((a.loss - uniform).abs() < 1.5, "loss {} vs ln(V)={}", a.loss, uniform);
 }
 
@@ -59,14 +56,15 @@ fn forward_artifact_executes_and_is_deterministic() {
 fn unit_grads_are_slices_of_full_grad() {
     // The HiFT foundation at the artifact level: per-unit grad artifacts
     // produce exactly the corresponding slices of grad_base_full.
-    let mut rt = runtime();
-    let params = rt.load_params("base").unwrap();
-    let mut task = build_task("markovlm", geom(&rt), 3).unwrap();
+    let mut be = backend();
+    let params = be.load_params("base").unwrap();
+    let mut task = build_task("markovlm", geom(&be), 3).unwrap();
     let batch = task.train_batch();
-    let full = rt.run("grad_base_full", &params, &batch).unwrap();
-    let vinfo = rt.manifest().variant("base").unwrap().clone();
-    for u in 0..rt.manifest().n_units {
-        let out = rt.run(&Runtime::unit_artifact(u), &params, &batch).unwrap();
+    let full = be.run("grad_base_full", &params, &batch).unwrap();
+    let vinfo = be.manifest().variant("base").unwrap().clone();
+    let n_units = be.manifest().n_units;
+    for u in 0..n_units {
+        let out = be.run(&unit_artifact(u), &params, &batch).unwrap();
         assert!((out.loss - full.loss).abs() < 1e-5);
         let idxs = vinfo.unit_indices(u);
         assert_eq!(out.grads.len(), idxs.len());
@@ -86,10 +84,32 @@ fn unit_grads_are_slices_of_full_grad() {
 }
 
 #[test]
+fn bitfit_grads_are_slices_of_full_grad() {
+    // BitFit's bias/LN-only artifact skips every dense weight matmul
+    // (GradSpec::dense = false) — the emitted gradients must still be
+    // bit-identical to the corresponding slices of grad_base_full.
+    let mut be = backend();
+    let params = be.load_params("base").unwrap();
+    let mut task = build_task("markovlm", geom(&be), 3).unwrap();
+    let batch = task.train_batch();
+    let full = be.run("grad_base_full", &params, &batch).unwrap();
+    let out = be.run("grad_base_bitfit", &params, &batch).unwrap();
+    let vinfo = be.manifest().variant("base").unwrap().clone();
+    let idxs = vinfo.bitfit_indices();
+    assert_eq!(out.grads.len(), idxs.len());
+    for (g, &i) in out.grads.iter().zip(&idxs) {
+        assert_eq!(g.shape.len(), 1, "bitfit trains only 1-D params");
+        let mut diff = g.clone();
+        diff.axpy(-1.0, &full.grads[i]);
+        assert!(diff.abs_max() < 1e-6, "{} bitfit grad mismatch", vinfo.params[i].name);
+    }
+}
+
+#[test]
 fn hift_training_reduces_loss_and_pages_state() {
-    let mut rt = runtime();
-    let mut params = rt.load_params("base").unwrap();
-    let mut task = build_task("motif4", geom(&rt), 11).unwrap();
+    let mut be = backend();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 11).unwrap();
     let mut hift = Hift::new(
         HiftCfg {
             m: 1,
@@ -97,11 +117,11 @@ fn hift_training_reduces_loss_and_pages_state() {
             schedule: LrSchedule::Const { lr: 5e-3 },
             optim: OptimCfg::new(OptimKind::AdamW),
         },
-        rt.manifest(),
+        be.manifest(),
     )
     .unwrap();
     let k = hift.k() as u64;
-    let rec = trainer::train(&mut rt, &mut hift, &mut params, &mut *task, TrainCfg {
+    let rec = trainer::train(&mut be, &mut hift, &mut params, &mut *task, TrainCfg {
         steps: 6 * k,
         eval_every: 0,
         log_every: 0,
@@ -123,9 +143,9 @@ fn hift_training_reduces_loss_and_pages_state() {
 #[test]
 fn hift_sgd_has_zero_state_paging() {
     // §4.3: "When using SGD, the peak communication parameter is zero."
-    let mut rt = runtime();
-    let mut params = rt.load_params("base").unwrap();
-    let mut task = build_task("motif2", geom(&rt), 5).unwrap();
+    let mut be = backend();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif2", geom(&be), 5).unwrap();
     let mut hift = Hift::new(
         HiftCfg {
             m: 1,
@@ -133,10 +153,10 @@ fn hift_sgd_has_zero_state_paging() {
             schedule: LrSchedule::Const { lr: 1e-2 },
             optim: OptimCfg::new(OptimKind::Sgd),
         },
-        rt.manifest(),
+        be.manifest(),
     )
     .unwrap();
-    let rec = trainer::train(&mut rt, &mut hift, &mut params, &mut *task,
+    let rec = trainer::train(&mut be, &mut hift, &mut params, &mut *task,
         TrainCfg { steps: 8, eval_every: 0, log_every: 0 }).unwrap();
     let (h2d, _, inflight, peak) = rec.paging.unwrap();
     assert_eq!(h2d, 0, "SGD pages nothing");
@@ -146,16 +166,16 @@ fn hift_sgd_has_zero_state_paging() {
 
 #[test]
 fn fpft_baseline_trains() {
-    let mut rt = runtime();
-    let mut params = rt.load_params("base").unwrap();
-    let mut task = build_task("motif4", geom(&rt), 11).unwrap();
+    let mut be = backend();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 11).unwrap();
     let mut fpft = SubsetTune::fpft(
-        rt.manifest(),
+        be.manifest(),
         OptimCfg::new(OptimKind::AdamW),
         LrSchedule::Const { lr: 5e-3 },
     )
     .unwrap();
-    let rec = trainer::train(&mut rt, &mut fpft, &mut params, &mut *task,
+    let rec = trainer::train(&mut be, &mut fpft, &mut params, &mut *task,
         TrainCfg { steps: 24, eval_every: 0, log_every: 0 }).unwrap();
     assert!(rec.losses.tail_mean(6) < rec.losses.values[0]);
     assert_eq!(rec.peak_trainable_params, params.total_params(), "FPFT trains everything");
@@ -163,15 +183,15 @@ fn fpft_baseline_trains() {
 
 #[test]
 fn every_strategy_builds_and_steps() {
-    let mut rt = runtime();
-    let mut task = build_task("motif2", geom(&rt), 2).unwrap();
+    let mut be = backend();
+    let mut task = build_task("motif2", geom(&be), 2).unwrap();
     for name in hift::strategies::STRATEGY_NAMES {
         let spec = StrategySpec::new(name, OptimKind::AdamW, 1e-3, 10);
-        let mut strat = spec.build(rt.manifest()).unwrap();
-        let mut params = rt.load_params(strat.variant()).unwrap();
+        let mut strat = spec.build(be.manifest()).unwrap();
+        let mut params = be.load_params(strat.variant()).unwrap();
         let before = params.l2_norm();
         let batch = task.train_batch();
-        let stats = strat.step(&mut rt, &mut params, &batch).unwrap();
+        let stats = strat.step(&mut be, &mut params, &batch).unwrap();
         assert!(stats.loss.is_finite(), "{name} loss finite");
         assert!(stats.trainable_params > 0, "{name} trains something");
         assert!(params.tensors.iter().all(|t| t.is_finite()), "{name} params finite");
@@ -182,15 +202,15 @@ fn every_strategy_builds_and_steps() {
 #[test]
 fn peft_trains_fewer_params_than_hift_peak() {
     // Sanity on the Table-5 axis: adapter sets ≪ one HiFT group ≪ full.
-    let mut rt = runtime();
-    let mut task = build_task("motif2", geom(&rt), 2).unwrap();
+    let mut be = backend();
+    let mut task = build_task("motif2", geom(&be), 2).unwrap();
     let batch = task.train_batch();
     let mut sizes = std::collections::HashMap::new();
     for name in ["lora", "ia3", "hift", "fpft"] {
         let spec = StrategySpec::new(name, OptimKind::AdamW, 1e-3, 10);
-        let mut strat = spec.build(rt.manifest()).unwrap();
-        let mut params = rt.load_params(strat.variant()).unwrap();
-        strat.step(&mut rt, &mut params, &batch).unwrap();
+        let mut strat = spec.build(be.manifest()).unwrap();
+        let mut params = be.load_params(strat.variant()).unwrap();
+        strat.step(&mut be, &mut params, &batch).unwrap();
         sizes.insert(name, strat.peak_trainable_params());
     }
     assert!(sizes["lora"] < sizes["hift"]);
@@ -200,10 +220,41 @@ fn peft_trains_fewer_params_than_hift_peak() {
 
 #[test]
 fn evaluation_accuracy_is_in_unit_interval() {
-    let mut rt = runtime();
-    let params = rt.load_params("base").unwrap();
-    let task = build_task("motif4", geom(&rt), 7).unwrap();
-    let ev = trainer::evaluate(&mut rt, "fwd_base", &params, task.eval_batches()).unwrap();
+    let mut be = backend();
+    let params = be.load_params("base").unwrap();
+    let task = build_task("motif4", geom(&be), 7).unwrap();
+    let ev = trainer::evaluate(&mut be, "fwd_base", &params, task.eval_batches()).unwrap();
     assert!((0.0..=1.0).contains(&ev.acc));
     assert!(ev.loss.is_finite());
+}
+
+#[test]
+fn eval_loss_is_weighted_by_batch_mask_sums() {
+    // Two batches with very different mask sizes: the aggregate eval loss
+    // must be the weight-sum-weighted mean, not the plain per-batch mean.
+    let mut be = backend();
+    let params = be.load_params("base").unwrap();
+    let mut task = build_task("markovlm", geom(&be), 9).unwrap();
+    let heavy = task.train_batch(); // dense LM supervision
+    let mut light = task.train_batch();
+    // keep exactly one supervised position in the light batch
+    let keep = light.weights.iter().position(|&w| w > 0.0).unwrap();
+    for (i, w) in light.weights.iter_mut().enumerate() {
+        if i != keep {
+            *w = 0.0;
+        }
+    }
+    let lh = be.run("fwd_base", &params, &heavy).unwrap().loss as f64;
+    let ll = be.run("fwd_base", &params, &light).unwrap().loss as f64;
+    let wh: f64 = heavy.weights.iter().map(|&w| w as f64).sum();
+    let wl: f64 = light.weights.iter().map(|&w| w as f64).sum();
+    let expect = (lh * wh + ll * wl) / (wh + wl);
+    let ev = trainer::evaluate(&mut be, "fwd_base", &params, &[heavy, light]).unwrap();
+    assert!(
+        (ev.loss - expect).abs() < 1e-5,
+        "weighted eval loss: got {} want {} (plain mean would be {})",
+        ev.loss,
+        expect,
+        0.5 * (lh + ll)
+    );
 }

@@ -1,0 +1,129 @@
+//! API **stub** of the XLA/PJRT binding `hift`'s `pjrt` feature compiles
+//! against.
+//!
+//! The offline build environment has no real PJRT binding, so this crate
+//! provides the exact type/method surface `hift::runtime` uses — enough for
+//! `cargo build --features pjrt` to type-check — while every constructor
+//! returns a clear runtime error.  To actually execute AOT artifacts,
+//! replace `rust/vendor/xla` with a real binding exposing the same API
+//! (modeled on xla-rs: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `compile` → `execute_b`).
+
+use std::path::Path;
+
+/// Stub error: every entry point returns it.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable — this build links the vendored API stub; \
+         replace rust/vendor/xla with a real PJRT binding"
+    )))
+}
+
+/// Element types marshallable to device buffers.
+pub trait ElementType: Copy {}
+impl ElementType for f32 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u8 {}
+
+/// Device-resident buffer (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+/// Compiled executable (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: BufferArg>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Things acceptable as execute arguments.
+pub trait BufferArg {}
+impl BufferArg for &PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host-side literal value.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (text interchange).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+/// Device handle (only named in option types).
+#[derive(Debug)]
+pub struct PjRtDevice(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
