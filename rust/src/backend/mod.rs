@@ -1,13 +1,19 @@
-//! Pluggable execution backends.
+//! Pluggable execution backends and the streamed-gradient seam.
 //!
 //! HiFT is backend-independent: the coordinator only needs, per step, the
 //! loss/metrics and the *active group's* gradients for a named artifact
 //! (paper §1).  This module owns that seam:
 //!
-//! * [`ExecBackend`] — the trait every engine implements: run an artifact
-//!   against a [`crate::tensor::TensorSet`] + [`Batch`] and hand back
-//!   `(loss, ncorrect, grads…)`, plus parameter loading and upload-cache
-//!   accounting ([`RuntimeStats`]).
+//! * [`ExecBackend`] — the trait every engine implements.  The primitive
+//!   operation is [`ExecBackend::run_streamed`]: execute an artifact
+//!   against a [`crate::tensor::TensorSet`] + [`Batch`] and *stream* each
+//!   gradient into a [`GradSink`] the moment it is final, instead of
+//!   collecting the whole group into a `Vec<Tensor>`.  [`ExecBackend::run`]
+//!   is a provided method that collects the stream back into the classic
+//!   [`StepOutput`] (forward-only and MeZO paths).
+//! * [`GradSink`] — the consumer side of the stream: fused optimizer
+//!   updates ([`crate::optim::FusedApply`]), collection ([`CollectSink`]),
+//!   or the double-buffered pipeline ([`crate::optim::PipelinedApply`]).
 //! * [`manifest`] — the artifact/parameter contract shared by all backends
 //!   (for PJRT it is parsed from `manifest.json`; the native backend
 //!   synthesizes an identical one).
@@ -15,13 +21,33 @@
 //!   transformer with hand-written forward/backward ([`model`]), so the
 //!   whole training loop builds, tests and benches offline.
 //! * `crate::runtime` (behind the `pjrt` cargo feature) — the XLA/PJRT
-//!   implementation executing AOT-compiled HLO artifacts.
+//!   implementation executing AOT-compiled HLO artifacts; it adapts to the
+//!   streaming contract with a post-execute drain.
 //! * [`par`] — `std::thread` chunking used by the native hot paths and the
 //!   optimizer update loops.
 //!
 //! Strategies, the trainer, the benches and the CLI all take
 //! `&mut dyn ExecBackend`, so switching engines is a constructor choice
 //! ([`build_backend`] / [`from_env`]), not a code change.
+//!
+//! ## Emit-order determinism
+//!
+//! Every backend must emit gradients in a **fixed, deterministic order**
+//! for a given artifact, and tag each with its `slot` — the gradient's
+//! index in the artifact's output list — so sinks never depend on arrival
+//! order for *placement*.  The native backend emits in backward-walk
+//! order: the head unit first, then transformer layers top-down, then the
+//! embedding unit, with each unit's tensors in manifest parameter order
+//! (adapter gradients follow their layer's base tensors).  This is a fixed
+//! permutation of the artifact output order.  Because optimizer updates
+//! are per-tensor (no update reads another trainable tensor), applying
+//! updates in emit order yields **bit-identical** final parameters to the
+//! old collect-then-update path — asserted in `tests/streaming.rs`.
+//!
+//! A sink may mutate `params` from [`GradSink::grad`], but only tensors
+//! whose gradient has already been emitted in the current run; backends
+//! guarantee they never read a parameter tensor again after emitting its
+//! gradient.
 
 pub mod manifest;
 pub mod model;
@@ -34,7 +60,7 @@ use anyhow::{bail, Result};
 
 use crate::tensor::{Tensor, TensorSet};
 pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, PRESET_NAMES};
 
 /// One training/eval batch, shaped `[B, S]` row-major.
 #[derive(Debug, Clone)]
@@ -69,7 +95,8 @@ impl Batch {
     }
 }
 
-/// Result of one executed step.
+/// Result of one executed step (collected form; see [`StreamOutput`] for
+/// the streamed form).
 #[derive(Debug)]
 pub struct StepOutput {
     pub loss: f32,
@@ -79,6 +106,96 @@ pub struct StepOutput {
     pub grads: Vec<Tensor>,
     /// Wallclock of the backend execute call.
     pub exec_time: Duration,
+}
+
+/// Result of one streamed step: the scalars only — gradients went to the
+/// [`GradSink`] and were dropped as they were consumed.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamOutput {
+    pub loss: f32,
+    /// Masked #correct (paired with the batch's weight sum for accuracy).
+    pub ncorrect: f32,
+    /// Wallclock of the backend execute call (forward + streamed backward).
+    pub exec_time: Duration,
+}
+
+/// Consumer of a gradient stream (the strategy side of the seam).
+///
+/// The backend calls [`GradSink::grad`] once per gradient output, the
+/// moment that gradient is final, then [`GradSink::finish`] once after the
+/// last emission.  `slot` is the gradient's index in the artifact's output
+/// list (or, for [`ExecBackend::run_group_streamed`], in the concatenated
+/// unit gradient lists); `name` is the parameter name for sanity checks.
+///
+/// `params` is the same set the artifact ran with.  A sink may update it
+/// in place (fused optimizer updates), but only tensors whose gradients
+/// were already emitted in this run — the backend guarantees it no longer
+/// reads those.
+pub trait GradSink {
+    /// Consume one gradient.  Ownership transfers to the sink; dropping it
+    /// immediately is what shrinks peak gradient residency from the group
+    /// sum to a single tensor.
+    fn grad(
+        &mut self,
+        slot: usize,
+        name: &str,
+        grad: Tensor,
+        params: &mut TensorSet,
+    ) -> Result<()>;
+
+    /// Gradient bytes the sink still retains after the last `grad` call
+    /// returned (for peak-residency accounting).  Fused sinks return 0.
+    fn resident_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Called once after the final emission of a run (lets pipelined sinks
+    /// drain in-flight work and restore borrowed tensors).
+    fn finish(&mut self, _params: &mut TensorSet) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// A [`GradSink`] that collects the stream back into artifact output
+/// order — the compatibility shim behind the provided [`ExecBackend::run`].
+#[derive(Default)]
+pub struct CollectSink {
+    slots: Vec<Option<Tensor>>,
+    bytes: u64,
+}
+
+impl CollectSink {
+    /// The collected gradients, densely ordered by slot.
+    pub fn into_grads(self) -> Result<Vec<Tensor>> {
+        self.slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| t.ok_or_else(|| anyhow::anyhow!("gradient slot {i} was never emitted")))
+            .collect()
+    }
+}
+
+impl GradSink for CollectSink {
+    fn grad(
+        &mut self,
+        slot: usize,
+        name: &str,
+        grad: Tensor,
+        _params: &mut TensorSet,
+    ) -> Result<()> {
+        if self.slots.len() <= slot {
+            self.slots.resize_with(slot + 1, || None);
+        }
+        self.bytes += grad.bytes() as u64;
+        if self.slots[slot].replace(grad).is_some() {
+            bail!("gradient slot {slot} ({name}) emitted twice");
+        }
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.bytes
+    }
 }
 
 /// Cumulative execution statistics (perf pass bookkeeping).  `h2d`/`d2h` and
@@ -96,14 +213,47 @@ pub struct RuntimeStats {
     /// Parameter uploads skipped thanks to the device-buffer cache.
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Peak bytes of parameter gradients resident at once (in-flight
+    /// emission + whatever the sink retained).  Streamed fused updates hold
+    /// this at ≈ one tensor; the collected path holds the whole group.
+    /// Accumulates until [`ExecBackend::reset_run_peaks`] — the trainer
+    /// resets it at run start so `RunRecord` peaks are per-run.
+    pub peak_grad_resident_bytes: u64,
+}
+
+impl RuntimeStats {
+    /// Per-run view: additive counters since `start`; peak fields carry the
+    /// current value, since a max cannot be subtracted (callers that need a
+    /// clean per-run peak reset it first via
+    /// [`ExecBackend::reset_run_peaks`], as the trainer does).
+    pub fn since(&self, start: &RuntimeStats) -> RuntimeStats {
+        RuntimeStats {
+            executions: self.executions - start.executions,
+            exec_secs: self.exec_secs - start.exec_secs,
+            compiles: self.compiles - start.compiles,
+            compile_secs: self.compile_secs - start.compile_secs,
+            h2d_bytes: self.h2d_bytes - start.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - start.d2h_bytes,
+            cache_hits: self.cache_hits - start.cache_hits,
+            cache_misses: self.cache_misses - start.cache_misses,
+            peak_grad_resident_bytes: self.peak_grad_resident_bytes,
+        }
+    }
+
+    /// Fold one residency observation into the peak.
+    pub(crate) fn note_grad_resident(&mut self, bytes: u64) {
+        self.peak_grad_resident_bytes = self.peak_grad_resident_bytes.max(bytes);
+    }
 }
 
 /// An execution engine for the manifest's artifacts.
 ///
-/// Implementations own "run artifact → `(loss, ncorrect, grads…)`" plus the
-/// parameter upload cache keyed on `(TensorSet lineage, version)` — the
-/// §Perf optimization that stops every step from re-marshalling the
-/// (mostly frozen) model.
+/// The primitive is [`ExecBackend::run_streamed`] — execute an artifact and
+/// hand each gradient to a [`GradSink`] the moment it is final (see the
+/// module docs for the emit-order determinism guarantee).  Implementations
+/// also own the parameter upload cache keyed on `(TensorSet lineage,
+/// version)` — the §Perf optimization that stops every step from
+/// re-marshalling the (mostly frozen) model.
 pub trait ExecBackend {
     /// Short engine id (`"native"`, `"pjrt"`).
     fn name(&self) -> &'static str;
@@ -115,8 +265,101 @@ pub trait ExecBackend {
     fn manifest(&self) -> &Manifest;
 
     /// Execute `artifact` with `params` (must match the artifact's input
-    /// order prefix) and a batch; returns `(loss, ncorrect, grads…)`.
-    fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput>;
+    /// order prefix) and a batch, streaming each gradient into `sink` as
+    /// soon as it is final.  `params` is `&mut` so sinks can fuse optimizer
+    /// updates in place; the backend itself never mutates it.  Implementors
+    /// must call `sink.finish(params)` after the last emission.
+    fn run_streamed(
+        &mut self,
+        artifact: &str,
+        params: &mut TensorSet,
+        batch: &Batch,
+        sink: &mut dyn GradSink,
+    ) -> Result<StreamOutput>;
+
+    /// Execute `artifact` and collect the gradient stream back into the
+    /// classic `(loss, ncorrect, grads…)` output (forward-only and MeZO
+    /// paths, tests).  Provided in terms of [`ExecBackend::run_streamed`].
+    fn run(&mut self, artifact: &str, params: &mut TensorSet, batch: &Batch) -> Result<StepOutput> {
+        let mut sink = CollectSink::default();
+        let out = self.run_streamed(artifact, params, batch, &mut sink)?;
+        Ok(StepOutput {
+            loss: out.loss,
+            ncorrect: out.ncorrect,
+            grads: sink.into_grads()?,
+            exec_time: out.exec_time,
+        })
+    }
+
+    /// Execute the gradients of a *group* of base-model layer units in one
+    /// logical step, streaming into `sink`.  Slots index the concatenation
+    /// of the units' parameter lists in the order given by `units`.
+    ///
+    /// All gradients are taken at the *same* parameter point (Eq. (2)'s
+    /// joint group update), even though the sink may update each unit's
+    /// tensors as they stream.  The native backend honors this with a
+    /// single multi-unit backward pass (one forward instead of one per
+    /// unit); the default implementation falls back to collected per-unit
+    /// artifact runs drained afterwards, which preserves the same
+    /// parameter-point semantics at collected-path memory cost.
+    fn run_group_streamed(
+        &mut self,
+        units: &[usize],
+        params: &mut TensorSet,
+        batch: &Batch,
+        sink: &mut dyn GradSink,
+    ) -> Result<StreamOutput> {
+        let names: Vec<String> = {
+            let vinfo = self.manifest().variant("base")?;
+            units
+                .iter()
+                .flat_map(|&u| {
+                    vinfo
+                        .params
+                        .iter()
+                        .filter(|p| p.unit == u as i64)
+                        .map(|p| p.name.clone())
+                        .collect::<Vec<_>>()
+                })
+                .collect()
+        };
+        let mut exec_time = Duration::ZERO;
+        let mut loss = 0.0f32;
+        let mut ncorrect = 0.0f32;
+        let mut grads: Vec<Tensor> = Vec::with_capacity(names.len());
+        for (gi, &u) in units.iter().enumerate() {
+            let out = self.run(&unit_artifact(u), params, batch)?;
+            exec_time += out.exec_time;
+            if gi == 0 {
+                loss = out.loss;
+                ncorrect = out.ncorrect;
+            }
+            grads.extend(out.grads);
+        }
+        if grads.len() != names.len() {
+            bail!("group run produced {} grads for {} params", grads.len(), names.len());
+        }
+        // Honest accounting: this fallback materialized the whole group
+        // before draining, so its residency peak is the collected sum.
+        let collected: u64 = grads.iter().map(|g| g.bytes() as u64).sum();
+        self.note_grad_residency(collected + sink.resident_bytes());
+        for (slot, (name, g)) in names.iter().zip(grads).enumerate() {
+            sink.grad(slot, name, g, params)?;
+        }
+        sink.finish(params)?;
+        Ok(StreamOutput { loss, ncorrect, exec_time })
+    }
+
+    /// Record a gradient-residency observation (bytes held at once) into
+    /// this backend's [`RuntimeStats`].  Backends with stats override this;
+    /// the default is a no-op so stat-less test doubles stay trivial.
+    fn note_grad_residency(&mut self, _bytes: u64) {}
+
+    /// Reset per-run peak statistics (`peak_grad_resident_bytes`).  The
+    /// trainer calls this at run start so each [`crate::coordinator::trainer::RunRecord`]
+    /// reports its own peak rather than the lifetime maximum of a shared
+    /// backend.
+    fn reset_run_peaks(&mut self) {}
 
     /// Initial parameters for `variant`.
     fn load_params(&self, variant: &str) -> Result<TensorSet>;

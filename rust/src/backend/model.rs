@@ -15,6 +15,12 @@
 //! per-step speed win (§4.3: backprop never descends past the active
 //! group, and never forms gradients outside it).
 //!
+//! The walk is *streamed* ([`backward_streamed`]): each requested gradient
+//! is handed to an emission callback the moment it is final and dropped by
+//! the consumer, so peak parameter-gradient residency is one tensor rather
+//! than the requested set — the LOMO-style fusion point the GradSink seam
+//! is built on.  [`backward`] is the collect-into-a-map wrapper.
+//!
 //! Hot loops (matmuls, attention, GELU, softmax) run through the
 //! [`super::par`] thread-chunking helpers; all reductions are fixed-order,
 //! so results are bit-identical across thread counts.
@@ -558,17 +564,60 @@ pub fn forward(
     })
 }
 
-/// Reverse-mode gradients for the parameters `spec` requests.  `dx`
-/// propagates down to `spec.min_unit`; weight-gradient work is skipped for
-/// unrequested units.
+/// Gradient-emission callback for [`backward_streamed`]: `(parameter name,
+/// gradient, params)`.  The `&mut TensorSet` handle lets fused sinks update
+/// the parameter in place — by the time a gradient is emitted, the walk
+/// never reads that tensor again.
+pub type EmitFn<'a> = dyn FnMut(&str, Tensor, &mut TensorSet) -> Result<()> + 'a;
+
+/// Reverse-mode gradients for the parameters `spec` requests, collected
+/// into a map (compatibility wrapper over [`backward_streamed`]).
 pub fn backward(
     st: &FwdState,
     cfg: &ModelCfg,
     variant: &str,
-    params: &TensorSet,
+    params: &mut TensorSet,
     batch: &Batch,
     spec: &GradSpec,
 ) -> Result<Grads> {
+    let mut grads: Grads = HashMap::new();
+    let mut emit = |name: &str, g: Tensor, _ps: &mut TensorSet| -> Result<()> {
+        grads.insert(name.to_string(), g);
+        Ok(())
+    };
+    backward_streamed(st, cfg, variant, params, batch, spec, &mut emit)?;
+    Ok(grads)
+}
+
+/// Streamed reverse-mode backward: `dx` propagates down to
+/// `spec.min_unit`, and every requested gradient is handed to `emit` the
+/// moment it is final, then dropped by the consumer — peak parameter-
+/// gradient residency is one tensor, not the whole requested set.
+///
+/// Each layer runs in two phases.  Phase 1 propagates activation
+/// gradients (`dq/dk/dv`, `da1`, …) and performs **every read of the
+/// layer's parameters**.  Phase 2 then forms the weight/bias gradients one
+/// at a time — in manifest parameter order within the unit — and emits
+/// each immediately.  Because no parameter is read after its gradient is
+/// emitted, a sink may fuse the optimizer update in place without
+/// changing any downstream gradient; and because every gradient is
+/// computed from the same cached activations and pre-update parameters as
+/// the collected path, the emitted values are bit-identical to
+/// [`backward`].
+///
+/// Emission order: head unit first, then layers top-down, then the
+/// embedding unit; within a unit, manifest parameter order; a layer's
+/// adapter gradients (LoRA/IA³) follow its base tensors; `prefix.emb`
+/// comes last.  This is a fixed permutation of the artifact output order.
+pub fn backward_streamed(
+    st: &FwdState,
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &mut TensorSet,
+    batch: &Batch,
+    spec: &GradSpec,
+    emit: &mut EmitFn<'_>,
+) -> Result<()> {
     check_variant(variant)?;
     let (bsz, s) = (batch.b, batch.s);
     let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
@@ -583,7 +632,6 @@ pub fn backward(
     let ia3 = variant == "ia3";
     let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
     let head_unit = cfg.n_layers + 1;
-    let mut grads: Grads = HashMap::new();
 
     // --- loss → logits -------------------------------------------------
     let mut dlogits = st.probs_out.clone();
@@ -597,20 +645,14 @@ pub fn backward(
     }
 
     // --- head ----------------------------------------------------------
-    let head_w = get(params, "head.w")?;
-    let hf_s: &[f32] = if p_ == 0 { &st.hf } else { &st.hf_s };
-    if spec.emit(head_unit) {
-        if spec.dense {
-            let mut dhead_w = vec![0.0f32; d * v_];
-            par::matmul_at(hf_s, &dlogits, &mut dhead_w, bs, d, v_);
-            grads.insert("head.w".into(), Tensor::from_vec(dhead_w, &[d, v_]));
-        }
-        grads.insert("head.b".into(), Tensor::from_vec(colsum(&dlogits, bs, v_), &[v_]));
-    }
+    // Propagate through the head *before* emitting its gradients: once a
+    // gradient is emitted the sink may update that tensor in place, so all
+    // reads of head.w / ln_f.scale must happen first.
     let mut dhf_s = vec![0.0f32; bs * d];
-    par::matmul_bt(&dlogits, &head_w.data, &mut dhf_s, bs, v_, d);
-    drop(dlogits);
-
+    {
+        let head_w = get(params, "head.w")?;
+        par::matmul_bt(&dlogits, &head_w.data, &mut dhf_s, bs, v_, d);
+    }
     let dhf = if p_ == 0 {
         dhf_s
     } else {
@@ -623,48 +665,55 @@ pub fn backward(
         }
         out
     };
-    let (mut dx, dscale_f, dbias_f) =
-        ln_bwd(&dhf, &st.x_fin, &st.lnf, &get(params, "ln_f.scale")?.data, d);
+    let (mut dx, dscale_f, dbias_f) = {
+        let scale_f = get(params, "ln_f.scale")?;
+        ln_bwd(&dhf, &st.x_fin, &st.lnf, &scale_f.data, d)
+    };
+    drop(dhf);
     if spec.emit(head_unit) {
-        grads.insert("ln_f.scale".into(), Tensor::from_vec(dscale_f, &[d]));
-        grads.insert("ln_f.bias".into(), Tensor::from_vec(dbias_f, &[d]));
+        emit("ln_f.scale", Tensor::from_vec(dscale_f, &[d]), params)?;
+        emit("ln_f.bias", Tensor::from_vec(dbias_f, &[d]), params)?;
+        if spec.dense {
+            let hf_s: &[f32] = if p_ == 0 { &st.hf } else { &st.hf_s };
+            let mut dhead_w = vec![0.0f32; d * v_];
+            par::matmul_at(hf_s, &dlogits, &mut dhead_w, bs, d, v_);
+            emit("head.w", Tensor::from_vec(dhead_w, &[d, v_]), params)?;
+        }
+        emit("head.b", Tensor::from_vec(colsum(&dlogits, bs, v_), &[v_]), params)?;
     }
+    drop(dlogits);
 
     // --- blocks, top-down ----------------------------------------------
     for i in (0..cfg.n_layers).rev() {
         if i + 1 < spec.min_unit {
             // Truncated backprop: nothing below this unit was requested.
-            return Ok(grads);
+            return Ok(());
         }
         let ls = &st.layers[i];
         let pfx = format!("l{i}.");
-        let emit = spec.emit(i + 1);
-        let emit_w = emit && spec.dense;
-
-        // FFN
-        let w1 = get(params, &format!("{pfx}ffn.w1"))?;
-        let w2 = get(params, &format!("{pfx}ffn.w2"))?;
+        let emit_unit = spec.emit(i + 1);
+        let emit_w = emit_unit && spec.dense;
         let mid_ref: &[f32] = if ia3 { &ls.mid_ia3 } else { &ls.mid0 };
+
+        // ---- phase 1: propagate activation gradients.  Every read of
+        // this layer's parameters happens here, before any of its
+        // gradients is emitted (so fused sinks can update in place).
+        let dx_in = dx;
         let mut dmid = vec![0.0f32; bt * f_];
-        par::matmul_bt(&dx, &w2.data, &mut dmid, bt, d, f_);
-        if emit_w {
-            let mut dw2 = vec![0.0f32; f_ * d];
-            par::matmul_at(mid_ref, &dx, &mut dw2, bt, f_, d);
-            grads.insert(format!("{pfx}ffn.w2"), Tensor::from_vec(dw2, &[f_, d]));
+        {
+            let w2 = get(params, &format!("{pfx}ffn.w2"))?;
+            par::matmul_bt(&dx_in, &w2.data, &mut dmid, bt, d, f_);
         }
-        if emit {
-            grads.insert(format!("{pfx}ffn.b2"), Tensor::from_vec(colsum(&dx, bt, d), &[d]));
-        }
+        let mut dlff = Vec::new();
         if ia3 {
             let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
             if spec.adapters {
-                let mut dlff = vec![0.0f32; f_];
+                dlff = vec![0.0f32; f_];
                 for r in 0..bt {
                     for j in 0..f_ {
                         dlff[j] += dmid[r * f_ + j] * ls.mid0[r * f_ + j];
                     }
                 }
-                grads.insert(format!("{pfx}ia3.lff"), Tensor::from_vec(dlff, &[f_]));
             }
             for row in dmid.chunks_mut(f_) {
                 for (mj, &lj) in row.iter_mut().zip(lff.iter()) {
@@ -683,37 +732,29 @@ pub fn backward(
                 }
             });
         }
-        if emit_w {
-            let mut dw1 = vec![0.0f32; d * f_];
-            par::matmul_at(&ls.h2, &da1, &mut dw1, bt, d, f_);
-            grads.insert(format!("{pfx}ffn.w1"), Tensor::from_vec(dw1, &[d, f_]));
-        }
-        if emit {
-            grads.insert(format!("{pfx}ffn.b1"), Tensor::from_vec(colsum(&da1, bt, f_), &[f_]));
-        }
         let mut dh2 = vec![0.0f32; bt * d];
-        par::matmul_bt(&da1, &w1.data, &mut dh2, bt, f_, d);
-        drop(da1);
-        let (dx_ln2, dsc2, dbi2) =
-            ln_bwd(&dh2, &ls.x_mid, &ls.ln2, &get(params, &format!("{pfx}ln2.scale"))?.data, d);
-        if emit {
-            grads.insert(format!("{pfx}ln2.scale"), Tensor::from_vec(dsc2, &[d]));
-            grads.insert(format!("{pfx}ln2.bias"), Tensor::from_vec(dbi2, &[d]));
+        {
+            let w1 = get(params, &format!("{pfx}ffn.w1"))?;
+            par::matmul_bt(&da1, &w1.data, &mut dh2, bt, f_, d);
         }
-        let mut dx_mid = dx;
+        let (dx_ln2, dsc2, dbi2) = {
+            let sc2 = get(params, &format!("{pfx}ln2.scale"))?;
+            ln_bwd(&dh2, &ls.x_mid, &ls.ln2, &sc2.data, d)
+        };
+        drop(dh2);
+        // Keep the layer-top gradient alive only when phase 2 will consume
+        // it (ffn.w2/b2); pass-through layers move it — no copy on the
+        // truncated-backprop hot path.
+        let (mut dx_mid, dx_top) =
+            if emit_unit { (dx_in.clone(), dx_in) } else { (dx_in, Vec::new()) };
         axpy(&mut dx_mid, 1.0, &dx_ln2);
+        drop(dx_ln2);
 
-        // attention out-projection
-        let wo = get(params, &format!("{pfx}attn.wo"))?;
+        // attention out-projection input gradient
         let mut dattn = vec![0.0f32; bt * d];
-        par::matmul_bt(&dx_mid, &wo.data, &mut dattn, bt, d, d);
-        if emit_w {
-            let mut dwo = vec![0.0f32; d * d];
-            par::matmul_at(&ls.attn, &dx_mid, &mut dwo, bt, d, d);
-            grads.insert(format!("{pfx}attn.wo"), Tensor::from_vec(dwo, &[d, d]));
-        }
-        if emit {
-            grads.insert(format!("{pfx}attn.bo"), Tensor::from_vec(colsum(&dx_mid, bt, d), &[d]));
+        {
+            let wo = get(params, &format!("{pfx}attn.wo"))?;
+            par::matmul_bt(&dx_mid, &wo.data, &mut dattn, bt, d, d);
         }
 
         // attention core
@@ -767,20 +808,19 @@ pub fn backward(
         let mut dv = scatter_heads(&dv_hm, bsz, t_, heads, dh);
 
         // IA³ on k/v (gradients flow to the pre-scale activations)
+        let (mut dlk, mut dlv) = (Vec::new(), Vec::new());
         if ia3 {
             let lk = &get(params, &format!("{pfx}ia3.lk"))?.data;
             let lv = &get(params, &format!("{pfx}ia3.lv"))?.data;
             if spec.adapters {
-                let mut dlk = vec![0.0f32; d];
-                let mut dlv = vec![0.0f32; d];
+                dlk = vec![0.0f32; d];
+                dlv = vec![0.0f32; d];
                 for r in 0..bt {
                     for j in 0..d {
                         dlk[j] += dk[r * d + j] * ls.k0[r * d + j];
                         dlv[j] += dv[r * d + j] * ls.v0[r * d + j];
                     }
                 }
-                grads.insert(format!("{pfx}ia3.lk"), Tensor::from_vec(dlk, &[d]));
-                grads.insert(format!("{pfx}ia3.lv"), Tensor::from_vec(dlv, &[d]));
             }
             for row in dk.chunks_mut(d) {
                 for (kj, &lj) in row.iter_mut().zip(lk.iter()) {
@@ -794,25 +834,17 @@ pub fn backward(
             }
         }
 
-        if emit {
-            grads.insert(format!("{pfx}attn.bq"), Tensor::from_vec(colsum(&dq, bt, d), &[d]));
-            grads.insert(format!("{pfx}attn.bk"), Tensor::from_vec(colsum(&dk, bt, d), &[d]));
-            grads.insert(format!("{pfx}attn.bv"), Tensor::from_vec(colsum(&dv, bt, d), &[d]));
-        }
-
-        // dW_q/dW_v drive both the base weight grads and (chain rule) the
-        // LoRA factor grads, so they're needed in either case.
-        let need_wfull = emit_w || (lora && spec.adapters);
-        let mut dwq_full = Vec::new();
-        let mut dwv_full = Vec::new();
-        if need_wfull {
-            dwq_full = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dq, &mut dwq_full, bt, d, d);
-            dwv_full = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dv, &mut dwv_full, bt, d, d);
-        }
+        // LoRA factor gradients (chain rule through dW_q/dW_v) are
+        // computed before any emission so the reads of the LoRA factors
+        // precede their own updates; the dW intermediates are dropped
+        // immediately.
+        let mut lora_grads: Vec<(String, Tensor)> = Vec::new();
         if lora && spec.adapters {
             let r = cfg.lora_rank;
+            let mut dwq_full = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dq, &mut dwq_full, bt, d, d);
+            let mut dwv_full = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dv, &mut dwv_full, bt, d, d);
             let aq = get(params, &format!("{pfx}lora.aq"))?;
             let bq = get(params, &format!("{pfx}lora.bq"))?;
             let av = get(params, &format!("{pfx}lora.av"))?;
@@ -829,71 +861,146 @@ pub fn backward(
             let mut dbv = vec![0.0f32; r * d];
             par::matmul_at(&av.data, &dwv_full, &mut dbv, d, r, d);
             dbv.iter_mut().for_each(|z| *z *= lora_sc);
-            grads.insert(format!("{pfx}lora.aq"), Tensor::from_vec(daq, &[d, r]));
-            grads.insert(format!("{pfx}lora.bq"), Tensor::from_vec(dbq, &[r, d]));
-            grads.insert(format!("{pfx}lora.av"), Tensor::from_vec(dav, &[d, r]));
-            grads.insert(format!("{pfx}lora.bv"), Tensor::from_vec(dbv, &[r, d]));
+            lora_grads.push((format!("{pfx}lora.aq"), Tensor::from_vec(daq, &[d, r])));
+            lora_grads.push((format!("{pfx}lora.bq"), Tensor::from_vec(dbq, &[r, d])));
+            lora_grads.push((format!("{pfx}lora.av"), Tensor::from_vec(dav, &[d, r])));
+            lora_grads.push((format!("{pfx}lora.bv"), Tensor::from_vec(dbv, &[r, d])));
         }
-        let wk = get(params, &format!("{pfx}attn.wk"))?;
+
+        // dh1 and the LN1 backward complete the layer's parameter reads.
+        let mut dh1 = vec![0.0f32; bt * d];
+        par::matmul_bt(&dq, &ls.wq_eff, &mut dh1, bt, d, d);
+        {
+            let wk = get(params, &format!("{pfx}attn.wk"))?;
+            par::matmul_bt(&dk, &wk.data, &mut dh1, bt, d, d);
+        }
+        par::matmul_bt(&dv, &ls.wv_eff, &mut dh1, bt, d, d);
+        let (dx_ln1, dsc1, dbi1) = {
+            let sc1 = get(params, &format!("{pfx}ln1.scale"))?;
+            ln_bwd(&dh1, &ls.x_in, &ls.ln1, &sc1.data, d)
+        };
+        drop(dh1);
+
+        // ---- phase 2: weight/bias gradients, one at a time, in manifest
+        // parameter order, each emitted (and dropped by the sink) before
+        // the next is materialized.
+        if emit_unit {
+            emit(&format!("{pfx}ln1.scale"), Tensor::from_vec(dsc1, &[d]), params)?;
+            emit(&format!("{pfx}ln1.bias"), Tensor::from_vec(dbi1, &[d]), params)?;
+        }
+        if emit_w {
+            let mut dwq = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dq, &mut dwq, bt, d, d);
+            emit(&format!("{pfx}attn.wq"), Tensor::from_vec(dwq, &[d, d]), params)?;
+        }
+        if emit_unit {
+            emit(&format!("{pfx}attn.bq"), Tensor::from_vec(colsum(&dq, bt, d), &[d]), params)?;
+        }
         if emit_w {
             let mut dwk = vec![0.0f32; d * d];
             par::matmul_at(&ls.h1, &dk, &mut dwk, bt, d, d);
-            grads.insert(format!("{pfx}attn.wq"), Tensor::from_vec(dwq_full, &[d, d]));
-            grads.insert(format!("{pfx}attn.wk"), Tensor::from_vec(dwk, &[d, d]));
-            grads.insert(format!("{pfx}attn.wv"), Tensor::from_vec(dwv_full, &[d, d]));
+            emit(&format!("{pfx}attn.wk"), Tensor::from_vec(dwk, &[d, d]), params)?;
+        }
+        if emit_unit {
+            emit(&format!("{pfx}attn.bk"), Tensor::from_vec(colsum(&dk, bt, d), &[d]), params)?;
+        }
+        if emit_w {
+            let mut dwv = vec![0.0f32; d * d];
+            par::matmul_at(&ls.h1, &dv, &mut dwv, bt, d, d);
+            emit(&format!("{pfx}attn.wv"), Tensor::from_vec(dwv, &[d, d]), params)?;
+        }
+        if emit_unit {
+            emit(&format!("{pfx}attn.bv"), Tensor::from_vec(colsum(&dv, bt, d), &[d]), params)?;
+        }
+        if emit_w {
+            let mut dwo = vec![0.0f32; d * d];
+            par::matmul_at(&ls.attn, &dx_mid, &mut dwo, bt, d, d);
+            emit(&format!("{pfx}attn.wo"), Tensor::from_vec(dwo, &[d, d]), params)?;
+        }
+        if emit_unit {
+            emit(&format!("{pfx}attn.bo"), Tensor::from_vec(colsum(&dx_mid, bt, d), &[d]), params)?;
+            emit(&format!("{pfx}ln2.scale"), Tensor::from_vec(dsc2, &[d]), params)?;
+            emit(&format!("{pfx}ln2.bias"), Tensor::from_vec(dbi2, &[d]), params)?;
+        }
+        if emit_w {
+            let mut dw1 = vec![0.0f32; d * f_];
+            par::matmul_at(&ls.h2, &da1, &mut dw1, bt, d, f_);
+            emit(&format!("{pfx}ffn.w1"), Tensor::from_vec(dw1, &[d, f_]), params)?;
+        }
+        if emit_unit {
+            emit(&format!("{pfx}ffn.b1"), Tensor::from_vec(colsum(&da1, bt, f_), &[f_]), params)?;
+        }
+        drop(da1);
+        if emit_w {
+            let mut dw2 = vec![0.0f32; f_ * d];
+            par::matmul_at(mid_ref, &dx_top, &mut dw2, bt, f_, d);
+            emit(&format!("{pfx}ffn.w2"), Tensor::from_vec(dw2, &[f_, d]), params)?;
+        }
+        if emit_unit {
+            emit(&format!("{pfx}ffn.b2"), Tensor::from_vec(colsum(&dx_top, bt, d), &[d]), params)?;
+        }
+        drop(dx_top);
+        // this layer's adapter gradients follow its base tensors
+        for (name, g) in lora_grads {
+            emit(&name, g, params)?;
+        }
+        if ia3 && spec.adapters {
+            emit(&format!("{pfx}ia3.lk"), Tensor::from_vec(dlk, &[d]), params)?;
+            emit(&format!("{pfx}ia3.lv"), Tensor::from_vec(dlv, &[d]), params)?;
+            emit(&format!("{pfx}ia3.lff"), Tensor::from_vec(dlff, &[f_]), params)?;
         }
 
-        let mut dh1 = vec![0.0f32; bt * d];
-        par::matmul_bt(&dq, &ls.wq_eff, &mut dh1, bt, d, d);
-        par::matmul_bt(&dk, &wk.data, &mut dh1, bt, d, d);
-        par::matmul_bt(&dv, &ls.wv_eff, &mut dh1, bt, d, d);
-        let (dx_ln1, dsc1, dbi1) =
-            ln_bwd(&dh1, &ls.x_in, &ls.ln1, &get(params, &format!("{pfx}ln1.scale"))?.data, d);
-        if emit {
-            grads.insert(format!("{pfx}ln1.scale"), Tensor::from_vec(dsc1, &[d]));
-            grads.insert(format!("{pfx}ln1.bias"), Tensor::from_vec(dbi1, &[d]));
-        }
         dx = dx_mid;
         axpy(&mut dx, 1.0, &dx_ln1);
     }
 
     // --- embeddings (unit 0) + prefix adapter ---------------------------
+    // One gradient at a time: the token-embedding scatter (potentially the
+    // largest tensor in the model) is emitted and dropped before the
+    // position-embedding gradient is materialized.  The scatter loops
+    // visit (b, t) in the same order as the old fused loop, and the
+    // prefix/content rows of pos_emb are disjoint, so the per-row
+    // accumulation sequences — and hence the f32 results — are unchanged.
     let want_emb = spec.emit(0);
     let want_prefix = p_ > 0 && spec.adapters;
-    if want_emb || want_prefix {
+    if want_emb {
         let pos_shape = get(params, "pos_emb")?.shape.clone();
-        let mut dtok = if want_emb { vec![0.0f32; v_ * d] } else { Vec::new() };
-        let mut dpos =
-            if want_emb { vec![0.0f32; pos_shape.iter().product()] } else { Vec::new() };
-        let mut dpre = if want_prefix { vec![0.0f32; p_ * d] } else { Vec::new() };
+        let mut dtok = vec![0.0f32; v_ * d];
+        for b in 0..bsz {
+            for tt in p_..t_ {
+                let row = &dx[(b * t_ + tt) * d..][..d];
+                let tc = tt - p_;
+                let tok = batch.tokens[b * s + tc] as usize;
+                axpy(&mut dtok[tok * d..(tok + 1) * d], 1.0, row);
+            }
+        }
+        emit("tok_emb", Tensor::from_vec(dtok, &[v_, d]), params)?;
+        let mut dpos = vec![0.0f32; pos_shape.iter().product()];
         for b in 0..bsz {
             for tt in 0..t_ {
                 let row = &dx[(b * t_ + tt) * d..][..d];
                 if tt < p_ {
-                    if want_prefix {
-                        axpy(&mut dpre[tt * d..(tt + 1) * d], 1.0, row);
-                    }
-                    if want_emb {
-                        let base = cfg.seq_len + tt;
-                        axpy(&mut dpos[base * d..(base + 1) * d], 1.0, row);
-                    }
-                } else if want_emb {
+                    let base = cfg.seq_len + tt;
+                    axpy(&mut dpos[base * d..(base + 1) * d], 1.0, row);
+                } else {
                     let tc = tt - p_;
-                    let tok = batch.tokens[b * s + tc] as usize;
-                    axpy(&mut dtok[tok * d..(tok + 1) * d], 1.0, row);
                     axpy(&mut dpos[tc * d..(tc + 1) * d], 1.0, row);
                 }
             }
         }
-        if want_emb {
-            grads.insert("tok_emb".into(), Tensor::from_vec(dtok, &[v_, d]));
-            grads.insert("pos_emb".into(), Tensor::from_vec(dpos, &pos_shape));
-        }
-        if want_prefix {
-            grads.insert("prefix.emb".into(), Tensor::from_vec(dpre, &[p_, d]));
-        }
+        emit("pos_emb", Tensor::from_vec(dpos, &pos_shape), params)?;
     }
-    Ok(grads)
+    if want_prefix {
+        let mut dpre = vec![0.0f32; p_ * d];
+        for b in 0..bsz {
+            for tt in 0..p_ {
+                let row = &dx[(b * t_ + tt) * d..][..d];
+                axpy(&mut dpre[tt * d..(tt + 1) * d], 1.0, row);
+            }
+        }
+        emit("prefix.emb", Tensor::from_vec(dpre, &[p_, d]), params)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -993,13 +1100,14 @@ mod tests {
     fn backward_truncation_matches_full_backward() {
         let cfg = tiny_cfg();
         let n_units = cfg.n_units();
-        let params = tiny_params(&cfg);
+        let mut params = tiny_params(&cfg);
         let batch = tiny_batch(&cfg, 7);
         let st = forward(&cfg, "base", &params, &batch).unwrap();
         let full =
-            backward(&st, &cfg, "base", &params, &batch, &GradSpec::all(n_units, false)).unwrap();
+            backward(&st, &cfg, "base", &mut params, &batch, &GradSpec::all(n_units, false))
+                .unwrap();
         let head_spec = GradSpec::only_unit(n_units, cfg.n_layers + 1);
-        let head_only = backward(&st, &cfg, "base", &params, &batch, &head_spec).unwrap();
+        let head_only = backward(&st, &cfg, "base", &mut params, &batch, &head_spec).unwrap();
         assert!(head_only.contains_key("head.w"));
         assert!(!head_only.contains_key("l0.attn.wq"), "truncated below the head");
         assert!(!head_only.contains_key("tok_emb"));
@@ -1013,7 +1121,7 @@ mod tests {
         // A middle unit: emitted grads are bit-identical to the full pass
         // even though the layers above it skip their weight-grad work.
         let mid_spec = GradSpec::only_unit(n_units, 1);
-        let mid = backward(&st, &cfg, "base", &params, &batch, &mid_spec).unwrap();
+        let mid = backward(&st, &cfg, "base", &mut params, &batch, &mid_spec).unwrap();
         assert!(mid.contains_key("l0.attn.wq"));
         assert!(!mid.contains_key("head.w"), "head not requested");
         for (name, g) in &mid {
@@ -1027,13 +1135,13 @@ mod tests {
     #[test]
     fn zero_weights_give_zero_grads() {
         let cfg = tiny_cfg();
-        let params = tiny_params(&cfg);
+        let mut params = tiny_params(&cfg);
         let mut batch = tiny_batch(&cfg, 11);
         batch.weights.iter_mut().for_each(|w| *w = 0.0);
         let st = forward(&cfg, "base", &params, &batch).unwrap();
         assert_eq!(st.loss, 0.0);
         let spec = GradSpec::all(cfg.n_units(), false);
-        let grads = backward(&st, &cfg, "base", &params, &batch, &spec).unwrap();
+        let grads = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
         for (name, g) in &grads {
             assert!(g.data.iter().all(|&x| x == 0.0), "{name} nonzero under zero mask");
         }

@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 use super::model;
-use super::{unit_artifact, Batch, ExecBackend, RuntimeStats, StepOutput};
+use super::{unit_artifact, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
 use crate::rng::Pcg32;
 use crate::tensor::{Tensor, TensorSet};
 
@@ -299,6 +299,51 @@ impl NativeBackend {
             }
         }
     }
+
+    /// Shared streamed execution: one forward, then the streamed backward
+    /// for `gspec`, routing each gradient to `sink` through the
+    /// name→slot map the caller derived from the artifact (or group).
+    fn exec_streamed(
+        &mut self,
+        variant: &str,
+        params: &mut TensorSet,
+        batch: &Batch,
+        gspec: &model::GradSpec,
+        slots: &HashMap<String, usize>,
+        sink: &mut dyn GradSink,
+    ) -> Result<StreamOutput> {
+        self.account_uploads(params);
+        self.stats.h2d_bytes += batch.h2d_bytes() as u64;
+
+        let cfg = self.manifest.config.clone();
+        let t0 = std::time::Instant::now();
+        let fwd = model::forward(&cfg, variant, params, batch)?;
+        if !slots.is_empty() {
+            let stats = &mut self.stats;
+            let mut emitted = 0usize;
+            let mut emit = |name: &str, g: Tensor, ps: &mut TensorSet| -> Result<()> {
+                let slot = *slots
+                    .get(name)
+                    .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
+                let bytes = g.bytes() as u64;
+                stats.d2h_bytes += bytes;
+                stats.note_grad_resident(bytes + sink.resident_bytes());
+                sink.grad(slot, name, g, ps)?;
+                stats.note_grad_resident(sink.resident_bytes());
+                emitted += 1;
+                Ok(())
+            };
+            model::backward_streamed(&fwd, &cfg, variant, params, batch, gspec, &mut emit)?;
+            if emitted != slots.len() {
+                bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
+            }
+        }
+        sink.finish(params)?;
+        let exec_time = t0.elapsed();
+        self.stats.executions += 1;
+        self.stats.exec_secs += exec_time.as_secs_f64();
+        Ok(StreamOutput { loss: fwd.loss, ncorrect: fwd.ncorrect, exec_time })
+    }
 }
 
 impl ExecBackend for NativeBackend {
@@ -314,7 +359,13 @@ impl ExecBackend for NativeBackend {
         &self.manifest
     }
 
-    fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput> {
+    fn run_streamed(
+        &mut self,
+        artifact: &str,
+        params: &mut TensorSet,
+        batch: &Batch,
+        sink: &mut dyn GradSink,
+    ) -> Result<StreamOutput> {
         batch.validate()?;
         let info = self.manifest.artifact(artifact)?.clone();
         let n_inputs = info.inputs.len();
@@ -332,7 +383,6 @@ impl ExecBackend for NativeBackend {
             .map(|rest| rest.split('_').next().unwrap_or(rest))
             .with_context(|| format!("cannot infer variant from artifact {artifact:?}"))?
             .to_string();
-        let vinfo = self.manifest.variant(&variant)?;
         // Which gradients the artifact asks for: per-unit emit flags plus
         // the descent bound (adapters live in every layer, so they force a
         // full downward pass — but not the embedding-gradient scatter).
@@ -342,48 +392,80 @@ impl ExecBackend for NativeBackend {
             adapters: false,
             dense: false,
         };
-        for out_name in &info.outputs[2..] {
-            let p = vinfo
-                .params
-                .iter()
-                .find(|p| &p.name == out_name)
-                .with_context(|| format!("grad output {out_name} not a {variant} param"))?;
-            if p.unit < 0 {
-                gspec.adapters = true;
-                gspec.min_unit = 0;
-            } else {
-                let u = p.unit as usize;
-                if u < gspec.units.len() {
-                    gspec.units[u] = true;
-                }
-                gspec.min_unit = gspec.min_unit.min(u);
-                // A bias/LN-only request (BitFit) never needs the dense
-                // weight matmuls.
-                gspec.dense |= p.shape.len() > 1;
-            }
-        }
-
-        self.account_uploads(params);
-        self.stats.h2d_bytes += batch.h2d_bytes() as u64;
-
-        let cfg = self.manifest.config.clone();
-        let t0 = std::time::Instant::now();
-        let fwd = model::forward(&cfg, &variant, params, batch)?;
-        let mut grads = Vec::with_capacity(info.outputs.len().saturating_sub(2));
-        if info.outputs.len() > 2 {
-            let mut all = model::backward(&fwd, &cfg, &variant, params, batch, &gspec)?;
+        {
+            let vinfo = self.manifest.variant(&variant)?;
             for out_name in &info.outputs[2..] {
-                let g = all
-                    .remove(out_name)
-                    .with_context(|| format!("backward produced no grad for {out_name}"))?;
-                self.stats.d2h_bytes += g.bytes() as u64;
-                grads.push(g);
+                let p = vinfo
+                    .params
+                    .iter()
+                    .find(|p| &p.name == out_name)
+                    .with_context(|| format!("grad output {out_name} not a {variant} param"))?;
+                if p.unit < 0 {
+                    gspec.adapters = true;
+                    gspec.min_unit = 0;
+                } else {
+                    let u = p.unit as usize;
+                    if u < gspec.units.len() {
+                        gspec.units[u] = true;
+                    }
+                    gspec.min_unit = gspec.min_unit.min(u);
+                    // A bias/LN-only request (BitFit) never needs the dense
+                    // weight matmuls.
+                    gspec.dense |= p.shape.len() > 1;
+                }
             }
         }
-        let exec_time = t0.elapsed();
-        self.stats.executions += 1;
-        self.stats.exec_secs += exec_time.as_secs_f64();
-        Ok(StepOutput { loss: fwd.loss, ncorrect: fwd.ncorrect, grads, exec_time })
+        let slots: HashMap<String, usize> =
+            info.outputs[2..].iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        self.exec_streamed(&variant, params, batch, &gspec, &slots, sink)
+    }
+
+    fn run_group_streamed(
+        &mut self,
+        units: &[usize],
+        params: &mut TensorSet,
+        batch: &Batch,
+        sink: &mut dyn GradSink,
+    ) -> Result<StreamOutput> {
+        batch.validate()?;
+        let mut gspec = model::GradSpec {
+            min_unit: usize::MAX,
+            units: vec![false; self.manifest.n_units],
+            adapters: false,
+            dense: true,
+        };
+        let slots = {
+            let vinfo = self.manifest.variant("base")?;
+            if params.len() != vinfo.params.len() {
+                bail!("group run expects {} base params, got {}", vinfo.params.len(), params.len());
+            }
+            let mut slots = HashMap::new();
+            let mut slot = 0usize;
+            for &u in units {
+                if u >= self.manifest.n_units {
+                    bail!("unit {u} out of range ({} units)", self.manifest.n_units);
+                }
+                if gspec.units[u] {
+                    bail!("unit {u} listed twice in the group");
+                }
+                gspec.units[u] = true;
+                gspec.min_unit = gspec.min_unit.min(u);
+                for p in vinfo.params.iter().filter(|p| p.unit == u as i64) {
+                    slots.insert(p.name.clone(), slot);
+                    slot += 1;
+                }
+            }
+            slots
+        };
+        self.exec_streamed("base", params, batch, &gspec, &slots, sink)
+    }
+
+    fn note_grad_residency(&mut self, bytes: u64) {
+        self.stats.note_grad_resident(bytes);
+    }
+
+    fn reset_run_peaks(&mut self) {
+        self.stats.peak_grad_resident_bytes = 0;
     }
 
     fn load_params(&self, variant: &str) -> Result<TensorSet> {
@@ -452,9 +534,9 @@ mod tests {
     #[test]
     fn run_checks_param_arity() {
         let mut be = NativeBackend::preset("tiny", 0).unwrap();
-        let params = be.load_params("base").unwrap();
+        let mut params = be.load_params("base").unwrap();
         let batch = Batch::new(2, 8);
-        assert!(be.run("fwd_lora", &params, &batch).is_err(), "base params ≠ lora inputs");
-        assert!(be.run("nope", &params, &batch).is_err());
+        assert!(be.run("fwd_lora", &mut params, &batch).is_err(), "base params ≠ lora inputs");
+        assert!(be.run("nope", &mut params, &batch).is_err());
     }
 }

@@ -201,7 +201,7 @@ pub fn mtbench(b: &mut Bench) -> Result<()> {
         let mut row = vec![strat.to_string()];
         let mut sum = 0.0;
         for c in 0..cats.len() {
-            let ev = evaluate(b.rt.as_mut(), &fwd, &params, &task.eval_category(c))?;
+            let ev = evaluate(b.rt.as_mut(), &fwd, &mut params, &task.eval_category(c))?;
             row.push(format!("{:.1}", ev.acc * 100.0));
             sum += ev.acc;
             json.push(Value::obj(vec![
@@ -526,23 +526,36 @@ pub fn table5(b: &mut Bench) -> Result<()> {
             let warm = b.rt.manifest().n_units as u64 + 2;
             let _ = b.run_one(&spec, "markovlm", warm, 1)?;
             let rec = b.run_one(&spec, "markovlm", steps, 1)?;
+            let lookups = rec.backend.cache_hits + rec.backend.cache_misses;
+            let hit_rate = if lookups > 0 {
+                rec.backend.cache_hits as f64 / lookups as f64
+            } else {
+                0.0
+            };
             rows.push(vec![
                 opt.name().to_string(),
                 strat.to_string(),
                 format!("{:.2}", rec.steps_per_sec),
                 format!("{:.1}", rec.exec_secs / rec.wall_secs * 100.0),
+                format!("{:.1}", hit_rate * 100.0),
+                format!("{:.1}", rec.backend.peak_grad_resident_bytes as f64 / 1024.0),
             ]);
             json.push(Value::obj(vec![
                 ("optimizer", opt.name().into()),
                 ("method", strat.into()),
                 ("steps_per_sec", rec.steps_per_sec.into()),
                 ("exec_frac", (rec.exec_secs / rec.wall_secs).into()),
+                ("upload_cache_hit_rate", hit_rate.into()),
+                (
+                    "peak_grad_resident_bytes",
+                    (rec.backend.peak_grad_resident_bytes as usize).into(),
+                ),
             ]));
         }
     }
     print_table(
         &format!("Table 5 analogue (speed on this substrate, {steps} steps)"),
-        &["optim", "method", "steps/s", "XLA-exec %"],
+        &["optim", "method", "steps/s", "XLA-exec %", "upload-cache hit %", "peak grad KiB"],
         &rows,
     );
     b.save("table5", &Value::Arr(json))

@@ -103,9 +103,10 @@ impl Bench {
 
     /// Zero-shot (untrained) accuracy on a task.
     pub fn zero_shot(&mut self, task_name: &str, seed: u64) -> Result<f64> {
-        let params = self.rt.load_params("base")?;
+        let mut params = self.rt.load_params("base")?;
         let task = build_task(task_name, self.geom(), seed).unwrap();
-        let ev = trainer::evaluate(self.rt.as_mut(), "fwd_base", &params, task.eval_batches())?;
+        let ev =
+            trainer::evaluate(self.rt.as_mut(), "fwd_base", &mut params, task.eval_batches())?;
         Ok(ev.acc)
     }
 

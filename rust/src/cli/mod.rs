@@ -124,11 +124,15 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let task_name = a.get("task").unwrap_or("motif4");
     let seed = a.get_num("seed").unwrap_or(0.0) as u64;
     let mut be = backend_from(a, seed)?;
-    let params = be.load_params(variant)?;
+    let mut params = be.load_params(variant)?;
     let task = build_task(task_name, geom(be.as_ref()), seed)
         .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
-    let ev =
-        trainer::evaluate(be.as_mut(), &format!("fwd_{variant}"), &params, task.eval_batches())?;
+    let ev = trainer::evaluate(
+        be.as_mut(),
+        &format!("fwd_{variant}"),
+        &mut params,
+        task.eval_batches(),
+    )?;
     println!("task={task_name} variant={variant} acc={:.4} loss={:.4}", ev.acc, ev.loss);
     Ok(())
 }
@@ -153,9 +157,9 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
             arch.peak_group_params(m) as f64 / arch.total_params() as f64 * 100.0,
         );
         println!(
-            "  {:<10} {:<8} {:<5} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
-            "optim", "dtype", "ftype", "#Para(MiB)", "#Gra(MiB)", "#Sta(MiB)", "PGS(GiB)",
-            "Res(GiB)", "Tot(GiB)"
+            "  {:<10} {:<8} {:<5} {:>10} {:>10} {:>12} {:>10} {:>9} {:>9} {:>9}",
+            "optim", "dtype", "ftype", "#Para(MiB)", "#Gra(MiB)", "#GraStr(MiB)", "#Sta(MiB)",
+            "PGS(GiB)", "Res(GiB)", "Tot(GiB)"
         );
         for opt in OptimKind::ALL {
             for (dt, meth) in [
@@ -171,12 +175,13 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
                     _ => "HiFT",
                 };
                 println!(
-                    "  {:<10} {:<8} {:<5} {:>10.2} {:>10.2} {:>10.2} {:>9.2} {:>9.2} {:>9.2}",
+                    "  {:<10} {:<8} {:<5} {:>10.2} {:>10.2} {:>12.2} {:>10.2} {:>9.2} {:>9.2} {:>9.2}",
                     opt.name(),
                     dt.name(),
                     f,
                     r.para / MIB,
                     r.gra / MIB,
+                    r.gra_streamed / MIB,
                     r.sta / MIB,
                     r.pgs / GIB,
                     r.residual / GIB,

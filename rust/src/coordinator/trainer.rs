@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::backend::{Batch, ExecBackend};
+use crate::backend::{Batch, ExecBackend, RuntimeStats};
 use crate::data::Task;
 use crate::metrics::{Accuracy, Series, Throughput};
 use crate::ser::Value;
@@ -43,7 +43,7 @@ pub struct EvalResult {
 pub fn evaluate(
     be: &mut dyn ExecBackend,
     fwd_artifact: &str,
-    params: &TensorSet,
+    params: &mut TensorSet,
     batches: &[Batch],
 ) -> Result<EvalResult> {
     let mut acc = Accuracy::default();
@@ -77,6 +77,14 @@ pub struct RunRecord {
     pub optimizer_state_bytes: usize,
     /// Paging ledger summary (HiFT only): (h2d, d2h, max_inflight, peak_device).
     pub paging: Option<(u64, u64, u64, u64)>,
+    /// Peak gradient residency observed by the strategy's fused-update
+    /// ledger (streamed HiFT: ≈ the largest single tensor); `None` when the
+    /// strategy has no ledger.
+    pub peak_grad_resident_bytes: Option<u64>,
+    /// Backend execution statistics for this run (additive counters are
+    /// per-run deltas; peak fields are end-of-run values) — the upload-
+    /// cache hit rates the bench tables report.
+    pub backend: RuntimeStats,
 }
 
 impl RunRecord {
@@ -115,16 +123,35 @@ impl RunRecord {
             ),
         ];
         if let Some((h2d, d2h, inflight, peak)) = self.paging {
-            pairs.push((
-                "paging",
-                Value::obj(vec![
-                    ("h2d_bytes", (h2d as usize).into()),
-                    ("d2h_bytes", (d2h as usize).into()),
-                    ("max_inflight_bytes", (inflight as usize).into()),
-                    ("peak_device_state_bytes", (peak as usize).into()),
-                ]),
-            ));
+            let mut paging = vec![
+                ("h2d_bytes", Value::from(h2d as usize)),
+                ("d2h_bytes", (d2h as usize).into()),
+                ("max_inflight_bytes", (inflight as usize).into()),
+                ("peak_device_state_bytes", (peak as usize).into()),
+            ];
+            if let Some(g) = self.peak_grad_resident_bytes {
+                paging.push(("peak_grad_resident_bytes", (g as usize).into()));
+            }
+            pairs.push(("paging", Value::obj(paging)));
         }
+        let b = &self.backend;
+        let lookups = b.cache_hits + b.cache_misses;
+        let hit_rate =
+            if lookups > 0 { b.cache_hits as f64 / lookups as f64 } else { 0.0 };
+        pairs.push((
+            "backend",
+            Value::obj(vec![
+                ("executions", (b.executions as usize).into()),
+                ("exec_secs", b.exec_secs.into()),
+                ("compiles", (b.compiles as usize).into()),
+                ("h2d_bytes", (b.h2d_bytes as usize).into()),
+                ("d2h_bytes", (b.d2h_bytes as usize).into()),
+                ("cache_hits", (b.cache_hits as usize).into()),
+                ("cache_misses", (b.cache_misses as usize).into()),
+                ("cache_hit_rate", hit_rate.into()),
+                ("peak_grad_resident_bytes", (b.peak_grad_resident_bytes as usize).into()),
+            ]),
+        ));
         Value::obj(pairs)
     }
 }
@@ -141,6 +168,10 @@ pub fn train(
     cfg: TrainCfg,
 ) -> Result<RunRecord> {
     let fwd = strategy.fwd_artifact();
+    // Peaks are reset per run so RunRecord reports this run's residency,
+    // not the lifetime maximum of a shared bench backend.
+    be.reset_run_peaks();
+    let stats_start = be.stats().clone();
     let mut losses = Series::new("train_loss");
     let mut train_acc = Accuracy::default();
     let mut evals = Vec::new();
@@ -193,6 +224,8 @@ pub fn train(
         paging: strategy
             .ledger()
             .map(|l| (l.h2d_bytes, l.d2h_bytes, l.max_inflight_bytes, l.peak_device_bytes)),
+        peak_grad_resident_bytes: strategy.ledger().map(|l| l.peak_grad_resident_bytes),
+        backend: be.stats().since(&stats_start),
     })
 }
 

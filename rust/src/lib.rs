@@ -21,6 +21,17 @@
 //! identical either way — which is itself the paper's point: HiFT only
 //! needs per-group gradients, not a particular autodiff substrate.
 //!
+//! The seam is **streamed**: the primitive operation is
+//! `run_streamed(artifact, params, batch, &mut dyn GradSink)` — the
+//! backward walk emits each parameter gradient the moment it is final, and
+//! the strategy's sink ([`optim::FusedApply`], optionally double-buffered
+//! by [`optim::PipelinedApply`]) clips, pages optimizer state, updates in
+//! place and drops it.  Peak gradient residency is one tensor instead of
+//! the active group's sum, and HiFT groups (m>1) run as a single forward +
+//! multi-unit backward instead of one pass per unit.  `run` (collected
+//! `Vec<Tensor>`) survives as a provided method for forward-only and MeZO
+//! paths.
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -28,12 +39,12 @@
 //! | [`ser`] | minimal JSON (no serde in the offline vendor set) |
 //! | [`rng`] | deterministic PCG RNG (MeZO perturbations, shuffles) |
 //! | [`tensor`] | flat f32 tensors + the math optimizers need |
-//! | [`backend`] | the execution seam: `ExecBackend`, manifest, native CPU model, thread helpers |
-//! | [`runtime`] | PJRT client, artifact registry, executable cache (`pjrt` feature) |
-//! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger |
+//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, manifest, native CPU model, thread helpers |
+//! | [`runtime`] | PJRT client, artifact registry, executable cache (`pjrt` feature; streams via post-execute drain) |
+//! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger + fused/pipelined update sinks |
 //! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer |
 //! | [`strategies`] | FPFT, LoRA, IA3, prefix, BitFit, LP, MeZO, LOMO, … |
-//! | [`memmodel`] | analytic GPU-memory accounting (Tables 5, 8–12, Fig. 6) |
+//! | [`memmodel`] | analytic GPU-memory accounting (Tables 5, 8–12, Fig. 6) incl. streamed-gradient residency |
 //! | [`data`] | synthetic tasks standing in for GLUE/E2E/GSM8K |
 //! | [`metrics`] | loss/accuracy/throughput trackers |
 //! | [`bench`] | table/figure harnesses shared by `cargo bench` targets |

@@ -82,6 +82,12 @@ pub struct MemRow {
     pub trainable: usize,
     pub para: f64,
     pub gra: f64,
+    /// Peak gradient residency under *streamed* execution (the GradSink
+    /// seam): backward fuses each tensor's update and drops its gradient
+    /// immediately, so only the largest single trainable tensor is ever
+    /// resident — vs `gra`'s full collected set.  For PEFT the adapter set
+    /// is small and unstructured here, so the collected bound is used.
+    pub gra_streamed: f64,
     pub sta: f64,
     /// para + gra + sta.
     pub pgs: f64,
@@ -95,6 +101,9 @@ impl MemRow {
     }
     pub fn gra_mib(&self) -> f64 {
         self.gra / MIB
+    }
+    pub fn gra_streamed_mib(&self) -> f64 {
+        self.gra_streamed / MIB
     }
     pub fn sta_mib(&self) -> f64 {
         self.sta / MIB
@@ -173,11 +182,13 @@ pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Wor
     let n = arch.total_params() as f64;
     let params = arch.params();
 
-    // Trainable set (peak per step) as tensor shapes.
-    let (trainable, sta): (usize, f64) = match method {
+    // Trainable set (peak per step) as tensor shapes; `largest` is the
+    // biggest single trainable tensor (streamed gradient residency).
+    let (trainable, sta, largest): (usize, f64, usize) = match method {
         Method::Fpft => {
             let shapes: Vec<&[usize]> = params.iter().map(|p| p.shape.as_slice()).collect();
-            (arch.total_params(), state_bytes(&shapes, opt))
+            let largest = params.iter().map(|p| p.numel()).max().unwrap_or(0);
+            (arch.total_params(), state_bytes(&shapes, opt), largest)
         }
         Method::Hift { m } => {
             // Peak group = contiguous unit chunk with most parameters.
@@ -199,7 +210,13 @@ pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Wor
                 .filter(|p| p.unit >= best.0 && p.unit < best.0 + m)
                 .map(|p| p.shape.as_slice())
                 .collect();
-            (best.1, state_bytes(&shapes, opt))
+            let largest = params
+                .iter()
+                .filter(|p| p.unit >= best.0 && p.unit < best.0 + m)
+                .map(|p| p.numel())
+                .max()
+                .unwrap_or(0);
+            (best.1, state_bytes(&shapes, opt), largest)
         }
         Method::Peft { adapter_params } => {
             // Adapters are overwhelmingly small matrices; model state on the
@@ -210,7 +227,9 @@ pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Wor
                 OptimKind::Sgd => 0.0,
                 OptimKind::Adafactor => 0.1 * 4.0 * adapter_params as f64,
             };
-            (adapter_params, sta)
+            // No per-tensor structure for adapters here: use the collected
+            // bound (they are tiny either way).
+            (adapter_params, sta, adapter_params)
         }
     };
 
@@ -230,9 +249,10 @@ pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Wor
     };
     let para = para + extra_para;
     let gra = 4.0 * trainable as f64;
+    let gra_streamed = 4.0 * largest as f64;
     let pgs = para + gra + sta;
     let residual = residual_bytes(arch, w, dtype, method);
-    MemRow { trainable, para, gra, sta, pgs, residual, total: pgs + residual }
+    MemRow { trainable, para, gra, gra_streamed, sta, pgs, residual, total: pgs + residual }
 }
 
 /// The Appendix-B closed form: ζ_hift/ζ_fpft = (k+3)/(4k) for AdamW @ fp32
@@ -329,6 +349,20 @@ mod tests {
         let h = account(&a, OptimKind::AdamW, Dtype::MixedHi, Method::Hift { m: 1 }, w);
         assert!(h.total_gib() < 24.0, "total {:.2} GiB must fit 24G", h.total_gib());
         assert!((h.total_gib() - 16.87).abs() < 3.0, "total {:.2} vs paper 16.87", h.total_gib());
+    }
+
+    #[test]
+    fn streamed_grad_term_is_one_tensor_not_the_set() {
+        let a = by_name("roberta-base").unwrap();
+        let f = account(&a, OptimKind::AdamW, Dtype::Fp32, Method::Fpft, W512);
+        let largest = a.params().iter().map(|p| p.numel()).max().unwrap();
+        assert_eq!(f.gra_streamed, 4.0 * largest as f64, "FPFT streamed = largest tensor");
+        assert!(f.gra_streamed < f.gra, "streamed residency ≪ collected set");
+
+        let h = account(&a, OptimKind::AdamW, Dtype::Fp32, Method::Hift { m: 2 }, W512);
+        assert!(h.gra_streamed <= h.gra, "HiFT streamed bounded by the group");
+        assert!(h.gra_streamed <= f.gra_streamed, "group's largest ≤ model's largest");
+        assert!(h.gra_streamed > 0.0);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! The fused-update layer: gradient → clip → ledger page-in → optimizer
+//! update → ledger page-out, applied per tensor as gradients stream out of
+//! the backward walk ([`crate::backend::ExecBackend::run_streamed`]).
+//!
+//! This is Algorithm 1 steps i/g'/k fused into the emission point: the
+//! gradient is dropped the moment the update lands, so peak parameter-
+//! gradient residency is the single tensor in flight instead of the whole
+//! group's `Vec<Tensor>` — and the per-tensor sequence (clip, page-in,
+//! update, page-out) is exactly the one the old collected loop ran, so the
+//! resulting parameters and ledger are bit-identical to it.
+
+use anyhow::{bail, Result};
+
+use super::{clip_grad, OffloadLedger, Optimizer};
+use crate::backend::GradSink;
+use crate::tensor::{Tensor, TensorSet};
+
+/// A [`GradSink`] that applies the optimizer update the moment a gradient
+/// arrives and drops it immediately.
+pub struct FusedApply<'a> {
+    optimizer: &'a mut dyn Optimizer,
+    ledger: Option<&'a mut OffloadLedger>,
+    /// Gradient slot → parameter index in the running `TensorSet`.
+    slot_param: &'a [usize],
+    grad_clip: f32,
+    lr: f32,
+    /// Total parameter elements updated so far (the per-step trainable
+    /// count the strategies report).
+    pub updated_elems: usize,
+    /// Gradients consumed so far.
+    pub grads_seen: usize,
+}
+
+impl<'a> FusedApply<'a> {
+    pub fn new(
+        optimizer: &'a mut dyn Optimizer,
+        ledger: Option<&'a mut OffloadLedger>,
+        slot_param: &'a [usize],
+        grad_clip: f32,
+        lr: f32,
+    ) -> Self {
+        FusedApply { optimizer, ledger, slot_param, grad_clip, lr, updated_elems: 0, grads_seen: 0 }
+    }
+}
+
+impl GradSink for FusedApply<'_> {
+    fn grad(
+        &mut self,
+        slot: usize,
+        name: &str,
+        mut grad: Tensor,
+        params: &mut TensorSet,
+    ) -> Result<()> {
+        let Some(&idx) = self.slot_param.get(slot) else {
+            bail!("gradient slot {slot} ({name}) outside the update plan");
+        };
+        if params.names[idx] != name {
+            bail!(
+                "gradient slot {slot} maps to parameter {:?} but the backend emitted {name:?}",
+                params.names[idx]
+            );
+        }
+        clip_grad(&mut grad, self.grad_clip);
+        let grad_bytes = grad.bytes() as u64;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.grad_in(grad_bytes);
+        }
+        let pre = self.optimizer.state_bytes(idx) as u64;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.page_in(pre);
+        }
+        let p = params.tensor_mut(idx);
+        self.updated_elems += p.numel();
+        self.optimizer.update(idx, p, &grad, self.lr);
+        let post = self.optimizer.state_bytes(idx) as u64;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.alloc_on_device(post.saturating_sub(pre));
+            l.page_out(post);
+            l.grad_out(grad_bytes);
+        }
+        self.grads_seen += 1;
+        Ok(())
+        // `grad` dropped here — "Clear gradients" (Algorithm 1 step g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{build, OptimCfg, OptimKind};
+
+    fn toy_params() -> TensorSet {
+        let mut set = TensorSet::new();
+        set.push("a", Tensor::from_vec(vec![1.0, 2.0], &[2]));
+        set.push("b", Tensor::from_vec(vec![3.0, 4.0, 5.0], &[3]));
+        set
+    }
+
+    #[test]
+    fn fused_apply_matches_collected_update() {
+        let cfg = OptimCfg::new(OptimKind::AdamW);
+        let ga = Tensor::from_vec(vec![0.5, -0.5], &[2]);
+        let gb = Tensor::from_vec(vec![1.0, 0.0, -1.0], &[3]);
+
+        // Collected reference: clip then update, per tensor.
+        let mut p_ref = toy_params();
+        let mut opt_ref = build(cfg, 2);
+        for (i, g) in [ga.clone(), gb.clone()].into_iter().enumerate() {
+            let mut g = g;
+            clip_grad(&mut g, cfg.grad_clip);
+            opt_ref.update(i, p_ref.tensor_mut(i), &g, 0.01);
+        }
+
+        // Fused sink fed in emit order.
+        let mut p = toy_params();
+        let mut opt = build(cfg, 2);
+        let mut ledger = OffloadLedger::new();
+        let slots = [0usize, 1];
+        let mut sink =
+            FusedApply::new(&mut *opt, Some(&mut ledger), &slots, cfg.grad_clip, 0.01);
+        sink.grad(0, "a", ga, &mut p).unwrap();
+        sink.grad(1, "b", gb, &mut p).unwrap();
+        assert_eq!(sink.updated_elems, 5);
+        assert_eq!(sink.grads_seen, 2);
+
+        for (x, y) in p.tensors.iter().zip(&p_ref.tensors) {
+            assert_eq!(x.data, y.data, "fused update must equal collected update");
+        }
+        // One gradient resident at a time.
+        assert_eq!(ledger.peak_grad_resident_bytes, 12, "largest single tensor (3 f32)");
+        assert_eq!(ledger.grad_resident(), 0);
+    }
+
+    #[test]
+    fn fused_apply_rejects_mismatched_names() {
+        let mut p = toy_params();
+        let mut opt = build(OptimCfg::new(OptimKind::Sgd), 2);
+        let slots = [0usize, 1];
+        let mut sink = FusedApply::new(&mut *opt, None, &slots, 0.0, 0.01);
+        let g = Tensor::from_vec(vec![0.0, 0.0], &[2]);
+        assert!(sink.grad(0, "b", g.clone(), &mut p).is_err(), "name/slot mismatch");
+        assert!(sink.grad(7, "a", g, &mut p).is_err(), "slot outside plan");
+    }
+}

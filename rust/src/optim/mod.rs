@@ -19,15 +19,27 @@
 //! Updates are applied *per parameter tensor* so the scheduler can page in
 //! exactly the active group's state; the update loops are the L3 hot path
 //! (profiled in EXPERIMENTS.md §Perf).
+//!
+//! The **fused-update layer** sits on top: [`FusedApply`] is a
+//! [`crate::backend::GradSink`] that clips, pages state, updates and drops
+//! each gradient the moment the backward walk emits it (LOMO-style fusion,
+//! Lv et al. 2023), and [`PipelinedApply`] double-buffers it — the
+//! optimizer update of gradient *i* runs on a worker thread while the
+//! backward chunk producing gradient *i+1* executes, in fixed order, so
+//! results stay bit-identical to the serial sink.
 
 mod adafactor;
 mod adagrad;
 mod adamw;
+mod apply;
+mod par;
 mod sgd;
 
 pub use adafactor::Adafactor;
 pub use adagrad::Adagrad;
 pub use adamw::AdamW;
+pub use apply::FusedApply;
+pub use par::PipelinedApply;
 pub use sgd::{Sgd, Sgdm};
 
 use crate::tensor::Tensor;
@@ -111,8 +123,9 @@ impl OptimCfg {
 ///
 /// `idx` identifies the parameter tensor (stable across the run) so state is
 /// tracked per tensor — the granularity at which HiFT pages state between
-/// host and device.
-pub trait Optimizer {
+/// host and device.  `Send` so the [`PipelinedApply`] double-buffer can run
+/// updates on a worker thread; every implementation is plain owned data.
+pub trait Optimizer: Send {
     /// Apply one update for parameter tensor `idx` in place.
     fn update(&mut self, idx: usize, param: &mut Tensor, grad: &Tensor, lr: f32);
 
@@ -164,6 +177,11 @@ pub struct OffloadLedger {
     pub max_inflight_bytes: u64,
     pub page_ins: u64,
     pub page_outs: u64,
+    grad_resident: u64,
+    /// Peak bytes of parameter gradients held by the update sink at once.
+    /// Streamed fused updates keep this at ≈ one tensor; the old collected
+    /// path held the whole group.
+    pub peak_grad_resident_bytes: u64,
 }
 
 impl OffloadLedger {
@@ -172,7 +190,12 @@ impl OffloadLedger {
     }
 
     /// Move `bytes` of optimizer state host → device (Algorithm 1 step i).
+    /// Zero-byte "transfers" (a group's first visit, before any state is
+    /// allocated; stateless SGD) are no-ops, not paging events.
     pub fn page_in(&mut self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
         self.h2d_bytes += bytes;
         self.device_resident += bytes;
         self.peak_device_bytes = self.peak_device_bytes.max(self.device_resident);
@@ -187,8 +210,12 @@ impl OffloadLedger {
         self.peak_device_bytes = self.peak_device_bytes.max(self.device_resident);
     }
 
-    /// Move `bytes` back device → host (Algorithm 1 step k).
+    /// Move `bytes` back device → host (Algorithm 1 step k).  Zero-byte
+    /// transfers are no-ops (see [`OffloadLedger::page_in`]).
     pub fn page_out(&mut self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
         debug_assert!(bytes <= self.device_resident, "paging out more than resident");
         self.d2h_bytes += bytes;
         self.device_resident = self.device_resident.saturating_sub(bytes);
@@ -197,6 +224,21 @@ impl OffloadLedger {
 
     pub fn device_resident(&self) -> u64 {
         self.device_resident
+    }
+
+    /// A gradient arrived at the update sink.
+    pub fn grad_in(&mut self, bytes: u64) {
+        self.grad_resident += bytes;
+        self.peak_grad_resident_bytes = self.peak_grad_resident_bytes.max(self.grad_resident);
+    }
+
+    /// A gradient was consumed (updated into the parameters) and dropped.
+    pub fn grad_out(&mut self, bytes: u64) {
+        self.grad_resident = self.grad_resident.saturating_sub(bytes);
+    }
+
+    pub fn grad_resident(&self) -> u64 {
+        self.grad_resident
     }
 }
 
@@ -252,6 +294,37 @@ mod tests {
             }
             assert_eq!(opt.total_state_bytes(), opt.state_bytes(0));
         }
+    }
+
+    #[test]
+    fn zero_byte_transfers_are_not_paging_events() {
+        // Regression: Hift used to call page_in(0) on a group's first visit
+        // (state not yet allocated), inflating the event counts with no-op
+        // transfers.
+        let mut l = OffloadLedger::new();
+        l.page_in(0);
+        l.page_out(0);
+        assert_eq!((l.page_ins, l.page_outs), (0, 0), "zero-byte transfer is not an event");
+        assert_eq!(l.h2d_bytes, 0);
+        assert_eq!(l.d2h_bytes, 0);
+        assert_eq!(l.max_inflight_bytes, 0);
+        l.page_in(64);
+        l.page_out(64);
+        assert_eq!((l.page_ins, l.page_outs), (1, 1), "real transfers still count");
+    }
+
+    #[test]
+    fn ledger_tracks_grad_residency() {
+        let mut l = OffloadLedger::new();
+        l.grad_in(100);
+        l.grad_out(100);
+        l.grad_in(40);
+        l.grad_in(40);
+        assert_eq!(l.grad_resident(), 80);
+        assert_eq!(l.peak_grad_resident_bytes, 100);
+        l.grad_out(40);
+        l.grad_out(40);
+        assert_eq!(l.grad_resident(), 0);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Double-buffered update pipeline over the streamed-gradient seam: the
+//! optimizer update of gradient *i* runs on a worker thread while the
+//! backward chunk producing gradient *i+1* executes on the main thread.
+//!
+//! Determinism: a single worker applies jobs FIFO, and each update sees
+//! exactly the `(param, grad, optimizer state)` it would see under the
+//! serial [`super::FusedApply`] — the parameter tensor is checked out of
+//! the `TensorSet` at dispatch and checked back in before the next
+//! dispatch, and the backend guarantees it never reads a tensor again
+//! after emitting its gradient.  Results are bit-identical to the serial
+//! sink; only wall-clock changes.
+//!
+//! Ledger accounting happens on the main thread at completion time, in
+//! dispatch order, so the event trace is identical to the serial sink's.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{clip_grad, OffloadLedger, Optimizer};
+use crate::backend::GradSink;
+use crate::tensor::{Tensor, TensorSet};
+
+enum Job {
+    Apply { idx: usize, param: Tensor, grad: Tensor, lr: f32, clip: f32 },
+    Finish,
+}
+
+enum Done {
+    Applied { idx: usize, param: Tensor, grad_bytes: u64, pre_state: u64, post_state: u64, elems: usize },
+    Optimizer(Box<dyn Optimizer>),
+}
+
+/// A [`GradSink`] that overlaps optimizer updates with the backward walk.
+///
+/// The optimizer moves into the worker thread for the duration of the run;
+/// call [`PipelinedApply::into_optimizer`] after the backend has invoked
+/// [`GradSink::finish`] to get it back.
+pub struct PipelinedApply<'a> {
+    jobs: Sender<Job>,
+    done: Receiver<Done>,
+    worker: Option<JoinHandle<()>>,
+    ledger: Option<&'a mut OffloadLedger>,
+    slot_param: Vec<usize>,
+    grad_clip: f32,
+    lr: f32,
+    /// Parameter index of the job currently in flight (its tensor is
+    /// checked out of the set).
+    pending: Option<usize>,
+    pending_grad_bytes: u64,
+    /// Total parameter elements updated so far.
+    pub updated_elems: usize,
+    optimizer_back: Option<Box<dyn Optimizer>>,
+}
+
+impl<'a> PipelinedApply<'a> {
+    pub fn new(
+        optimizer: Box<dyn Optimizer>,
+        ledger: Option<&'a mut OffloadLedger>,
+        slot_param: Vec<usize>,
+        grad_clip: f32,
+        lr: f32,
+    ) -> Self {
+        let (jobs, job_rx) = channel::<Job>();
+        let (done_tx, done) = channel::<Done>();
+        let worker = std::thread::spawn(move || {
+            let mut opt = optimizer;
+            while let Ok(job) = job_rx.recv() {
+                match job {
+                    Job::Apply { idx, mut param, mut grad, lr, clip } => {
+                        clip_grad(&mut grad, clip);
+                        let grad_bytes = grad.bytes() as u64;
+                        let pre_state = opt.state_bytes(idx) as u64;
+                        let elems = param.numel();
+                        opt.update(idx, &mut param, &grad, lr);
+                        let post_state = opt.state_bytes(idx) as u64;
+                        let done = Done::Applied { idx, param, grad_bytes, pre_state, post_state, elems };
+                        if done_tx.send(done).is_err() {
+                            return;
+                        }
+                    }
+                    Job::Finish => {
+                        let _ = done_tx.send(Done::Optimizer(opt));
+                        return;
+                    }
+                }
+            }
+        });
+        PipelinedApply {
+            jobs,
+            done,
+            worker: Some(worker),
+            ledger,
+            slot_param,
+            grad_clip,
+            lr,
+            pending: None,
+            pending_grad_bytes: 0,
+            updated_elems: 0,
+            optimizer_back: None,
+        }
+    }
+
+    /// Wait for the in-flight update (if any), check its tensor back in and
+    /// account the paging events — in dispatch order, like the serial sink.
+    fn drain_pending(&mut self, params: &mut TensorSet) -> Result<()> {
+        let Some(expect) = self.pending.take() else {
+            return Ok(());
+        };
+        let done = self.done.recv().map_err(|_| anyhow!("update worker died"))?;
+        let Done::Applied { idx, param, grad_bytes, pre_state, post_state, elems } = done else {
+            bail!("update worker returned out-of-order result");
+        };
+        if idx != expect {
+            bail!("update worker completed tensor {idx}, expected {expect}");
+        }
+        // Checking the tensor back in bumps its version, so the backend's
+        // upload cache refreshes it — same as a tensor_mut update.
+        *params.tensor_mut(idx) = param;
+        self.updated_elems += elems;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.page_in(pre_state);
+            l.alloc_on_device(post_state.saturating_sub(pre_state));
+            l.page_out(post_state);
+            l.grad_out(grad_bytes);
+        }
+        self.pending_grad_bytes = 0;
+        Ok(())
+    }
+
+    /// Recover the optimizer once the run is finished.
+    pub fn into_optimizer(mut self) -> Result<Box<dyn Optimizer>> {
+        let opt = self
+            .optimizer_back
+            .take()
+            .context("pipeline was not finished (backend must call GradSink::finish)")?;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(opt)
+    }
+}
+
+impl GradSink for PipelinedApply<'_> {
+    fn grad(
+        &mut self,
+        slot: usize,
+        name: &str,
+        grad: Tensor,
+        params: &mut TensorSet,
+    ) -> Result<()> {
+        let Some(&idx) = self.slot_param.get(slot) else {
+            bail!("gradient slot {slot} ({name}) outside the update plan");
+        };
+        if params.names[idx] != name {
+            bail!(
+                "gradient slot {slot} maps to parameter {:?} but the backend emitted {name:?}",
+                params.names[idx]
+            );
+        }
+        self.drain_pending(params)?;
+        // Check the tensor out and dispatch; the backend guarantees it will
+        // not read an emitted tensor again, so the hole is unobservable.
+        let taken = std::mem::replace(params.tensor_mut(idx), Tensor::from_vec(Vec::new(), &[0]));
+        let grad_bytes = grad.bytes() as u64;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.grad_in(grad_bytes);
+        }
+        self.pending_grad_bytes = grad_bytes;
+        self.jobs
+            .send(Job::Apply { idx, param: taken, grad, lr: self.lr, clip: self.grad_clip })
+            .map_err(|_| anyhow!("update worker died"))?;
+        self.pending = Some(idx);
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.pending_grad_bytes
+    }
+
+    fn finish(&mut self, params: &mut TensorSet) -> Result<()> {
+        self.drain_pending(params)?;
+        self.jobs.send(Job::Finish).map_err(|_| anyhow!("update worker died"))?;
+        match self.done.recv().map_err(|_| anyhow!("update worker died"))? {
+            Done::Optimizer(opt) => {
+                self.optimizer_back = Some(opt);
+                Ok(())
+            }
+            Done::Applied { .. } => bail!("update worker returned out-of-order result"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{build, FusedApply, OptimCfg, OptimKind};
+
+    fn toy_params() -> TensorSet {
+        let mut set = TensorSet::new();
+        set.push("a", Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[4]));
+        set.push("b", Tensor::from_vec(vec![-1.0, 0.5], &[2]));
+        set.push("c", Tensor::from_vec(vec![0.1, 0.2, 0.3], &[3]));
+        set
+    }
+
+    fn toy_grads() -> Vec<Tensor> {
+        vec![
+            Tensor::from_vec(vec![0.4, -0.2, 0.1, 2.0], &[4]),
+            Tensor::from_vec(vec![1.5, -0.5], &[2]),
+            Tensor::from_vec(vec![0.0, 0.1, -0.1], &[3]),
+        ]
+    }
+
+    #[test]
+    fn pipelined_is_bit_identical_to_serial_fused() {
+        let cfg = OptimCfg::new(OptimKind::AdamW);
+        let names = ["a", "b", "c"];
+
+        let mut p_serial = toy_params();
+        let mut opt_serial = build(cfg, 3);
+        let mut led_serial = OffloadLedger::new();
+        {
+            let slots = [0usize, 1, 2];
+            let mut sink = FusedApply::new(
+                &mut *opt_serial,
+                Some(&mut led_serial),
+                &slots,
+                cfg.grad_clip,
+                0.02,
+            );
+            for (i, g) in toy_grads().into_iter().enumerate() {
+                sink.grad(i, names[i], g, &mut p_serial).unwrap();
+            }
+        }
+
+        let mut p_pipe = toy_params();
+        let mut led_pipe = OffloadLedger::new();
+        let mut sink = PipelinedApply::new(
+            build(cfg, 3),
+            Some(&mut led_pipe),
+            vec![0, 1, 2],
+            cfg.grad_clip,
+            0.02,
+        );
+        for (i, g) in toy_grads().into_iter().enumerate() {
+            sink.grad(i, names[i], g, &mut p_pipe).unwrap();
+        }
+        sink.finish(&mut p_pipe).unwrap();
+        let updated = sink.updated_elems;
+        let opt_back = sink.into_optimizer().unwrap();
+
+        assert_eq!(updated, 9);
+        for (x, y) in p_pipe.tensors.iter().zip(&p_serial.tensors) {
+            assert_eq!(x.data, y.data, "pipelined update must be bit-identical");
+        }
+        assert_eq!(opt_back.total_state_bytes(), opt_serial.total_state_bytes());
+        assert_eq!(led_pipe.h2d_bytes, led_serial.h2d_bytes);
+        assert_eq!(led_pipe.d2h_bytes, led_serial.d2h_bytes);
+        assert_eq!(led_pipe.peak_device_bytes, led_serial.peak_device_bytes);
+        assert_eq!(led_pipe.peak_grad_resident_bytes, led_serial.peak_grad_resident_bytes);
+        assert_eq!((led_pipe.page_ins, led_pipe.page_outs), (led_serial.page_ins, led_serial.page_outs));
+    }
+
+    #[test]
+    fn into_optimizer_requires_finish() {
+        let mut p = toy_params();
+        let mut sink = PipelinedApply::new(
+            build(OptimCfg::new(OptimKind::Sgd), 3),
+            None,
+            vec![0, 1, 2],
+            0.0,
+            0.1,
+        );
+        sink.grad(0, "a", Tensor::from_vec(vec![1.0, 1.0, 1.0, 1.0], &[4]), &mut p).unwrap();
+        // finish not called: the optimizer is still in the worker.
+        assert!(sink.into_optimizer().is_err());
+    }
+}

@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{Batch, ExecBackend, Manifest, RuntimeStats, StepOutput};
+use crate::backend::{Batch, ExecBackend, GradSink, Manifest, RuntimeStats, StepOutput, StreamOutput};
 use crate::tensor::{Tensor, TensorSet};
 
 /// Device-resident copy of one parameter tensor, valid for a specific
@@ -210,8 +210,41 @@ impl ExecBackend for Runtime {
         Runtime::manifest(self)
     }
 
-    fn run(&mut self, artifact: &str, params: &TensorSet, batch: &Batch) -> Result<StepOutput> {
+    /// PJRT adapts to the streaming seam with a post-execute drain: the
+    /// artifact's tuple output is decomposed as usual, then each gradient
+    /// is fed to the sink in artifact output order.  Unlike the native
+    /// backend, the whole tuple is materialized first, so the residency
+    /// peak recorded here is the collected size — honest accounting for a
+    /// backend whose execution model cannot interleave.
+    fn run_streamed(
+        &mut self,
+        artifact: &str,
+        params: &mut TensorSet,
+        batch: &Batch,
+        sink: &mut dyn GradSink,
+    ) -> Result<StreamOutput> {
+        let out = Runtime::run(self, artifact, params, batch)?;
+        let names: Vec<String> = self.manifest.artifact(artifact)?.outputs[2..].to_vec();
+        let resident: u64 = out.grads.iter().map(|g| g.bytes() as u64).sum();
+        self.stats.peak_grad_resident_bytes =
+            self.stats.peak_grad_resident_bytes.max(resident + sink.resident_bytes());
+        for (slot, (name, g)) in names.iter().zip(out.grads).enumerate() {
+            sink.grad(slot, name, g, params)?;
+        }
+        sink.finish(params)?;
+        Ok(StreamOutput { loss: out.loss, ncorrect: out.ncorrect, exec_time: out.exec_time })
+    }
+
+    fn run(&mut self, artifact: &str, params: &mut TensorSet, batch: &Batch) -> Result<StepOutput> {
         Runtime::run(self, artifact, params, batch)
+    }
+
+    fn note_grad_residency(&mut self, bytes: u64) {
+        self.stats.peak_grad_resident_bytes = self.stats.peak_grad_resident_bytes.max(bytes);
+    }
+
+    fn reset_run_peaks(&mut self) {
+        self.stats.peak_grad_resident_bytes = 0;
     }
 
     fn load_params(&self, variant: &str) -> Result<TensorSet> {

@@ -1,31 +1,43 @@
-//! HiFT itself (Algorithm 1) as a [`FineTuneStrategy`].
+//! HiFT itself (Algorithm 1) as a [`FineTuneStrategy`], on the streamed
+//! gradient seam.
 //!
 //! Per training step:
 //!   a) all parameters are conceptually frozen;
 //!   c/d) the scheduler pops the next group of `m` layer units from the
 //!        rotating queue and requeues them at the tail;
-//!   e/f/g) the group's per-unit gradient artifacts are the *only* ones
-//!        executed — XLA never materializes any other gradient, which is
+//!   e/f/g) only the group's gradients are ever formed — the backend runs
+//!        **one** forward + one multi-unit truncated backward
+//!        ([`crate::backend::ExecBackend::run_group_streamed`]), so XLA /
+//!        the native walk never materializes any other gradient, which is
 //!        the memory contribution;
-//!   h) forward+backward run fused in the artifact;
-//!   i) optimizer state for exactly this group is paged host→device
-//!        (ledger-tracked — the #Sta communication column of Tables 8–12);
-//!   g') parameters update in place; gradients are dropped immediately;
-//!   k) state pages back device→host;
+//!   h/i/g'/k) backward and optimizer fuse: each unit tensor's gradient is
+//!        streamed into a [`FusedApply`] sink that clips, pages exactly
+//!        that tensor's optimizer state host→device (ledger-tracked — the
+//!        #Sta communication column of Tables 8–12), updates in place,
+//!        pages back out and drops the gradient immediately.  Peak
+//!        gradient residency is one tensor, not the group sum;
 //!   LR advances only at sweep boundaries (delayed LR, §3.1).
 //!
-//! For `m > 1` all unit gradients of the group are computed *before* any
-//! update, so the group updates jointly at the same parameter point —
-//! matching Eq. (2)'s single argmin over the whole group mask βᵢ.
+//! For `m > 1` all unit gradients are still taken at the *same* parameter
+//! point — they come from a single backward pass whose activations were
+//! cached before any update, and the walk never re-reads a tensor after
+//! emitting its gradient — so the group updates jointly, matching
+//! Eq. (2)'s single argmin over the whole group mask βᵢ, bit-identically
+//! to the old collect-then-update path (asserted in `tests/streaming.rs`).
+//!
+//! Set `HIFT_PIPELINE=1` (or build via [`Hift::pipelined`]) to double-
+//! buffer the fusion: gradient *i*'s optimizer update runs concurrently
+//! with the backward chunk producing gradient *i+1*
+//! ([`crate::optim::PipelinedApply`]; fixed order, bit-identical results).
 
 use anyhow::Result;
 
 use super::{FineTuneStrategy, StepStats};
-use crate::backend::{unit_artifact, Batch, ExecBackend, Manifest};
+use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::scheduler::{HiftScheduler, SchedulerCfg};
 use crate::coordinator::strategy::UpdateStrategy;
-use crate::optim::{self, OffloadLedger, OptimCfg, Optimizer};
+use crate::optim::{self, FusedApply, OffloadLedger, OptimCfg, Optimizer, PipelinedApply};
 use crate::tensor::TensorSet;
 
 /// HiFT hyperparameters.
@@ -44,18 +56,29 @@ pub struct HiftCfg {
 pub struct Hift {
     cfg: HiftCfg,
     scheduler: HiftScheduler,
-    optimizer: Box<dyn Optimizer>,
+    /// `None` only while a pipelined step has the optimizer checked out
+    /// into the update worker.
+    optimizer: Option<Box<dyn Optimizer>>,
     ledger: OffloadLedger,
     /// Parameter indices per layer unit.
     unit_params: Vec<Vec<usize>>,
     /// Per-unit parameter element counts.
     unit_sizes: Vec<usize>,
     peak_trainable: usize,
+    pipeline: bool,
     name: String,
 }
 
 impl Hift {
+    /// Build with the double-buffered update pipeline taken from the
+    /// `HIFT_PIPELINE` env var (`1` = on).
     pub fn new(cfg: HiftCfg, manifest: &Manifest) -> Result<Self> {
+        let pipeline = std::env::var("HIFT_PIPELINE").map(|v| v == "1").unwrap_or(false);
+        Self::pipelined(cfg, manifest, pipeline)
+    }
+
+    /// Build with the update pipeline explicitly on or off.
+    pub fn pipelined(cfg: HiftCfg, manifest: &Manifest, pipeline: bool) -> Result<Self> {
         let vinfo = manifest.variant("base")?;
         let n_units = manifest.n_units;
         let unit_params: Vec<Vec<usize>> = (0..n_units).map(|u| vinfo.unit_indices(u)).collect();
@@ -72,11 +95,12 @@ impl Hift {
         Ok(Hift {
             cfg,
             scheduler,
-            optimizer,
+            optimizer: Some(optimizer),
             ledger: OffloadLedger::new(),
             unit_params,
             unit_sizes,
             peak_trainable: 0,
+            pipeline,
             name,
         })
     }
@@ -107,40 +131,54 @@ impl FineTuneStrategy for Hift {
         batch: &Batch,
     ) -> Result<StepStats> {
         let plan = self.scheduler.next();
+        // Gradient slot order = concatenation of the group's unit parameter
+        // lists — the contract of `run_group_streamed`.
+        let slot_param: Vec<usize> =
+            plan.units.iter().flat_map(|&u| self.unit_params[u].iter().copied()).collect();
 
-        // Phase 1 — gradients for every unit in the group, at the *current*
-        // parameter point (no update interleaving).
-        let mut exec_time = std::time::Duration::ZERO;
-        let mut loss = 0.0f32;
-        let mut ncorrect = 0.0f32;
-        let mut grads: Vec<(usize, crate::tensor::Tensor)> = Vec::new();
-        for (gi, &u) in plan.units.iter().enumerate() {
-            let out = be.run(&unit_artifact(u), params, batch)?;
-            exec_time += out.exec_time;
-            if gi == 0 {
-                loss = out.loss;
-                ncorrect = out.ncorrect;
+        let (out, trainable) = if self.pipeline {
+            let Some(opt) = self.optimizer.take() else {
+                anyhow::bail!("HiFT optimizer was lost by a previous failed pipelined step");
+            };
+            let mut sink = PipelinedApply::new(
+                opt,
+                Some(&mut self.ledger),
+                slot_param,
+                self.cfg.optim.grad_clip,
+                plan.lr,
+            );
+            let run = be.run_group_streamed(&plan.units, params, batch, &mut sink);
+            let trainable = sink.updated_elems;
+            match run {
+                Ok(out) => {
+                    self.optimizer = Some(sink.into_optimizer()?);
+                    (out, trainable)
+                }
+                Err(e) => {
+                    // Best-effort recovery: drain the worker, restore any
+                    // checked-out tensor into `params`, and put the
+                    // optimizer back so the strategy stays usable.
+                    let _ = sink.finish(params);
+                    if let Ok(opt) = sink.into_optimizer() {
+                        self.optimizer = Some(opt);
+                    }
+                    return Err(e);
+                }
             }
-            for (slot, g) in self.unit_params[u].iter().zip(out.grads) {
-                grads.push((*slot, g));
-            }
-        }
-
-        // Phase 2 — page in exactly this group's optimizer state, update,
-        // page out (Algorithm 1 steps i, g', k).
-        let mut trainable = 0usize;
-        for (idx, mut g) in grads {
-            optim::clip_grad(&mut g, self.cfg.optim.grad_clip);
-            let pre = self.optimizer.state_bytes(idx) as u64;
-            self.ledger.page_in(pre);
-            let p = params.tensor_mut(idx);
-            trainable += p.numel();
-            self.optimizer.update(idx, p, &g, plan.lr);
-            let post = self.optimizer.state_bytes(idx) as u64;
-            self.ledger.alloc_on_device(post.saturating_sub(pre));
-            self.ledger.page_out(post);
-            // gradient dropped here — "Clear gradients" (step g)
-        }
+        } else {
+            let Some(opt) = self.optimizer.as_mut() else {
+                anyhow::bail!("HiFT optimizer was lost by a previous failed pipelined step");
+            };
+            let mut sink = FusedApply::new(
+                &mut **opt,
+                Some(&mut self.ledger),
+                &slot_param,
+                self.cfg.optim.grad_clip,
+                plan.lr,
+            );
+            let out = be.run_group_streamed(&plan.units, params, batch, &mut sink)?;
+            (out, sink.updated_elems)
+        };
         self.peak_trainable = self.peak_trainable.max(trainable);
         debug_assert_eq!(
             trainable,
@@ -149,12 +187,12 @@ impl FineTuneStrategy for Hift {
 
         let weight_sum: f32 = batch.weights.iter().sum();
         Ok(StepStats {
-            loss,
-            ncorrect,
+            loss: out.loss,
+            ncorrect: out.ncorrect,
             weight_sum,
             lr: plan.lr,
             trainable_params: trainable,
-            exec_time,
+            exec_time: out.exec_time,
         })
     }
 
@@ -167,6 +205,6 @@ impl FineTuneStrategy for Hift {
     }
 
     fn optimizer_state_bytes(&self) -> usize {
-        self.optimizer.total_state_bytes()
+        self.optimizer.as_ref().map(|o| o.total_state_bytes()).unwrap_or(0)
     }
 }

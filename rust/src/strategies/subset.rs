@@ -6,17 +6,23 @@
 //! * **LoRA / IA3 / Prefix** — adapter parameters of the corresponding
 //!   model variant only (base weights stay frozen *inputs*).
 //! * **LP** — linear probe: the head unit only.
-//! * **LOMO (sim)** — full gradients + stateless SGD applied tensor-by-
-//!   tensor as gradients stream, modelling LOMO's fused update (no
-//!   optimizer state ever exists; memory-wise only one tensor's gradient
-//!   is live at a time — the ledger-free analogue of Lv et al., 2023).
+//! * **LOMO (sim)** — full gradients + stateless SGD fused into the
+//!   backward walk (no optimizer state ever exists; only one tensor's
+//!   gradient is live at a time — the analogue of Lv et al., 2023).
+//!
+//! All of these now run on the streamed seam: one
+//! [`crate::backend::ExecBackend::run_streamed`] call per step with a
+//! [`FusedApply`] sink, so the update of each tensor happens the moment
+//! its gradient is emitted and no per-step `Vec<Tensor>` of gradients is
+//! ever allocated.  Because optimizer updates are per-tensor, the final
+//! parameters are bit-identical to the old collect-then-update loop.
 
 use anyhow::Result;
 
 use super::{grad_param_indices, FineTuneStrategy, StepStats};
 use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
-use crate::optim::{self, OptimCfg, OptimKind, Optimizer};
+use crate::optim::{self, FusedApply, OptimCfg, OptimKind, Optimizer};
 use crate::tensor::TensorSet;
 
 /// A baseline that always trains the same parameter subset.
@@ -108,14 +114,20 @@ impl FineTuneStrategy for SubsetTune {
     ) -> Result<StepStats> {
         let lr = self.schedule.at(self.step as usize);
         self.step += 1;
-        let out = be.run(&self.artifact, params, batch)?;
+        let (out, updated) = {
+            let mut sink = FusedApply::new(
+                &mut *self.optimizer,
+                None,
+                &self.param_idxs,
+                self.grad_clip,
+                lr,
+            );
+            let out = be.run_streamed(&self.artifact, params, batch, &mut sink)?;
+            (out, sink.updated_elems)
+        };
         if !self.trainable_known {
-            self.trainable = self.param_idxs.iter().map(|&i| params.tensors[i].numel()).sum();
+            self.trainable = updated;
             self.trainable_known = true;
-        }
-        for (slot, mut g) in self.param_idxs.iter().zip(out.grads) {
-            optim::clip_grad(&mut g, self.grad_clip);
-            self.optimizer.update(*slot, params.tensor_mut(*slot), &g, lr);
         }
         Ok(StepStats {
             loss: out.loss,

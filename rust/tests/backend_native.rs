@@ -57,8 +57,8 @@ fn jitter(params: &mut TensorSet, seed: u64) {
     }
 }
 
-fn loss_at(be: &mut NativeBackend, variant: &str, params: &TensorSet, batch: &Batch) -> f64 {
-    be.run(&format!("fwd_{variant}"), params, batch).unwrap().loss as f64
+fn loss_at(be: &mut NativeBackend, variant: &str, mut params: TensorSet, batch: &Batch) -> f64 {
+    be.run(&format!("fwd_{variant}"), &mut params, batch).unwrap().loss as f64
 }
 
 fn perturbed(params: &TensorSet, idx: usize, z: &Tensor, eps: f32) -> TensorSet {
@@ -79,8 +79,8 @@ fn directional_fd(
     eps: f32,
 ) -> f64 {
     let fd = |be: &mut NativeBackend, e: f32| -> f64 {
-        let lp = loss_at(be, variant, &perturbed(params, idx, z, e), batch);
-        let lm = loss_at(be, variant, &perturbed(params, idx, z, -e), batch);
+        let lp = loss_at(be, variant, perturbed(params, idx, z, e), batch);
+        let lm = loss_at(be, variant, perturbed(params, idx, z, -e), batch);
         (lp - lm) / (2.0 * e as f64)
     };
     let d1 = fd(be, eps);
@@ -99,7 +99,7 @@ fn fd_check(variant: &str, artifact: &str, min_strict_checks: usize) {
     let batch = dense_batch(&be.manifest().config.clone(), 17);
 
     let info = be.manifest().artifact(artifact).unwrap().clone();
-    let out = be.run(artifact, &params, &batch).unwrap();
+    let out = be.run(artifact, &mut params, &batch).unwrap();
     assert_eq!(out.grads.len(), info.outputs.len() - 2);
 
     // Per-tensor step size holding the loss excursion ε·‖g‖ ≈ 0.02 roughly
@@ -202,7 +202,7 @@ fn hift_sweep_equals_fpft_per_group() {
     let mut p_f = be.load_params("base").unwrap();
     let mut opt = optim::build(ocfg, vinfo.params.len());
     for (step, b) in batches.iter().enumerate() {
-        let out = be.run("grad_base_full", &p_f, b).unwrap();
+        let out = be.run("grad_base_full", &mut p_f, b).unwrap();
         for &pi in &vinfo.unit_indices(step) {
             let mut g = out.grads[pi].clone();
             optim::clip_grad(&mut g, ocfg.grad_clip);

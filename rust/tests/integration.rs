@@ -39,11 +39,11 @@ fn manifest_and_params_load() {
 #[test]
 fn forward_artifact_executes_and_is_deterministic() {
     let mut be = backend();
-    let params = be.load_params("base").unwrap();
+    let mut params = be.load_params("base").unwrap();
     let mut task = build_task("motif4", geom(&be), 7).unwrap();
     let batch = task.train_batch();
-    let a = be.run("fwd_base", &params, &batch).unwrap();
-    let b = be.run("fwd_base", &params, &batch).unwrap();
+    let a = be.run("fwd_base", &mut params, &batch).unwrap();
+    let b = be.run("fwd_base", &mut params, &batch).unwrap();
     assert!(a.loss.is_finite() && a.loss > 0.0);
     assert_eq!(a.loss, b.loss, "same params+batch ⇒ identical loss");
     assert!(a.grads.is_empty());
@@ -57,14 +57,14 @@ fn unit_grads_are_slices_of_full_grad() {
     // The HiFT foundation at the artifact level: per-unit grad artifacts
     // produce exactly the corresponding slices of grad_base_full.
     let mut be = backend();
-    let params = be.load_params("base").unwrap();
+    let mut params = be.load_params("base").unwrap();
     let mut task = build_task("markovlm", geom(&be), 3).unwrap();
     let batch = task.train_batch();
-    let full = be.run("grad_base_full", &params, &batch).unwrap();
+    let full = be.run("grad_base_full", &mut params, &batch).unwrap();
     let vinfo = be.manifest().variant("base").unwrap().clone();
     let n_units = be.manifest().n_units;
     for u in 0..n_units {
-        let out = be.run(&unit_artifact(u), &params, &batch).unwrap();
+        let out = be.run(&unit_artifact(u), &mut params, &batch).unwrap();
         assert!((out.loss - full.loss).abs() < 1e-5);
         let idxs = vinfo.unit_indices(u);
         assert_eq!(out.grads.len(), idxs.len());
@@ -89,11 +89,11 @@ fn bitfit_grads_are_slices_of_full_grad() {
     // (GradSpec::dense = false) — the emitted gradients must still be
     // bit-identical to the corresponding slices of grad_base_full.
     let mut be = backend();
-    let params = be.load_params("base").unwrap();
+    let mut params = be.load_params("base").unwrap();
     let mut task = build_task("markovlm", geom(&be), 3).unwrap();
     let batch = task.train_batch();
-    let full = be.run("grad_base_full", &params, &batch).unwrap();
-    let out = be.run("grad_base_bitfit", &params, &batch).unwrap();
+    let full = be.run("grad_base_full", &mut params, &batch).unwrap();
+    let out = be.run("grad_base_bitfit", &mut params, &batch).unwrap();
     let vinfo = be.manifest().variant("base").unwrap().clone();
     let idxs = vinfo.bitfit_indices();
     assert_eq!(out.grads.len(), idxs.len());
@@ -221,9 +221,9 @@ fn peft_trains_fewer_params_than_hift_peak() {
 #[test]
 fn evaluation_accuracy_is_in_unit_interval() {
     let mut be = backend();
-    let params = be.load_params("base").unwrap();
+    let mut params = be.load_params("base").unwrap();
     let task = build_task("motif4", geom(&be), 7).unwrap();
-    let ev = trainer::evaluate(&mut be, "fwd_base", &params, task.eval_batches()).unwrap();
+    let ev = trainer::evaluate(&mut be, "fwd_base", &mut params, task.eval_batches()).unwrap();
     assert!((0.0..=1.0).contains(&ev.acc));
     assert!(ev.loss.is_finite());
 }
@@ -233,7 +233,7 @@ fn eval_loss_is_weighted_by_batch_mask_sums() {
     // Two batches with very different mask sizes: the aggregate eval loss
     // must be the weight-sum-weighted mean, not the plain per-batch mean.
     let mut be = backend();
-    let params = be.load_params("base").unwrap();
+    let mut params = be.load_params("base").unwrap();
     let mut task = build_task("markovlm", geom(&be), 9).unwrap();
     let heavy = task.train_batch(); // dense LM supervision
     let mut light = task.train_batch();
@@ -244,12 +244,12 @@ fn eval_loss_is_weighted_by_batch_mask_sums() {
             *w = 0.0;
         }
     }
-    let lh = be.run("fwd_base", &params, &heavy).unwrap().loss as f64;
-    let ll = be.run("fwd_base", &params, &light).unwrap().loss as f64;
+    let lh = be.run("fwd_base", &mut params, &heavy).unwrap().loss as f64;
+    let ll = be.run("fwd_base", &mut params, &light).unwrap().loss as f64;
     let wh: f64 = heavy.weights.iter().map(|&w| w as f64).sum();
     let wl: f64 = light.weights.iter().map(|&w| w as f64).sum();
     let expect = (lh * wh + ll * wl) / (wh + wl);
-    let ev = trainer::evaluate(&mut be, "fwd_base", &params, &[heavy, light]).unwrap();
+    let ev = trainer::evaluate(&mut be, "fwd_base", &mut params, &[heavy, light]).unwrap();
     assert!(
         (ev.loss - expect).abs() < 1e-5,
         "weighted eval loss: got {} want {} (plain mean would be {})",

@@ -1,0 +1,367 @@
+//! Streamed-gradient seam equivalence (ISSUE 2 acceptance):
+//!
+//! * streamed and collected execution produce bit-identical gradients on
+//!   every native preset;
+//! * fused-update FPFT and HiFT (m=1 and m>1) land on parameters
+//!   bit-identical to the pre-refactor collect-then-update path (encoded
+//!   here as the reference loops);
+//! * the double-buffered pipeline is bit-identical to the serial sink;
+//! * `peak_grad_resident_bytes` under streamed HiFT is one tensor — the
+//!   largest in the group — while the collected path holds the whole set.
+
+use hift::backend::{
+    unit_artifact, Batch, ExecBackend, GradSink, NativeBackend, PRESET_NAMES,
+};
+use hift::coordinator::lr::LrSchedule;
+use hift::coordinator::scheduler::{HiftScheduler, SchedulerCfg};
+use hift::coordinator::strategy::UpdateStrategy;
+use hift::data::{build_task, TaskGeom};
+use hift::optim::{self, OptimCfg, OptimKind};
+use hift::rng::Pcg32;
+use hift::strategies::{FineTuneStrategy, Hift, HiftCfg, SubsetTune};
+use hift::tensor::{Tensor, TensorSet};
+
+fn backend() -> NativeBackend {
+    NativeBackend::preset("tiny", 0).expect("tiny preset")
+}
+
+fn geom(be: &dyn ExecBackend) -> TaskGeom {
+    let c = &be.manifest().config;
+    TaskGeom::new(c.vocab, c.batch, c.seq_len)
+}
+
+/// A sink that records `(slot, name, grad)` without applying anything.
+#[derive(Default)]
+struct Recorder {
+    grads: Vec<(usize, String, Tensor)>,
+}
+
+impl GradSink for Recorder {
+    fn grad(
+        &mut self,
+        slot: usize,
+        name: &str,
+        grad: Tensor,
+        _params: &mut TensorSet,
+    ) -> anyhow::Result<()> {
+        self.grads.push((slot, name.to_string(), grad));
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.grads.iter().map(|(_, _, g)| g.bytes() as u64).sum()
+    }
+}
+
+fn small_batch(vocab: usize, s: usize, seed: u64) -> Batch {
+    let mut rng = Pcg32::seeded(seed);
+    let mut b = Batch::new(1, s);
+    for t in b.tokens.iter_mut() {
+        *t = rng.below(vocab) as i32;
+    }
+    for t in b.targets.iter_mut() {
+        *t = rng.below(vocab) as i32;
+    }
+    for w in b.weights.iter_mut() {
+        *w = 1.0;
+    }
+    b
+}
+
+#[test]
+fn streamed_equals_collected_grads_on_all_presets() {
+    for preset in PRESET_NAMES {
+        let mut be = NativeBackend::preset(preset, 1).unwrap();
+        let cfg = be.manifest().config.clone();
+        let n_units = be.manifest().n_units;
+        let mut params = be.load_params("base").unwrap();
+        // A 1×4 batch keeps the larger presets tractable in debug test
+        // builds while exercising the full layer stack.
+        let batch = small_batch(cfg.vocab, cfg.seq_len.min(4), 7);
+        // FPFT's artifact plus every HiFT unit artifact on the small
+        // presets; a middle unit and the head unit on the big ones.
+        let artifacts: Vec<String> = if matches!(preset, "tiny" | "small") {
+            let mut a = vec!["grad_base_full".to_string()];
+            a.extend((0..n_units).map(unit_artifact));
+            a
+        } else {
+            vec![unit_artifact(1), unit_artifact(n_units - 1)]
+        };
+        for art in &artifacts {
+            let collected = be.run(art, &mut params, &batch).unwrap();
+            let mut rec = Recorder::default();
+            let streamed = be.run_streamed(art, &mut params, &batch, &mut rec).unwrap();
+            assert_eq!(collected.loss, streamed.loss, "{preset}/{art}: loss");
+            assert_eq!(collected.ncorrect, streamed.ncorrect, "{preset}/{art}: ncorrect");
+            assert_eq!(rec.grads.len(), collected.grads.len(), "{preset}/{art}: grad count");
+            let mut by_slot = rec.grads;
+            by_slot.sort_by_key(|(slot, _, _)| *slot);
+            for ((slot, name, g), cg) in by_slot.iter().zip(&collected.grads) {
+                assert_eq!(g.shape, cg.shape, "{preset}/{art}/{name}");
+                assert_eq!(
+                    g.data, cg.data,
+                    "{preset}/{art}: slot {slot} ({name}) must be bit-identical"
+                );
+            }
+        }
+    }
+}
+
+/// The pre-refactor FPFT path: collect the full gradient vector, then
+/// clip + update tensor-by-tensor in artifact output order.
+#[test]
+fn fused_fpft_matches_collected_reference() {
+    let lr = 3e-3f32;
+    let ocfg = OptimCfg::new(OptimKind::AdamW);
+    let steps = 6usize;
+
+    let mut be = backend();
+    let mut task = build_task("motif4", geom(&be), 11).unwrap();
+    let batches: Vec<Batch> = (0..steps).map(|_| task.train_batch()).collect();
+
+    // Streamed + fused (the new SubsetTune path).
+    let mut fpft =
+        SubsetTune::fpft(be.manifest(), ocfg, LrSchedule::Const { lr }).unwrap();
+    let mut p_s = be.load_params("base").unwrap();
+    for b in &batches {
+        fpft.step(&mut be, &mut p_s, b).unwrap();
+    }
+
+    // Collected reference (pre-refactor semantics).
+    let n_params = be.manifest().variant("base").unwrap().params.len();
+    let mut p_c = be.load_params("base").unwrap();
+    let mut opt = optim::build(ocfg, n_params);
+    for b in &batches {
+        let out = be.run("grad_base_full", &mut p_c, b).unwrap();
+        for (idx, mut g) in out.grads.into_iter().enumerate() {
+            optim::clip_grad(&mut g, ocfg.grad_clip);
+            opt.update(idx, p_c.tensor_mut(idx), &g, lr);
+        }
+    }
+
+    for ((name, ts), tc) in p_s.names.iter().zip(&p_s.tensors).zip(&p_c.tensors) {
+        assert_eq!(ts.data, tc.data, "{name}: streamed FPFT must equal collected path");
+    }
+}
+
+/// The pre-refactor HiFT path: per step, run every unit artifact of the
+/// group collecting all gradients, then clip + update jointly.
+fn hift_collected_reference(
+    be: &mut NativeBackend,
+    m: usize,
+    lr: f32,
+    ocfg: OptimCfg,
+    batches: &[Batch],
+) -> TensorSet {
+    let manifest = be.manifest().clone();
+    let vinfo = manifest.variant("base").unwrap();
+    let mut scheduler = HiftScheduler::new(
+        SchedulerCfg {
+            m,
+            strategy: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Const { lr },
+        },
+        manifest.n_units,
+    );
+    let mut params = be.load_params("base").unwrap();
+    let mut opt = optim::build(ocfg, vinfo.params.len());
+    for b in batches {
+        let plan = scheduler.next();
+        let mut grads: Vec<(usize, Tensor)> = Vec::new();
+        for &u in &plan.units {
+            let out = be.run(&unit_artifact(u), &mut params, b).unwrap();
+            for (slot, g) in vinfo.unit_indices(u).into_iter().zip(out.grads) {
+                grads.push((slot, g));
+            }
+        }
+        for (idx, mut g) in grads {
+            optim::clip_grad(&mut g, ocfg.grad_clip);
+            opt.update(idx, params.tensor_mut(idx), &g, plan.lr);
+        }
+    }
+    params
+}
+
+fn run_streamed_hift(
+    be: &mut NativeBackend,
+    m: usize,
+    lr: f32,
+    ocfg: OptimCfg,
+    batches: &[Batch],
+    pipeline: bool,
+) -> TensorSet {
+    let manifest = be.manifest().clone();
+    let cfg = HiftCfg {
+        m,
+        order: UpdateStrategy::Bottom2Up,
+        schedule: LrSchedule::Const { lr },
+        optim: ocfg,
+    };
+    let mut hift = Hift::pipelined(cfg, &manifest, pipeline).unwrap();
+    let mut params = be.load_params("base").unwrap();
+    for b in batches {
+        hift.step(&mut *be, &mut params, b).unwrap();
+    }
+    params
+}
+
+#[test]
+fn streamed_hift_matches_collected_reference_m1_and_m2() {
+    let lr = 3e-3f32;
+    let ocfg = OptimCfg::new(OptimKind::AdamW);
+    for m in [1usize, 2] {
+        let mut be = backend();
+        let n_units = be.manifest().n_units;
+        let mut task = build_task("motif4", geom(&be), 5).unwrap();
+        // Two full sweeps so every group updates twice.
+        let k = n_units.div_ceil(m);
+        let batches: Vec<Batch> = (0..2 * k).map(|_| task.train_batch()).collect();
+
+        let p_ref = hift_collected_reference(&mut be, m, lr, ocfg, &batches);
+        let p_str = run_streamed_hift(&mut be, m, lr, ocfg, &batches, false);
+        for ((name, a), b) in p_str.names.iter().zip(&p_str.tensors).zip(&p_ref.tensors) {
+            assert_eq!(
+                a.data, b.data,
+                "m={m} {name}: streamed HiFT must equal the collected path"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_hift_matches_serial_streamed() {
+    let lr = 4e-3f32;
+    let ocfg = OptimCfg::new(OptimKind::AdamW);
+    let mut be = backend();
+    let n_units = be.manifest().n_units;
+    let mut task = build_task("markovlm", geom(&be), 9).unwrap();
+    let batches: Vec<Batch> = (0..2 * n_units).map(|_| task.train_batch()).collect();
+
+    let p_serial = run_streamed_hift(&mut be, 2, lr, ocfg, &batches, false);
+    let p_pipe = run_streamed_hift(&mut be, 2, lr, ocfg, &batches, true);
+    for ((name, a), b) in p_pipe.names.iter().zip(&p_pipe.tensors).zip(&p_serial.tensors) {
+        assert_eq!(a.data, b.data, "{name}: pipelined updates must be bit-identical");
+    }
+}
+
+#[test]
+fn hift_group_runs_one_execution_per_step() {
+    // m>1 used to cost one forward per unit; the grouped streamed run is a
+    // single execution per step.
+    let mut be = backend();
+    let manifest = be.manifest().clone();
+    let mut hift = Hift::pipelined(
+        HiftCfg {
+            m: 2,
+            order: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Const { lr: 1e-3 },
+            optim: OptimCfg::new(OptimKind::AdamW),
+        },
+        &manifest,
+        false,
+    )
+    .unwrap();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif2", geom(&be), 3).unwrap();
+    let steps = 4u64;
+    for _ in 0..steps {
+        let b = task.train_batch();
+        hift.step(&mut be, &mut params, &b).unwrap();
+    }
+    assert_eq!(be.stats().executions, steps, "one grouped execution per step");
+}
+
+#[test]
+fn streamed_hift_peak_grad_residency_is_one_tensor() {
+    let mut be = backend();
+    let manifest = be.manifest().clone();
+    let vinfo = manifest.variant("base").unwrap();
+    let n_units = manifest.n_units;
+    let max_tensor_bytes = vinfo.params.iter().map(|p| p.size * 4).max().unwrap() as u64;
+    let group_sum_bytes: u64 = {
+        // Largest group (m=2, fixed chunks) by total gradient bytes.
+        (0..n_units)
+            .step_by(2)
+            .map(|start| {
+                vinfo
+                    .params
+                    .iter()
+                    .filter(|p| p.unit >= start as i64 && p.unit < start as i64 + 2)
+                    .map(|p| (p.size * 4) as u64)
+                    .sum()
+            })
+            .max()
+            .unwrap()
+    };
+    assert!(group_sum_bytes > max_tensor_bytes, "group must span several tensors");
+
+    let mut task = build_task("motif4", geom(&be), 3).unwrap();
+    let batches: Vec<Batch> = (0..n_units).map(|_| task.train_batch()).collect();
+    let _ = run_streamed_hift(&mut be, 2, 1e-3, OptimCfg::new(OptimKind::AdamW), &batches, false);
+    assert_eq!(
+        be.stats().peak_grad_resident_bytes,
+        max_tensor_bytes,
+        "streamed HiFT holds at most the group's largest single tensor"
+    );
+
+    // The collected path (pre-refactor semantics) holds the whole group.
+    let mut be2 = backend();
+    let _ = hift_collected_reference(
+        &mut be2,
+        2,
+        1e-3,
+        OptimCfg::new(OptimKind::AdamW),
+        &batches,
+    );
+    assert!(
+        be2.stats().peak_grad_resident_bytes >= group_sum_bytes / 2,
+        "collected path accumulates whole units ({} < {})",
+        be2.stats().peak_grad_resident_bytes,
+        group_sum_bytes / 2,
+    );
+    assert!(
+        be2.stats().peak_grad_resident_bytes > be.stats().peak_grad_resident_bytes,
+        "collected residency must exceed streamed residency"
+    );
+}
+
+#[test]
+fn run_record_surfaces_backend_stats_and_grad_peak() {
+    use hift::coordinator::trainer::{self, TrainCfg};
+    let mut be = backend();
+    let manifest = be.manifest().clone();
+    let mut hift = Hift::pipelined(
+        HiftCfg {
+            m: 1,
+            order: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Const { lr: 2e-3 },
+            optim: OptimCfg::new(OptimKind::AdamW),
+        },
+        &manifest,
+        false,
+    )
+    .unwrap();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 7).unwrap();
+    let rec = trainer::train(
+        &mut be,
+        &mut hift,
+        &mut params,
+        task.as_mut(),
+        TrainCfg { steps: 4, eval_every: 0, log_every: 0 },
+    )
+    .unwrap();
+    assert!(rec.backend.executions > 4, "train steps + eval forwards");
+    assert!(rec.backend.cache_hits + rec.backend.cache_misses > 0);
+    assert!(rec.backend.h2d_bytes > 0 && rec.backend.d2h_bytes > 0);
+    assert!(rec.backend.peak_grad_resident_bytes > 0);
+    let ledger_peak = rec.peak_grad_resident_bytes.expect("hift has a ledger");
+    assert_eq!(
+        ledger_peak, rec.backend.peak_grad_resident_bytes,
+        "fused sink holds exactly what the backend streams"
+    );
+    let json = hift::ser::emit_pretty(&rec.to_json());
+    for key in ["cache_hits", "cache_misses", "peak_grad_resident_bytes", "executions"] {
+        assert!(json.contains(key), "RunRecord JSON must surface {key}");
+    }
+}
