@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_actckpt` — the activation-checkpointing
+//! memory-vs-recompute-time tradeoff exhibit (see hift::bench::exhibits).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::act_ckpt(&mut b)?;
+    eprintln!("[bench_actckpt] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

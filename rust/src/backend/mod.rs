@@ -62,6 +62,87 @@ use crate::tensor::{Tensor, TensorSet};
 pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 pub use native::{NativeBackend, PRESET_NAMES};
 
+/// Activation-checkpointing policy for the backward-capable backends.
+///
+/// Under a recompute policy the forward pass retains only **layer-boundary
+/// residual streams** (one `[B·T, D]` tensor per checkpointed layer) instead
+/// of every layer's internal activation cache; the backward walk rebuilds
+/// each layer's internals from its boundary just before that layer's
+/// gradients are emitted ([`model::recompute_layer`]).  Recompute replays
+/// the exact forward arithmetic (fixed-order reductions, no RNG), so
+/// gradients — and therefore whole training runs — are bit-identical to the
+/// cache-everything path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ActCkpt {
+    /// Cache every layer's internals (no recompute).
+    #[default]
+    None,
+    /// Keep a boundary every `k` layers (`k = 1` ⇒ boundary at every layer,
+    /// internals always recomputed).  Non-boundary inputs are rebuilt by
+    /// chaining the residual stream forward from the previous boundary.
+    EveryK(usize),
+    /// `every_k(⌈√L⌉)` — the classic O(√L) memory / one-extra-forward
+    /// compromise (Chen et al., 2016).
+    Sqrt,
+}
+
+impl ActCkpt {
+    /// Parse `"none"`, `"sqrt"`, `"every_k(K)"` (also `"every_k=K"` or a
+    /// bare integer `K`).
+    pub fn parse(s: &str) -> Result<ActCkpt> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "none" | "off" | "0" => return Ok(ActCkpt::None),
+            "sqrt" => return Ok(ActCkpt::Sqrt),
+            _ => {}
+        }
+        let k_str = t
+            .strip_prefix("every_k(")
+            .and_then(|r| r.strip_suffix(')'))
+            .or_else(|| t.strip_prefix("every_k="))
+            .unwrap_or(&t);
+        let k: usize = k_str
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad act-ckpt policy {s:?} (none|sqrt|every_k(K))"))?;
+        if k == 0 {
+            bail!("act-ckpt every_k(0) is meaningless; use k >= 1 or `none`");
+        }
+        Ok(ActCkpt::EveryK(k))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ActCkpt::None => "none".to_string(),
+            ActCkpt::EveryK(k) => format!("every_k({k})"),
+            ActCkpt::Sqrt => "sqrt".to_string(),
+        }
+    }
+
+    /// Boundary spacing for a model with `n_layers` blocks; `None` when the
+    /// policy keeps full caches (no recompute).
+    pub fn seg_len(&self, n_layers: usize) -> Option<usize> {
+        match *self {
+            ActCkpt::None => None,
+            ActCkpt::EveryK(k) => Some(k.max(1)),
+            ActCkpt::Sqrt => {
+                let mut k = 1usize;
+                while k * k < n_layers {
+                    k += 1;
+                }
+                Some(k.max(1))
+            }
+        }
+    }
+
+    /// Is layer `i`'s input residual stream a stored checkpoint?
+    pub fn is_boundary(&self, i: usize, n_layers: usize) -> bool {
+        match self.seg_len(n_layers) {
+            None => false,
+            Some(k) => i % k == 0,
+        }
+    }
+}
+
 /// One training/eval batch, shaped `[B, S]` row-major.
 #[derive(Debug, Clone)]
 pub struct Batch {
@@ -219,6 +300,20 @@ pub struct RuntimeStats {
     /// Accumulates until [`ExecBackend::reset_run_peaks`] — the trainer
     /// resets it at run start so `RunRecord` peaks are per-run.
     pub peak_grad_resident_bytes: u64,
+    /// Peak bytes of **activations retained across layer-walk steps**:
+    /// cached layer internals (policy [`ActCkpt::None`]), boundary residual
+    /// streams + recompute scratch (checkpointing policies), and the
+    /// head-stage buffers.  The single layer being recomputed during
+    /// backward is transient working memory — freed before the walk moves
+    /// on, like the backward pass's own gradient temporaries — and is not
+    /// part of this cache.  Reset per run like the grad peak.
+    pub peak_act_resident_bytes: u64,
+    /// Layer forward passes re-run during backward under a recompute
+    /// policy (0 when the forward cached everything).
+    pub recompute_layers: u64,
+    /// Estimated flops spent on those recomputations (dense matmuls +
+    /// attention forms; adapter extras excluded).
+    pub recompute_flops: u64,
 }
 
 impl RuntimeStats {
@@ -237,12 +332,20 @@ impl RuntimeStats {
             cache_hits: self.cache_hits - start.cache_hits,
             cache_misses: self.cache_misses - start.cache_misses,
             peak_grad_resident_bytes: self.peak_grad_resident_bytes,
+            peak_act_resident_bytes: self.peak_act_resident_bytes,
+            recompute_layers: self.recompute_layers - start.recompute_layers,
+            recompute_flops: self.recompute_flops - start.recompute_flops,
         }
     }
 
     /// Fold one residency observation into the peak.
     pub(crate) fn note_grad_resident(&mut self, bytes: u64) {
         self.peak_grad_resident_bytes = self.peak_grad_resident_bytes.max(bytes);
+    }
+
+    /// Fold one activation-residency observation into the peak.
+    pub(crate) fn note_act_resident(&mut self, bytes: u64) {
+        self.peak_act_resident_bytes = self.peak_act_resident_bytes.max(bytes);
     }
 }
 
@@ -355,6 +458,25 @@ pub trait ExecBackend {
     /// the default is a no-op so stat-less test doubles stay trivial.
     fn note_grad_residency(&mut self, _bytes: u64) {}
 
+    /// Select the activation-checkpointing policy for subsequent runs.
+    /// Backends without a recompute path (PJRT artifacts are compiled with
+    /// their caching baked in; test doubles) accept only [`ActCkpt::None`].
+    fn set_act_ckpt(&mut self, policy: ActCkpt) -> Result<()> {
+        if policy != ActCkpt::None {
+            bail!(
+                "backend {:?} does not support activation checkpointing (policy {})",
+                self.name(),
+                policy.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// The active activation-checkpointing policy.
+    fn act_ckpt(&self) -> ActCkpt {
+        ActCkpt::None
+    }
+
     /// Reset per-run peak statistics (`peak_grad_resident_bytes`).  The
     /// trainer calls this at run start so each [`crate::coordinator::trainer::RunRecord`]
     /// reports its own peak rather than the lifetime maximum of a shared
@@ -404,14 +526,19 @@ pub fn build_backend(
 }
 
 /// [`build_backend`] from the environment: `HIFT_ARTIFACTS` (PJRT),
-/// `HIFT_PRESET` (native geometry, default `tiny`), `HIFT_SEED`.
+/// `HIFT_PRESET` (native geometry, default `tiny`), `HIFT_SEED`,
+/// `HIFT_ACT_CKPT` (activation-checkpoint policy: `none|sqrt|every_k(K)`).
 pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     // Empty values mean "unset" — `HIFT_ARTIFACTS= hift …` must fall back
     // to the native backend, not request PJRT with an empty dir.
     let artifacts = std::env::var("HIFT_ARTIFACTS").ok().filter(|s| !s.is_empty());
     let preset = std::env::var("HIFT_PRESET").ok().filter(|s| !s.is_empty());
     let seed = std::env::var("HIFT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0);
-    build_backend(artifacts.as_deref(), preset.as_deref(), seed)
+    let mut be = build_backend(artifacts.as_deref(), preset.as_deref(), seed)?;
+    if let Some(p) = std::env::var("HIFT_ACT_CKPT").ok().filter(|s| !s.is_empty()) {
+        be.set_act_ckpt(ActCkpt::parse(&p)?)?;
+    }
+    Ok(be)
 }
 
 #[cfg(test)]
@@ -447,5 +574,32 @@ mod tests {
     fn artifacts_without_pjrt_is_a_clear_error() {
         let err = build_backend(Some("artifacts/tiny"), None, 0).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn act_ckpt_parse_roundtrip() {
+        assert_eq!(ActCkpt::parse("none").unwrap(), ActCkpt::None);
+        assert_eq!(ActCkpt::parse("sqrt").unwrap(), ActCkpt::Sqrt);
+        assert_eq!(ActCkpt::parse("every_k(3)").unwrap(), ActCkpt::EveryK(3));
+        assert_eq!(ActCkpt::parse("every_k=2").unwrap(), ActCkpt::EveryK(2));
+        assert_eq!(ActCkpt::parse("4").unwrap(), ActCkpt::EveryK(4));
+        assert!(ActCkpt::parse("every_k(0)").is_err());
+        assert!(ActCkpt::parse("bogus").is_err());
+        for p in [ActCkpt::None, ActCkpt::Sqrt, ActCkpt::EveryK(2)] {
+            assert_eq!(ActCkpt::parse(&p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn act_ckpt_boundaries() {
+        assert_eq!(ActCkpt::None.seg_len(8), None);
+        assert_eq!(ActCkpt::EveryK(2).seg_len(8), Some(2));
+        assert_eq!(ActCkpt::Sqrt.seg_len(2), Some(2));
+        assert_eq!(ActCkpt::Sqrt.seg_len(6), Some(3));
+        assert_eq!(ActCkpt::Sqrt.seg_len(12), Some(4));
+        assert!(ActCkpt::EveryK(2).is_boundary(0, 8));
+        assert!(!ActCkpt::EveryK(2).is_boundary(1, 8));
+        assert!(ActCkpt::EveryK(2).is_boundary(2, 8));
+        assert!(!ActCkpt::None.is_boundary(0, 8));
     }
 }

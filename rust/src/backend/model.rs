@@ -31,7 +31,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::ModelCfg;
 use super::par;
-use super::Batch;
+use super::{ActCkpt, Batch};
 use crate::tensor::{Tensor, TensorSet};
 
 /// LayerNorm epsilon (matches `layernorm_ref` in the Python compile path).
@@ -215,11 +215,44 @@ struct LayerState {
     mid_ia3: Vec<f32>,
 }
 
+impl LayerState {
+    /// Bytes of activation buffers this cache retains (f32).
+    fn bytes(&self) -> usize {
+        4 * (self.x_in.len()
+            + self.h1.len()
+            + self.wq_eff.len()
+            + self.wv_eff.len()
+            + self.q.len()
+            + self.k.len()
+            + self.v.len()
+            + self.k0.len()
+            + self.v0.len()
+            + self.probs.len()
+            + self.attn.len()
+            + self.x_mid.len()
+            + self.h2.len()
+            + self.a1.len()
+            + self.mid0.len()
+            + self.mid_ia3.len()
+            + self.ln1.mean.len()
+            + self.ln1.inv.len()
+            + self.ln2.mean.len()
+            + self.ln2.inv.len())
+    }
+}
+
 /// Everything one forward pass produced (loss/metrics + backward caches).
 pub struct FwdState {
     pub loss: f32,
     pub ncorrect: f32,
-    layers: Vec<LayerState>,
+    /// Per-layer internal caches; `None` under a recompute policy (rebuilt
+    /// from `boundaries` by [`recompute_layer`] during backward).
+    layers: Vec<Option<LayerState>>,
+    /// Stored boundary residual streams (a layer's input `x`, `[BT, D]`);
+    /// `Some` at checkpoint layers under a recompute policy.  Policy
+    /// [`ActCkpt::None`] keeps each layer's input inside its `LayerState`
+    /// instead, so every entry is `None`.
+    boundaries: Vec<Option<Vec<f32>>>,
     x_fin: Vec<f32>,
     hf: Vec<f32>,
     lnf: LnState,
@@ -230,6 +263,26 @@ pub struct FwdState {
     probs_out: Vec<f32>,
     denom: f32,
     n_pre: usize,
+}
+
+impl FwdState {
+    /// Activation bytes this state retains between layer-walk steps: cached
+    /// layer internals (policy `none`), boundary residual streams
+    /// (recompute policies) and the head-stage buffers.  The single layer
+    /// being recomputed during backward is transient working memory — freed
+    /// before the walk moves on, like backward's own gradient temporaries —
+    /// and is deliberately not part of this cache figure.
+    pub fn act_resident_bytes(&self) -> u64 {
+        let layers: usize = self.layers.iter().flatten().map(LayerState::bytes).sum();
+        let bounds: usize = self.boundaries.iter().flatten().map(|b| b.len() * 4).sum();
+        let head = 4 * (self.x_fin.len()
+            + self.hf.len()
+            + self.hf_s.len()
+            + self.probs_out.len()
+            + self.lnf.mean.len()
+            + self.lnf.inv.len());
+        (layers + bounds + head) as u64
+    }
 }
 
 /// Gradients keyed by parameter name.
@@ -279,18 +332,218 @@ fn check_variant(variant: &str) -> Result<()> {
     }
 }
 
-/// Run the model forward; returns loss, masked #correct and the caches
-/// backward needs.
+/// One transformer block's forward pass from its input residual stream.
+/// Shared by the cache-building forward, the checkpoint-only forward and
+/// the backward-time recompute ([`recompute_layer`]), so all three perform
+/// the exact same arithmetic — the recompute path is bit-identical by
+/// construction.  Returns the layer's activation cache and its output
+/// residual stream.
+fn layer_fwd(
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    i: usize,
+    x_in: Vec<f32>,
+    bsz: usize,
+    t_: usize,
+) -> Result<(LayerState, Vec<f32>)> {
+    let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
+    let dh = d / heads;
+    let bt = bsz * t_;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let lora = variant == "lora";
+    let ia3 = variant == "ia3";
+    let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
+    let pfx = format!("l{i}.");
+
+    let (h1, ln1) = ln_fwd(
+        &x_in,
+        &get(params, &format!("{pfx}ln1.scale"))?.data,
+        &get(params, &format!("{pfx}ln1.bias"))?.data,
+        d,
+    );
+
+    // effective projections (LoRA merges into W_q / W_v)
+    let mut wq_eff = get(params, &format!("{pfx}attn.wq"))?.data.clone();
+    let mut wv_eff = get(params, &format!("{pfx}attn.wv"))?.data.clone();
+    if lora {
+        let r = cfg.lora_rank;
+        let aq = get(params, &format!("{pfx}lora.aq"))?;
+        let bq = get(params, &format!("{pfx}lora.bq"))?;
+        let av = get(params, &format!("{pfx}lora.av"))?;
+        let bv = get(params, &format!("{pfx}lora.bv"))?;
+        let mut delta = vec![0.0f32; d * d];
+        par::matmul(&aq.data, &bq.data, &mut delta, d, r, d);
+        axpy(&mut wq_eff, lora_sc, &delta);
+        delta.iter_mut().for_each(|z| *z = 0.0);
+        par::matmul(&av.data, &bv.data, &mut delta, d, r, d);
+        axpy(&mut wv_eff, lora_sc, &delta);
+    }
+
+    let mut q = vec![0.0f32; bt * d];
+    par::matmul(&h1, &wq_eff, &mut q, bt, d, d);
+    add_bias(&mut q, &get(params, &format!("{pfx}attn.bq"))?.data);
+    let mut k = vec![0.0f32; bt * d];
+    par::matmul(&h1, &get(params, &format!("{pfx}attn.wk"))?.data, &mut k, bt, d, d);
+    add_bias(&mut k, &get(params, &format!("{pfx}attn.bk"))?.data);
+    let mut v = vec![0.0f32; bt * d];
+    par::matmul(&h1, &wv_eff, &mut v, bt, d, d);
+    add_bias(&mut v, &get(params, &format!("{pfx}attn.bv"))?.data);
+
+    let (mut k0, mut v0) = (Vec::new(), Vec::new());
+    if ia3 {
+        k0 = k.clone();
+        v0 = v.clone();
+        let lk = &get(params, &format!("{pfx}ia3.lk"))?.data;
+        let lv = &get(params, &format!("{pfx}ia3.lv"))?.data;
+        for row in k.chunks_mut(d) {
+            for (kj, &lj) in row.iter_mut().zip(lk.iter()) {
+                *kj *= lj;
+            }
+        }
+        for row in v.chunks_mut(d) {
+            for (vj, &lj) in row.iter_mut().zip(lv.iter()) {
+                *vj *= lj;
+            }
+        }
+    }
+
+    // causal attention, head-major
+    let q_hm = gather_heads(&q, bsz, t_, heads, dh);
+    let k_hm = gather_heads(&k, bsz, t_, heads, dh);
+    let v_hm = gather_heads(&v, bsz, t_, heads, dh);
+    let mut probs = vec![0.0f32; bsz * heads * t_ * t_];
+    let mut o_hm = vec![0.0f32; bsz * heads * t_ * dh];
+    par::par_items2(&mut probs, t_ * t_, &mut o_hm, t_ * dh, |bh, pch, och| {
+        let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
+        let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
+        let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
+        for ti in 0..t_ {
+            let qrow = &qb[ti * dh..][..dh];
+            let prow = &mut pch[ti * t_..][..t_];
+            let mut maxv = f32::NEG_INFINITY;
+            for (j, pj) in prow.iter_mut().enumerate().take(ti + 1) {
+                let sc = dot(qrow, &kb[j * dh..][..dh]) * scale;
+                *pj = sc;
+                maxv = maxv.max(sc);
+            }
+            let mut sum = 0.0f32;
+            for pj in prow.iter_mut().take(ti + 1) {
+                *pj = (*pj - maxv).exp();
+                sum += *pj;
+            }
+            let inv = 1.0 / sum;
+            let orow = &mut och[ti * dh..][..dh];
+            for j in 0..=ti {
+                prow[j] *= inv;
+                let pij = prow[j];
+                if pij != 0.0 {
+                    axpy(orow, pij, &vb[j * dh..][..dh]);
+                }
+            }
+        }
+    });
+    let attn = scatter_heads(&o_hm, bsz, t_, heads, dh);
+
+    let mut x_mid = vec![0.0f32; bt * d];
+    par::matmul(&attn, &get(params, &format!("{pfx}attn.wo"))?.data, &mut x_mid, bt, d, d);
+    add_bias(&mut x_mid, &get(params, &format!("{pfx}attn.bo"))?.data);
+    axpy(&mut x_mid, 1.0, &x_in);
+
+    let (h2, ln2) = ln_fwd(
+        &x_mid,
+        &get(params, &format!("{pfx}ln2.scale"))?.data,
+        &get(params, &format!("{pfx}ln2.bias"))?.data,
+        d,
+    );
+    let mut a1 = vec![0.0f32; bt * f_];
+    par::matmul(&h2, &get(params, &format!("{pfx}ffn.w1"))?.data, &mut a1, bt, d, f_);
+    add_bias(&mut a1, &get(params, &format!("{pfx}ffn.b1"))?.data);
+    let mut mid0 = a1.clone();
+    par::par_rows(&mut mid0, f_, (32_768 / f_.max(1)).max(1), |_, chunk| {
+        for z in chunk.iter_mut() {
+            *z = gelu(*z);
+        }
+    });
+    let mut mid_ia3 = Vec::new();
+    if ia3 {
+        let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
+        mid_ia3 = mid0.clone();
+        for row in mid_ia3.chunks_mut(f_) {
+            for (mj, &lj) in row.iter_mut().zip(lff.iter()) {
+                *mj *= lj;
+            }
+        }
+    }
+    let mid_ref: &[f32] = if ia3 { &mid_ia3 } else { &mid0 };
+    let mut x_out = vec![0.0f32; bt * d];
+    par::matmul(mid_ref, &get(params, &format!("{pfx}ffn.w2"))?.data, &mut x_out, bt, f_, d);
+    add_bias(&mut x_out, &get(params, &format!("{pfx}ffn.b2"))?.data);
+    axpy(&mut x_out, 1.0, &x_mid);
+
+    Ok((
+        LayerState {
+            x_in,
+            h1,
+            ln1,
+            wq_eff,
+            wv_eff,
+            q,
+            k,
+            v,
+            k0,
+            v0,
+            probs,
+            attn,
+            x_mid,
+            h2,
+            ln2,
+            a1,
+            mid0,
+            mid_ia3,
+        },
+        x_out,
+    ))
+}
+
+/// Rough flop estimate for one block's forward (the recompute cost unit):
+/// dense projections + FFN matmuls + the two attention forms.  Adapter
+/// extras (LoRA merge, IA³ rescales) are below the noise floor and ignored.
+fn layer_flops(cfg: &ModelCfg, bsz: usize, t_: usize) -> u64 {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let bt = bsz * t_;
+    (2 * bt * d * (4 * d + 2 * f) + 4 * bt * t_ * d) as u64
+}
+
+/// Run the model forward with full activation caching ([`ActCkpt::None`]);
+/// see [`forward_ckpt`] for the checkpointing variant.
 pub fn forward(
     cfg: &ModelCfg,
     variant: &str,
     params: &TensorSet,
     batch: &Batch,
 ) -> Result<FwdState> {
+    forward_ckpt(cfg, variant, params, batch, ActCkpt::None)
+}
+
+/// Run the model forward under an activation-checkpointing `policy`;
+/// returns loss, masked #correct and whatever caches the policy retains for
+/// backward: every layer's internals under [`ActCkpt::None`], only
+/// layer-boundary residual streams under a recompute policy (backward then
+/// rebuilds each layer's internals via [`recompute_layer`]).  The loss and
+/// all downstream gradients are bit-identical across policies — the same
+/// [`layer_fwd`] runs either way.
+pub fn forward_ckpt(
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    batch: &Batch,
+    policy: ActCkpt,
+) -> Result<FwdState> {
     check_variant(variant)?;
     batch.validate()?;
     let (bsz, s) = (batch.b, batch.s);
-    let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
+    let (d, heads) = (cfg.d_model, cfg.n_heads);
     let v_ = cfg.vocab;
     if d == 0 || heads == 0 || d % heads != 0 {
         bail!("bad geometry: d_model={} n_heads={}", d, heads);
@@ -303,15 +556,10 @@ pub fn forward(
             bail!("token id {t} outside vocab {v_}");
         }
     }
-    let dh = d / heads;
     let p_ = if variant == "prefix" { cfg.n_prefix } else { 0 };
     let t_ = s + p_;
     let bt = bsz * t_;
     let bs = bsz * s;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let lora = variant == "lora";
-    let ia3 = variant == "ia3";
-    let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
 
     // --- embeddings ---------------------------------------------------
     let tok_emb = get(params, "tok_emb")?;
@@ -338,156 +586,25 @@ pub fn forward(
     }
 
     // --- transformer blocks -------------------------------------------
-    let mut layers = Vec::with_capacity(cfg.n_layers);
+    let seg = policy.seg_len(cfg.n_layers);
+    let mut layers: Vec<Option<LayerState>> = Vec::with_capacity(cfg.n_layers);
+    let mut boundaries: Vec<Option<Vec<f32>>> = Vec::with_capacity(cfg.n_layers);
     let mut x = x0;
     for i in 0..cfg.n_layers {
-        let pfx = format!("l{i}.");
         let x_in = x;
-        let (h1, ln1) = ln_fwd(
-            &x_in,
-            &get(params, &format!("{pfx}ln1.scale"))?.data,
-            &get(params, &format!("{pfx}ln1.bias"))?.data,
-            d,
-        );
-
-        // effective projections (LoRA merges into W_q / W_v)
-        let mut wq_eff = get(params, &format!("{pfx}attn.wq"))?.data.clone();
-        let mut wv_eff = get(params, &format!("{pfx}attn.wv"))?.data.clone();
-        if lora {
-            let r = cfg.lora_rank;
-            let aq = get(params, &format!("{pfx}lora.aq"))?;
-            let bq = get(params, &format!("{pfx}lora.bq"))?;
-            let av = get(params, &format!("{pfx}lora.av"))?;
-            let bv = get(params, &format!("{pfx}lora.bv"))?;
-            let mut delta = vec![0.0f32; d * d];
-            par::matmul(&aq.data, &bq.data, &mut delta, d, r, d);
-            axpy(&mut wq_eff, lora_sc, &delta);
-            delta.iter_mut().for_each(|z| *z = 0.0);
-            par::matmul(&av.data, &bv.data, &mut delta, d, r, d);
-            axpy(&mut wv_eff, lora_sc, &delta);
-        }
-
-        let mut q = vec![0.0f32; bt * d];
-        par::matmul(&h1, &wq_eff, &mut q, bt, d, d);
-        add_bias(&mut q, &get(params, &format!("{pfx}attn.bq"))?.data);
-        let mut k = vec![0.0f32; bt * d];
-        par::matmul(&h1, &get(params, &format!("{pfx}attn.wk"))?.data, &mut k, bt, d, d);
-        add_bias(&mut k, &get(params, &format!("{pfx}attn.bk"))?.data);
-        let mut v = vec![0.0f32; bt * d];
-        par::matmul(&h1, &wv_eff, &mut v, bt, d, d);
-        add_bias(&mut v, &get(params, &format!("{pfx}attn.bv"))?.data);
-
-        let (mut k0, mut v0) = (Vec::new(), Vec::new());
-        if ia3 {
-            k0 = k.clone();
-            v0 = v.clone();
-            let lk = &get(params, &format!("{pfx}ia3.lk"))?.data;
-            let lv = &get(params, &format!("{pfx}ia3.lv"))?.data;
-            for row in k.chunks_mut(d) {
-                for (kj, &lj) in row.iter_mut().zip(lk.iter()) {
-                    *kj *= lj;
-                }
+        let (state, x_out) = layer_fwd(cfg, variant, params, i, x_in, bsz, t_)?;
+        match seg {
+            None => {
+                layers.push(Some(state));
+                boundaries.push(None);
             }
-            for row in v.chunks_mut(d) {
-                for (vj, &lj) in row.iter_mut().zip(lv.iter()) {
-                    *vj *= lj;
-                }
+            Some(k) => {
+                // Retain only the boundary residual streams; the layer's
+                // internals are dropped here and rebuilt on backward.
+                layers.push(None);
+                boundaries.push(if i % k == 0 { Some(state.x_in) } else { None });
             }
         }
-
-        // causal attention, head-major
-        let q_hm = gather_heads(&q, bsz, t_, heads, dh);
-        let k_hm = gather_heads(&k, bsz, t_, heads, dh);
-        let v_hm = gather_heads(&v, bsz, t_, heads, dh);
-        let mut probs = vec![0.0f32; bsz * heads * t_ * t_];
-        let mut o_hm = vec![0.0f32; bsz * heads * t_ * dh];
-        par::par_items2(&mut probs, t_ * t_, &mut o_hm, t_ * dh, |bh, pch, och| {
-            let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
-            let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
-            let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
-            for ti in 0..t_ {
-                let qrow = &qb[ti * dh..][..dh];
-                let prow = &mut pch[ti * t_..][..t_];
-                let mut maxv = f32::NEG_INFINITY;
-                for (j, pj) in prow.iter_mut().enumerate().take(ti + 1) {
-                    let sc = dot(qrow, &kb[j * dh..][..dh]) * scale;
-                    *pj = sc;
-                    maxv = maxv.max(sc);
-                }
-                let mut sum = 0.0f32;
-                for pj in prow.iter_mut().take(ti + 1) {
-                    *pj = (*pj - maxv).exp();
-                    sum += *pj;
-                }
-                let inv = 1.0 / sum;
-                let orow = &mut och[ti * dh..][..dh];
-                for j in 0..=ti {
-                    prow[j] *= inv;
-                    let pij = prow[j];
-                    if pij != 0.0 {
-                        axpy(orow, pij, &vb[j * dh..][..dh]);
-                    }
-                }
-            }
-        });
-        let attn = scatter_heads(&o_hm, bsz, t_, heads, dh);
-
-        let mut x_mid = vec![0.0f32; bt * d];
-        par::matmul(&attn, &get(params, &format!("{pfx}attn.wo"))?.data, &mut x_mid, bt, d, d);
-        add_bias(&mut x_mid, &get(params, &format!("{pfx}attn.bo"))?.data);
-        axpy(&mut x_mid, 1.0, &x_in);
-
-        let (h2, ln2) = ln_fwd(
-            &x_mid,
-            &get(params, &format!("{pfx}ln2.scale"))?.data,
-            &get(params, &format!("{pfx}ln2.bias"))?.data,
-            d,
-        );
-        let mut a1 = vec![0.0f32; bt * f_];
-        par::matmul(&h2, &get(params, &format!("{pfx}ffn.w1"))?.data, &mut a1, bt, d, f_);
-        add_bias(&mut a1, &get(params, &format!("{pfx}ffn.b1"))?.data);
-        let mut mid0 = a1.clone();
-        par::par_rows(&mut mid0, f_, (32_768 / f_.max(1)).max(1), |_, chunk| {
-            for z in chunk.iter_mut() {
-                *z = gelu(*z);
-            }
-        });
-        let mut mid_ia3 = Vec::new();
-        if ia3 {
-            let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
-            mid_ia3 = mid0.clone();
-            for row in mid_ia3.chunks_mut(f_) {
-                for (mj, &lj) in row.iter_mut().zip(lff.iter()) {
-                    *mj *= lj;
-                }
-            }
-        }
-        let mid_ref: &[f32] = if ia3 { &mid_ia3 } else { &mid0 };
-        let mut x_out = vec![0.0f32; bt * d];
-        par::matmul(mid_ref, &get(params, &format!("{pfx}ffn.w2"))?.data, &mut x_out, bt, f_, d);
-        add_bias(&mut x_out, &get(params, &format!("{pfx}ffn.b2"))?.data);
-        axpy(&mut x_out, 1.0, &x_mid);
-
-        layers.push(LayerState {
-            x_in,
-            h1,
-            ln1,
-            wq_eff,
-            wv_eff,
-            q,
-            k,
-            v,
-            k0,
-            v0,
-            probs,
-            attn,
-            x_mid,
-            h2,
-            ln2,
-            a1,
-            mid0,
-            mid_ia3,
-        });
         x = x_out;
     }
     let x_fin = x;
@@ -554,6 +671,7 @@ pub fn forward(
         loss: (loss_acc / denom as f64) as f32,
         ncorrect: ncorrect as f32,
         layers,
+        boundaries,
         x_fin,
         hf,
         lnf,
@@ -589,6 +707,86 @@ pub fn backward(
     Ok(grads)
 }
 
+/// What a streamed backward spent on the recompute path (all zero when the
+/// forward cached everything, i.e. policy [`ActCkpt::None`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BwdStats {
+    /// Layer forward passes re-run during this backward.
+    pub recompute_layers: u64,
+    /// Estimated flops spent on those recomputations.
+    pub recompute_flops: u64,
+    /// Peak bytes of chained boundary scratch held on top of the
+    /// [`FwdState`] cache.
+    pub peak_scratch_bytes: u64,
+}
+
+/// Rebuild layer `i`'s activation cache from the nearest stored boundary at
+/// or below it, chaining the residual stream forward through [`layer_fwd`]
+/// — the exact computation the original forward ran, so every recomputed
+/// buffer (and every gradient formed from it) is bit-identical to the
+/// cache-everything path.  Intermediate boundaries are parked in `scratch`,
+/// which the descending backward walk consumes and frees layer by layer.
+///
+/// Safe under fused in-place parameter updates: the walk is at layer `i`,
+/// so only parameters of layers `<= i` are read here, and none of their
+/// gradients has been emitted yet — the streamed contract ("never read a
+/// tensor after emitting its gradient") is preserved.
+#[allow(clippy::too_many_arguments)]
+fn recompute_layer(
+    st: &FwdState,
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    bsz: usize,
+    t_: usize,
+    i: usize,
+    scratch: &mut [Option<Vec<f32>>],
+    scratch_bytes: &mut u64,
+    stats: &mut BwdStats,
+) -> Result<LayerState> {
+    // Nearest available boundary at or below layer i.
+    let mut c = i;
+    while scratch[c].is_none() && st.boundaries[c].is_none() {
+        if c == 0 {
+            bail!("activation checkpointing: no boundary stored at or below layer {i}");
+        }
+        c -= 1;
+    }
+    // Chain the residual stream from the boundary up to layer i, parking
+    // each intermediate layer input in `scratch` for the walk's descent.
+    for j in c..i {
+        let (x_j, from_scratch) = match scratch[j].take() {
+            Some(b) => (b, true),
+            None => (st.boundaries[j].as_ref().unwrap().clone(), false),
+        };
+        let (stj, x_out) = layer_fwd(cfg, variant, params, j, x_j, bsz, t_)?;
+        stats.recompute_layers += 1;
+        stats.recompute_flops += layer_flops(cfg, bsz, t_);
+        let LayerState { x_in, .. } = stj;
+        if from_scratch {
+            scratch[j] = Some(x_in); // return the borrowed boundary
+        }
+        if scratch[j + 1].is_none() && st.boundaries[j + 1].is_none() {
+            *scratch_bytes += (x_out.len() * 4) as u64;
+            scratch[j + 1] = Some(x_out);
+            stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(*scratch_bytes);
+        }
+    }
+    // Layer i's boundary moves into the rebuilt cache (it *is* the cache's
+    // `x_in`), so it leaves the scratch accounting.
+    let x_i = match scratch[i].take() {
+        Some(b) => {
+            *scratch_bytes -= (b.len() * 4) as u64;
+            b
+        }
+        None => st.boundaries[i].as_ref().unwrap().clone(),
+    };
+    let (state, _x_out) = layer_fwd(cfg, variant, params, i, x_i, bsz, t_)?;
+    stats.recompute_layers += 1;
+    stats.recompute_flops += layer_flops(cfg, bsz, t_);
+    Ok(state)
+}
+
 /// Streamed reverse-mode backward: `dx` propagates down to
 /// `spec.min_unit`, and every requested gradient is handed to `emit` the
 /// moment it is final, then dropped by the consumer — peak parameter-
@@ -609,6 +807,12 @@ pub fn backward(
 /// embedding unit; within a unit, manifest parameter order; a layer's
 /// adapter gradients (LoRA/IA³) follow its base tensors; `prefix.emb`
 /// comes last.  This is a fixed permutation of the artifact output order.
+///
+/// When `st` came from a checkpointing [`forward_ckpt`], each layer's
+/// internal activations are rebuilt from its boundary residual stream by
+/// [`recompute_layer`] just before that layer's gradients are emitted; the
+/// returned [`BwdStats`] reports the recompute work and scratch residency
+/// (all zero on the fully-cached path).
 pub fn backward_streamed(
     st: &FwdState,
     cfg: &ModelCfg,
@@ -617,7 +821,7 @@ pub fn backward_streamed(
     batch: &Batch,
     spec: &GradSpec,
     emit: &mut EmitFn<'_>,
-) -> Result<()> {
+) -> Result<BwdStats> {
     check_variant(variant)?;
     let (bsz, s) = (batch.b, batch.s);
     let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
@@ -684,12 +888,33 @@ pub fn backward_streamed(
     drop(dlogits);
 
     // --- blocks, top-down ----------------------------------------------
+    let mut bstats = BwdStats::default();
+    let mut scratch: Vec<Option<Vec<f32>>> = vec![None; cfg.n_layers];
+    let mut scratch_bytes = 0u64;
     for i in (0..cfg.n_layers).rev() {
         if i + 1 < spec.min_unit {
             // Truncated backprop: nothing below this unit was requested.
-            return Ok(());
+            return Ok(bstats);
         }
-        let ls = &st.layers[i];
+        let ls_owned;
+        let ls: &LayerState = match st.layers[i].as_ref() {
+            Some(cached) => cached,
+            None => {
+                ls_owned = recompute_layer(
+                    st,
+                    cfg,
+                    variant,
+                    params,
+                    bsz,
+                    t_,
+                    i,
+                    &mut scratch,
+                    &mut scratch_bytes,
+                    &mut bstats,
+                )?;
+                &ls_owned
+            }
+        };
         let pfx = format!("l{i}.");
         let emit_unit = spec.emit(i + 1);
         let emit_w = emit_unit && spec.dense;
@@ -1000,7 +1225,7 @@ pub fn backward_streamed(
         }
         emit("prefix.emb", Tensor::from_vec(dpre, &[p_, d]), params)?;
     }
-    Ok(())
+    Ok(bstats)
 }
 
 #[cfg(test)]
@@ -1128,6 +1353,34 @@ mod tests {
             let fg = &full[name];
             for (a, b) in g.data.iter().zip(&fg.data) {
                 assert_eq!(a, b, "{name}: gated grad must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_backward_is_bit_identical() {
+        let mut cfg = tiny_cfg();
+        cfg.n_layers = 3;
+        let n_units = cfg.n_units();
+        let mut params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 13);
+        let spec = GradSpec::all(n_units, false);
+        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        let full = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
+        for policy in [ActCkpt::EveryK(1), ActCkpt::EveryK(2), ActCkpt::Sqrt] {
+            let stc = forward_ckpt(&cfg, "base", &params, &batch, policy).unwrap();
+            assert_eq!(st.loss, stc.loss, "{policy:?}: loss must be bit-identical");
+            assert!(
+                stc.act_resident_bytes() < st.act_resident_bytes(),
+                "{policy:?}: checkpointing must shrink the retained cache"
+            );
+            let g = backward(&stc, &cfg, "base", &mut params, &batch, &spec).unwrap();
+            assert_eq!(g.len(), full.len(), "{policy:?}");
+            for (name, grad) in &g {
+                assert_eq!(
+                    grad.data, full[name].data,
+                    "{policy:?} {name}: recomputed grad must be bit-identical"
+                );
             }
         }
     }

@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 use super::model;
-use super::{unit_artifact, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
+use super::{unit_artifact, ActCkpt, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
 use crate::rng::Pcg32;
 use crate::tensor::{Tensor, TensorSet};
 
@@ -240,6 +240,9 @@ pub struct NativeBackend {
     /// Keeps [`RuntimeStats`] meaningful (h2d per *changed* tensor only), so
     /// bench columns compare across backends.
     uploaded: HashMap<String, (u64, u64)>,
+    /// Activation-checkpointing policy for grad-producing runs (see
+    /// [`ActCkpt`]): recompute-on-backward, bit-identical results.
+    act_ckpt: ActCkpt,
     pub stats: RuntimeStats,
 }
 
@@ -256,6 +259,7 @@ impl NativeBackend {
             manifest: synth_manifest(&cfg, seed),
             seed,
             uploaded: HashMap::new(),
+            act_ckpt: ActCkpt::None,
             stats: RuntimeStats::default(),
         })
     }
@@ -300,9 +304,10 @@ impl NativeBackend {
         }
     }
 
-    /// Shared streamed execution: one forward, then the streamed backward
-    /// for `gspec`, routing each gradient to `sink` through the
-    /// name→slot map the caller derived from the artifact (or group).
+    /// Shared streamed execution: one forward (under the configured
+    /// activation-checkpoint policy), then the streamed backward for
+    /// `gspec`, routing each gradient to `sink` through the name→slot map
+    /// the caller derived from the artifact (or group).
     fn exec_streamed(
         &mut self,
         variant: &str,
@@ -316,28 +321,45 @@ impl NativeBackend {
         self.stats.h2d_bytes += batch.h2d_bytes() as u64;
 
         let cfg = self.manifest.config.clone();
+        // Forward-only runs (eval, MeZO) never backward, so nothing but the
+        // head buffers needs retaining — use a maximally sparse policy
+        // instead of caching every layer.
+        let policy = if slots.is_empty() {
+            ActCkpt::EveryK(cfg.n_layers.max(1))
+        } else {
+            self.act_ckpt
+        };
         let t0 = std::time::Instant::now();
-        let fwd = model::forward(&cfg, variant, params, batch)?;
+        let fwd = model::forward_ckpt(&cfg, variant, params, batch, policy)?;
+        let mut act_peak = fwd.act_resident_bytes();
         if !slots.is_empty() {
-            let stats = &mut self.stats;
-            let mut emitted = 0usize;
-            let mut emit = |name: &str, g: Tensor, ps: &mut TensorSet| -> Result<()> {
-                let slot = *slots
-                    .get(name)
-                    .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
-                let bytes = g.bytes() as u64;
-                stats.d2h_bytes += bytes;
-                stats.note_grad_resident(bytes + sink.resident_bytes());
-                sink.grad(slot, name, g, ps)?;
-                stats.note_grad_resident(sink.resident_bytes());
-                emitted += 1;
-                Ok(())
+            let bw = {
+                let stats = &mut self.stats;
+                let mut emitted = 0usize;
+                let mut emit = |name: &str, g: Tensor, ps: &mut TensorSet| -> Result<()> {
+                    let slot = *slots
+                        .get(name)
+                        .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
+                    let bytes = g.bytes() as u64;
+                    stats.d2h_bytes += bytes;
+                    stats.note_grad_resident(bytes + sink.resident_bytes());
+                    sink.grad(slot, name, g, ps)?;
+                    stats.note_grad_resident(sink.resident_bytes());
+                    emitted += 1;
+                    Ok(())
+                };
+                let bw =
+                    model::backward_streamed(&fwd, &cfg, variant, params, batch, gspec, &mut emit)?;
+                if emitted != slots.len() {
+                    bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
+                }
+                bw
             };
-            model::backward_streamed(&fwd, &cfg, variant, params, batch, gspec, &mut emit)?;
-            if emitted != slots.len() {
-                bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
-            }
+            act_peak = act_peak.max(fwd.act_resident_bytes() + bw.peak_scratch_bytes);
+            self.stats.recompute_layers += bw.recompute_layers;
+            self.stats.recompute_flops += bw.recompute_flops;
         }
+        self.stats.note_act_resident(act_peak);
         sink.finish(params)?;
         let exec_time = t0.elapsed();
         self.stats.executions += 1;
@@ -464,8 +486,18 @@ impl ExecBackend for NativeBackend {
         self.stats.note_grad_resident(bytes);
     }
 
+    fn set_act_ckpt(&mut self, policy: ActCkpt) -> Result<()> {
+        self.act_ckpt = policy;
+        Ok(())
+    }
+
+    fn act_ckpt(&self) -> ActCkpt {
+        self.act_ckpt
+    }
+
     fn reset_run_peaks(&mut self) {
         self.stats.peak_grad_resident_bytes = 0;
+        self.stats.peak_act_resident_bytes = 0;
     }
 
     fn load_params(&self, variant: &str) -> Result<TensorSet> {

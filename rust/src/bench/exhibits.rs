@@ -8,9 +8,9 @@
 use anyhow::Result;
 
 use super::{acc_cell, default_spec, print_table, Bench};
-use crate::backend::ExecBackend;
+use crate::backend::{ActCkpt, ExecBackend};
 use crate::coordinator::strategy::UpdateStrategy;
-use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
+use crate::memmodel::{account, account_ckpt, by_name, Dtype, Method, Workload, GIB, MIB};
 use crate::optim::OptimKind;
 use crate::ser::Value;
 
@@ -349,13 +349,14 @@ pub fn fig6(b: &Bench) -> Result<()> {
     let w = Workload { batch: 6, seq: 512 };
     let mut rows = Vec::new();
     let mut json = Vec::new();
-    for (label, dtype, method) in [
-        ("(a) fp32 FPFT", Dtype::Fp32, Method::Fpft),
-        ("(b) fp32 HiFT", Dtype::Fp32, Method::Hift { m: 1 }),
-        ("(c) mixed FPFT", Dtype::Mixed, Method::Fpft),
-        ("(d) mixed HiFT", Dtype::Mixed, Method::Hift { m: 1 }),
+    for (label, dtype, method, policy) in [
+        ("(a) fp32 FPFT", Dtype::Fp32, Method::Fpft, ActCkpt::None),
+        ("(b) fp32 HiFT", Dtype::Fp32, Method::Hift { m: 1 }, ActCkpt::None),
+        ("(c) mixed FPFT", Dtype::Mixed, Method::Fpft, ActCkpt::None),
+        ("(d) mixed HiFT", Dtype::Mixed, Method::Hift { m: 1 }, ActCkpt::None),
+        ("(e) fp32 HiFT+ckpt(sqrt)", Dtype::Fp32, Method::Hift { m: 1 }, ActCkpt::Sqrt),
     ] {
-        let r = account(&a, OptimKind::AdamW, dtype, method, w);
+        let r = account_ckpt(&a, OptimKind::AdamW, dtype, method, w, policy);
         let pct = |x: f64| format!("{:.1}%", x / r.total * 100.0);
         rows.push(vec![
             label.to_string(),
@@ -371,11 +372,12 @@ pub fn fig6(b: &Bench) -> Result<()> {
             ("gra", r.gra.into()),
             ("sta", r.sta.into()),
             ("residual", r.residual.into()),
+            ("act_ckpt", r.act_ckpt.into()),
             ("total", r.total.into()),
         ]));
     }
     print_table(
-        "Figure 6 (a–d) — LLaMA-7B memory composition (AdamW)",
+        "Figure 6 (a–e) — LLaMA-7B memory composition (AdamW; (e) = recompute-on-backward)",
         &["panel", "params", "grads", "optim state", "residual", "total"],
         &rows,
     );
@@ -482,34 +484,39 @@ pub fn table5(b: &mut Bench) -> Result<()> {
         let ia3_params = a.n_layers * (2 * a.d_model + a.d_ff);
         let prefix_params = 128 * a.d_model;
         for opt in [OptimKind::AdamW, OptimKind::Sgd] {
-            for (label, dtype, method) in [
-                ("FPFT", Dtype::Mixed, Method::Fpft),
-                ("LoRA(r=8)", Dtype::Mixed, Method::Peft { adapter_params: lora_params }),
-                ("IA3", Dtype::Mixed, Method::Peft { adapter_params: ia3_params }),
-                ("Prefix", Dtype::Mixed, Method::Peft { adapter_params: prefix_params }),
-                ("HiFT", Dtype::MixedHi, Method::Hift { m: 1 }),
+            for (label, dtype, method, policy) in [
+                ("FPFT", Dtype::Mixed, Method::Fpft, ActCkpt::None),
+                ("LoRA(r=8)", Dtype::Mixed, Method::Peft { adapter_params: lora_params },
+                 ActCkpt::None),
+                ("IA3", Dtype::Mixed, Method::Peft { adapter_params: ia3_params }, ActCkpt::None),
+                ("Prefix", Dtype::Mixed, Method::Peft { adapter_params: prefix_params },
+                 ActCkpt::None),
+                ("HiFT", Dtype::MixedHi, Method::Hift { m: 1 }, ActCkpt::None),
+                ("HiFT+ckpt", Dtype::MixedHi, Method::Hift { m: 1 }, ActCkpt::Sqrt),
             ] {
-                let r = account(&a, opt, dtype, method, w);
+                let r = account_ckpt(&a, opt, dtype, method, w, policy);
                 let total = r.total / GIB;
                 let oom = model == "llama-7b" && label == "FPFT";
                 rows.push(vec![
                     model.to_string(),
                     opt.name().to_string(),
                     label.to_string(),
+                    format!("{:.2}", r.act_ckpt_gib()),
                     if oom { "OOM(>80G)".into() } else { format!("{total:.2}") },
                 ]);
                 json.push(Value::obj(vec![
                     ("model", model.into()),
                     ("optimizer", opt.name().into()),
                     ("method", label.into()),
+                    ("act_ckpt_gib", r.act_ckpt_gib().into()),
                     ("memory_gib", total.into()),
                 ]));
             }
         }
     }
     print_table(
-        "Table 5 analogue (memory, mixed precision)",
-        &["model", "optim", "method", "Memory(GiB)"],
+        "Table 5 analogue (memory, mixed precision; act = activation/act_ckpt term)",
+        &["model", "optim", "method", "act(GiB)", "Memory(GiB)"],
         &rows,
     );
 
@@ -559,6 +566,80 @@ pub fn table5(b: &mut Bench) -> Result<()> {
         &rows,
     );
     b.save("table5", &Value::Arr(json))
+}
+
+/// Activation-checkpointing tradeoff exhibit: measured HiFT runs on this
+/// substrate under `none` / `every_k(2)` / `sqrt` (peak activation-cache
+/// residency vs recompute work vs steps/s, loss bit-identical across
+/// policies), plus the analytic `act_ckpt` residual column at paper scale.
+pub fn act_ckpt(b: &mut Bench) -> Result<()> {
+    let steps = b.steps(60);
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut final_losses: Vec<f64> = Vec::new();
+    for policy in [ActCkpt::None, ActCkpt::EveryK(2), ActCkpt::Sqrt] {
+        b.rt.set_act_ckpt(policy)?;
+        let spec = default_spec("hift", steps);
+        let rec = b.run_one(&spec, "markovlm", steps, 1)?;
+        final_losses.push(rec.losses.tail_mean(8));
+        rows.push(vec![
+            policy.name(),
+            format!("{:.1}", rec.backend.peak_act_resident_bytes as f64 / 1024.0),
+            rec.backend.recompute_layers.to_string(),
+            format!("{:.2}", rec.backend.recompute_flops as f64 / 1e6),
+            format!("{:.2}", rec.steps_per_sec),
+            format!("{:.4}", rec.losses.tail_mean(8)),
+        ]);
+        json.push(Value::obj(vec![
+            ("policy", policy.name().as_str().into()),
+            ("peak_act_resident_bytes", (rec.backend.peak_act_resident_bytes as usize).into()),
+            ("recompute_layers", (rec.backend.recompute_layers as usize).into()),
+            ("recompute_flops", (rec.backend.recompute_flops as usize).into()),
+            ("steps_per_sec", rec.steps_per_sec.into()),
+            ("final_train_loss", rec.losses.tail_mean(8).into()),
+        ]));
+    }
+    b.rt.set_act_ckpt(ActCkpt::None)?;
+    assert!(
+        final_losses.iter().all(|&l| l == final_losses[0]),
+        "recompute must not change the loss curve: {final_losses:?}"
+    );
+    print_table(
+        &format!("Activation checkpointing — memory vs recompute (HiFT, {steps} steps)"),
+        &["policy", "peak act KiB", "recompute layers", "recompute MFLOP", "steps/s",
+          "final loss"],
+        &rows,
+    );
+
+    // Analytic half at paper scale: the act_ckpt residual term.
+    let w = Workload { batch: 8, seq: 512 };
+    let mut rows = Vec::new();
+    for model in ["roberta-large", "llama-7b"] {
+        let a = by_name(model).unwrap();
+        for policy in [ActCkpt::None, ActCkpt::EveryK(2), ActCkpt::Sqrt] {
+            let r = account_ckpt(&a, OptimKind::AdamW, Dtype::Fp32, Method::Hift { m: 1 }, w, policy);
+            rows.push(vec![
+                model.to_string(),
+                policy.name(),
+                format!("{:.2}", r.act_ckpt_gib()),
+                format!("{:.2}", r.residual_gib()),
+                format!("{:.2}", r.total_gib()),
+            ]);
+            json.push(Value::obj(vec![
+                ("model", model.into()),
+                ("policy", policy.name().as_str().into()),
+                ("act_ckpt_gib", r.act_ckpt_gib().into()),
+                ("residual_gib", r.residual_gib().into()),
+                ("total_gib", r.total_gib().into()),
+            ]));
+        }
+    }
+    print_table(
+        "Activation checkpointing — analytic act_ckpt term (fp32 HiFT m=1, b=8 s=512)",
+        &["model", "policy", "act_ckpt(GiB)", "Residual(GiB)", "Total(GiB)"],
+        &rows,
+    );
+    b.save("act_ckpt", &Value::Arr(json))
 }
 
 /// Appendix-B sanity print: closed-form ratio vs k.

@@ -10,11 +10,18 @@
 //! hift train  [--preset tiny | --artifacts DIR] --strategy hift --task motif4
 //!             [--steps 200] [--optim adamw] [--lr 4e-3] [--m 1] [--order b2u]
 //!             [--seed 0] [--eval-every 50] [--log-every 10] [--out runs/run.json]
+//!             [--act-ckpt none|sqrt|every_k(K)]
+//!             [--save-ckpt DIR] [--save-every N] [--resume DIR]
 //! hift eval   [--preset tiny | --artifacts DIR] [--variant base] --task motif4
 //! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
 //! hift info   [--preset tiny | --artifacts DIR]
-//! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6|tables8_12|all>
+//! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6|tables8_12|act_ckpt|all>
 //! ```
+//!
+//! Checkpoint/resume: `--save-ckpt DIR --save-every N` writes a crash-safe
+//! checkpoint (params + optimizer moments + step/sweep counters) every N
+//! steps; `--resume DIR` continues a killed run **bit-identically** — same
+//! batches, same sweep-aligned delayed-LR position, same optimizer state.
 
 mod args;
 
@@ -22,15 +29,16 @@ pub use args::Args;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{build_backend, ExecBackend};
+use crate::backend::{build_backend, ActCkpt, ExecBackend};
 use crate::bench::{exhibits, Bench};
 use crate::coordinator::strategy::UpdateStrategy;
-use crate::coordinator::trainer::{self, TrainCfg};
+use crate::coordinator::trainer::{self, CkptOpts, TrainCfg};
 use crate::data::{build_task, TaskGeom, TASK_NAMES};
 use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
 use crate::optim::OptimKind;
 use crate::ser::emit_pretty;
 use crate::strategies::{StrategySpec, STRATEGY_NAMES};
+use crate::tensor::checkpoint;
 
 const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
   backends: --preset tiny|small|base|e2e|e2e100m (native CPU, default)
@@ -76,6 +84,9 @@ fn cmd_train(a: &Args) -> Result<()> {
     let seed: u64 = a.get_num("seed").unwrap_or(0.0) as u64;
 
     let mut be = backend_from(a, seed)?;
+    if let Some(p) = a.get("act-ckpt") {
+        be.set_act_ckpt(ActCkpt::parse(p)?)?;
+    }
     let optim = OptimKind::parse(a.get("optim").unwrap_or("adamw"))
         .context("bad --optim (adamw|sgd|sgdm|adagrad|adafactor)")?;
     let mut spec = StrategySpec::new(strategy_name, optim, a.get_num("lr").unwrap_or(4e-3) as f32,
@@ -90,6 +101,53 @@ fn cmd_train(a: &Args) -> Result<()> {
     let mut params = be.load_params(strategy.variant())?;
     let mut task = build_task(task_name, geom(be.as_ref()), seed)
         .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
+
+    let mut ckpt_opts = CkptOpts {
+        save_dir: a.get("save-ckpt").map(std::path::PathBuf::from),
+        save_every: a.get_num("save-every").unwrap_or(0.0) as u64,
+        ..Default::default()
+    };
+    if let Some(dir) = a.get("resume") {
+        let ck = checkpoint::load(dir).with_context(|| format!("loading checkpoint {dir}"))?;
+        if ck.meta.strategy != strategy.name() {
+            bail!(
+                "checkpoint {dir} was written by strategy {:?} but this run is configured as \
+                 {:?}; resuming would desync the sweep-aligned LR schedule",
+                ck.meta.strategy,
+                strategy.name()
+            );
+        }
+        if ck.meta.task != task.name() {
+            bail!("checkpoint task {:?} != requested task {:?}", ck.meta.task, task.name());
+        }
+        if ck.params.names != params.names {
+            bail!(
+                "checkpoint parameter inventory ({} tensors) does not match the {:?} variant \
+                 ({} tensors)",
+                ck.params.names.len(),
+                strategy.variant(),
+                params.names.len()
+            );
+        }
+        for (i, t) in ck.params.tensors.iter().enumerate() {
+            if t.shape != params.tensors[i].shape {
+                bail!(
+                    "checkpoint tensor {:?} has shape {:?}, expected {:?} — wrong preset?",
+                    ck.params.names[i],
+                    t.shape,
+                    params.tensors[i].shape
+                );
+            }
+        }
+        strategy.import_opt_state(&ck.opt_state, &params)?;
+        ckpt_opts.start_step = ck.meta.step;
+        // Schema-1 checkpoints carry no sweep index: skip the cross-check
+        // rather than falsely rejecting them as "configuration changed".
+        ckpt_opts.expect_sweep = ck.meta.sweep;
+        params = ck.params;
+        eprintln!("resuming from {dir}: step {} (sweep {:?})", ck.meta.step, ck.meta.sweep);
+    }
+
     eprintln!(
         "training {} on {} for {steps} steps ({} params, platform {})",
         strategy.name(),
@@ -97,7 +155,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         params.total_params(),
         be.platform()
     );
-    let rec = trainer::train(
+    let rec = trainer::train_ckpt(
         be.as_mut(),
         strategy.as_mut(),
         &mut params,
@@ -107,6 +165,7 @@ fn cmd_train(a: &Args) -> Result<()> {
             eval_every: a.get_num("eval-every").unwrap_or(0.0) as u64,
             log_every: a.get_num("log-every").unwrap_or(10.0) as u64,
         },
+        &ckpt_opts,
     )?;
     println!("{}", emit_pretty(&rec.to_json()));
     if let Some(out) = a.get("out") {
@@ -229,6 +288,9 @@ fn cmd_bench(a: &Args) -> Result<()> {
             std::env::remove_var("HIFT_ARTIFACTS");
         }
     }
+    if let Some(p) = a.get("act-ckpt") {
+        std::env::set_var("HIFT_ACT_CKPT", p);
+    }
     let mut b = Bench::from_env()?;
     let run = |b: &mut Bench, name: &str| -> Result<()> {
         match name {
@@ -244,12 +306,13 @@ fn cmd_bench(a: &Args) -> Result<()> {
             "fig6" => exhibits::fig6(b),
             "tables8_12" => exhibits::tables8_12(b),
             "appendix_b" => exhibits::appendix_b(b),
+            "act_ckpt" | "actckpt" => exhibits::act_ckpt(b),
             other => bail!("unknown exhibit {other:?}"),
         }
     };
     if which == "all" {
-        for name in ["tables8_12", "fig6", "appendix_b", "table5", "fig3", "fig4", "table3",
-                     "table4", "mtbench", "table2", "table1", "fig5"] {
+        for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "table5", "fig3", "fig4",
+                     "table3", "table4", "mtbench", "table2", "table1", "fig5"] {
             run(&mut b, name)?;
         }
         Ok(())

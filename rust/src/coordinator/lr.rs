@@ -84,6 +84,15 @@ impl DelayedLr {
         }
     }
 
+    /// Jump the state machine to `steps` completed ticks (checkpoint
+    /// resume): lands on exactly the state `steps` calls to
+    /// [`DelayedLr::tick`] produce, so a resumed run continues the
+    /// sweep-aligned schedule instead of restarting it (§3.1).
+    pub fn fast_forward(&mut self, steps: u64) {
+        self.step = steps;
+        self.sweep = (steps / self.k as u64) as usize;
+    }
+
     pub fn sweep(&self) -> usize {
         self.sweep
     }

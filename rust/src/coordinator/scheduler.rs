@@ -70,6 +70,29 @@ impl HiftScheduler {
         self.k
     }
 
+    /// Completed-sweep index (the delayed-LR schedule position).
+    pub fn sweep(&self) -> usize {
+        self.lr.sweep()
+    }
+
+    /// Fast-forward a **freshly built** scheduler as if `steps_done` steps
+    /// had already been planned (checkpoint resume).  The rotating queue
+    /// returns to its initial order after every full sweep, so only the
+    /// within-sweep remainder is replayed; the delayed-LR counters jump
+    /// directly.  The next [`HiftScheduler::next`] then plans exactly the
+    /// step an uninterrupted run would have planned.
+    pub fn fast_forward(&mut self, steps_done: u64) {
+        self.step = steps_done;
+        self.lr.fast_forward(steps_done);
+        self.pos_in_sweep = 0;
+        let within = (steps_done % self.k as u64) as usize;
+        for _ in 0..within {
+            let take = self.m.min(self.n_units - self.pos_in_sweep);
+            let _ = self.queue.rotate(take);
+            self.pos_in_sweep += take;
+        }
+    }
+
     /// Plan and commit the next step.
     pub fn next(&mut self) -> PlannedStep {
         self.step += 1;
@@ -177,6 +200,31 @@ mod tests {
                 }
                 prop_assert(seen.iter().all(|&c| c == 1), format!("n={n} m={m} {strat:?}"))?;
                 prop_assert(boundaries == 1, "exactly one boundary per sweep")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fast_forward_matches_stepped_schedule() {
+        // A scheduler fast-forwarded to t must plan exactly the steps a
+        // scheduler stepped t times would plan next — groups, LR and sweep
+        // counters all (the resume invariant).
+        run(100, |g| {
+            let n = g.usize_in(1, 16);
+            let m = g.usize_in(1, 16);
+            let t = g.usize_in(0, 60) as u64;
+            let mut stepped = HiftScheduler::new(cfg(m, 1.0), n);
+            for _ in 0..t {
+                stepped.next();
+            }
+            let mut jumped = HiftScheduler::new(cfg(m, 1.0), n);
+            jumped.fast_forward(t);
+            prop_assert(jumped.sweep() == stepped.sweep(), format!("sweep at t={t}"))?;
+            for i in 0..(2 * jumped.k()) {
+                let a = stepped.next();
+                let b = jumped.next();
+                prop_assert(a == b, format!("n={n} m={m} t={t}: step {i} diverged"))?;
             }
             Ok(())
         });

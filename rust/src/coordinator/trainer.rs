@@ -2,15 +2,21 @@
 //! any [`FineTuneStrategy`], tracks loss/accuracy/throughput, runs periodic
 //! held-out evaluation, and emits a JSON [`RunRecord`] — the unit of
 //! evidence every bench harness builds its tables from.
+//!
+//! [`train_ckpt`] adds the crash-safe checkpoint loop: periodic
+//! [`checkpoint::save_replace`] of params + optimizer state + schedule
+//! position, and resume via [`CkptOpts::start_step`] (fast-forwarding the
+//! strategy's schedules and replaying the task's deterministic batch
+//! stream, so a resumed run is bit-identical to an uninterrupted one).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::backend::{Batch, ExecBackend, RuntimeStats};
 use crate::data::Task;
 use crate::metrics::{Accuracy, Series, Throughput};
 use crate::ser::Value;
 use crate::strategies::FineTuneStrategy;
-use crate::tensor::TensorSet;
+use crate::tensor::{checkpoint, TensorSet};
 
 /// Driver configuration.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +52,11 @@ pub fn evaluate(
     params: &mut TensorSet,
     batches: &[Batch],
 ) -> Result<EvalResult> {
+    if batches.is_empty() {
+        // The 0/1e-9 division below would otherwise silently report
+        // acc = NaN, loss = 0.0 for an empty eval set.
+        bail!("evaluate: no eval batches given for {fwd_artifact}");
+    }
     let mut acc = Accuracy::default();
     let mut loss_sum = 0.0f64;
     let mut weight_total = 0.0f64;
@@ -150,10 +161,35 @@ impl RunRecord {
                 ("cache_misses", (b.cache_misses as usize).into()),
                 ("cache_hit_rate", hit_rate.into()),
                 ("peak_grad_resident_bytes", (b.peak_grad_resident_bytes as usize).into()),
+                ("peak_act_resident_bytes", (b.peak_act_resident_bytes as usize).into()),
+                ("recompute_layers", (b.recompute_layers as usize).into()),
+                ("recompute_flops", (b.recompute_flops as usize).into()),
             ]),
         ));
         Value::obj(pairs)
     }
+}
+
+/// Checkpoint/resume options for [`train_ckpt`].
+#[derive(Debug, Clone, Default)]
+pub struct CkptOpts {
+    /// Where to write checkpoints (`None` = never save).  Saves go through
+    /// [`checkpoint::save_replace`], so a crash mid-save never leaves a
+    /// torn checkpoint behind.
+    pub save_dir: Option<std::path::PathBuf>,
+    /// Save every N steps (0 = only at the end of the run, when
+    /// `save_dir` is set).
+    pub save_every: u64,
+    /// Resume: steps already completed by the checkpointed run.  The
+    /// trainer fast-forwards the strategy's schedules and replays the
+    /// task's deterministic batch stream, so the continuation consumes
+    /// exactly the batches an uninterrupted run would.
+    pub start_step: u64,
+    /// Sweep index recorded in the checkpoint, cross-checked against the
+    /// fast-forwarded schedule — a mismatch means the run configuration
+    /// (m / order / schedule) changed, which would desync the delayed-LR
+    /// alignment §3.1 exists to protect.
+    pub expect_sweep: Option<u64>,
 }
 
 /// Run `strategy` on `task` for `cfg.steps` steps.
@@ -167,6 +203,19 @@ pub fn train(
     task: &mut dyn Task,
     cfg: TrainCfg,
 ) -> Result<RunRecord> {
+    train_ckpt(be, strategy, params, task, cfg, &CkptOpts::default())
+}
+
+/// [`train`] with the crash-safe checkpoint loop (periodic save of params +
+/// optimizer state + schedule position) and resume-from-step support.
+pub fn train_ckpt(
+    be: &mut dyn ExecBackend,
+    strategy: &mut dyn FineTuneStrategy,
+    params: &mut TensorSet,
+    task: &mut dyn Task,
+    cfg: TrainCfg,
+    ckpt: &CkptOpts,
+) -> Result<RunRecord> {
     let fwd = strategy.fwd_artifact();
     // Peaks are reset per run so RunRecord reports this run's residency,
     // not the lifetime maximum of a shared bench backend.
@@ -175,10 +224,33 @@ pub fn train(
     let mut losses = Series::new("train_loss");
     let mut train_acc = Accuracy::default();
     let mut evals = Vec::new();
-    let mut thr = Throughput::new();
     let mut exec_secs = 0.0f64;
 
-    for step in 1..=cfg.steps {
+    if ckpt.start_step > cfg.steps {
+        bail!("resume step {} is beyond the requested {} steps", ckpt.start_step, cfg.steps);
+    }
+    if ckpt.start_step > 0 {
+        strategy.fast_forward(ckpt.start_step);
+        if let Some(sweep) = ckpt.expect_sweep {
+            if strategy.sweeps_done() != sweep {
+                bail!(
+                    "checkpoint records sweep {sweep} at step {} but the replayed schedule \
+                     lands on sweep {} — was the strategy configuration (m/order/schedule) \
+                     changed between save and resume?",
+                    ckpt.start_step,
+                    strategy.sweeps_done()
+                );
+            }
+        }
+        // Replay the deterministic batch stream so the resumed run sees the
+        // same batches an uninterrupted run would.
+        for _ in 0..ckpt.start_step {
+            let _ = task.train_batch();
+        }
+    }
+
+    let mut thr = Throughput::new();
+    for step in (ckpt.start_step + 1)..=cfg.steps {
         let batch = task.train_batch();
         let stats = strategy.step(be, params, &batch)?;
         losses.push(stats.loss as f64);
@@ -204,10 +276,26 @@ pub fn train(
                 eprintln!("[{}]   eval@{step}: acc={:.4} loss={:.4}", strategy.name(), ev.acc, ev.loss);
             }
         }
+        if let Some(dir) = &ckpt.save_dir {
+            let at_interval = ckpt.save_every > 0 && step % ckpt.save_every == 0;
+            if at_interval || step == cfg.steps {
+                let meta = checkpoint::CkptMeta {
+                    step,
+                    sweep: Some(strategy.sweeps_done()),
+                    strategy: strategy.name().to_string(),
+                    task: task.name().to_string(),
+                };
+                checkpoint::save_replace(dir, params, &meta, &strategy.export_opt_state())?;
+                if cfg.log_every > 0 {
+                    eprintln!("[{}]   ckpt@{step}: saved to {}", strategy.name(), dir.display());
+                }
+            }
+        }
     }
 
     let final_eval = evaluate(be, &fwd, params, task.eval_batches())?;
     let wall = thr.elapsed_secs();
+    let executed = cfg.steps - ckpt.start_step;
     Ok(RunRecord {
         strategy: strategy.name().to_string(),
         task: task.name().to_string(),
@@ -217,7 +305,7 @@ pub fn train(
         train_acc: train_acc.value(),
         steps: cfg.steps,
         wall_secs: wall,
-        steps_per_sec: if wall > 0.0 { cfg.steps as f64 / wall } else { 0.0 },
+        steps_per_sec: if wall > 0.0 { executed as f64 / wall } else { 0.0 },
         exec_secs,
         peak_trainable_params: strategy.peak_trainable_params(),
         optimizer_state_bytes: strategy.optimizer_state_bytes(),

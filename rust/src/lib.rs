@@ -32,17 +32,29 @@
 //! `Vec<Tensor>`) survives as a provided method for forward-only and MeZO
 //! paths.
 //!
+//! With gradients streamed, activations dominate the remaining footprint:
+//! [`backend::ActCkpt`] (`--act-ckpt none|sqrt|every_k(K)`) turns on
+//! **recompute-on-backward activation checkpointing** — the forward
+//! retains only layer-boundary residual streams and the backward rebuilds
+//! each layer's internals just before emitting its gradients, bit-identical
+//! to the cached path, with the tradeoff tracked as
+//! `peak_act_resident_bytes` / `recompute_flops` in
+//! [`backend::RuntimeStats`].  Long runs are crash-safe:
+//! [`tensor::checkpoint`] persists params + optimizer state + the
+//! step/sweep schedule position, and `hift train --resume DIR` continues a
+//! killed run bit-identically (delayed-LR sweep alignment included).
+//!
 //! ## Module map
 //!
 //! | module | role |
 //! |---|---|
 //! | [`ser`] | minimal JSON (no serde in the offline vendor set) |
 //! | [`rng`] | deterministic PCG RNG (MeZO perturbations, shuffles) |
-//! | [`tensor`] | flat f32 tensors + the math optimizers need |
-//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, manifest, native CPU model, thread helpers |
+//! | [`tensor`] | flat f32 tensors + crash-safe checkpoint save/load (`tensor::checkpoint`) |
+//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, `ActCkpt` recompute policies, manifest, native CPU model, thread helpers |
 //! | [`runtime`] | PJRT client, artifact registry, executable cache (`pjrt` feature; streams via post-execute drain) |
 //! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger + fused/pipelined update sinks |
-//! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer |
+//! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer (+ checkpoint/resume loop) |
 //! | [`strategies`] | FPFT, LoRA, IA3, prefix, BitFit, LP, MeZO, LOMO, … |
 //! | [`memmodel`] | analytic GPU-memory accounting (Tables 5, 8–12, Fig. 6) incl. streamed-gradient residency |
 //! | [`data`] | synthetic tasks standing in for GLUE/E2E/GSM8K |

@@ -19,13 +19,18 @@
 //!   `MIXED_ACT_FACTOR = 0.75` (paper-measured mixed/fp32 residual ratio,
 //!   range 0.71–0.86) and `HIFT_RETENTION = 0.75` (paper-measured
 //!   HiFT/FPFT residual ratio, range 0.67–0.85 — HiFT truncates the
-//!   autograd graph below the active group).
+//!   autograd graph below the active group).  Under an
+//!   activation-checkpointing policy ([`account_ckpt`]) the layer term is
+//!   replaced by the structural `act_ckpt` model — stored boundary
+//!   residual streams + segment scratch + one recomputing layer — instead
+//!   of the flat calibrated factor.
 //!
 //! #Para/#Gra/#Sta/#PGS are exact arithmetic (validated against every row
 //! of Tables 8–12 in `rust/tests/memmodel_paper.rs`); Residual/Total are a
 //! model and validated in band.
 
 use super::arch::Arch;
+use crate::backend::ActCkpt;
 use crate::optim::OptimKind;
 
 pub const MIB: f64 = 1024.0 * 1024.0;
@@ -92,6 +97,12 @@ pub struct MemRow {
     /// para + gra + sta.
     pub pgs: f64,
     pub residual: f64,
+    /// The activation (layer) part of `residual` — the `act_ckpt` term.
+    /// Under [`ActCkpt::None`] this is the flat calibrated
+    /// `layers × per-layer × retention` model; under a recompute policy it
+    /// is boundary residual streams + segment scratch + one layer's
+    /// transient working set, replacing the calibrated factor.
+    pub act_ckpt: f64,
     pub total: f64,
 }
 
@@ -113,6 +124,9 @@ impl MemRow {
     }
     pub fn residual_gib(&self) -> f64 {
         self.residual / GIB
+    }
+    pub fn act_ckpt_gib(&self) -> f64 {
+        self.act_ckpt / GIB
     }
     pub fn total_gib(&self) -> f64 {
         self.total / GIB
@@ -143,8 +157,16 @@ fn state_bytes(shapes: &[&[usize]], opt: OptimKind) -> f64 {
 }
 
 
-/// Activation ("residual state") model in bytes.
-fn residual_bytes(arch: &Arch, w: Workload, dtype: Dtype, method: Method) -> f64 {
+/// Activation ("residual state") model in bytes.  Returns
+/// `(total residual, activation layer part)` — the latter is the
+/// `act_ckpt` term surfaced in [`MemRow`].
+fn residual_bytes(
+    arch: &Arch,
+    w: Workload,
+    dtype: Dtype,
+    method: Method,
+    policy: ActCkpt,
+) -> (f64, f64) {
     let (b, s, d, h, l) = (
         w.batch as f64,
         w.seq as f64,
@@ -160,25 +182,48 @@ fn residual_bytes(arch: &Arch, w: Workload, dtype: Dtype, method: Method) -> f64
         None => s,
     };
     let per_layer_fp16 = 34.0 * b * s * d + 5.0 * b * h * s * s_kv;
-    let layer_part_fp32 = 2.0 * per_layer_fp16 * l;
     let extras = 4.0 * b * s * (arch.vocab as f64).min(8.0 * d) + 12.0 * b * s * d;
     let act_factor = match dtype {
         Dtype::Fp32 => 1.0,
         Dtype::Mixed => MIXED_ACT_FACTOR,
         Dtype::MixedHi => MIXED_ACT_FACTOR * MIXEDHI_ACT_EXTRA,
     };
-    let retention = match method {
-        Method::Hift { .. } => HIFT_RETENTION,
-        // PEFT keeps the full graph alive (adapters hang off every layer)
-        // and adds the adapter forward burden (paper §4.2).
-        Method::Peft { .. } => 1.05,
-        Method::Fpft => 1.0,
+    let act = match policy.seg_len(arch.n_layers) {
+        None => {
+            let retention = match method {
+                Method::Hift { .. } => HIFT_RETENTION,
+                // PEFT keeps the full graph alive (adapters hang off every
+                // layer) and adds the adapter forward burden (paper §4.2).
+                Method::Peft { .. } => 1.05,
+                Method::Fpft => 1.0,
+            };
+            2.0 * per_layer_fp16 * l * act_factor * retention
+        }
+        Some(k) => {
+            // Recompute-on-backward replaces the flat calibrated factor:
+            // stored boundary residual streams (⌈L/k⌉) + chained segment
+            // scratch (≤ k) + one layer's full working set while it is
+            // being recomputed.
+            let n_bound = (arch.n_layers.div_ceil(k) + k.min(arch.n_layers)) as f64;
+            let boundary_fp32 = 4.0 * b * s * d;
+            (n_bound * boundary_fp32 + 2.0 * per_layer_fp16) * act_factor
+        }
     };
-    layer_part_fp32 * act_factor * retention + extras
+    (act + extras, act)
 }
 
-/// Compute one memory-table row.
-pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Workload) -> MemRow {
+/// [`account`] under an activation-checkpointing policy: the residual's
+/// activation term switches from the flat calibrated model to the
+/// boundary + recompute-scratch model (the `act_ckpt` column of the
+/// Table 5 / Figure 6 exhibits).
+pub fn account_ckpt(
+    arch: &Arch,
+    opt: OptimKind,
+    dtype: Dtype,
+    method: Method,
+    w: Workload,
+    policy: ActCkpt,
+) -> MemRow {
     let n = arch.total_params() as f64;
     let params = arch.params();
 
@@ -251,8 +296,14 @@ pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Wor
     let gra = 4.0 * trainable as f64;
     let gra_streamed = 4.0 * largest as f64;
     let pgs = para + gra + sta;
-    let residual = residual_bytes(arch, w, dtype, method);
-    MemRow { trainable, para, gra, gra_streamed, sta, pgs, residual, total: pgs + residual }
+    let (residual, act_ckpt) = residual_bytes(arch, w, dtype, method, policy);
+    let total = pgs + residual;
+    MemRow { trainable, para, gra, gra_streamed, sta, pgs, residual, act_ckpt, total }
+}
+
+/// Compute one memory-table row (no activation checkpointing).
+pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Workload) -> MemRow {
+    account_ckpt(arch, opt, dtype, method, w, ActCkpt::None)
 }
 
 /// The Appendix-B closed form: ζ_hift/ζ_fpft = (k+3)/(4k) for AdamW @ fp32
@@ -363,6 +414,31 @@ mod tests {
         assert!(h.gra_streamed <= h.gra, "HiFT streamed bounded by the group");
         assert!(h.gra_streamed <= f.gra_streamed, "group's largest ≤ model's largest");
         assert!(h.gra_streamed > 0.0);
+    }
+
+    #[test]
+    fn act_ckpt_shrinks_residual_and_is_monotone() {
+        let a = by_name("llama-7b").unwrap();
+        let w = Workload { batch: 6, seq: 512 };
+        let hift = Method::Hift { m: 1 };
+        let none = account(&a, OptimKind::AdamW, Dtype::Fp32, hift, w);
+        let ek2 = account_ckpt(&a, OptimKind::AdamW, Dtype::Fp32, hift, w, ActCkpt::EveryK(2));
+        let sq = account_ckpt(&a, OptimKind::AdamW, Dtype::Fp32, hift, w, ActCkpt::Sqrt);
+        assert!(
+            none.act_ckpt > ek2.act_ckpt && ek2.act_ckpt > sq.act_ckpt,
+            "act term must be monotone: none {:.2} ≥ every_k(2) {:.2} ≥ sqrt {:.2} GiB",
+            none.act_ckpt_gib(),
+            ek2.act_ckpt_gib(),
+            sq.act_ckpt_gib()
+        );
+        assert_eq!(none.pgs, sq.pgs, "checkpointing only changes the residual term");
+        assert!(sq.total < none.total);
+        assert!(
+            none.act_ckpt / sq.act_ckpt > 4.0,
+            "recompute slashes the activation term at 7B scale: {:.2} vs {:.2} GiB",
+            none.act_ckpt_gib(),
+            sq.act_ckpt_gib()
+        );
     }
 
     #[test]

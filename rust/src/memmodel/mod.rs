@@ -5,5 +5,8 @@
 pub mod account;
 pub mod arch;
 
-pub use account::{account, appendix_b_ratio, savings_pct, Dtype, MemRow, Method, Workload, GIB, MIB};
+pub use account::{
+    account, account_ckpt, appendix_b_ratio, savings_pct, Dtype, MemRow, Method, Workload, GIB,
+    MIB,
+};
 pub use arch::{by_name, zoo, Arch, Family, PShape};

@@ -127,6 +127,93 @@ impl Optimizer for Adafactor {
     fn kind(&self) -> OptimKind {
         OptimKind::Adafactor
     }
+
+    fn export_state(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (i, slot) in self.states.iter().enumerate() {
+            if let Some(s) = slot {
+                match &s.f {
+                    Factored::Matrix { r, c, .. } => {
+                        out.push((format!("{i}.r"), Tensor::from_vec(r.clone(), &[r.len()])));
+                        out.push((format!("{i}.c"), Tensor::from_vec(c.clone(), &[c.len()])));
+                    }
+                    Factored::Vector(v) => {
+                        out.push((format!("{i}.acc"), Tensor::from_vec(v.clone(), &[v.len()])));
+                    }
+                }
+                out.push((format!("{i}.t"), Tensor::from_vec(vec![s.t as f32], &[1])));
+            }
+        }
+        out
+    }
+
+    fn import_state(
+        &mut self,
+        state: &[(String, Tensor)],
+        params: &crate::tensor::TensorSet,
+    ) -> anyhow::Result<()> {
+        #[derive(Default)]
+        struct Partial {
+            r: Option<Vec<f32>>,
+            c: Option<Vec<f32>>,
+            acc: Option<Vec<f32>>,
+            t: u64,
+        }
+        let mut parts: Vec<Partial> = (0..self.states.len()).map(|_| Partial::default()).collect();
+        for (name, t) in state {
+            let (idx, field) = super::state_key(name)?;
+            if idx >= parts.len() || idx >= params.len() {
+                anyhow::bail!("Adafactor state {name:?}: index out of range");
+            }
+            let p = &mut parts[idx];
+            match field {
+                "r" => p.r = Some(t.data.clone()),
+                "c" => p.c = Some(t.data.clone()),
+                "acc" => p.acc = Some(t.data.clone()),
+                "t" => p.t = t.data.first().copied().unwrap_or(0.0) as u64,
+                other => anyhow::bail!("unknown Adafactor state field {other:?}"),
+            }
+        }
+        for (i, p) in parts.into_iter().enumerate() {
+            let shape = &params.tensors[i].shape;
+            self.states[i] = match (p.r, p.c, p.acc) {
+                (None, None, None) => None,
+                (Some(r), Some(c), None) => {
+                    // Factored state must match the folded 2-D geometry of
+                    // the parameter it belongs to.
+                    let Some((rows, cols)) = Self::fold_2d(shape) else {
+                        anyhow::bail!("Adafactor state for tensor {i}: factored state for a vector");
+                    };
+                    if r.len() != rows || c.len() != cols {
+                        anyhow::bail!(
+                            "Adafactor state for tensor {i}: factors {}x{} vs parameter {rows}x{cols}",
+                            r.len(),
+                            c.len()
+                        );
+                    }
+                    Some(State { f: Factored::Matrix { r, c, rows, cols }, t: p.t })
+                }
+                (None, None, Some(acc)) => {
+                    let numel = params.tensors[i].numel();
+                    if Self::fold_2d(shape).is_some() || acc.len() != numel {
+                        anyhow::bail!(
+                            "Adafactor state for tensor {i}: dense accumulator of {} elements \
+                             vs parameter {numel}",
+                            acc.len()
+                        );
+                    }
+                    Some(State { f: Factored::Vector(acc), t: p.t })
+                }
+                _ => anyhow::bail!("Adafactor state for tensor {i} mixes factored and dense"),
+            };
+            if let Some(s) = &self.states[i] {
+                if s.t == 0 {
+                    anyhow::bail!("Adafactor state for tensor {i} is missing its step count");
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,45 @@ impl Optimizer for Adagrad {
     fn kind(&self) -> OptimKind {
         OptimKind::Adagrad
     }
+
+    fn export_state(&self) -> Vec<(String, Tensor)> {
+        self.states
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref()
+                    .map(|b| (format!("{i}.acc"), Tensor::from_vec(b.clone(), &[b.len()])))
+            })
+            .collect()
+    }
+
+    fn import_state(
+        &mut self,
+        state: &[(String, Tensor)],
+        params: &crate::tensor::TensorSet,
+    ) -> anyhow::Result<()> {
+        for slot in self.states.iter_mut() {
+            *slot = None;
+        }
+        for (name, t) in state {
+            let (idx, field) = super::state_key(name)?;
+            if field != "acc" {
+                anyhow::bail!("unknown Adagrad state field {field:?}");
+            }
+            if idx >= self.states.len() || idx >= params.len() {
+                anyhow::bail!("Adagrad state {name:?}: index out of range");
+            }
+            let numel = params.tensors[idx].numel();
+            if t.data.len() != numel {
+                anyhow::bail!(
+                    "Adagrad state {name:?} has {} elements, parameter has {numel}",
+                    t.data.len()
+                );
+            }
+            self.states[idx] = Some(t.data.clone());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -67,6 +67,61 @@ impl Optimizer for AdamW {
     fn kind(&self) -> OptimKind {
         OptimKind::AdamW
     }
+
+    fn export_state(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (i, slot) in self.states.iter().enumerate() {
+            if let Some(s) = slot {
+                out.push((format!("{i}.m"), Tensor::from_vec(s.m.clone(), &[s.m.len()])));
+                out.push((format!("{i}.v"), Tensor::from_vec(s.v.clone(), &[s.v.len()])));
+                // Per-tensor step count for bias correction (exact as f32
+                // up to 2^24 updates of one tensor).
+                out.push((format!("{i}.t"), Tensor::from_vec(vec![s.t as f32], &[1])));
+            }
+        }
+        out
+    }
+
+    fn import_state(
+        &mut self,
+        state: &[(String, Tensor)],
+        params: &crate::tensor::TensorSet,
+    ) -> anyhow::Result<()> {
+        for slot in self.states.iter_mut() {
+            *slot = None;
+        }
+        for (name, t) in state {
+            let (idx, field) = super::state_key(name)?;
+            if idx >= self.states.len() || idx >= params.len() {
+                anyhow::bail!("AdamW state {name:?}: index out of range");
+            }
+            let st = self.states[idx].get_or_insert_with(|| State {
+                m: Vec::new(),
+                v: Vec::new(),
+                t: 0,
+            });
+            match field {
+                "m" => st.m = t.data.clone(),
+                "v" => st.v = t.data.clone(),
+                "t" => st.t = t.data.first().copied().unwrap_or(0.0) as u64,
+                other => anyhow::bail!("unknown AdamW state field {other:?}"),
+            }
+        }
+        for (i, slot) in self.states.iter().enumerate() {
+            if let Some(s) = slot {
+                let numel = params.tensors[i].numel();
+                if s.m.len() != numel || s.v.len() != numel || s.t == 0 {
+                    anyhow::bail!(
+                        "AdamW state for tensor {i} is incomplete or size-mismatched \
+                         (m {} / v {} vs {numel} parameter elements)",
+                        s.m.len(),
+                        s.v.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -42,7 +42,9 @@ pub use apply::FusedApply;
 pub use par::PipelinedApply;
 pub use sgd::{Sgd, Sgdm};
 
-use crate::tensor::Tensor;
+use anyhow::Result;
+
+use crate::tensor::{Tensor, TensorSet};
 
 /// Which optimizer (paper Appendix C "Optimizers").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -136,6 +138,46 @@ pub trait Optimizer: Send {
     fn total_state_bytes(&self) -> usize;
 
     fn kind(&self) -> OptimKind;
+
+    /// Snapshot every lazily-allocated per-tensor state buffer as named
+    /// tensors, keyed `"{idx}.{field}"` (e.g. `"3.m"`, `"3.v"`, `"3.t"`),
+    /// so checkpoints can persist optimizer moments and a resumed run is
+    /// bit-identical to an uninterrupted one.  Stateless optimizers return
+    /// an empty list.
+    fn export_state(&self) -> Vec<(String, Tensor)> {
+        Vec::new()
+    }
+
+    /// Restore a snapshot produced by [`Optimizer::export_state`] on an
+    /// optimizer of the same kind and parameter-tensor count.  `params` is
+    /// the parameter set the optimizer will run against: every imported
+    /// buffer is validated against the corresponding tensor's geometry, so
+    /// a size-mismatched checkpoint fails here with context instead of
+    /// panicking inside the first fused update.
+    fn import_state(&mut self, state: &[(String, Tensor)], params: &TensorSet) -> Result<()> {
+        let _ = params;
+        if state.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "{:?} optimizer carries no state, but {} entries were given",
+                self.kind(),
+                state.len()
+            )
+        }
+    }
+}
+
+/// Split a `"{idx}.{field}"` optimizer-state key (the naming contract of
+/// [`Optimizer::export_state`]).
+pub(crate) fn state_key(name: &str) -> Result<(usize, &str)> {
+    let (idx, field) = name
+        .split_once('.')
+        .ok_or_else(|| anyhow::anyhow!("bad optimizer state key {name:?}"))?;
+    let idx = idx
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad optimizer state key {name:?} (index not a number)"))?;
+    Ok((idx, field))
 }
 
 /// Construct an optimizer for `n_params` parameter tensors.
@@ -359,5 +401,59 @@ mod tests {
             assert_eq!(OptimKind::parse(k.name()), Some(k));
         }
         assert_eq!(OptimKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn state_export_import_roundtrip_is_bit_identical() {
+        let g = Tensor::from_vec(vec![0.5, -1.0, 2.0, 0.25], &[2, 2]);
+        let mut pset = TensorSet::new();
+        pset.push("p0", Tensor::ones(&[2, 2]));
+        pset.push("p1", Tensor::ones(&[3]));
+        for kind in OptimKind::ALL {
+            let cfg = OptimCfg::new(kind);
+            let mut a = build(cfg, 2);
+            let mut pa = Tensor::ones(&[2, 2]);
+            for _ in 0..3 {
+                a.update(0, &mut pa, &g, 0.05);
+            }
+            // A fresh optimizer with imported state must continue exactly
+            // where the original left off.
+            let mut b = build(cfg, 2);
+            b.import_state(&a.export_state(), &pset).unwrap();
+            assert_eq!(a.total_state_bytes(), b.total_state_bytes(), "{kind:?}: state size");
+            let mut pb = pa.clone();
+            a.update(0, &mut pa, &g, 0.05);
+            b.update(0, &mut pb, &g, 0.05);
+            assert_eq!(pa.data, pb.data, "{kind:?}: resumed update must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn import_rejects_garbage_state() {
+        let mut pset = TensorSet::new();
+        pset.push("p0", Tensor::ones(&[1]));
+        let mut opt = build(OptimCfg::new(OptimKind::AdamW), 1);
+        assert!(opt.import_state(&[("nokey".to_string(), Tensor::zeros(&[1]))], &pset).is_err());
+        assert!(opt.import_state(&[("9.m".to_string(), Tensor::zeros(&[1]))], &pset).is_err());
+        assert!(
+            opt.import_state(&[("0.m".to_string(), Tensor::zeros(&[1]))], &pset).is_err(),
+            "m without v/t is incomplete"
+        );
+        // Size-mismatched moments must fail at import, not panic at the
+        // first update (a resumed run with the wrong preset's opt.bin).
+        let wrong_size = vec![
+            ("0.m".to_string(), Tensor::zeros(&[2])),
+            ("0.v".to_string(), Tensor::zeros(&[2])),
+            ("0.t".to_string(), Tensor::from_vec(vec![1.0], &[1])),
+        ];
+        assert!(opt.import_state(&wrong_size, &pset).is_err(), "2-elem moments vs 1-elem param");
+        let mut sgdm = build(OptimCfg::new(OptimKind::Sgdm), 1);
+        assert!(
+            sgdm.import_state(&[("0.u".to_string(), Tensor::zeros(&[3]))], &pset).is_err(),
+            "momentum length must match the parameter"
+        );
+        let mut sgd = build(OptimCfg::new(OptimKind::Sgd), 1);
+        assert!(sgd.import_state(&[("0.m".to_string(), Tensor::zeros(&[1]))], &pset).is_err());
+        assert!(sgd.import_state(&[], &pset).is_ok());
     }
 }

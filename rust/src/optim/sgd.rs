@@ -78,6 +78,45 @@ impl Optimizer for Sgdm {
     fn kind(&self) -> OptimKind {
         OptimKind::Sgdm
     }
+
+    fn export_state(&self) -> Vec<(String, Tensor)> {
+        self.states
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref()
+                    .map(|b| (format!("{i}.u"), Tensor::from_vec(b.clone(), &[b.len()])))
+            })
+            .collect()
+    }
+
+    fn import_state(
+        &mut self,
+        state: &[(String, Tensor)],
+        params: &crate::tensor::TensorSet,
+    ) -> anyhow::Result<()> {
+        for slot in self.states.iter_mut() {
+            *slot = None;
+        }
+        for (name, t) in state {
+            let (idx, field) = super::state_key(name)?;
+            if field != "u" {
+                anyhow::bail!("unknown SGDM state field {field:?}");
+            }
+            if idx >= self.states.len() || idx >= params.len() {
+                anyhow::bail!("SGDM state {name:?}: index out of range");
+            }
+            let numel = params.tensors[idx].numel();
+            if t.data.len() != numel {
+                anyhow::bail!(
+                    "SGDM state {name:?} has {} elements, parameter has {numel}",
+                    t.data.len()
+                );
+            }
+            self.states[idx] = Some(t.data.clone());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -207,4 +207,27 @@ impl FineTuneStrategy for Hift {
     fn optimizer_state_bytes(&self) -> usize {
         self.optimizer.as_ref().map(|o| o.total_state_bytes()).unwrap_or(0)
     }
+
+    fn fast_forward(&mut self, steps_done: u64) {
+        self.scheduler.fast_forward(steps_done);
+    }
+
+    fn sweeps_done(&self) -> u64 {
+        self.scheduler.sweep() as u64
+    }
+
+    fn export_opt_state(&self) -> Vec<(String, crate::tensor::Tensor)> {
+        self.optimizer.as_ref().map(|o| o.export_state()).unwrap_or_default()
+    }
+
+    fn import_opt_state(
+        &mut self,
+        state: &[(String, crate::tensor::Tensor)],
+        params: &TensorSet,
+    ) -> Result<()> {
+        match self.optimizer.as_mut() {
+            Some(o) => o.import_state(state, params),
+            None => anyhow::bail!("HiFT optimizer is checked out by a pipelined step"),
+        }
+    }
 }

@@ -128,4 +128,22 @@ impl FineTuneStrategy for Mezo {
     fn optimizer_state_bytes(&self) -> usize {
         self.optimizer.total_state_bytes()
     }
+
+    fn fast_forward(&mut self, steps_done: u64) {
+        // Perturbation seeds derive from the absolute step index, so a
+        // resumed run regenerates the same z sequence.
+        self.step = steps_done;
+    }
+
+    fn sweeps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn export_opt_state(&self) -> Vec<(String, Tensor)> {
+        self.optimizer.export_state()
+    }
+
+    fn import_opt_state(&mut self, state: &[(String, Tensor)], params: &TensorSet) -> Result<()> {
+        self.optimizer.import_state(state, params)
+    }
 }

@@ -29,7 +29,7 @@ use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::optim::{OffloadLedger, OptimCfg, OptimKind};
-use crate::tensor::TensorSet;
+use crate::tensor::{Tensor, TensorSet};
 
 /// Per-step outcome every strategy reports.
 #[derive(Debug, Clone, Copy)]
@@ -73,6 +73,30 @@ pub trait FineTuneStrategy {
 
     /// Total optimizer-state bytes currently held (device + host).
     fn optimizer_state_bytes(&self) -> usize;
+
+    /// Advance internal schedules (step/sweep counters, HiFT's rotating
+    /// queue) as if `steps_done` training steps had already run — the
+    /// resume half of the checkpoint workflow.  Call at most once, on a
+    /// freshly built strategy, before any [`FineTuneStrategy::step`];
+    /// optimizer moments are restored separately via
+    /// [`FineTuneStrategy::import_opt_state`].
+    fn fast_forward(&mut self, steps_done: u64);
+
+    /// Schedule index persisted in checkpoints: HiFT reports its delayed-LR
+    /// sweep counter (§3.1); per-step strategies report their step count.
+    /// Resume cross-checks this against the fast-forwarded schedule.
+    fn sweeps_done(&self) -> u64;
+
+    /// Optimizer state to persist in a checkpoint (moments etc.), keyed
+    /// `"{param idx}.{field}"`; empty for stateless optimizers.
+    fn export_opt_state(&self) -> Vec<(String, Tensor)>;
+
+    /// Restore state captured by [`FineTuneStrategy::export_opt_state`].
+    /// `params` is the parameter set the resumed run will train — imported
+    /// buffers are validated against its tensor geometry, so a
+    /// size-mismatched checkpoint fails here with context instead of
+    /// panicking inside the first fused update.
+    fn import_opt_state(&mut self, state: &[(String, Tensor)], params: &TensorSet) -> Result<()>;
 }
 
 /// Everything needed to construct any strategy by name (CLI/bench entry).

@@ -146,4 +146,24 @@ impl FineTuneStrategy for SubsetTune {
     fn optimizer_state_bytes(&self) -> usize {
         self.optimizer.total_state_bytes()
     }
+
+    fn fast_forward(&mut self, steps_done: u64) {
+        self.step = steps_done;
+    }
+
+    fn sweeps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn export_opt_state(&self) -> Vec<(String, crate::tensor::Tensor)> {
+        self.optimizer.export_state()
+    }
+
+    fn import_opt_state(
+        &mut self,
+        state: &[(String, crate::tensor::Tensor)],
+        params: &TensorSet,
+    ) -> Result<()> {
+        self.optimizer.import_state(state, params)
+    }
 }

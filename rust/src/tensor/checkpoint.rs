@@ -1,14 +1,27 @@
-//! Checkpointing: save/restore a [`TensorSet`] (+ run metadata) so long
-//! HiFT runs can resume — parameters are the only state that must survive
-//! (optimizer moments rebuild within one sweep; the paper's Algorithm 1
-//! carries no cross-sweep schedule state beyond the step counter, which we
-//! persist in the metadata).
+//! Checkpointing: save/restore a [`TensorSet`] + run metadata + optimizer
+//! state so long HiFT runs survive a crash and resume **bit-identically**.
 //!
-//! Format: `<dir>/ckpt.json` (names, shapes, step, extra metadata) +
-//! `<dir>/params.bin` (concatenated little-endian f32, manifest order) —
-//! the same layout `aot.py` emits, so a checkpoint is loadable anywhere an
-//! artifact bundle is.
+//! What must persist for exact resume: the parameters, the optimizer's
+//! per-tensor moments (`opt.bin`; AdamW's m/v and step counts, momentum
+//! buffers, Adafactor factors), and the schedule position — Algorithm 1's
+//! step counter plus the delayed-LR **sweep** index (§3.1), both in
+//! [`CkptMeta`], so a resumed run continues the sweep-aligned LR schedule
+//! instead of restarting it.
+//!
+//! Format: `<dir>/ckpt.json` (names, shapes, offsets, metadata, schema 2) +
+//! `<dir>/params.bin` (+ `<dir>/opt.bin` when optimizer state exists), all
+//! concatenated little-endian f32 in manifest order — the same layout
+//! `aot.py` emits, so a checkpoint is loadable anywhere an artifact bundle
+//! is.  Schema-1 checkpoints (params only) still load.
+//!
+//! [`load`] is strict: out-of-range offsets, overflowing or non-integer
+//! shapes, overlapping regions and duplicate tensor names are all rejected
+//! with an error — corrupt metadata must never panic or alias buffers.
+//! [`save_replace`] writes into a temp dir and swaps it into place, so a
+//! crash mid-save leaves either the previous checkpoint or none, never a
+//! torn one.
 
+use std::collections::HashSet;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -19,69 +32,221 @@ use crate::ser::{emit_pretty, parse, Value};
 /// Checkpoint metadata persisted alongside the weights.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CkptMeta {
+    /// Training steps completed (Algorithm 1's `t`).
     pub step: u64,
+    /// Delayed-LR schedule index (sweeps completed) at save time; resume
+    /// cross-checks it against the replayed scheduler so the sweep-aligned
+    /// LR schedule continues correctly (§3.1).  `None` for schema-1
+    /// checkpoints, which predate the field — resume then skips the
+    /// cross-check instead of falsely rejecting the checkpoint.
+    pub sweep: Option<u64>,
     pub strategy: String,
     pub task: String,
 }
 
-/// Write `params` + metadata to `dir` (created if missing).
-pub fn save(dir: impl AsRef<Path>, params: &TensorSet, meta: &CkptMeta) -> Result<()> {
-    let dir = dir.as_ref();
-    std::fs::create_dir_all(dir)?;
-    let mut bin = Vec::with_capacity(params.total_bytes());
-    let mut tensors = Vec::new();
+/// A loaded checkpoint.
+#[derive(Debug)]
+pub struct Ckpt {
+    pub params: TensorSet,
+    pub meta: CkptMeta,
+    /// Optimizer state tensors keyed `"{param idx}.{field}"`
+    /// (see `Optimizer::export_state`); empty when the checkpoint carries
+    /// none (schema 1, or a stateless optimizer).
+    pub opt_state: Vec<(String, Tensor)>,
+}
+
+fn tensor_section<'a>(
+    tensors: impl Iterator<Item = (&'a str, &'a Tensor)>,
+) -> (Vec<u8>, Value, usize) {
+    let mut bin = Vec::new();
+    let mut entries = Vec::new();
     let mut offset = 0usize;
-    for (name, t) in params.names.iter().zip(&params.tensors) {
+    for (name, t) in tensors {
         bin.extend_from_slice(&t.to_le_bytes());
-        tensors.push(Value::obj(vec![
-            ("name", name.as_str().into()),
+        entries.push(Value::obj(vec![
+            ("name", name.into()),
             ("shape", Value::Arr(t.shape.iter().map(|&d| d.into()).collect())),
             ("offset", offset.into()),
         ]));
         offset += t.bytes();
     }
+    (bin, Value::Arr(entries), offset)
+}
+
+/// Write `params` + metadata (+ optimizer state, if any) to `dir` (created
+/// if missing).  Prefer [`save_replace`] for periodic in-place saves.
+pub fn save(
+    dir: impl AsRef<Path>,
+    params: &TensorSet,
+    meta: &CkptMeta,
+    opt_state: &[(String, Tensor)],
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let (bin, tensors, total) =
+        tensor_section(params.names.iter().map(String::as_str).zip(&params.tensors));
     std::fs::write(dir.join("params.bin"), &bin)?;
-    let json = Value::obj(vec![
-        ("schema", 1usize.into()),
+    let mut pairs: Vec<(&str, Value)> = vec![
+        ("schema", 2usize.into()),
         ("step", (meta.step as usize).into()),
         ("strategy", meta.strategy.as_str().into()),
         ("task", meta.task.as_str().into()),
-        ("total_bytes", offset.into()),
-        ("tensors", Value::Arr(tensors)),
-    ]);
-    std::fs::write(dir.join("ckpt.json"), emit_pretty(&json))?;
+        ("total_bytes", total.into()),
+        ("tensors", tensors),
+    ];
+    if let Some(sweep) = meta.sweep {
+        pairs.push(("sweep", (sweep as usize).into()));
+    }
+    if !opt_state.is_empty() {
+        let (obin, otensors, ototal) =
+            tensor_section(opt_state.iter().map(|(n, t)| (n.as_str(), t)));
+        std::fs::write(dir.join("opt.bin"), &obin)?;
+        pairs.push(("opt_total_bytes", ototal.into()));
+        pairs.push(("opt_tensors", otensors));
+    }
+    std::fs::write(dir.join("ckpt.json"), emit_pretty(&Value::obj(pairs)))?;
     Ok(())
 }
 
-/// Load a checkpoint written by [`save`].
-pub fn load(dir: impl AsRef<Path>) -> Result<(TensorSet, CkptMeta)> {
+/// Crash-safe overwrite: write the whole checkpoint into a fresh sibling
+/// temp dir, then swap it into place with a rename.  A crash mid-save
+/// leaves either the previous checkpoint or no checkpoint — and a torn
+/// directory from a crash mid-swap is rejected by [`load`]'s validation
+/// rather than silently resuming from garbage.
+pub fn save_replace(
+    dir: impl AsRef<Path>,
+    params: &TensorSet,
+    meta: &CkptMeta,
+    opt_state: &[(String, Tensor)],
+) -> Result<()> {
+    let dir = dir.as_ref();
+    // Build the temp dir as a true *sibling* via parent + file_name — naive
+    // string-appending would turn a trailing-slash path ("runs/ckpt/") into
+    // a temp dir *inside* the target, which the swap below would destroy.
+    let Some(name) = dir.file_name() else {
+        bail!("checkpoint path {} has no final component to save into", dir.display());
+    };
+    let mut tmp_name = name.to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = dir.parent().unwrap_or_else(|| Path::new("")).join(tmp_name);
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp)?;
+    }
+    save(&tmp, params, meta, opt_state)?;
+    if dir.exists() {
+        std::fs::remove_dir_all(dir)
+            .with_context(|| format!("clearing previous checkpoint at {}", dir.display()))?;
+    }
+    std::fs::rename(&tmp, dir)
+        .with_context(|| format!("installing checkpoint at {}", dir.display()))?;
+    Ok(())
+}
+
+/// Strict non-negative-integer read (the permissive `as usize` cast would
+/// silently fold corrupt negative/fractional numbers to valid offsets).
+fn strict_usize(v: &Value, what: &str) -> Result<usize> {
+    let n = v.as_f64().with_context(|| format!("{what}: not a number"))?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 9.007_199_254_740_992e15 {
+        bail!("{what}: {n} is not a valid size/offset");
+    }
+    Ok(n as usize)
+}
+
+/// Parse + validate one serialized tensor section.  Every entry must name a
+/// unique tensor whose `[offset, offset + numel*4)` region lies inside
+/// `bin` and overlaps no other entry.
+fn read_tensors(section: &Value, bin: &[u8], what: &str) -> Result<Vec<(String, Tensor)>> {
+    let arr = section.as_arr().with_context(|| format!("{what}: tensor list missing"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    let mut regions: Vec<(usize, usize)> = Vec::with_capacity(arr.len());
+    let mut names: HashSet<String> = HashSet::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let name = t.get("name").as_str().with_context(|| format!("{what}[{i}]: name"))?;
+        if !names.insert(name.to_string()) {
+            bail!("{what}: duplicate tensor name {name:?}");
+        }
+        let shape_v =
+            t.get("shape").as_arr().with_context(|| format!("{what} {name:?}: shape"))?;
+        let mut shape = Vec::with_capacity(shape_v.len());
+        for d in shape_v {
+            shape.push(strict_usize(d, &format!("{what} {name:?}: shape entry"))?);
+        }
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .with_context(|| format!("{what} {name:?}: shape product overflows"))?;
+        let bytes = numel
+            .checked_mul(4)
+            .with_context(|| format!("{what} {name:?}: byte size overflows"))?;
+        let offset = strict_usize(t.get("offset"), &format!("{what} {name:?}: offset"))?;
+        let end = offset
+            .checked_add(bytes)
+            .with_context(|| format!("{what} {name:?}: region end overflows"))?;
+        if end > bin.len() {
+            bail!(
+                "{what} {name:?}: region {offset}..{end} exceeds the {} bytes on disk",
+                bin.len()
+            );
+        }
+        regions.push((offset, end));
+        out.push((name.to_string(), Tensor::from_le_bytes(&bin[offset..end], &shape)));
+    }
+    regions.sort_unstable();
+    for w in regions.windows(2) {
+        if w[0].1 > w[1].0 {
+            bail!(
+                "{what}: tensor regions overlap ({}..{} vs {}..{})",
+                w[0].0,
+                w[0].1,
+                w[1].0,
+                w[1].1
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// Load a checkpoint written by [`save`] / [`save_replace`].
+pub fn load(dir: impl AsRef<Path>) -> Result<Ckpt> {
     let dir = dir.as_ref();
     let meta_text = std::fs::read_to_string(dir.join("ckpt.json"))
         .with_context(|| format!("reading {}/ckpt.json", dir.display()))?;
     let v = parse(&meta_text).context("ckpt.json parse")?;
-    if v.get("schema").as_usize() != Some(1) {
-        bail!("unsupported checkpoint schema");
+    let schema = v.get("schema").as_usize();
+    if schema != Some(1) && schema != Some(2) {
+        bail!("unsupported checkpoint schema {schema:?}");
     }
-    let bin = std::fs::read(dir.join("params.bin"))?;
+    let bin = std::fs::read(dir.join("params.bin"))
+        .with_context(|| format!("reading {}/params.bin", dir.display()))?;
     if Some(bin.len()) != v.get("total_bytes").as_usize() {
         bail!("params.bin size {} != recorded {:?}", bin.len(), v.get("total_bytes"));
     }
     let mut set = TensorSet::new();
-    for t in v.get("tensors").as_arr().context("tensors")? {
-        let name = t.get("name").as_str().context("name")?;
-        let shape: Vec<usize> =
-            t.get("shape").as_arr().context("shape")?.iter().filter_map(|d| d.as_usize()).collect();
-        let offset = t.get("offset").as_usize().context("offset")?;
-        set.push(name, Tensor::from_le_bytes(&bin[offset..], &shape));
+    for (name, t) in read_tensors(v.get("tensors"), &bin, "params")? {
+        set.push(name, t);
     }
-    Ok((
-        set,
-        CkptMeta {
+    let opt_state = match v.get("opt_tensors") {
+        Value::Null => Vec::new(),
+        section => {
+            let obin = std::fs::read(dir.join("opt.bin"))
+                .with_context(|| format!("reading {}/opt.bin", dir.display()))?;
+            if Some(obin.len()) != v.get("opt_total_bytes").as_usize() {
+                bail!("opt.bin size {} != recorded {:?}", obin.len(), v.get("opt_total_bytes"));
+            }
+            read_tensors(section, &obin, "optimizer state")?
+        }
+    };
+    Ok(Ckpt {
+        params: set,
+        meta: CkptMeta {
             step: v.get("step").as_i64().unwrap_or(0) as u64,
+            // Absent in schema-1 checkpoints: None, not a fake 0.
+            sweep: v.get("sweep").as_i64().map(|s| s as u64),
             strategy: v.get("strategy").as_str().unwrap_or("").to_string(),
             task: v.get("task").as_str().unwrap_or("").to_string(),
         },
-    ))
+        opt_state,
+    })
 }
 
 #[cfg(test)]
@@ -98,23 +263,66 @@ mod tests {
         s
     }
 
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hift_ckpt_{tag}_{}", std::process::id()))
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
-        let dir = std::env::temp_dir().join(format!("hift_ckpt_{}", std::process::id()));
+        let dir = tmpdir("rt");
         let set = sample_set();
-        let meta = CkptMeta { step: 123, strategy: "hift".into(), task: "motif4".into() };
-        save(&dir, &set, &meta).unwrap();
-        let (loaded, meta2) = load(&dir).unwrap();
-        assert_eq!(meta2, meta);
-        assert_eq!(loaded.names, set.names);
-        assert_eq!(loaded.tensors, set.tensors);
+        let meta = CkptMeta {
+            step: 123,
+            sweep: Some(30),
+            strategy: "hift".into(),
+            task: "motif4".into(),
+        };
+        let opt = vec![
+            ("0.m".to_string(), Tensor::ones(&[12])),
+            ("0.v".to_string(), Tensor::zeros(&[12])),
+            ("0.t".to_string(), Tensor::from_vec(vec![4.0], &[1])),
+        ];
+        save(&dir, &set, &meta, &opt).unwrap();
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.meta, meta);
+        assert_eq!(ck.params.names, set.names);
+        assert_eq!(ck.params.tensors, set.tensors);
+        assert_eq!(ck.opt_state, opt);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_replace_overwrites_atomically() {
+        let dir = tmpdir("swap");
+        let set = sample_set();
+        save_replace(&dir, &set, &CkptMeta { step: 1, ..Default::default() }, &[]).unwrap();
+        save_replace(&dir, &set, &CkptMeta { step: 2, ..Default::default() }, &[]).unwrap();
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.meta.step, 2);
+        assert!(ck.opt_state.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_replace_tolerates_trailing_slash() {
+        // Regression: the temp dir must be a sibling even when the target
+        // path carries a trailing slash (shell tab-completion), or the swap
+        // would delete its own freshly written checkpoint.
+        let dir = tmpdir("slash");
+        let _ = std::fs::remove_dir_all(&dir);
+        let set = sample_set();
+        let with_slash = format!("{}/", dir.display());
+        save_replace(&with_slash, &set, &CkptMeta { step: 7, ..Default::default() }, &[]).unwrap();
+        assert_eq!(load(&dir).unwrap().meta.step, 7);
+        save_replace(&with_slash, &set, &CkptMeta { step: 8, ..Default::default() }, &[]).unwrap();
+        assert_eq!(load(&dir).unwrap().meta.step, 8);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn truncated_bin_is_rejected() {
-        let dir = std::env::temp_dir().join(format!("hift_ckpt_t_{}", std::process::id()));
-        save(&dir, &sample_set(), &CkptMeta::default()).unwrap();
+        let dir = tmpdir("t");
+        save(&dir, &sample_set(), &CkptMeta::default(), &[]).unwrap();
         let bin = std::fs::read(dir.join("params.bin")).unwrap();
         std::fs::write(dir.join("params.bin"), &bin[..bin.len() - 4]).unwrap();
         assert!(load(&dir).is_err());
