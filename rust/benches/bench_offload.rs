@@ -1,0 +1,10 @@
+//! `cargo bench --bench bench_offload` — the host-paging tier exhibit:
+//! synchronous vs double-buffered prefetched paging vs fully-resident HiFT
+//! stepping across group sizes m (see hift::bench::exhibits::offload).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::offload(&mut b)?;
+    eprintln!("[bench_offload] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -176,6 +176,21 @@ impl Manifest {
                 self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()))
     }
 
+    /// f32 bytes of each layer unit's parameters for `variant` (index =
+    /// unit id; adapters, unit −1, excluded) — the single source for the
+    /// paging tier's residency bounds (bench exhibit and tests derive
+    /// "group + walk unit" from this, so they cannot desynchronize).
+    pub fn unit_param_bytes(&self, variant: &str) -> Result<Vec<u64>> {
+        let vinfo = self.variant(variant)?;
+        let mut out = vec![0u64; self.n_units];
+        for p in &vinfo.params {
+            if p.unit >= 0 {
+                out[p.unit as usize] += p.size as u64 * 4;
+            }
+        }
+        Ok(out)
+    }
+
     pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
         self.variants
             .get(name)

@@ -58,7 +58,9 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::tensor::paged::OffloadCounters;
 use crate::tensor::{Tensor, TensorSet};
+pub use crate::tensor::paged::{Compression, OffloadCfg};
 pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 pub use native::{NativeBackend, PRESET_NAMES};
 
@@ -68,7 +70,7 @@ pub use native::{NativeBackend, PRESET_NAMES};
 /// residual streams** (one `[B·T, D]` tensor per checkpointed layer) instead
 /// of every layer's internal activation cache; the backward walk rebuilds
 /// each layer's internals from its boundary just before that layer's
-/// gradients are emitted ([`model::recompute_layer`]).  Recompute replays
+/// gradients are emitted (`model::recompute_layer`).  Recompute replays
 /// the exact forward arithmetic (fixed-order reductions, no RNG), so
 /// gradients — and therefore whole training runs — are bit-identical to the
 /// cache-everything path.
@@ -314,6 +316,34 @@ pub struct RuntimeStats {
     /// Estimated flops spent on those recomputations (dense matmuls +
     /// attention forms; adapter extras excluded).
     pub recompute_flops: u64,
+    /// Host-paging page-in events (tensors admitted back into the arena).
+    /// All `offload_*`/`prefetch_*` fields are zero when `--offload` is
+    /// off; they mirror the paging tier's [`crate::optim::OffloadLedger`].
+    pub offload_page_ins: u64,
+    /// Host-paging page-out events (tensors evicted to the host pool).
+    pub offload_page_outs: u64,
+    /// Bytes paged host → device (full f32 arena size of admitted pages).
+    pub offload_h2d_bytes: u64,
+    /// Bytes paged device → host.
+    pub offload_d2h_bytes: u64,
+    /// Peak bytes of paged parameter *masters* resident in the arena at
+    /// once — the **enforced** residency of the paper's Table 5 claim
+    /// (active group + the transient walk unit), measured from real
+    /// evictions/admissions rather than modeled.  Reset per run.
+    pub peak_param_resident_bytes: u64,
+    /// Peak bytes posted to the prefetch double buffer (in-flight or
+    /// landed-but-unadmitted page-ins).  Reset per run.
+    pub peak_prefetch_buffer_bytes: u64,
+    /// Current / peak host-tier footprint of evicted pages (compressed
+    /// bytes — f16 mode halves this).  `host_pool_bytes` is a gauge.
+    pub host_pool_bytes: u64,
+    pub peak_host_pool_bytes: u64,
+    /// Page-ins served instantly because the prefetch had already landed.
+    pub prefetch_hits: u64,
+    /// Page-ins that blocked the walk (every sync-mode page-in is one).
+    pub prefetch_misses: u64,
+    /// Nanoseconds the walk spent stalled waiting for page-ins.
+    pub prefetch_stall_nanos: u64,
 }
 
 impl RuntimeStats {
@@ -335,7 +365,49 @@ impl RuntimeStats {
             peak_act_resident_bytes: self.peak_act_resident_bytes,
             recompute_layers: self.recompute_layers - start.recompute_layers,
             recompute_flops: self.recompute_flops - start.recompute_flops,
+            offload_page_ins: self.offload_page_ins - start.offload_page_ins,
+            offload_page_outs: self.offload_page_outs - start.offload_page_outs,
+            offload_h2d_bytes: self.offload_h2d_bytes - start.offload_h2d_bytes,
+            offload_d2h_bytes: self.offload_d2h_bytes - start.offload_d2h_bytes,
+            peak_param_resident_bytes: self.peak_param_resident_bytes,
+            peak_prefetch_buffer_bytes: self.peak_prefetch_buffer_bytes,
+            host_pool_bytes: self.host_pool_bytes,
+            peak_host_pool_bytes: self.peak_host_pool_bytes,
+            prefetch_hits: self.prefetch_hits - start.prefetch_hits,
+            prefetch_misses: self.prefetch_misses - start.prefetch_misses,
+            prefetch_stall_nanos: self.prefetch_stall_nanos - start.prefetch_stall_nanos,
         }
+    }
+
+    /// Fold a pager counter delta (before → after one execution or flush)
+    /// into the cumulative stats.  Counts are additive deltas; gauges take
+    /// the pager's current values.  Peaks fold only when `include_peaks` —
+    /// executions fold them, while flush/repage (checkpoint bookkeeping
+    /// that deliberately materializes the whole arena) do not, so the
+    /// reported peak stays the *training-walk* residency.  (The pager's
+    /// own peaks are reset with [`ExecBackend::reset_run_peaks`].)
+    pub(crate) fn apply_offload(
+        &mut self,
+        before: &OffloadCounters,
+        after: &OffloadCounters,
+        include_peaks: bool,
+    ) {
+        self.offload_page_ins += after.page_ins.saturating_sub(before.page_ins);
+        self.offload_page_outs += after.page_outs.saturating_sub(before.page_outs);
+        self.offload_h2d_bytes += after.h2d_bytes.saturating_sub(before.h2d_bytes);
+        self.offload_d2h_bytes += after.d2h_bytes.saturating_sub(before.d2h_bytes);
+        self.prefetch_hits += after.prefetch_hits.saturating_sub(before.prefetch_hits);
+        self.prefetch_misses += after.prefetch_misses.saturating_sub(before.prefetch_misses);
+        self.prefetch_stall_nanos +=
+            after.stall_nanos.saturating_sub(before.stall_nanos);
+        if include_peaks {
+            self.peak_param_resident_bytes =
+                self.peak_param_resident_bytes.max(after.peak_param_resident_bytes);
+            self.peak_prefetch_buffer_bytes =
+                self.peak_prefetch_buffer_bytes.max(after.peak_prefetch_buffer_bytes);
+        }
+        self.host_pool_bytes = after.host_bytes;
+        self.peak_host_pool_bytes = self.peak_host_pool_bytes.max(after.peak_host_bytes);
     }
 
     /// Fold one residency observation into the peak.
@@ -477,6 +549,53 @@ pub trait ExecBackend {
         ActCkpt::None
     }
 
+    /// Configure the host-memory paging tier (`--offload host`): inactive
+    /// HiFT groups' parameter masters physically leave the arena into a
+    /// host pool and return on demand during the walk (see
+    /// [`crate::tensor::paged`]).  Backends without a paging tier (PJRT —
+    /// device residency is the runtime's business; test doubles) accept
+    /// only a disabled config.
+    fn set_offload(&mut self, cfg: OffloadCfg) -> Result<()> {
+        if cfg.enabled {
+            bail!("backend {:?} has no host paging tier (offload {})", self.name(), cfg.name());
+        }
+        Ok(())
+    }
+
+    /// The active offload configuration.
+    fn offload(&self) -> OffloadCfg {
+        OffloadCfg::default()
+    }
+
+    /// Page every evicted master back into `params` (checkpoint saves and
+    /// end-of-run hand-off need the full set materialized; a no-op when
+    /// offload is off or the pager is attached to a different set).  The
+    /// materialization spike is bookkeeping, not training residency, and is
+    /// excluded from the reported peaks.
+    fn flush_offload(&mut self, _params: &mut TensorSet) -> Result<()> {
+        Ok(())
+    }
+
+    /// Undo a [`ExecBackend::flush_offload`]: page the managed masters back
+    /// out to the host and reset the pager's peak gauges to the re-evicted
+    /// level, so a mid-run checkpoint save neither leaves the whole model
+    /// arena-resident nor pollutes the measured training peaks.  No-op
+    /// without a paging tier.
+    fn repage_offload(&mut self, _params: &mut TensorSet) -> Result<()> {
+        Ok(())
+    }
+
+    /// Stage the scheduler's *next* group in the paging tier: async
+    /// page-ins are posted now (their decompression overlaps the current
+    /// step's compute) and the staged units survive the end-of-run
+    /// eviction, so the next step starts with its active group already
+    /// arena-resident — cross-step double-buffering, at the residency cost
+    /// of one extra group ("one group + one prefetch buffer").  Replaces
+    /// any previous staging set; coalesced with the walk's one-unit-ahead
+    /// prefetch; no-op without a paging tier, in synchronous mode, or
+    /// before the pager first attaches.
+    fn prefetch_units(&mut self, _units: &[usize]) {}
+
     /// Reset per-run peak statistics (`peak_grad_resident_bytes`).  The
     /// trainer calls this at run start so each [`crate::coordinator::trainer::RunRecord`]
     /// reports its own peak rather than the lifetime maximum of a shared
@@ -527,7 +646,9 @@ pub fn build_backend(
 
 /// [`build_backend`] from the environment: `HIFT_ARTIFACTS` (PJRT),
 /// `HIFT_PRESET` (native geometry, default `tiny`), `HIFT_SEED`,
-/// `HIFT_ACT_CKPT` (activation-checkpoint policy: `none|sqrt|every_k(K)`).
+/// `HIFT_ACT_CKPT` (activation-checkpoint policy: `none|sqrt|every_k(K)`),
+/// `HIFT_OFFLOAD`/`HIFT_OFFLOAD_COMPRESS`/`HIFT_PREFETCH` (host paging
+/// tier: `host|none`, `f16|none`, `1|0`).
 pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     // Empty values mean "unset" — `HIFT_ARTIFACTS= hift …` must fall back
     // to the native backend, not request PJRT with an empty dir.
@@ -537,6 +658,10 @@ pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     let mut be = build_backend(artifacts.as_deref(), preset.as_deref(), seed)?;
     if let Some(p) = std::env::var("HIFT_ACT_CKPT").ok().filter(|s| !s.is_empty()) {
         be.set_act_ckpt(ActCkpt::parse(&p)?)?;
+    }
+    let offload = OffloadCfg::from_env()?;
+    if offload.enabled {
+        be.set_offload(offload)?;
     }
     Ok(be)
 }

@@ -32,6 +32,7 @@ use anyhow::{bail, Context, Result};
 use super::manifest::ModelCfg;
 use super::par;
 use super::{ActCkpt, Batch};
+use crate::tensor::paged::UnitPager;
 use crate::tensor::{Tensor, TensorSet};
 
 /// LayerNorm epsilon (matches `layernorm_ref` in the Python compile path).
@@ -246,7 +247,7 @@ pub struct FwdState {
     pub loss: f32,
     pub ncorrect: f32,
     /// Per-layer internal caches; `None` under a recompute policy (rebuilt
-    /// from `boundaries` by [`recompute_layer`] during backward).
+    /// from `boundaries` by `recompute_layer` during backward).
     layers: Vec<Option<LayerState>>,
     /// Stored boundary residual streams (a layer's input `x`, `[BT, D]`);
     /// `Some` at checkpoint layers under a recompute policy.  Policy
@@ -334,7 +335,7 @@ fn check_variant(variant: &str) -> Result<()> {
 
 /// One transformer block's forward pass from its input residual stream.
 /// Shared by the cache-building forward, the checkpoint-only forward and
-/// the backward-time recompute ([`recompute_layer`]), so all three perform
+/// the backward-time recompute (`recompute_layer`), so all three perform
 /// the exact same arithmetic — the recompute path is bit-identical by
 /// construction.  Returns the layer's activation cache and its output
 /// residual stream.
@@ -515,30 +516,37 @@ fn layer_flops(cfg: &ModelCfg, bsz: usize, t_: usize) -> u64 {
     (2 * bt * d * (4 * d + 2 * f) + 4 * bt * t_ * d) as u64
 }
 
-/// Run the model forward with full activation caching ([`ActCkpt::None`]);
-/// see [`forward_ckpt`] for the checkpointing variant.
+/// Run the model forward with full activation caching ([`ActCkpt::None`])
+/// and no paging; see [`forward_ckpt`] for the checkpointing/paged variant.
 pub fn forward(
     cfg: &ModelCfg,
     variant: &str,
-    params: &TensorSet,
+    params: &mut TensorSet,
     batch: &Batch,
 ) -> Result<FwdState> {
-    forward_ckpt(cfg, variant, params, batch, ActCkpt::None)
+    forward_ckpt(cfg, variant, params, batch, ActCkpt::None, None)
 }
 
 /// Run the model forward under an activation-checkpointing `policy`;
 /// returns loss, masked #correct and whatever caches the policy retains for
 /// backward: every layer's internals under [`ActCkpt::None`], only
 /// layer-boundary residual streams under a recompute policy (backward then
-/// rebuilds each layer's internals via [`recompute_layer`]).  The loss and
+/// rebuilds each layer's internals via `recompute_layer`).  The loss and
 /// all downstream gradients are bit-identical across policies — the same
-/// [`layer_fwd`] runs either way.
+/// `layer_fwd` runs either way.
+///
+/// With a `pager` (the `--offload host` tier), the walk admits each layer
+/// unit's parameters just before computing it, prefetches the next unit
+/// behind the compute, and evicts units it has passed — only pinned units
+/// (the run's trainable group) stay resident.  Lossless paging restores the
+/// exact bits, so results stay bit-identical to the resident walk.
 pub fn forward_ckpt(
     cfg: &ModelCfg,
     variant: &str,
-    params: &TensorSet,
+    params: &mut TensorSet,
     batch: &Batch,
     policy: ActCkpt,
+    mut pager: Option<&mut UnitPager>,
 ) -> Result<FwdState> {
     check_variant(variant)?;
     batch.validate()?;
@@ -562,6 +570,10 @@ pub fn forward_ckpt(
     let bs = bsz * s;
 
     // --- embeddings ---------------------------------------------------
+    if let Some(pg) = pager.as_deref_mut() {
+        pg.ensure_unit(params, 0)?;
+        pg.prefetch_unit(1);
+    }
     let tok_emb = get(params, "tok_emb")?;
     let pos_emb = get(params, "pos_emb")?;
     let mut x0 = vec![0.0f32; bt * d];
@@ -585,14 +597,27 @@ pub fn forward_ckpt(
         }
     }
 
+    if let Some(pg) = pager.as_deref_mut() {
+        pg.release_unit(params, 0)?;
+    }
+
     // --- transformer blocks -------------------------------------------
     let seg = policy.seg_len(cfg.n_layers);
     let mut layers: Vec<Option<LayerState>> = Vec::with_capacity(cfg.n_layers);
     let mut boundaries: Vec<Option<Vec<f32>>> = Vec::with_capacity(cfg.n_layers);
     let mut x = x0;
     for i in 0..cfg.n_layers {
+        if let Some(pg) = pager.as_deref_mut() {
+            pg.ensure_unit(params, i + 1)?;
+            // Double-buffer the next unit's page-in behind this layer's
+            // compute (the head unit follows the last block).
+            pg.prefetch_unit(if i + 2 <= cfg.n_layers { i + 2 } else { cfg.n_layers + 1 });
+        }
         let x_in = x;
         let (state, x_out) = layer_fwd(cfg, variant, params, i, x_in, bsz, t_)?;
+        if let Some(pg) = pager.as_deref_mut() {
+            pg.release_unit(params, i + 1)?;
+        }
         match seg {
             None => {
                 layers.push(Some(state));
@@ -610,6 +635,11 @@ pub fn forward_ckpt(
     let x_fin = x;
 
     // --- head + masked loss -------------------------------------------
+    // The head unit stays resident after the forward: a grad run's backward
+    // reads it first (the caller's end-of-run sweep evicts it otherwise).
+    if let Some(pg) = pager.as_deref_mut() {
+        pg.ensure_unit(params, cfg.n_layers + 1)?;
+    }
     let (hf, lnf) =
         ln_fwd(&x_fin, &get(params, "ln_f.scale")?.data, &get(params, "ln_f.bias")?.data, d);
     let hf_s = if p_ == 0 {
@@ -703,7 +733,7 @@ pub fn backward(
         grads.insert(name.to_string(), g);
         Ok(())
     };
-    backward_streamed(st, cfg, variant, params, batch, spec, &mut emit)?;
+    backward_streamed(st, cfg, variant, params, batch, spec, &mut emit, None)?;
     Ok(grads)
 }
 
@@ -721,7 +751,7 @@ pub struct BwdStats {
 }
 
 /// Rebuild layer `i`'s activation cache from the nearest stored boundary at
-/// or below it, chaining the residual stream forward through [`layer_fwd`]
+/// or below it, chaining the residual stream forward through `layer_fwd`
 /// — the exact computation the original forward ran, so every recomputed
 /// buffer (and every gradient formed from it) is bit-identical to the
 /// cache-everything path.  Intermediate boundaries are parked in `scratch`,
@@ -736,13 +766,14 @@ fn recompute_layer(
     st: &FwdState,
     cfg: &ModelCfg,
     variant: &str,
-    params: &TensorSet,
+    params: &mut TensorSet,
     bsz: usize,
     t_: usize,
     i: usize,
     scratch: &mut [Option<Vec<f32>>],
     scratch_bytes: &mut u64,
     stats: &mut BwdStats,
+    mut pager: Option<&mut UnitPager>,
 ) -> Result<LayerState> {
     // Nearest available boundary at or below layer i.
     let mut c = i;
@@ -755,11 +786,21 @@ fn recompute_layer(
     // Chain the residual stream from the boundary up to layer i, parking
     // each intermediate layer input in `scratch` for the walk's descent.
     for j in c..i {
+        // Paged walk: the chained layers' parameters return transiently
+        // (their gradients have not been emitted, so re-reading them is
+        // within the streamed contract — and lossless paging restores the
+        // exact bits the original forward read).
+        if let Some(pg) = pager.as_deref_mut() {
+            pg.ensure_unit(params, j + 1)?;
+        }
         let (x_j, from_scratch) = match scratch[j].take() {
             Some(b) => (b, true),
             None => (st.boundaries[j].as_ref().unwrap().clone(), false),
         };
         let (stj, x_out) = layer_fwd(cfg, variant, params, j, x_j, bsz, t_)?;
+        if let Some(pg) = pager.as_deref_mut() {
+            pg.release_unit(params, j + 1)?;
+        }
         stats.recompute_layers += 1;
         stats.recompute_flops += layer_flops(cfg, bsz, t_);
         let LayerState { x_in, .. } = stj;
@@ -810,9 +851,10 @@ fn recompute_layer(
 ///
 /// When `st` came from a checkpointing [`forward_ckpt`], each layer's
 /// internal activations are rebuilt from its boundary residual stream by
-/// [`recompute_layer`] just before that layer's gradients are emitted; the
+/// `recompute_layer` just before that layer's gradients are emitted; the
 /// returned [`BwdStats`] reports the recompute work and scratch residency
 /// (all zero on the fully-cached path).
+#[allow(clippy::too_many_arguments)]
 pub fn backward_streamed(
     st: &FwdState,
     cfg: &ModelCfg,
@@ -821,6 +863,7 @@ pub fn backward_streamed(
     batch: &Batch,
     spec: &GradSpec,
     emit: &mut EmitFn<'_>,
+    mut pager: Option<&mut UnitPager>,
 ) -> Result<BwdStats> {
     check_variant(variant)?;
     let (bsz, s) = (batch.b, batch.s);
@@ -886,6 +929,11 @@ pub fn backward_streamed(
         emit("head.b", Tensor::from_vec(colsum(&dlogits, bs, v_), &[v_]), params)?;
     }
     drop(dlogits);
+    if let Some(pg) = pager.as_deref_mut() {
+        // The head's reads and emits are done; a pinned head (its grads
+        // were emitted and updated in place) survives this as a no-op.
+        pg.release_unit(params, head_unit)?;
+    }
 
     // --- blocks, top-down ----------------------------------------------
     let mut bstats = BwdStats::default();
@@ -895,6 +943,12 @@ pub fn backward_streamed(
         if i + 1 < spec.min_unit {
             // Truncated backprop: nothing below this unit was requested.
             return Ok(bstats);
+        }
+        if let Some(pg) = pager.as_deref_mut() {
+            pg.ensure_unit(params, i + 1)?;
+            if i > 0 {
+                pg.prefetch_unit(i); // the next unit the descent will touch
+            }
         }
         let ls_owned;
         let ls: &LayerState = match st.layers[i].as_ref() {
@@ -911,6 +965,7 @@ pub fn backward_streamed(
                     &mut scratch,
                     &mut scratch_bytes,
                     &mut bstats,
+                    pager.as_deref_mut(),
                 )?;
                 &ls_owned
             }
@@ -1177,6 +1232,9 @@ pub fn backward_streamed(
 
         dx = dx_mid;
         axpy(&mut dx, 1.0, &dx_ln1);
+        if let Some(pg) = pager.as_deref_mut() {
+            pg.release_unit(params, i + 1)?;
+        }
     }
 
     // --- embeddings (unit 0) + prefix adapter ---------------------------
@@ -1299,10 +1357,10 @@ mod tests {
     #[test]
     fn forward_is_deterministic_and_finite() {
         let cfg = tiny_cfg();
-        let params = tiny_params(&cfg);
+        let mut params = tiny_params(&cfg);
         let batch = tiny_batch(&cfg, 3);
-        let a = forward(&cfg, "base", &params, &batch).unwrap();
-        let b = forward(&cfg, "base", &params, &batch).unwrap();
+        let a = forward(&cfg, "base", &mut params, &batch).unwrap();
+        let b = forward(&cfg, "base", &mut params, &batch).unwrap();
         assert!(a.loss.is_finite() && a.loss > 0.0);
         assert_eq!(a.loss, b.loss);
         // random targets on a random net ⇒ near-uniform loss
@@ -1312,9 +1370,9 @@ mod tests {
     #[test]
     fn softmax_rows_sum_to_one() {
         let cfg = tiny_cfg();
-        let params = tiny_params(&cfg);
+        let mut params = tiny_params(&cfg);
         let batch = tiny_batch(&cfg, 5);
-        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        let st = forward(&cfg, "base", &mut params, &batch).unwrap();
         for row in st.probs_out.chunks(cfg.vocab) {
             let sum: f32 = row.iter().sum();
             assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
@@ -1327,7 +1385,7 @@ mod tests {
         let n_units = cfg.n_units();
         let mut params = tiny_params(&cfg);
         let batch = tiny_batch(&cfg, 7);
-        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        let st = forward(&cfg, "base", &mut params, &batch).unwrap();
         let full =
             backward(&st, &cfg, "base", &mut params, &batch, &GradSpec::all(n_units, false))
                 .unwrap();
@@ -1365,10 +1423,10 @@ mod tests {
         let mut params = tiny_params(&cfg);
         let batch = tiny_batch(&cfg, 13);
         let spec = GradSpec::all(n_units, false);
-        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        let st = forward(&cfg, "base", &mut params, &batch).unwrap();
         let full = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
         for policy in [ActCkpt::EveryK(1), ActCkpt::EveryK(2), ActCkpt::Sqrt] {
-            let stc = forward_ckpt(&cfg, "base", &params, &batch, policy).unwrap();
+            let stc = forward_ckpt(&cfg, "base", &mut params, &batch, policy, None).unwrap();
             assert_eq!(st.loss, stc.loss, "{policy:?}: loss must be bit-identical");
             assert!(
                 stc.act_resident_bytes() < st.act_resident_bytes(),
@@ -1391,7 +1449,7 @@ mod tests {
         let mut params = tiny_params(&cfg);
         let mut batch = tiny_batch(&cfg, 11);
         batch.weights.iter_mut().for_each(|w| *w = 0.0);
-        let st = forward(&cfg, "base", &params, &batch).unwrap();
+        let st = forward(&cfg, "base", &mut params, &batch).unwrap();
         assert_eq!(st.loss, 0.0);
         let spec = GradSpec::all(cfg.n_units(), false);
         let grads = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();

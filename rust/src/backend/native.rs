@@ -20,6 +20,7 @@ use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 use super::model;
 use super::{unit_artifact, ActCkpt, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
 use crate::rng::Pcg32;
+use crate::tensor::paged::{OffloadCfg, UnitPager};
 use crate::tensor::{Tensor, TensorSet};
 
 /// Model geometry presets, mirroring `PRESETS` in `python/compile/model.py`.
@@ -243,6 +244,10 @@ pub struct NativeBackend {
     /// Activation-checkpointing policy for grad-producing runs (see
     /// [`ActCkpt`]): recompute-on-backward, bit-identical results.
     act_ckpt: ActCkpt,
+    /// Host-memory paging tier (`--offload host`): inactive units' masters
+    /// live in a host pool and return on demand during the walk.
+    pager: Option<UnitPager>,
+    offload: OffloadCfg,
     pub stats: RuntimeStats,
 }
 
@@ -260,6 +265,8 @@ impl NativeBackend {
             seed,
             uploaded: HashMap::new(),
             act_ckpt: ActCkpt::None,
+            pager: None,
+            offload: OffloadCfg::default(),
             stats: RuntimeStats::default(),
         })
     }
@@ -297,8 +304,18 @@ impl NativeBackend {
             if self.uploaded.get(name) == Some(&key) {
                 self.stats.cache_hits += 1;
             } else {
+                // An evicted master (host paging) still has a well-defined
+                // upload size: the full f32 bytes the pager recorded at
+                // attach.  Lossless paging never bumps the version, so the
+                // device working copy stays cached across evictions; the
+                // lossy f16 round trip does bump it, forcing a re-upload.
+                let bytes = if params.tensors[i].numel() == 0 {
+                    self.pager.as_ref().and_then(|p| p.full_bytes_of(i)).unwrap_or(0)
+                } else {
+                    params.tensors[i].bytes()
+                };
                 self.uploaded.insert(name.clone(), key);
-                self.stats.h2d_bytes += params.tensors[i].bytes() as u64;
+                self.stats.h2d_bytes += bytes as u64;
                 self.stats.cache_misses += 1;
             }
         }
@@ -317,6 +334,27 @@ impl NativeBackend {
         slots: &HashMap<String, usize>,
         sink: &mut dyn GradSink,
     ) -> Result<StreamOutput> {
+        // Host paging: attach the pager to this parameter set (a fresh
+        // lineage triggers the initial placement — every managed master
+        // moves to the host pool) and pin the run's trainable units, whose
+        // tensors fused sinks update in place mid-walk.
+        let offload_before = match self.pager.as_mut() {
+            Some(pg) => {
+                if !pg.is_attached_to(params) {
+                    // Only a fresh lineage pays for building the unit map
+                    // (attach itself is a no-op when already attached).
+                    pg.attach(params, unit_param_map(&self.manifest, variant)?)?;
+                }
+                pg.clear_pins();
+                for (u, &want) in gspec.units.iter().enumerate() {
+                    if want {
+                        pg.pin_unit(u);
+                    }
+                }
+                Some(pg.counters())
+            }
+            None => None,
+        };
         self.account_uploads(params);
         self.stats.h2d_bytes += batch.h2d_bytes() as u64;
 
@@ -330,11 +368,12 @@ impl NativeBackend {
             self.act_ckpt
         };
         let t0 = std::time::Instant::now();
-        let fwd = model::forward_ckpt(&cfg, variant, params, batch, policy)?;
+        let fwd = model::forward_ckpt(&cfg, variant, params, batch, policy, self.pager.as_mut())?;
         let mut act_peak = fwd.act_resident_bytes();
         if !slots.is_empty() {
             let bw = {
                 let stats = &mut self.stats;
+                let pager = self.pager.as_mut();
                 let mut emitted = 0usize;
                 let mut emit = |name: &str, g: Tensor, ps: &mut TensorSet| -> Result<()> {
                     let slot = *slots
@@ -348,8 +387,9 @@ impl NativeBackend {
                     emitted += 1;
                     Ok(())
                 };
-                let bw =
-                    model::backward_streamed(&fwd, &cfg, variant, params, batch, gspec, &mut emit)?;
+                let bw = model::backward_streamed(
+                    &fwd, &cfg, variant, params, batch, gspec, &mut emit, pager,
+                )?;
                 if emitted != slots.len() {
                     bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
                 }
@@ -361,11 +401,43 @@ impl NativeBackend {
         }
         self.stats.note_act_resident(act_peak);
         sink.finish(params)?;
+        // Page the just-finished group (and anything else resident) back
+        // out — async under prefetch, so the store overlaps whatever the
+        // caller does next — then fold this run's transfer accounting into
+        // the backend stats.
+        if let (Some(pg), Some(before)) = (self.pager.as_mut(), offload_before.as_ref()) {
+            pg.end_run(params)?;
+            let after = pg.counters();
+            self.stats.apply_offload(before, &after, true);
+        }
         let exec_time = t0.elapsed();
         self.stats.executions += 1;
         self.stats.exec_secs += exec_time.as_secs_f64();
         Ok(StreamOutput { loss: fwd.loss, ncorrect: fwd.ncorrect, exec_time })
     }
+
+    /// Pool-side transfer-event counts `(stores, fetches)` of the paging
+    /// tier, `None` when offload is off.  Lets tests regression-check that
+    /// the accounting ledger agrees with what the pool actually did.
+    pub fn offload_pool_events(&mut self) -> Result<Option<(u64, u64)>> {
+        match self.pager.as_mut() {
+            Some(pg) => Ok(Some(pg.pool_events()?)),
+            None => Ok(None),
+        }
+    }
+
+    /// The paging tier's cumulative counters (None when offload is off).
+    pub fn offload_counters(&self) -> Option<crate::tensor::paged::OffloadCounters> {
+        self.pager.as_ref().map(|p| p.counters())
+    }
+}
+
+/// Unit → parameter-index map for `variant` (managed tensors only: every
+/// base parameter belongs to exactly one unit; adapters, unit −1, stay
+/// always-resident).
+fn unit_param_map(manifest: &Manifest, variant: &str) -> Result<Vec<Vec<usize>>> {
+    let vinfo = manifest.variant(variant)?;
+    Ok((0..manifest.n_units).map(|u| vinfo.unit_indices(u)).collect())
 }
 
 impl ExecBackend for NativeBackend {
@@ -495,9 +567,80 @@ impl ExecBackend for NativeBackend {
         self.act_ckpt
     }
 
+    fn set_offload(&mut self, cfg: OffloadCfg) -> Result<()> {
+        // Replacing an attached pager discards its pool.  While evicted
+        // masters live there the pool is their *only* copy, so switching
+        // modes then would silently destroy parameters — refuse instead.
+        // The trainer flushes at run end, which makes run boundaries safe
+        // switch points (the bench harness relies on this).
+        if let Some(pg) = &self.pager {
+            if pg.holds_pages() {
+                bail!(
+                    "cannot reconfigure offload ({} -> {}): the host pool still holds \
+                     evicted parameter masters; flush_offload the active set first",
+                    self.offload.name(),
+                    cfg.name()
+                );
+            }
+        }
+        self.offload = cfg;
+        self.pager = if cfg.enabled { Some(UnitPager::new(cfg)) } else { None };
+        Ok(())
+    }
+
+    fn offload(&self) -> OffloadCfg {
+        self.offload
+    }
+
+    fn flush_offload(&mut self, params: &mut TensorSet) -> Result<()> {
+        if let Some(pg) = self.pager.as_mut() {
+            if pg.is_attached_to(params) {
+                let before = pg.counters();
+                pg.flush(params)?;
+                let after = pg.counters();
+                // Materialization for external readers is bookkeeping, not
+                // training residency: count the transfers, skip the peaks.
+                self.stats.apply_offload(&before, &after, false);
+            }
+        }
+        Ok(())
+    }
+
+    fn repage_offload(&mut self, params: &mut TensorSet) -> Result<()> {
+        if let Some(pg) = self.pager.as_mut() {
+            if pg.is_attached_to(params) {
+                let before = pg.counters();
+                pg.end_run(params)?;
+                let after = pg.counters();
+                self.stats.apply_offload(&before, &after, false);
+                // The flush/save window is over; peaks resume from the
+                // re-evicted (≈ empty) arena, not the full-model spike.
+                pg.reset_peaks();
+            }
+        }
+        Ok(())
+    }
+
+    fn prefetch_units(&mut self, units: &[usize]) {
+        if let Some(pg) = self.pager.as_mut() {
+            // A new staging set replaces the previous one: the old "next
+            // group" is the caller's active group now, pinned by its run.
+            pg.clear_staged();
+            for &u in units {
+                pg.stage_unit(u);
+            }
+        }
+    }
+
     fn reset_run_peaks(&mut self) {
         self.stats.peak_grad_resident_bytes = 0;
         self.stats.peak_act_resident_bytes = 0;
+        self.stats.peak_param_resident_bytes = 0;
+        self.stats.peak_prefetch_buffer_bytes = 0;
+        self.stats.peak_host_pool_bytes = 0;
+        if let Some(pg) = self.pager.as_mut() {
+            pg.reset_peaks();
+        }
     }
 
     fn load_params(&self, variant: &str) -> Result<TensorSet> {

@@ -8,9 +8,12 @@
 use anyhow::Result;
 
 use super::{acc_cell, default_spec, print_table, Bench};
-use crate::backend::{ActCkpt, ExecBackend};
+use crate::backend::{ActCkpt, Compression, ExecBackend, OffloadCfg};
 use crate::coordinator::strategy::UpdateStrategy;
-use crate::memmodel::{account, account_ckpt, by_name, Dtype, Method, Workload, GIB, MIB};
+use crate::memmodel::{
+    account, account_ckpt, by_name, paged_host_bound, paged_param_bound, Dtype, Method, Workload,
+    GIB, MIB,
+};
 use crate::optim::OptimKind;
 use crate::ser::Value;
 
@@ -640,6 +643,155 @@ pub fn act_ckpt(b: &mut Bench) -> Result<()> {
         &rows,
     );
     b.save("act_ckpt", &Value::Arr(json))
+}
+
+/// Host-paging exhibit (`hift bench offload`): measured HiFT stepping under
+/// the real paging tier — resident vs synchronous paging vs double-buffered
+/// prefetch (and the f16 lossy host store) across group sizes m — plus the
+/// enforced residency peaks and, at paper scale, the analytic paged bounds.
+/// Lossless paged runs must reproduce the resident loss bit-for-bit;
+/// prefetch should beat synchronous paging wherever transfers are material
+/// (m ≥ 2 makes the per-step paged volume big enough to matter).
+pub fn offload(b: &mut Bench) -> Result<()> {
+    let steps = b.steps(48);
+    let n_units = b.rt.manifest().n_units;
+    // Native-preset structural bound from the manifest's real unit sizes
+    // (the same source tests/offload.rs uses, so they cannot drift).
+    let unit_bytes = b.rt.manifest().unit_param_bytes("base")?;
+    let max_unit = unit_bytes.iter().copied().max().unwrap_or(0);
+    let group_bytes = |m: usize| -> u64 {
+        unit_bytes.chunks(m).map(|c| c.iter().sum::<u64>()).max().unwrap_or(0)
+    };
+
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut ms: Vec<usize> = vec![1, 2];
+    let half = n_units.div_ceil(2);
+    if half > 2 {
+        ms.push(half);
+    }
+    let modes: [(&str, OffloadCfg); 4] = [
+        ("resident", OffloadCfg::default()),
+        (
+            "host sync",
+            OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: false },
+        ),
+        ("host prefetch", OffloadCfg::host()),
+        (
+            "host f16",
+            OffloadCfg { enabled: true, compress: Compression::F16, prefetch: true },
+        ),
+    ];
+    for &m in &ms {
+        let mut resident_loss = f64::NAN;
+        let mut sync_sps = 0.0f64;
+        let mut prefetch_sps = 0.0f64;
+        for (label, cfg) in modes {
+            b.rt.set_offload(cfg)?;
+            let mut spec = default_spec("hift", steps);
+            spec.m = m;
+            let rec = b.run_one(&spec, "markovlm", steps, 1)?;
+            let final_loss = rec.losses.tail_mean(8);
+            match label {
+                "resident" => resident_loss = final_loss,
+                "host sync" => sync_sps = rec.steps_per_sec,
+                "host prefetch" => prefetch_sps = rec.steps_per_sec,
+                _ => {}
+            }
+            if cfg.enabled && cfg.compress == Compression::Lossless {
+                assert!(
+                    final_loss == resident_loss,
+                    "m={m} {label}: lossless paged loss {final_loss} != resident {resident_loss}"
+                );
+            }
+            let bk = &rec.backend;
+            // Sync paging holds group + one walk unit; prefetch staging
+            // adds the next group ("one group + one prefetch buffer").
+            let bound = if cfg.enabled && cfg.prefetch {
+                2 * group_bytes(m) + max_unit
+            } else {
+                group_bytes(m) + max_unit
+            };
+            rows.push(vec![
+                format!("m={m}"),
+                label.to_string(),
+                format!("{:.2}", rec.steps_per_sec),
+                format!("{:.1}", bk.peak_param_resident_bytes as f64 / 1024.0),
+                if cfg.enabled { format!("{:.1}", bound as f64 / 1024.0) } else { "-".into() },
+                format!("{:.1}", bk.peak_host_pool_bytes as f64 / 1024.0),
+                bk.offload_page_ins.to_string(),
+                bk.prefetch_hits.to_string(),
+                format!("{:.2}", bk.prefetch_stall_nanos as f64 / 1e6),
+                format!("{:.4}", final_loss),
+            ]);
+            json.push(Value::obj(vec![
+                ("m", m.into()),
+                ("mode", label.into()),
+                ("steps_per_sec", rec.steps_per_sec.into()),
+                ("peak_param_resident_bytes", (bk.peak_param_resident_bytes as usize).into()),
+                ("bound_bytes", (bound as usize).into()),
+                ("peak_prefetch_buffer_bytes", (bk.peak_prefetch_buffer_bytes as usize).into()),
+                ("peak_host_pool_bytes", (bk.peak_host_pool_bytes as usize).into()),
+                ("page_ins", (bk.offload_page_ins as usize).into()),
+                ("page_outs", (bk.offload_page_outs as usize).into()),
+                ("prefetch_hits", (bk.prefetch_hits as usize).into()),
+                ("prefetch_misses", (bk.prefetch_misses as usize).into()),
+                ("prefetch_stall_ms", (bk.prefetch_stall_nanos as f64 / 1e6).into()),
+                ("final_train_loss", final_loss.into()),
+            ]));
+        }
+        println!(
+            "  m={m}: prefetched stepping {:.2}x vs synchronous paging ({:.2} vs {:.2} steps/s)",
+            if sync_sps > 0.0 { prefetch_sps / sync_sps } else { f64::NAN },
+            prefetch_sps,
+            sync_sps
+        );
+    }
+    b.rt.set_offload(OffloadCfg::default())?;
+    print_table(
+        &format!(
+            "Offload — measured paging tier (HiFT, {steps} steps; bound: sync = group + walk \
+             unit, prefetch = 2 groups + walk unit)"
+        ),
+        &["m", "mode", "steps/s", "peak param KiB", "bound KiB", "peak host KiB", "page-ins",
+          "pf hits", "stall ms", "final loss"],
+        &rows,
+    );
+
+    // Analytic half at paper scale: what the enforced bound buys on the
+    // real architectures (vs keeping every master resident).
+    let mut rows = Vec::new();
+    for model in ["roberta-large", "llama-7b"] {
+        let a = by_name(model).unwrap();
+        for m in [1usize, 2, 4] {
+            let bound = paged_param_bound(&a, m, 2);
+            let host = paged_host_bound(&a, m, false);
+            let host16 = paged_host_bound(&a, m, true);
+            rows.push(vec![
+                model.to_string(),
+                format!("m={m}"),
+                format!("{:.2}", bound / GIB),
+                format!("{:.2}", 4.0 * a.total_params() as f64 / GIB),
+                format!("{:.2}", host / GIB),
+                format!("{:.2}", host16 / GIB),
+            ]);
+            json.push(Value::obj(vec![
+                ("model", model.into()),
+                ("m", m.into()),
+                ("paged_param_bound_bytes", bound.into()),
+                ("resident_bytes", (4.0 * a.total_params() as f64).into()),
+                ("host_bound_bytes", host.into()),
+                ("host_bound_f16_bytes", host16.into()),
+            ]));
+        }
+    }
+    print_table(
+        "Offload — analytic paged bounds at paper scale (f32 masters, 2 transfer slots)",
+        &["model", "m", "device bound(GiB)", "all-resident(GiB)", "host tier(GiB)",
+          "host f16(GiB)"],
+        &rows,
+    );
+    b.save("offload", &Value::Arr(json))
 }
 
 /// Appendix-B sanity print: closed-form ratio vs k.

@@ -7,10 +7,13 @@
 //! the analytic memory model); what must match the paper is the **shape**:
 //! who wins, roughly by how much, where the crossovers are.
 //!
-//! Env knobs:
+//! Env knobs (full inventory: `docs/CLI.md`):
 //! * `HIFT_ARTIFACTS` — artifact dir (selects the PJRT backend; needs the
 //!   `pjrt` cargo feature).  Unset ⇒ the native CPU backend.
 //! * `HIFT_PRESET`    — native-backend geometry (default `tiny`)
+//! * `HIFT_ACT_CKPT`  — activation-checkpoint policy (`none|sqrt|every_k(K)`)
+//! * `HIFT_OFFLOAD` / `HIFT_OFFLOAD_COMPRESS` / `HIFT_PREFETCH` — host
+//!   paging tier (`host|none`, `none|f16`, `1|0`)
 //! * `HIFT_QUICK=1`   — trim steps/seeds for smoke runs
 //! * `HIFT_OUT`       — output dir for JSON records (default `runs`)
 
@@ -107,6 +110,11 @@ impl Bench {
         let task = build_task(task_name, self.geom(), seed).unwrap();
         let ev =
             trainer::evaluate(self.rt.as_mut(), "fwd_base", &mut params, task.eval_batches())?;
+        // With offload on, evaluation parks this throwaway set's masters in
+        // the host pool; flush before dropping it so the pool never holds
+        // the only copy of a dead set (which would block later mode
+        // switches).
+        self.rt.flush_offload(&mut params)?;
         Ok(ev.acc)
     }
 

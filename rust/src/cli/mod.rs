@@ -8,20 +8,35 @@
 //!
 //! ```text
 //! hift train  [--preset tiny | --artifacts DIR] --strategy hift --task motif4
-//!             [--steps 200] [--optim adamw] [--lr 4e-3] [--m 1] [--order b2u]
-//!             [--seed 0] [--eval-every 50] [--log-every 10] [--out runs/run.json]
-//!             [--act-ckpt none|sqrt|every_k(K)]
+//!             [--steps 200] [--optim adamw] [--lr 4e-3] [--warmup 0] [--m 1]
+//!             [--order b2u] [--seed 0] [--eval-every 50] [--log-every 10]
+//!             [--out runs/run.json] [--act-ckpt none|sqrt|every_k(K)]
+//!             [--offload host|none] [--offload-compress none|f16] [--prefetch 1|0]
 //!             [--save-ckpt DIR] [--save-every N] [--resume DIR]
 //! hift eval   [--preset tiny | --artifacts DIR] [--variant base] --task motif4
+//!             [--seed 0] [--offload host|none]
 //! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
-//! hift info   [--preset tiny | --artifacts DIR]
-//! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6|tables8_12|act_ckpt|all>
+//! hift info   [--preset tiny | --artifacts DIR] [--seed 0]
+//! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
+//!              |tables8_12|appendix_b|act_ckpt|offload|all>
+//!             [--preset P] [--artifacts DIR] [--act-ckpt P] [--offload host]
 //! ```
+//!
+//! `docs/CLI.md` documents every flag and `HIFT_*` environment variable;
+//! `hift help` prints the same inventory.
 //!
 //! Checkpoint/resume: `--save-ckpt DIR --save-every N` writes a crash-safe
 //! checkpoint (params + optimizer moments + step/sweep counters) every N
 //! steps; `--resume DIR` continues a killed run **bit-identically** — same
 //! batches, same sweep-aligned delayed-LR position, same optimizer state.
+//!
+//! Host paging: `--offload host` physically moves inactive groups'
+//! parameter masters to a host pool and pages them back on demand
+//! (optimizer state stays in the optimizer and is ledger-accounted per
+//! fused update, not pooled); `--offload-compress f16` stores the masters
+//! lossy at half size; `--prefetch 0` disables the async double buffer
+//! (synchronous paging — the `bench offload` baseline).  Lossless paged
+//! runs are bit-identical to resident runs.
 
 mod args;
 
@@ -29,7 +44,7 @@ pub use args::Args;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{build_backend, ActCkpt, ExecBackend};
+use crate::backend::{build_backend, ActCkpt, ExecBackend, OffloadCfg};
 use crate::bench::{exhibits, Bench};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::coordinator::trainer::{self, CkptOpts, TrainCfg};
@@ -43,7 +58,24 @@ use crate::tensor::checkpoint;
 const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
   backends: --preset tiny|small|base|e2e|e2e100m (native CPU, default)
             --artifacts DIR (PJRT; needs the `pjrt` cargo feature)
-  (see `hift help` or the module docs of hift::cli for flag lists)";
+
+  train  --strategy hift|fpft|lora|ia3|prefix|bitfit|lp|lomo|mezo|mezo-adam
+         --task TASK --steps N --optim adamw|sgd|sgdm|adagrad|adafactor
+         --lr F --warmup N --m M --order b2u|t2d|ran --seed N
+         --eval-every N --log-every N --out FILE.json
+         --act-ckpt none|sqrt|every_k(K)
+         --offload host|none --offload-compress none|f16 --prefetch 1|0
+         --save-ckpt DIR --save-every N --resume DIR
+  eval   --variant base|lora|ia3|prefix --task TASK --seed N --offload host|none
+  memory-report --model NAME --batch N --seq N --m M
+  info   (prints manifest, variants, artifacts, strategies, tasks)
+  bench  table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
+         |tables8_12|appendix_b|act_ckpt|offload|all
+         (flags --preset/--artifacts/--act-ckpt/--offload* set the HIFT_* env)
+
+  env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_OFFLOAD
+       HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH HIFT_PIPELINE HIFT_THREADS
+       HIFT_QUICK HIFT_OUT    (full inventory: docs/CLI.md)";
 
 /// Binary entrypoint.
 pub fn main_entry() -> Result<()> {
@@ -77,6 +109,16 @@ fn backend_from(a: &Args, seed: u64) -> Result<Box<dyn ExecBackend>> {
     build_backend(a.get("artifacts"), a.get("preset"), seed)
 }
 
+/// Offload config: env (`HIFT_OFFLOAD*`, `HIFT_PREFETCH`) overridden by the
+/// `--offload` / `--offload-compress` / `--prefetch` flags.
+fn offload_from(a: &Args) -> Result<OffloadCfg> {
+    OffloadCfg::from_env()?.with_flags(
+        a.get("offload"),
+        a.get("offload-compress"),
+        a.get("prefetch"),
+    )
+}
+
 fn cmd_train(a: &Args) -> Result<()> {
     let strategy_name = a.get("strategy").unwrap_or("hift");
     let task_name = a.get("task").unwrap_or("motif4");
@@ -86,6 +128,18 @@ fn cmd_train(a: &Args) -> Result<()> {
     let mut be = backend_from(a, seed)?;
     if let Some(p) = a.get("act-ckpt") {
         be.set_act_ckpt(ActCkpt::parse(p)?)?;
+    }
+    let offload = offload_from(a)?;
+    if offload.enabled {
+        if strategy_name.starts_with("mezo") {
+            // Fail fast (Mezo::step also guards): MeZO perturbs parameters
+            // outside the backend walk, which a paging tier cannot see.
+            bail!(
+                "--strategy {strategy_name} cannot run with --offload host: MeZO mutates \
+                 parameters outside the backend walk; use --offload none"
+            );
+        }
+        be.set_offload(offload)?;
     }
     let optim = OptimKind::parse(a.get("optim").unwrap_or("adamw"))
         .context("bad --optim (adamw|sgd|sgdm|adagrad|adafactor)")?;
@@ -183,6 +237,10 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let task_name = a.get("task").unwrap_or("motif4");
     let seed = a.get_num("seed").unwrap_or(0.0) as u64;
     let mut be = backend_from(a, seed)?;
+    let offload = offload_from(a)?;
+    if offload.enabled {
+        be.set_offload(offload)?;
+    }
     let mut params = be.load_params(variant)?;
     let task = build_task(task_name, geom(be.as_ref()), seed)
         .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
@@ -291,6 +349,15 @@ fn cmd_bench(a: &Args) -> Result<()> {
     if let Some(p) = a.get("act-ckpt") {
         std::env::set_var("HIFT_ACT_CKPT", p);
     }
+    if let Some(p) = a.get("offload") {
+        std::env::set_var("HIFT_OFFLOAD", p);
+    }
+    if let Some(p) = a.get("offload-compress") {
+        std::env::set_var("HIFT_OFFLOAD_COMPRESS", p);
+    }
+    if let Some(p) = a.get("prefetch") {
+        std::env::set_var("HIFT_PREFETCH", p);
+    }
     let mut b = Bench::from_env()?;
     let run = |b: &mut Bench, name: &str| -> Result<()> {
         match name {
@@ -307,12 +374,13 @@ fn cmd_bench(a: &Args) -> Result<()> {
             "tables8_12" => exhibits::tables8_12(b),
             "appendix_b" => exhibits::appendix_b(b),
             "act_ckpt" | "actckpt" => exhibits::act_ckpt(b),
+            "offload" => exhibits::offload(b),
             other => bail!("unknown exhibit {other:?}"),
         }
     };
     if which == "all" {
-        for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "table5", "fig3", "fig4",
-                     "table3", "table4", "mtbench", "table2", "table1", "fig5"] {
+        for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "offload", "table5", "fig3",
+                     "fig4", "table3", "table4", "mtbench", "table2", "table1", "fig5"] {
             run(&mut b, name)?;
         }
         Ok(())

@@ -93,6 +93,15 @@ impl HiftScheduler {
         }
     }
 
+    /// The units the next [`HiftScheduler::next`] call will pop, without
+    /// committing anything — the hint the paging tier uses to stage the
+    /// next group's page-ins in its double buffer behind the current
+    /// step's compute.
+    pub fn peek_next(&self) -> Vec<usize> {
+        let take = self.m.min(self.n_units - self.pos_in_sweep);
+        self.queue.snapshot().into_iter().take(take).collect()
+    }
+
     /// Plan and commit the next step.
     pub fn next(&mut self) -> PlannedStep {
         self.step += 1;
@@ -225,6 +234,24 @@ mod tests {
                 let a = stepped.next();
                 let b = jumped.next();
                 prop_assert(a == b, format!("n={n} m={m} t={t}: step {i} diverged"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_peek_matches_next() {
+        run(100, |g| {
+            let n = g.usize_in(1, 16);
+            let m = g.usize_in(1, 16);
+            let mut s = HiftScheduler::new(cfg(m, 1.0), n);
+            for i in 0..3 * s.k() {
+                let peeked = s.peek_next();
+                let planned = s.next();
+                prop_assert(
+                    peeked == planned.units,
+                    format!("n={n} m={m} step {i}: peek {peeked:?} != next {:?}", planned.units),
+                )?;
             }
             Ok(())
         });

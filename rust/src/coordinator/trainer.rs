@@ -166,6 +166,28 @@ impl RunRecord {
                 ("recompute_flops", (b.recompute_flops as usize).into()),
             ]),
         ));
+        // Host paging tier (all-zero when --offload is off): measured
+        // transfers, enforced residency peaks, prefetch effectiveness.
+        if b.offload_page_ins + b.offload_page_outs > 0 {
+            pairs.push((
+                "offload",
+                Value::obj(vec![
+                    ("page_ins", (b.offload_page_ins as usize).into()),
+                    ("page_outs", (b.offload_page_outs as usize).into()),
+                    ("h2d_bytes", (b.offload_h2d_bytes as usize).into()),
+                    ("d2h_bytes", (b.offload_d2h_bytes as usize).into()),
+                    ("peak_param_resident_bytes", (b.peak_param_resident_bytes as usize).into()),
+                    (
+                        "peak_prefetch_buffer_bytes",
+                        (b.peak_prefetch_buffer_bytes as usize).into(),
+                    ),
+                    ("peak_host_pool_bytes", (b.peak_host_pool_bytes as usize).into()),
+                    ("prefetch_hits", (b.prefetch_hits as usize).into()),
+                    ("prefetch_misses", (b.prefetch_misses as usize).into()),
+                    ("prefetch_stall_ms", (b.prefetch_stall_nanos as f64 / 1e6).into()),
+                ]),
+            ));
+        }
         Value::obj(pairs)
     }
 }
@@ -279,6 +301,9 @@ pub fn train_ckpt(
         if let Some(dir) = &ckpt.save_dir {
             let at_interval = ckpt.save_every > 0 && step % ckpt.save_every == 0;
             if at_interval || step == cfg.steps {
+                // Host-paged masters must be back in the arena before the
+                // checkpoint serializes the set (no-op when offload is off).
+                be.flush_offload(params)?;
                 let meta = checkpoint::CkptMeta {
                     step,
                     sweep: Some(strategy.sweeps_done()),
@@ -286,6 +311,11 @@ pub fn train_ckpt(
                     task: task.name().to_string(),
                 };
                 checkpoint::save_replace(dir, params, &meta, &strategy.export_opt_state())?;
+                // …and back out afterwards, so a mid-run save neither
+                // leaves the whole model resident nor pollutes the
+                // measured training peaks (the final hand-off flush after
+                // the loop re-materializes everything for the caller).
+                be.repage_offload(params)?;
                 if cfg.log_every > 0 {
                     eprintln!("[{}]   ckpt@{step}: saved to {}", strategy.name(), dir.display());
                 }
@@ -294,6 +324,14 @@ pub fn train_ckpt(
     }
 
     let final_eval = evaluate(be, &fwd, params, task.eval_batches())?;
+    // Snapshot the run's backend stats *before* the hand-off flush: paging
+    // everything back in necessarily makes the whole model arena-resident,
+    // and that bookkeeping spike is not part of the training loop whose
+    // peaks the RunRecord reports.
+    let backend_stats = be.stats().since(&stats_start);
+    // Hand the caller a fully materialized parameter set: anything the
+    // paging tier still holds on the host returns to the arena here.
+    be.flush_offload(params)?;
     let wall = thr.elapsed_secs();
     let executed = cfg.steps - ckpt.start_step;
     Ok(RunRecord {
@@ -313,7 +351,7 @@ pub fn train_ckpt(
             .ledger()
             .map(|l| (l.h2d_bytes, l.d2h_bytes, l.max_inflight_bytes, l.peak_device_bytes)),
         peak_grad_resident_bytes: strategy.ledger().map(|l| l.peak_grad_resident_bytes),
-        backend: be.stats().since(&stats_start),
+        backend: backend_stats,
     })
 }
 

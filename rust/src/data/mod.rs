@@ -159,7 +159,7 @@ impl Task for MotifClass {
 /// stability workload).
 pub struct MarkovLm {
     geom: TaskGeom,
-    /// transitions[a][b] = preferred successors of bigram (a, b)
+    /// `transitions[a][b]` = preferred successors of bigram (a, b)
     succ: Vec<i32>,
     branch: usize,
     rng: Pcg32,

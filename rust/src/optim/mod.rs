@@ -204,7 +204,17 @@ pub fn clip_grad(grad: &mut Tensor, max_norm: f32) -> f32 {
 // Host↔device paging ledger (Algorithm 1 steps i and k)
 // ---------------------------------------------------------------------------
 
-/// Tracks simulated movement of optimizer state between host and device.
+/// The paging accounting backend — one source of truth for both paging
+/// paths:
+///
+/// * **optimizer state** (here, via [`FusedApply`]/[`PipelinedApply`]):
+///   each tensor's state pages in, updates, and pages out around its fused
+///   update — Algorithm 1 steps i/k at tensor granularity;
+/// * **parameter masters** ([`crate::tensor::paged::UnitPager`] owns its
+///   own instance): with `--offload host` these are *real* transfers into
+///   a host pool, and `device_resident`/`peak_device_bytes` become the
+///   enforced arena residency (`tests/offload.rs` regression-checks that
+///   ledger counts equal the pool's observed transfer events).
 ///
 /// The paper's peak-communication claim (§4.3: "#Sta values in Tables 8–12")
 /// is checked against `max_inflight_bytes`; the memory claim against

@@ -131,6 +131,15 @@ impl FineTuneStrategy for Hift {
         batch: &Batch,
     ) -> Result<StepStats> {
         let plan = self.scheduler.next();
+        // Stage the *next* group before this step's compute starts — the
+        // scheduler's queue already knows it.  The paging tier posts its
+        // page-ins (decompression overlaps this step's compute) and keeps
+        // the staged units resident across the end-of-run eviction, so the
+        // next step begins with its active group already in the arena:
+        // cross-step double-buffering.  No-op when the backend has no
+        // paging tier; coalesced with the walk's own one-unit-ahead
+        // prefetch (no duplicate transfers).
+        be.prefetch_units(&self.scheduler.peek_next());
         // Gradient slot order = concatenation of the group's unit parameter
         // lists — the contract of `run_group_streamed`.
         let slot_param: Vec<usize> =

@@ -84,6 +84,16 @@ impl FineTuneStrategy for Mezo {
         params: &mut TensorSet,
         batch: &Batch,
     ) -> Result<StepStats> {
+        if be.offload().enabled {
+            // MeZO's ±εz walks mutate every parameter *outside* the backend
+            // walk; a paging tier that evicts masters between executions
+            // would silently drop the perturbations.  Refuse loudly.
+            anyhow::bail!(
+                "MeZO mutates parameters outside the backend walk and cannot run \
+                 with host offload ({}); use --offload none",
+                be.offload().name()
+            );
+        }
         let lr = self.schedule.at(self.step as usize);
         let step_seed = self.seed ^ (0x9E37 + self.step).wrapping_mul(0x2545F4914F6CDD1D);
         self.step += 1;

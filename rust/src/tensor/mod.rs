@@ -6,6 +6,7 @@
 //! loops) is the L3 hot path profiled in EXPERIMENTS.md §Perf.
 
 pub mod checkpoint;
+pub mod paged;
 
 use crate::rng::Pcg32;
 
@@ -162,6 +163,14 @@ impl TensorSet {
     /// Device-buffer cache key for tensor `i`: (set lineage id, version).
     pub fn cache_key(&self, i: usize) -> (u64, u64) {
         (self.id, self.versions[i])
+    }
+
+    /// This set's cache-lineage id (unique per clone).  The host paging
+    /// tier keys its pool on it: evicted pages belong to one lineage, and a
+    /// fresh parameter set (new `load_params`, checkpoint resume) resets
+    /// the pool rather than aliasing a dead set's pages.
+    pub fn lineage(&self) -> u64 {
+        self.id
     }
 
     pub fn len(&self) -> usize {

@@ -1,0 +1,1027 @@
+//! The host-memory paging tier: inactive HiFT groups' parameter masters
+//! physically leave the device arena and live in a [`HostPool`] until the
+//! layer walk demands them back (paper §3, Table 5: only the *active*
+//! block's state is device-resident; everything else parks on the host).
+//!
+//! Three layers:
+//!
+//! * [`HostPool`] — the host-side store that **owns** evicted tensor data,
+//!   either verbatim f32 ([`Compression::Lossless`], paged runs are
+//!   bit-identical to resident runs) or f16-compressed
+//!   ([`Compression::F16`], QFT-style lossy mode: half the host footprint,
+//!   bounded drift — round-to-nearest-even, idempotent after the first
+//!   round trip).
+//! * [`PagedStore`] — the transfer engine over the pool.  With prefetch
+//!   enabled it runs the pool on a **background worker thread** and
+//!   double-buffers: `request` posts an async page-in (decompression
+//!   happens on the worker while the main thread computes), `store` posts
+//!   an async page-out, and `take` collects a page — instantly when the
+//!   prefetch already landed, blocking (a measured *stall*) when it did
+//!   not.  With prefetch off every transfer is synchronous and every
+//!   page-in is a stall, which is exactly the baseline the `bench_offload`
+//!   exhibit measures against.
+//! * [`UnitPager`] — the layer-unit-granular policy driver the native
+//!   backend threads through its forward/backward walks: `ensure_unit`
+//!   admits a unit's parameters before the walk reads them,
+//!   `prefetch_unit` posts the walk's one-unit-ahead page-in,
+//!   `release_unit` evicts a unit the walk has passed, and pinned units —
+//!   the active group whose gradients the run emits and whose tensors
+//!   fused sinks update in place — stay resident until `end_run` pages
+//!   the finished group out (overlapping the next step's compute in
+//!   prefetch mode).  `stage_unit` (fed by
+//!   [`crate::coordinator::scheduler::HiftScheduler::peek_next`] through
+//!   `ExecBackend::prefetch_units`) additionally keeps the scheduler's
+//!   *next* group resident across `end_run`, so each step starts with its
+//!   active group already in the arena — cross-step double-buffering.
+//!
+//! Accounting runs through a [`crate::optim::OffloadLedger`] — the same
+//! single source of truth the optimizer-state paging uses — so measured
+//! peaks (`peak_param_resident_bytes`) are *enforced* arena residency, not
+//! a model: `device_resident` rises only when a page is admitted and falls
+//! the moment it is evicted.  The initial placement at [`UnitPager::attach`]
+//! (the whole model moves to the host before the first step) is setup, not
+//! steady-state traffic, and is deliberately not counted as paging events;
+//! the pool's own event counters therefore exceed the ledger's page-outs by
+//! exactly one store per managed tensor (asserted in the tests).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::TensorSet;
+use crate::optim::OffloadLedger;
+
+// ---------------------------------------------------------------------------
+// f16 codec (no `half` crate in the offline vendor set)
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE-754 binary16 bits, round-to-nearest-even (ties-to-even), with
+/// overflow to ±inf, graceful subnormals and NaN payload preservation.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN (keep NaNs quiet and non-zero-mantissa)
+        let payload = (man >> 13) as u16 & 0x3ff;
+        return sign | 0x7c00 | if man != 0 { payload | 0x0200 } else { 0 };
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal: shift the (implicit-1) 24-bit mantissa into place
+        let man = man | 0x0080_0000;
+        let shift = (14 - e16) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && (half & 1) == 1) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = ((e16 as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    // Mantissa overflow carries into the exponent, which is the correct
+    // rounding there too (… 0x7bff + 1 = 0x7c00 = inf).
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE-754 binary16 bits → f32 (exact — every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize into f32's implicit-1 form
+            let mut e32: i32 = 127 - 15 + 1;
+            let mut m = man << 13;
+            while m & 0x0080_0000 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | ((e32 as u32) << 23) | (m & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Host-side storage format for evicted pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compression {
+    /// Verbatim f32 — paged runs are bit-identical to resident runs.
+    #[default]
+    Lossless,
+    /// Round-to-nearest-even f16 — half the host bytes, bounded drift
+    /// (idempotent after the first round trip, so values do not keep
+    /// degrading while a group sits parked).
+    F16,
+}
+
+impl Compression {
+    pub fn parse(s: &str) -> Result<Compression> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "none" | "lossless" | "f32" => Ok(Compression::Lossless),
+            "f16" | "half" => Ok(Compression::F16),
+            other => bail!("bad offload compression {other:?} (none|f16)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compression::Lossless => "lossless",
+            Compression::F16 => "f16",
+        }
+    }
+
+    /// Host bytes for `numel` elements in this format.
+    pub fn bytes(&self, numel: usize) -> usize {
+        match self {
+            Compression::Lossless => numel * 4,
+            Compression::F16 => numel * 2,
+        }
+    }
+}
+
+/// Offload configuration (CLI `--offload host|none`, `--offload-compress`,
+/// `--prefetch`; env `HIFT_OFFLOAD`, `HIFT_OFFLOAD_COMPRESS`,
+/// `HIFT_PREFETCH`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffloadCfg {
+    /// Host paging on (`--offload host`)?  Off = everything stays resident.
+    pub enabled: bool,
+    pub compress: Compression,
+    /// Double-buffered async transfers (default).  Off = synchronous paging
+    /// (every page-in stalls the walk) — the `bench_offload` baseline.
+    pub prefetch: bool,
+}
+
+impl Default for OffloadCfg {
+    fn default() -> Self {
+        OffloadCfg { enabled: false, compress: Compression::Lossless, prefetch: true }
+    }
+}
+
+impl OffloadCfg {
+    /// Lossless host paging with prefetch — the `--offload host` default.
+    pub fn host() -> Self {
+        OffloadCfg { enabled: true, ..Default::default() }
+    }
+
+    /// Parse the CLI flag values on top of `self` (None = keep).
+    pub fn with_flags(
+        mut self,
+        offload: Option<&str>,
+        compress: Option<&str>,
+        prefetch: Option<&str>,
+    ) -> Result<Self> {
+        if let Some(mode) = offload {
+            self.enabled = match mode.trim().to_ascii_lowercase().as_str() {
+                "none" | "off" | "0" => false,
+                "host" | "cpu" | "1" => true,
+                other => bail!("bad --offload {other:?} (host|none)"),
+            };
+        }
+        if let Some(c) = compress {
+            self.compress = Compression::parse(c)?;
+        }
+        if let Some(p) = prefetch {
+            self.prefetch = match p.trim().to_ascii_lowercase().as_str() {
+                "0" | "off" | "false" => false,
+                "1" | "on" | "true" => true,
+                other => bail!("bad --prefetch {other:?} (1|0)"),
+            };
+        }
+        Ok(self)
+    }
+
+    /// From `HIFT_OFFLOAD` / `HIFT_OFFLOAD_COMPRESS` / `HIFT_PREFETCH`
+    /// (empty values mean unset).
+    pub fn from_env() -> Result<Self> {
+        let var = |k: &str| std::env::var(k).ok().filter(|s| !s.is_empty());
+        OffloadCfg::default().with_flags(
+            var("HIFT_OFFLOAD").as_deref(),
+            var("HIFT_OFFLOAD_COMPRESS").as_deref(),
+            var("HIFT_PREFETCH").as_deref(),
+        )
+    }
+
+    pub fn name(&self) -> String {
+        if !self.enabled {
+            return "none".to_string();
+        }
+        format!(
+            "host({}, {})",
+            self.compress.name(),
+            if self.prefetch { "prefetch" } else { "sync" }
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HostPool — the store that owns evicted pages
+// ---------------------------------------------------------------------------
+
+enum HostPage {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+/// Host-side page store.  Owns every evicted tensor's data: on eviction the
+/// arena slot is genuinely emptied (lossless pages move their buffer here;
+/// f16 pages are converted element-by-element and the f32 buffer is freed),
+/// and admission hands the data back — so arena residency is a physical
+/// fact, not a flag.
+pub struct HostPool {
+    compress: Compression,
+    pages: HashMap<usize, HostPage>,
+    stores: u64,
+    fetches: u64,
+}
+
+impl HostPool {
+    pub fn new(compress: Compression) -> Self {
+        HostPool { compress, pages: HashMap::new(), stores: 0, fetches: 0 }
+    }
+
+    /// Page `data` out into the pool (compressing if configured).
+    pub fn store(&mut self, idx: usize, data: Vec<f32>) {
+        let page = match self.compress {
+            Compression::Lossless => HostPage::F32(data),
+            Compression::F16 => {
+                HostPage::F16(data.iter().map(|&x| f32_to_f16_bits(x)).collect())
+            }
+        };
+        self.pages.insert(idx, page);
+        self.stores += 1;
+    }
+
+    /// Page `idx` back in (decompressing if needed); `None` if not stored.
+    pub fn fetch(&mut self, idx: usize) -> Option<Vec<f32>> {
+        let page = self.pages.remove(&idx)?;
+        self.fetches += 1;
+        Some(match page {
+            HostPage::F32(v) => v,
+            HostPage::F16(v) => v.into_iter().map(f16_bits_to_f32).collect(),
+        })
+    }
+
+    /// `(stores, fetches)` processed — the pool-side event counts the
+    /// ledger regression test compares against.
+    pub fn events(&self) -> (u64, u64) {
+        (self.stores, self.fetches)
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PagedStore — sync or double-buffered async transfers over a HostPool
+// ---------------------------------------------------------------------------
+
+enum Job {
+    Store { idx: usize, data: Vec<f32> },
+    Fetch { idx: usize },
+    Report,
+    Stop,
+}
+
+enum Done {
+    Fetched { idx: usize, data: Option<Vec<f32>> },
+    Report { stores: u64, fetches: u64 },
+}
+
+enum Inner {
+    Sync(HostPool),
+    Async {
+        jobs: Sender<Job>,
+        done: Receiver<Done>,
+        worker: Option<JoinHandle<()>>,
+        /// Prefetched pages that landed but were not yet admitted.
+        ready: HashMap<usize, Vec<f32>>,
+        /// Fetches posted but not yet landed.
+        inflight: HashSet<usize>,
+    },
+}
+
+/// Transfer engine over a [`HostPool`]: synchronous, or double-buffered on
+/// a background worker thread (compression/decompression overlap compute).
+pub struct PagedStore {
+    inner: Inner,
+}
+
+impl PagedStore {
+    pub fn new(compress: Compression, prefetch: bool) -> Self {
+        if !prefetch {
+            return PagedStore { inner: Inner::Sync(HostPool::new(compress)) };
+        }
+        let (jobs, job_rx) = channel::<Job>();
+        let (done_tx, done) = channel::<Done>();
+        let worker = std::thread::spawn(move || {
+            let mut pool = HostPool::new(compress);
+            while let Ok(job) = job_rx.recv() {
+                match job {
+                    Job::Store { idx, data } => pool.store(idx, data),
+                    Job::Fetch { idx } => {
+                        let data = pool.fetch(idx);
+                        if done_tx.send(Done::Fetched { idx, data }).is_err() {
+                            return;
+                        }
+                    }
+                    Job::Report => {
+                        let (stores, fetches) = pool.events();
+                        if done_tx.send(Done::Report { stores, fetches }).is_err() {
+                            return;
+                        }
+                    }
+                    Job::Stop => return,
+                }
+            }
+        });
+        PagedStore {
+            inner: Inner::Async {
+                jobs,
+                done,
+                worker: Some(worker),
+                ready: HashMap::new(),
+                inflight: HashSet::new(),
+            },
+        }
+    }
+
+    /// Page `data` out (async when prefetching: the compression happens on
+    /// the worker, overlapping whatever the main thread does next).
+    pub fn store(&mut self, idx: usize, data: Vec<f32>) -> Result<()> {
+        match &mut self.inner {
+            Inner::Sync(pool) => {
+                pool.store(idx, data);
+                Ok(())
+            }
+            Inner::Async { jobs, .. } => jobs
+                .send(Job::Store { idx, data })
+                .map_err(|_| anyhow!("offload worker died during page-out")),
+        }
+    }
+
+    /// Hint that `idx` will be needed soon.  Returns true when an async
+    /// fetch was actually posted (false in sync mode / already buffered).
+    pub fn request(&mut self, idx: usize) -> bool {
+        match &mut self.inner {
+            Inner::Sync(_) => false,
+            Inner::Async { jobs, ready, inflight, .. } => {
+                if ready.contains_key(&idx) || inflight.contains(&idx) {
+                    return false;
+                }
+                if jobs.send(Job::Fetch { idx }).is_ok() {
+                    inflight.insert(idx);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Collect page `idx`.  Returns `(data, prefetch_hit)` — `prefetch_hit`
+    /// is true when the page had already landed in the double buffer and no
+    /// blocking was needed.
+    pub fn take(&mut self, idx: usize) -> Result<(Vec<f32>, bool)> {
+        match &mut self.inner {
+            Inner::Sync(pool) => {
+                let data =
+                    pool.fetch(idx).ok_or_else(|| anyhow!("page {idx} missing from host pool"))?;
+                Ok((data, false))
+            }
+            Inner::Async { jobs, done, ready, inflight, .. } => {
+                if let Some(data) = ready.remove(&idx) {
+                    return Ok((data, true));
+                }
+                if !inflight.contains(&idx) {
+                    jobs.send(Job::Fetch { idx })
+                        .map_err(|_| anyhow!("offload worker died during page-in"))?;
+                    inflight.insert(idx);
+                }
+                loop {
+                    match done.recv().map_err(|_| anyhow!("offload worker died"))? {
+                        Done::Fetched { idx: got, data } => {
+                            inflight.remove(&got);
+                            let data = data
+                                .ok_or_else(|| anyhow!("page {got} missing from host pool"))?;
+                            if got == idx {
+                                return Ok((data, false));
+                            }
+                            ready.insert(got, data);
+                        }
+                        Done::Report { .. } => bail!("offload worker answered out of order"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pool-side `(stores, fetches)` event counts (drains the worker queue
+    /// first in async mode, so the numbers are settled).
+    pub fn events(&mut self) -> Result<(u64, u64)> {
+        match &mut self.inner {
+            Inner::Sync(pool) => Ok(pool.events()),
+            Inner::Async { jobs, done, ready, inflight, .. } => {
+                jobs.send(Job::Report).map_err(|_| anyhow!("offload worker died"))?;
+                loop {
+                    match done.recv().map_err(|_| anyhow!("offload worker died"))? {
+                        Done::Fetched { idx, data } => {
+                            inflight.remove(&idx);
+                            ready.insert(
+                                idx,
+                                data.ok_or_else(|| anyhow!("page {idx} missing"))?,
+                            );
+                        }
+                        Done::Report { stores, fetches } => return Ok((stores, fetches)),
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for PagedStore {
+    fn drop(&mut self) {
+        if let Inner::Async { jobs, worker, .. } = &mut self.inner {
+            let _ = jobs.send(Job::Stop);
+            if let Some(w) = worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// UnitPager — layer-unit policy over a TensorSet
+// ---------------------------------------------------------------------------
+
+/// A snapshot of the pager's accounting, used by the backend to fold deltas
+/// into its [`crate::backend::RuntimeStats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OffloadCounters {
+    pub page_ins: u64,
+    pub page_outs: u64,
+    /// Host→device page-in traffic (full f32 bytes admitted to the arena).
+    pub h2d_bytes: u64,
+    /// Device→host page-out traffic.
+    pub d2h_bytes: u64,
+    /// Managed parameter bytes currently resident in the arena.
+    pub param_resident_bytes: u64,
+    /// Peak of `param_resident_bytes` — the *enforced* device residency of
+    /// parameter masters (active group + the transient walk unit).
+    pub peak_param_resident_bytes: u64,
+    /// Peak bytes posted to the double buffer (prefetches in flight or
+    /// landed-but-unadmitted), full f32 size.
+    pub peak_prefetch_buffer_bytes: u64,
+    /// Current / peak host-tier footprint (compressed bytes).
+    pub host_bytes: u64,
+    pub peak_host_bytes: u64,
+    /// Page-ins served instantly from the double buffer.
+    pub prefetch_hits: u64,
+    /// Page-ins that had to block (every sync-mode page-in is one).
+    pub prefetch_misses: u64,
+    /// Nanoseconds the walk spent blocked waiting for page-ins.
+    pub stall_nanos: u64,
+}
+
+/// The unit-granular pager the native backend drives through its walks.
+///
+/// Attached to one [`TensorSet`] lineage at a time; a new lineage (fresh
+/// `load_params`, checkpoint resume) resets the pool — evicted pages of a
+/// dead set die with it.
+pub struct UnitPager {
+    cfg: OffloadCfg,
+    store: PagedStore,
+    ledger: OffloadLedger,
+    /// Parameter indices per layer unit (managed tensors only).
+    unit_params: Vec<Vec<usize>>,
+    /// Per parameter index: does the pager manage it?  (Adapters, unit −1,
+    /// are tiny and stay always-resident.)
+    managed: Vec<bool>,
+    /// Full f32 bytes per parameter index (the arena-side size).
+    full_bytes: Vec<usize>,
+    resident: Vec<bool>,
+    pinned: Vec<bool>,
+    /// Staged units (the scheduler's *next* group): their page-ins are
+    /// posted ahead of time and they survive [`UnitPager::end_run`], so the
+    /// following step starts with its active group already resident —
+    /// cross-step double-buffering.  Prefetch mode only.
+    keep: Vec<bool>,
+    /// Prefetches posted and not yet admitted (for buffer accounting).
+    requested: Vec<bool>,
+    lineage: Option<u64>,
+    buffer_bytes: u64,
+    peak_buffer_bytes: u64,
+    host_bytes: u64,
+    peak_host_bytes: u64,
+    prefetch_hits: u64,
+    prefetch_misses: u64,
+    stall_nanos: u64,
+}
+
+impl UnitPager {
+    pub fn new(cfg: OffloadCfg) -> Self {
+        UnitPager {
+            cfg,
+            store: PagedStore::new(cfg.compress, cfg.prefetch),
+            ledger: OffloadLedger::new(),
+            unit_params: Vec::new(),
+            managed: Vec::new(),
+            full_bytes: Vec::new(),
+            resident: Vec::new(),
+            pinned: Vec::new(),
+            keep: Vec::new(),
+            requested: Vec::new(),
+            lineage: None,
+            buffer_bytes: 0,
+            peak_buffer_bytes: 0,
+            host_bytes: 0,
+            peak_host_bytes: 0,
+            prefetch_hits: 0,
+            prefetch_misses: 0,
+            stall_nanos: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> OffloadCfg {
+        self.cfg
+    }
+
+    /// Is the pager attached to this parameter set's lineage?
+    pub fn is_attached_to(&self, set: &TensorSet) -> bool {
+        self.lineage == Some(set.lineage())
+    }
+
+    /// Attach to `set` with the given unit → parameter-index map.  A no-op
+    /// when already attached to this lineage; otherwise the pool is rebuilt
+    /// and every managed tensor is moved to the host — the **initial
+    /// placement**, which is setup rather than steady-state paging and is
+    /// not counted as ledger events (the pool's store count therefore leads
+    /// the ledger's page-outs by one per managed tensor).
+    pub fn attach(&mut self, set: &mut TensorSet, unit_params: Vec<Vec<usize>>) -> Result<()> {
+        if self.is_attached_to(set) {
+            return Ok(());
+        }
+        let n = set.len();
+        self.store = PagedStore::new(self.cfg.compress, self.cfg.prefetch);
+        self.ledger = OffloadLedger::new();
+        self.managed = vec![false; n];
+        self.full_bytes = (0..n).map(|i| set.tensors[i].bytes()).collect();
+        self.resident = vec![true; n];
+        self.pinned = vec![false; n];
+        self.keep = vec![false; n];
+        self.requested = vec![false; n];
+        self.buffer_bytes = 0;
+        self.peak_buffer_bytes = 0;
+        self.host_bytes = 0;
+        self.peak_host_bytes = 0;
+        for unit in &unit_params {
+            for &idx in unit {
+                if idx >= n {
+                    bail!("pager unit map names parameter {idx} of a {n}-tensor set");
+                }
+                self.managed[idx] = true;
+            }
+        }
+        self.unit_params = unit_params;
+        self.lineage = Some(set.lineage());
+        // Initial placement: every managed master moves to the host.
+        for idx in 0..n {
+            if self.managed[idx] {
+                let data = std::mem::take(&mut set.tensors[idx].data);
+                let numel = data.len();
+                self.host_bytes += self.cfg.compress.bytes(numel) as u64;
+                self.store.store(idx, data)?;
+                self.resident[idx] = false;
+            }
+        }
+        self.peak_host_bytes = self.peak_host_bytes.max(self.host_bytes);
+        Ok(())
+    }
+
+    /// Pin a unit for the current run: its tensors stay resident through
+    /// `release_unit` (fused sinks update them in place) until `end_run`.
+    pub fn pin_unit(&mut self, u: usize) {
+        let Some(idxs) = self.unit_params.get(u).cloned() else {
+            return;
+        };
+        for i in idxs {
+            self.pinned[i] = true;
+        }
+    }
+
+    pub fn clear_pins(&mut self) {
+        self.pinned.iter_mut().for_each(|p| *p = false);
+    }
+
+    /// Admit unit `u`'s parameters into the arena (blocking on any page
+    /// still in flight — a measured stall).
+    pub fn ensure_unit(&mut self, set: &mut TensorSet, u: usize) -> Result<()> {
+        let Some(idxs) = self.unit_params.get(u).cloned() else {
+            return Ok(());
+        };
+        for idx in idxs {
+            self.admit(set, idx)?;
+        }
+        Ok(())
+    }
+
+    /// Post async page-ins for unit `u` (no-op in sync mode / if resident).
+    pub fn prefetch_unit(&mut self, u: usize) {
+        let Some(idxs) = self.unit_params.get(u).cloned() else {
+            return;
+        };
+        for idx in idxs {
+            if !self.resident[idx] && !self.requested[idx] && self.store.request(idx) {
+                self.requested[idx] = true;
+                self.buffer_bytes += self.full_bytes[idx] as u64;
+                self.peak_buffer_bytes = self.peak_buffer_bytes.max(self.buffer_bytes);
+            }
+        }
+    }
+
+    /// Stage unit `u` for the *next* run: post its page-ins now (their
+    /// decompression overlaps the current run's compute) and mark it to
+    /// survive [`UnitPager::end_run`], so the next step's active group is
+    /// already arena-resident when it starts — the cross-step half of the
+    /// double buffer.  Prefetch mode only: synchronous paging keeps the
+    /// tight one-group residency baseline.
+    pub fn stage_unit(&mut self, u: usize) {
+        if !self.cfg.prefetch {
+            return;
+        }
+        let Some(idxs) = self.unit_params.get(u).cloned() else {
+            return;
+        };
+        for &idx in &idxs {
+            self.keep[idx] = true;
+        }
+        self.prefetch_unit(u);
+    }
+
+    /// Drop all staging marks (the previous "next group" is now the active
+    /// one; its pins take over).
+    pub fn clear_staged(&mut self) {
+        self.keep.iter_mut().for_each(|k| *k = false);
+    }
+
+    /// Evict unit `u` unless pinned or staged (the walk has moved past it).
+    pub fn release_unit(&mut self, set: &mut TensorSet, u: usize) -> Result<()> {
+        let Some(idxs) = self.unit_params.get(u).cloned() else {
+            return Ok(());
+        };
+        for idx in idxs {
+            if self.resident[idx] && !self.pinned[idx] && !self.keep[idx] {
+                self.evict(set, idx)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// End of a run: page out everything still resident except staged
+    /// units (the just-finished group included — in prefetch mode the
+    /// store is async, overlapping the next step's compute) and drop the
+    /// pins.  Staged units stay resident for the next step.
+    pub fn end_run(&mut self, set: &mut TensorSet) -> Result<()> {
+        self.clear_pins();
+        for idx in 0..self.resident.len() {
+            if self.managed[idx] && self.resident[idx] && !self.keep[idx] {
+                self.evict(set, idx)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Page everything back in (checkpoint save, end of training — callers
+    /// outside the backend walk need the full set materialized).
+    pub fn flush(&mut self, set: &mut TensorSet) -> Result<()> {
+        for idx in 0..self.resident.len() {
+            if self.managed[idx] && !self.resident[idx] {
+                self.admit(set, idx)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn admit(&mut self, set: &mut TensorSet, idx: usize) -> Result<()> {
+        if self.resident[idx] {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let (data, hit) = self.store.take(idx)?;
+        if hit {
+            self.prefetch_hits += 1;
+        } else {
+            self.prefetch_misses += 1;
+            self.stall_nanos += t0.elapsed().as_nanos() as u64;
+        }
+        let expect: usize = set.tensors[idx].shape.iter().product();
+        if data.len() != expect {
+            bail!(
+                "host pool returned {} elements for tensor {:?} (shape wants {expect})",
+                data.len(),
+                set.names[idx]
+            );
+        }
+        if self.cfg.compress == Compression::F16 {
+            // Lossy round trip: the master's bits changed, so the device
+            // working copy must refresh (version bump → upload-cache miss).
+            set.tensor_mut(idx).data = data;
+        } else {
+            // Bit-identical content: restore without invalidating caches.
+            set.tensors[idx].data = data;
+        }
+        self.resident[idx] = true;
+        self.host_bytes -= self.cfg.compress.bytes(expect) as u64;
+        self.ledger.page_in(self.full_bytes[idx] as u64);
+        if self.requested[idx] {
+            self.requested[idx] = false;
+            self.buffer_bytes -= self.full_bytes[idx] as u64;
+        }
+        Ok(())
+    }
+
+    fn evict(&mut self, set: &mut TensorSet, idx: usize) -> Result<()> {
+        let data = std::mem::take(&mut set.tensors[idx].data);
+        let numel = data.len();
+        self.ledger.page_out(self.full_bytes[idx] as u64);
+        self.host_bytes += self.cfg.compress.bytes(numel) as u64;
+        self.peak_host_bytes = self.peak_host_bytes.max(self.host_bytes);
+        self.store.store(idx, data)?;
+        self.resident[idx] = false;
+        Ok(())
+    }
+
+    /// Full f32 bytes of parameter `idx` as recorded at attach (used by the
+    /// backend's upload accounting while the tensor is evicted).
+    pub fn full_bytes_of(&self, idx: usize) -> Option<usize> {
+        self.full_bytes.get(idx).copied()
+    }
+
+    /// Does the pool currently hold any evicted master?  While true, the
+    /// pager is the *only* owner of that data — dropping it would destroy
+    /// parameters, so reconfiguration must flush first.
+    pub fn holds_pages(&self) -> bool {
+        self.managed.iter().zip(&self.resident).any(|(m, r)| *m && !*r)
+    }
+
+    /// The accounting ledger (single source of truth for transfers).
+    pub fn ledger(&self) -> &OffloadLedger {
+        &self.ledger
+    }
+
+    /// Pool-side event counts (see [`PagedStore::events`]).
+    pub fn pool_events(&mut self) -> Result<(u64, u64)> {
+        self.store.events()
+    }
+
+    /// Reset peak gauges to current levels (per-run peak reporting).
+    pub fn reset_peaks(&mut self) {
+        self.ledger.peak_device_bytes = self.ledger.device_resident();
+        self.peak_buffer_bytes = self.buffer_bytes;
+        self.peak_host_bytes = self.host_bytes;
+    }
+
+    pub fn counters(&self) -> OffloadCounters {
+        OffloadCounters {
+            page_ins: self.ledger.page_ins,
+            page_outs: self.ledger.page_outs,
+            h2d_bytes: self.ledger.h2d_bytes,
+            d2h_bytes: self.ledger.d2h_bytes,
+            param_resident_bytes: self.ledger.device_resident(),
+            peak_param_resident_bytes: self.ledger.peak_device_bytes,
+            peak_prefetch_buffer_bytes: self.peak_buffer_bytes,
+            host_bytes: self.host_bytes,
+            peak_host_bytes: self.peak_host_bytes,
+            prefetch_hits: self.prefetch_hits,
+            prefetch_misses: self.prefetch_misses,
+            stall_nanos: self.stall_nanos,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn f16_roundtrip_is_idempotent_and_exact_on_representables() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 2.0f32.powi(-14), 0.099976] {
+            let once = f16_bits_to_f32(f32_to_f16_bits(x));
+            let twice = f16_bits_to_f32(f32_to_f16_bits(once));
+            assert_eq!(once.to_bits(), twice.to_bits(), "roundtrip must be idempotent for {x}");
+        }
+        // exactly-representable values survive untouched
+        for &x in &[1.0f32, 0.25, -3.5, 1024.0, 2.0f32.powi(-24)] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x} is f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_handles_specials_and_rounding() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00, "overflow → inf");
+        assert_eq!(f32_to_f16_bits(1e-9), 0, "underflow → 0");
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000, "underflow keeps the sign");
+        // ties-to-even: 2049/2048 is exactly halfway between 1.0 and the
+        // next f16 (1 + 2^-10) → rounds to the even mantissa (1.0 + 2^-10
+        // has odd LSB? 0x3c00 is even, 0x3c01 odd → picks 0x3c00).
+        let tie = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie), 0x3c00, "tie rounds to even");
+        // error of a random-ish value is within half an ulp (2^-11 rel.)
+        let x = 0.123456789f32;
+        let r = f16_bits_to_f32(f32_to_f16_bits(x));
+        assert!((r - x).abs() / x < 1e-3, "{x} → {r}");
+    }
+
+    #[test]
+    fn host_pool_roundtrips_lossless_and_compresses_f16() {
+        let data = vec![0.1f32, -2.5, 3.25, 1e-3];
+        let mut pool = HostPool::new(Compression::Lossless);
+        pool.store(0, data.clone());
+        assert_eq!(pool.fetch(0).unwrap(), data, "lossless is bit-identical");
+        assert!(pool.fetch(0).is_none(), "fetch removes the page");
+
+        let mut pool = HostPool::new(Compression::F16);
+        pool.store(1, data.clone());
+        let back = pool.fetch(1).unwrap();
+        assert_eq!(back[2], 3.25, "f16-exact value survives");
+        for (a, b) in back.iter().zip(&data) {
+            assert!((a - b).abs() <= b.abs() * 1e-3 + 1e-6, "{b} → {a}");
+        }
+        assert_eq!(pool.events(), (2, 2));
+    }
+
+    #[test]
+    fn paged_store_async_matches_sync() {
+        let data: Vec<f32> = (0..257).map(|i| i as f32 * 0.37 - 40.0).collect();
+        for prefetch in [false, true] {
+            let mut st = PagedStore::new(Compression::Lossless, prefetch);
+            st.store(3, data.clone()).unwrap();
+            st.store(5, vec![1.0; 8]).unwrap();
+            if prefetch {
+                assert!(st.request(3), "fetch posted");
+                assert!(!st.request(3), "double-request coalesced");
+            }
+            let (got, _) = st.take(3).unwrap();
+            assert_eq!(got, data, "prefetch={prefetch}");
+            let (got5, hit5) = st.take(5).unwrap();
+            assert_eq!(got5, vec![1.0; 8]);
+            assert!(!hit5, "unrequested take is a miss");
+            assert_eq!(st.events().unwrap(), (2, 2), "prefetch={prefetch}");
+            assert!(st.take(3).is_err(), "page gone after take");
+        }
+    }
+
+    fn toy_set() -> (TensorSet, Vec<Vec<usize>>) {
+        let mut set = TensorSet::new();
+        set.push("emb", Tensor::from_vec((0..8).map(|i| i as f32).collect(), &[8]));
+        set.push("l0.w", Tensor::from_vec(vec![0.5; 6], &[2, 3]));
+        set.push("head", Tensor::from_vec(vec![-1.0; 4], &[4]));
+        set.push("adapter", Tensor::from_vec(vec![9.0; 2], &[2]));
+        // three units; the adapter is unmanaged
+        (set, vec![vec![0], vec![1], vec![2]])
+    }
+
+    #[test]
+    fn pager_evicts_admits_and_enforces_residency() {
+        for prefetch in [false, true] {
+            let cfg = OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch };
+            let mut pg = UnitPager::new(cfg);
+            let (mut set, units) = toy_set();
+            let orig: Vec<Vec<f32>> = set.tensors.iter().map(|t| t.data.clone()).collect();
+            let managed_bytes: u64 = (orig[0].len() + orig[1].len() + orig[2].len()) as u64 * 4;
+            pg.attach(&mut set, units.clone()).unwrap();
+            // initial placement: managed tensors left the arena, no events
+            assert_eq!(set.tensors[0].data.len(), 0, "emb evicted");
+            assert_eq!(set.tensors[3].data, vec![9.0; 2], "adapter untouched");
+            assert_eq!(pg.counters().page_outs, 0, "initial placement is not an event");
+            assert_eq!(pg.counters().host_bytes, managed_bytes);
+
+            // walk: unit 0 in, out; unit 1 pinned in
+            pg.prefetch_unit(1);
+            pg.ensure_unit(&mut set, 0).unwrap();
+            assert_eq!(set.tensors[0].data, orig[0], "admitted bit-identical");
+            pg.pin_unit(1);
+            pg.ensure_unit(&mut set, 1).unwrap();
+            pg.release_unit(&mut set, 0).unwrap();
+            pg.release_unit(&mut set, 1).unwrap();
+            assert_eq!(set.tensors[1].data, orig[1], "pinned unit survives release");
+            assert_eq!(set.tensors[0].data.len(), 0, "unpinned unit evicted");
+            let c = pg.counters();
+            assert_eq!(c.param_resident_bytes, 24, "only l0.w (6 f32) resident");
+            assert!(c.peak_param_resident_bytes >= 24 + 32, "emb+w were co-resident");
+
+            pg.end_run(&mut set).unwrap();
+            assert_eq!(pg.counters().param_resident_bytes, 0, "end_run evicts the group");
+            pg.flush(&mut set).unwrap();
+            for (i, t) in set.tensors.iter().enumerate() {
+                assert_eq!(t.data, orig[i], "flush restores tensor {i} bit-identically");
+            }
+            // ledger ↔ pool single-source-of-truth: pool stores lead the
+            // ledger's page-outs by exactly the initial placement.
+            let (stores, fetches) = pg.pool_events().unwrap();
+            let c = pg.counters();
+            assert_eq!(stores, c.page_outs + 3, "stores = page-outs + initial placement");
+            assert_eq!(fetches, c.page_ins, "every fetch is a ledger page-in");
+            assert_eq!(c.host_bytes, 0, "pool drained after flush");
+        }
+    }
+
+    #[test]
+    fn staged_units_survive_end_run() {
+        // Prefetch mode: staging marks the next step's group to outlive
+        // end_run (cross-step double-buffering)…
+        let mut pg = UnitPager::new(OffloadCfg::host());
+        let (mut set, units) = toy_set();
+        let orig = set.tensors[2].data.clone();
+        pg.attach(&mut set, units.clone()).unwrap();
+        pg.stage_unit(2);
+        pg.ensure_unit(&mut set, 0).unwrap();
+        pg.ensure_unit(&mut set, 2).unwrap();
+        pg.end_run(&mut set).unwrap();
+        assert_eq!(set.tensors[2].data, orig, "staged unit stays resident across end_run");
+        assert_eq!(set.tensors[0].data.len(), 0, "unstaged unit is evicted");
+        // …a new staging set replaces the old one…
+        pg.clear_staged();
+        pg.stage_unit(1);
+        pg.end_run(&mut set).unwrap();
+        assert_eq!(set.tensors[2].data.len(), 0, "unstaged-now unit is evicted");
+        // …and synchronous mode ignores staging (tight residency baseline).
+        let mut pg =
+            UnitPager::new(OffloadCfg { enabled: true, prefetch: false, ..OffloadCfg::host() });
+        let (mut set, units) = toy_set();
+        pg.attach(&mut set, units).unwrap();
+        pg.stage_unit(2);
+        pg.ensure_unit(&mut set, 2).unwrap();
+        pg.end_run(&mut set).unwrap();
+        assert_eq!(set.tensors[2].data.len(), 0, "sync mode evicts staged units too");
+    }
+
+    #[test]
+    fn pager_f16_mode_is_lossy_but_stable() {
+        let cfg =
+            OffloadCfg { enabled: true, compress: Compression::F16, prefetch: false };
+        let mut pg = UnitPager::new(cfg);
+        let (mut set, units) = toy_set();
+        set.tensors[0].data = vec![0.1; 8]; // not f16-exact
+        let v0 = set.cache_key(0);
+        pg.attach(&mut set, units).unwrap();
+        assert_eq!(pg.counters().host_bytes, 18 * 2, "f16 halves the host bytes");
+        pg.ensure_unit(&mut set, 0).unwrap();
+        let once = set.tensors[0].data.clone();
+        assert_ne!(once, vec![0.1; 8], "f16 round trip is lossy");
+        assert!((once[0] - 0.1).abs() < 1e-3);
+        assert_ne!(set.cache_key(0), v0, "lossy admit must invalidate the upload cache");
+        // parked again: the second round trip changes nothing (idempotent)
+        pg.release_unit(&mut set, 0).unwrap();
+        pg.ensure_unit(&mut set, 0).unwrap();
+        assert_eq!(set.tensors[0].data, once, "second round trip is a fixed point");
+    }
+
+    #[test]
+    fn offload_cfg_parses_flags() {
+        let c = OffloadCfg::default();
+        assert!(!c.enabled && c.prefetch);
+        let c = c.with_flags(Some("host"), Some("f16"), Some("0")).unwrap();
+        assert!(c.enabled && !c.prefetch);
+        assert_eq!(c.compress, Compression::F16);
+        assert_eq!(c.name(), "host(f16, sync)");
+        assert_eq!(OffloadCfg::host().name(), "host(lossless, prefetch)");
+        assert!(OffloadCfg::default().with_flags(Some("gpu"), None, None).is_err());
+        assert!(OffloadCfg::default().with_flags(None, Some("f8"), None).is_err());
+        assert!(OffloadCfg::default().with_flags(None, None, Some("maybe")).is_err());
+    }
+}

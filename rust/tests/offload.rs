@@ -1,0 +1,357 @@
+//! Host paging tier acceptance (ISSUE 4):
+//!
+//! * a lossless host-paged run is **bit-identical** to the fully-resident
+//!   run — single grad executions on every native preset, and whole HiFT
+//!   training runs (losses, final params, final eval) on tiny;
+//! * prefetch-on ≡ prefetch-off (the double buffer changes wall-clock,
+//!   never results);
+//! * the f16-compressed host store is lossy but stays within a stated
+//!   drift bound, and the lossy path is actually exercised;
+//! * measured `peak_param_resident_bytes` is **enforced**: ≤ the active
+//!   group plus one transient walk unit (sync mode), far below keeping
+//!   every master resident;
+//! * the accounting ledger and the pool agree (one source of truth):
+//!   pool stores = ledger page-outs + the initial placement, pool fetches
+//!   = ledger page-ins, and `RuntimeStats` mirrors the pager exactly;
+//! * checkpoints written mid-offload are complete (masters paged back in
+//!   before serialization) and match the resident run;
+//! * MeZO — which mutates parameters outside the backend walk — refuses
+//!   to run with offload instead of silently dropping perturbations.
+
+use hift::backend::{
+    unit_artifact, Batch, Compression, ExecBackend, NativeBackend, OffloadCfg, PRESET_NAMES,
+};
+use hift::coordinator::lr::LrSchedule;
+use hift::coordinator::strategy::UpdateStrategy;
+use hift::coordinator::trainer::{self, CkptOpts, RunRecord, TrainCfg};
+use hift::data::{build_task, TaskGeom};
+use hift::optim::{OptimCfg, OptimKind};
+use hift::rng::Pcg32;
+use hift::strategies::{FineTuneStrategy, Hift, HiftCfg, StrategySpec};
+use hift::tensor::TensorSet;
+
+const HOST_SYNC: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: false };
+const HOST_PREFETCH: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: true };
+const HOST_F16: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::F16, prefetch: true };
+
+fn geom(be: &dyn ExecBackend) -> TaskGeom {
+    let c = &be.manifest().config;
+    TaskGeom::new(c.vocab, c.batch, c.seq_len)
+}
+
+fn small_batch(vocab: usize, s: usize, seed: u64) -> Batch {
+    let mut rng = Pcg32::seeded(seed);
+    let mut b = Batch::new(1, s);
+    for t in b.tokens.iter_mut() {
+        *t = rng.below(vocab) as i32;
+    }
+    for t in b.targets.iter_mut() {
+        *t = rng.below(vocab) as i32;
+    }
+    for w in b.weights.iter_mut() {
+        *w = 1.0;
+    }
+    b
+}
+
+/// Train HiFT for `steps` on tiny with the given offload mode; returns the
+/// run record and the final (flushed) parameters.
+fn train_tiny_hift(offload: Option<OffloadCfg>, m: usize, steps: u64) -> (RunRecord, TensorSet) {
+    let mut be = NativeBackend::preset("tiny", 0).unwrap();
+    if let Some(cfg) = offload {
+        be.set_offload(cfg).unwrap();
+    }
+    let manifest = be.manifest().clone();
+    let mut hift = Hift::pipelined(
+        HiftCfg {
+            m,
+            order: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Linear { lr: 4e-3, warmup: 0, total: 16 },
+            optim: OptimCfg::new(OptimKind::AdamW),
+        },
+        &manifest,
+        false,
+    )
+    .unwrap();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 21).unwrap();
+    let rec = trainer::train(
+        &mut be,
+        &mut hift,
+        &mut params,
+        task.as_mut(),
+        TrainCfg { steps, eval_every: 0, log_every: 0 },
+    )
+    .unwrap();
+    (rec, params)
+}
+
+#[test]
+fn lossless_paged_grad_run_is_bit_identical_on_all_presets() {
+    for preset in PRESET_NAMES {
+        let batch;
+        let reference = {
+            let mut be = NativeBackend::preset(preset, 2).unwrap();
+            let cfg = be.manifest().config.clone();
+            batch = small_batch(cfg.vocab, cfg.seq_len.min(4), 13);
+            let mut params = be.load_params("base").unwrap();
+            be.run(&unit_artifact(1), &mut params, &batch).unwrap()
+        };
+        for offload in [HOST_SYNC, HOST_PREFETCH] {
+            let mut be = NativeBackend::preset(preset, 2).unwrap();
+            be.set_offload(offload).unwrap();
+            let mut params = be.load_params("base").unwrap();
+            let got = be.run(&unit_artifact(1), &mut params, &batch).unwrap();
+            assert_eq!(reference.loss, got.loss, "{preset}/{}: loss", offload.name());
+            assert_eq!(reference.grads.len(), got.grads.len());
+            for (i, (a, g)) in reference.grads.iter().zip(&got.grads).enumerate() {
+                assert_eq!(
+                    a.data, g.data,
+                    "{preset}/{}: grad slot {i} must be bit-identical",
+                    offload.name()
+                );
+            }
+            assert!(
+                be.stats().offload_page_ins > 0,
+                "{preset}/{}: the paging tier must actually page",
+                offload.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn paged_hift_training_is_bit_identical_and_prefetch_equals_sync() {
+    let steps = 12u64;
+    let (rec_ref, p_ref) = train_tiny_hift(None, 2, steps);
+    for offload in [HOST_SYNC, HOST_PREFETCH] {
+        let (rec, p) = train_tiny_hift(Some(offload), 2, steps);
+        assert_eq!(
+            rec.losses.values, rec_ref.losses.values,
+            "{}: paged loss curve must equal resident",
+            offload.name()
+        );
+        assert_eq!(rec.final_eval, rec_ref.final_eval, "{}", offload.name());
+        for ((name, a), b) in p.names.iter().zip(&p.tensors).zip(&p_ref.tensors) {
+            assert_eq!(
+                a.data, b.data,
+                "{}/{name}: flushed paged params must equal resident",
+                offload.name()
+            );
+        }
+        assert!(rec.backend.offload_page_ins > 0, "{}: paging exercised", offload.name());
+    }
+}
+
+#[test]
+fn enforced_param_residency_stays_within_group_plus_walk_unit() {
+    // m=2 on tiny: the active group spans two units, and the bound
+    // group + one transient walk unit is strictly below keeping all four
+    // units resident — so this assertion only passes if eviction is real.
+    // (This is the plain-walk bound: an activation-checkpointing policy
+    // would add one more transient unit during recompute chains — see
+    // `memmodel::paged_param_bound`'s slots parameter.)
+    let m = 2usize;
+    let (rec, _) = train_tiny_hift(Some(HOST_SYNC), m, 8);
+    let be = NativeBackend::preset("tiny", 0).unwrap();
+    let vinfo = be.manifest().variant("base").unwrap();
+    let unit_bytes = be.manifest().unit_param_bytes("base").unwrap();
+    let max_unit = unit_bytes.iter().copied().max().unwrap();
+    let group = unit_bytes.chunks(m).map(|c| c.iter().sum::<u64>()).max().unwrap();
+    let total: u64 = unit_bytes.iter().sum();
+    assert!(group + max_unit < total, "bound must be distinguishable from all-resident");
+
+    let peak = rec.backend.peak_param_resident_bytes;
+    assert!(peak > 0, "peak must be measured, not zero");
+    assert!(
+        peak <= group + max_unit,
+        "sync paging: peak {peak} must be ≤ group {group} + walk unit {max_unit}"
+    );
+    // Optimizer state pages per tensor through the fused sink: its enforced
+    // device peak is one tensor's AdamW moments (2 × f32), far below the
+    // group's state — together, para+opt peaks fit "one group + one
+    // prefetch buffer" with room to spare.
+    let max_tensor_bytes =
+        vinfo.params.iter().map(|p| p.size as u64 * 4).max().unwrap();
+    let (_, _, _, opt_peak) = rec.paging.expect("hift has a paging ledger");
+    assert!(opt_peak <= 2 * max_tensor_bytes, "opt peak {opt_peak} ≤ one tensor's moments");
+    assert!(
+        peak + opt_peak <= group + max_unit + 2 * max_tensor_bytes,
+        "enforced total ≤ one group + one prefetch buffer worth of slack"
+    );
+
+    // Prefetch mode stages the *next* group through `end_run` (cross-step
+    // double-buffering), so its arena bound is the current group + the
+    // staged next group + one walk unit — "one group + one prefetch
+    // buffer".  At m=1 on tiny that is still strictly below all-resident
+    // (m=2 would be degenerate: two groups = the whole model).
+    let group1 = max_unit; // m=1: the peak group is the largest unit
+    let (rec_pf, _) = train_tiny_hift(Some(HOST_PREFETCH), 1, 8);
+    let pf_peak = rec_pf.backend.peak_param_resident_bytes;
+    assert!(
+        pf_peak <= 2 * group1 + max_unit,
+        "prefetch: peak {pf_peak} ≤ group + staged group + walk unit"
+    );
+    assert!(pf_peak < total, "prefetch residency must still beat all-resident");
+    assert!(
+        rec_pf.backend.peak_prefetch_buffer_bytes <= group1 + max_unit,
+        "double buffer holds at most the staged group + one walk unit in flight"
+    );
+}
+
+#[test]
+fn f16_host_store_is_lossy_but_within_drift_bound() {
+    let steps = 12u64;
+    let (rec_ref, p_ref) = train_tiny_hift(None, 1, steps);
+    let (rec, p) = train_tiny_hift(Some(HOST_F16), 1, steps);
+    // the lossy path must actually be exercised…
+    let mut any_diff = false;
+    for (a, b) in p.tensors.iter().zip(&p_ref.tensors) {
+        if a.data != b.data {
+            any_diff = true;
+        }
+    }
+    assert!(any_diff, "f16 paging must not be a silent no-op");
+    // …but stays within a stated drift band: losses finite and close,
+    // parameters close in relative L2.
+    for (l, r) in rec.losses.values.iter().zip(&rec_ref.losses.values) {
+        assert!(l.is_finite(), "f16 run must stay finite");
+        assert!((l - r).abs() < 0.1, "per-step loss drift bounded: {l} vs {r}");
+    }
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in p.tensors.iter().zip(&p_ref.tensors) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            num += ((x - y) as f64).powi(2);
+            den += (*y as f64).powi(2);
+        }
+    }
+    let rel = (num / den.max(1e-12)).sqrt();
+    assert!(rel < 0.05, "f16 parameter drift {rel} must stay within 5% relative L2");
+    // and the host tier really is half-size
+    let (rec_lossless, _) = train_tiny_hift(Some(HOST_SYNC), 1, 2);
+    assert!(
+        rec.backend.peak_host_pool_bytes <= rec_lossless.backend.peak_host_pool_bytes / 2 + 64,
+        "f16 host pool {} must be ≈ half the lossless pool {}",
+        rec.backend.peak_host_pool_bytes,
+        rec_lossless.backend.peak_host_pool_bytes
+    );
+}
+
+#[test]
+fn ledger_counts_equal_pool_transfer_events() {
+    for offload in [HOST_SYNC, HOST_PREFETCH] {
+        let mut be = NativeBackend::preset("tiny", 0).unwrap();
+        be.set_offload(offload).unwrap();
+        let manifest = be.manifest().clone();
+        let n_managed = manifest.variant("base").unwrap().params.len() as u64;
+        let mut hift = Hift::pipelined(
+            HiftCfg {
+                m: 1,
+                order: UpdateStrategy::Bottom2Up,
+                schedule: LrSchedule::Const { lr: 2e-3 },
+                optim: OptimCfg::new(OptimKind::AdamW),
+            },
+            &manifest,
+            false,
+        )
+        .unwrap();
+        let mut params = be.load_params("base").unwrap();
+        let mut task = build_task("motif4", geom(&be), 7).unwrap();
+        for _ in 0..6 {
+            let b = task.train_batch();
+            hift.step(&mut be, &mut params, &b).unwrap();
+        }
+        be.flush_offload(&mut params).unwrap();
+        let counters = be.offload_counters().expect("pager active");
+        let (stores, fetches) = be.offload_pool_events().unwrap().expect("pager active");
+        // One source of truth: the ledger *is* the pool's accounting —
+        // stores lead page-outs by exactly the initial placement.
+        assert_eq!(stores, counters.page_outs + n_managed, "{}", offload.name());
+        assert_eq!(fetches, counters.page_ins, "{}", offload.name());
+        // RuntimeStats mirrors the pager's ledger, event for event.
+        let stats = be.stats();
+        assert_eq!(stats.offload_page_ins, counters.page_ins);
+        assert_eq!(stats.offload_page_outs, counters.page_outs);
+        assert_eq!(stats.offload_h2d_bytes, counters.h2d_bytes);
+        assert_eq!(stats.offload_d2h_bytes, counters.d2h_bytes);
+        // The base variant has no adapters: after a flush every managed
+        // byte is back in the arena, so resident bytes equal the whole set.
+        assert_eq!(
+            counters.param_resident_bytes,
+            params.total_bytes() as u64,
+            "flush restored everything"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_written_under_offload_is_complete_and_matches_resident() {
+    use hift::tensor::checkpoint;
+    let dir = std::env::temp_dir().join(format!("hift_offload_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let steps = 6u64;
+    let (_, p_ref) = train_tiny_hift(None, 1, steps);
+
+    let mut be = NativeBackend::preset("tiny", 0).unwrap();
+    be.set_offload(HOST_SYNC).unwrap();
+    let manifest = be.manifest().clone();
+    let mut hift = Hift::pipelined(
+        HiftCfg {
+            m: 1,
+            order: UpdateStrategy::Bottom2Up,
+            schedule: LrSchedule::Linear { lr: 4e-3, warmup: 0, total: 16 },
+            optim: OptimCfg::new(OptimKind::AdamW),
+        },
+        &manifest,
+        false,
+    )
+    .unwrap();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 21).unwrap();
+    trainer::train_ckpt(
+        &mut be,
+        &mut hift,
+        &mut params,
+        task.as_mut(),
+        TrainCfg { steps, eval_every: 0, log_every: 0 },
+        &CkptOpts { save_dir: Some(dir.clone()), save_every: 0, ..Default::default() },
+    )
+    .unwrap();
+
+    let ck = checkpoint::load(&dir).unwrap();
+    assert_eq!(ck.meta.step, steps);
+    for (i, t) in ck.params.tensors.iter().enumerate() {
+        let expect: usize = t.shape.iter().product();
+        assert_eq!(
+            t.numel(),
+            expect,
+            "checkpointed tensor {:?} must be fully materialized",
+            ck.params.names[i]
+        );
+        assert_eq!(
+            t.data, p_ref.tensors[i].data,
+            "checkpointed tensor {:?} must match the resident run",
+            ck.params.names[i]
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mezo_refuses_offload_instead_of_corrupting() {
+    let mut be = NativeBackend::preset("tiny", 0).unwrap();
+    be.set_offload(OffloadCfg::host()).unwrap();
+    let manifest = be.manifest().clone();
+    let mut spec = StrategySpec::new("mezo", OptimKind::Sgd, 3e-4, 4);
+    spec.seed = 1;
+    let mut mezo = spec.build(&manifest).unwrap();
+    let mut params = be.load_params("base").unwrap();
+    let mut task = build_task("motif4", geom(&be), 3).unwrap();
+    let b = task.train_batch();
+    let err = mezo.step(&mut be, &mut params, &b).unwrap_err();
+    assert!(err.to_string().contains("offload"), "{err}");
+}
