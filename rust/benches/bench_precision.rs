@@ -1,0 +1,10 @@
+//! `cargo bench --bench bench_precision` — the mixed-precision compute
+//! exhibit: f32 vs bf16 vs f16 throughput, peak activation bytes and loss
+//! drift (see hift::bench::exhibits).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::precision(&mut b)?;
+    eprintln!("[bench_precision] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

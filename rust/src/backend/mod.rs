@@ -58,8 +58,10 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::optim::ScalerEvent;
 use crate::tensor::paged::OffloadCounters;
 use crate::tensor::{Tensor, TensorSet};
+pub use crate::tensor::half::Precision;
 pub use crate::tensor::paged::{Compression, OffloadCfg};
 pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 pub use native::{NativeBackend, PRESET_NAMES};
@@ -344,6 +346,18 @@ pub struct RuntimeStats {
     pub prefetch_misses: u64,
     /// Nanoseconds the walk spent stalled waiting for page-ins.
     pub prefetch_stall_nanos: u64,
+    /// Gradients that arrived at an update sink with a NaN/Inf norm (their
+    /// updates were skipped — the numerics safety net; see
+    /// [`crate::optim::FusedApply`]).
+    pub nonfinite_grad_tensors: u64,
+    /// Whole steps dropped atomically because a gradient was non-finite
+    /// (the f16 loss-scaler's skip-step path).
+    pub nonfinite_grad_steps: u64,
+    /// Loss-scale doublings / halvings performed by the dynamic scaler.
+    pub loss_scale_growths: u64,
+    pub loss_scale_backoffs: u64,
+    /// Current loss scale (gauge; 0 = scaler never engaged, 1 = unscaled).
+    pub loss_scale: f64,
 }
 
 impl RuntimeStats {
@@ -376,6 +390,11 @@ impl RuntimeStats {
             prefetch_hits: self.prefetch_hits - start.prefetch_hits,
             prefetch_misses: self.prefetch_misses - start.prefetch_misses,
             prefetch_stall_nanos: self.prefetch_stall_nanos - start.prefetch_stall_nanos,
+            nonfinite_grad_tensors: self.nonfinite_grad_tensors - start.nonfinite_grad_tensors,
+            nonfinite_grad_steps: self.nonfinite_grad_steps - start.nonfinite_grad_steps,
+            loss_scale_growths: self.loss_scale_growths - start.loss_scale_growths,
+            loss_scale_backoffs: self.loss_scale_backoffs - start.loss_scale_backoffs,
+            loss_scale: self.loss_scale,
         }
     }
 
@@ -549,6 +568,48 @@ pub trait ExecBackend {
         ActCkpt::None
     }
 
+    /// Select the compute precision for subsequent runs
+    /// (`--precision f32|bf16|f16`): forward activations, backward
+    /// intermediates and pre-upcast gradients run at this width while
+    /// parameter masters and optimizer state stay f32.  Backends without a
+    /// reduced-precision path (PJRT artifacts bake their dtypes in at
+    /// compile time; test doubles) accept only [`Precision::F32`].
+    fn set_precision(&mut self, prec: Precision) -> Result<()> {
+        if prec != Precision::F32 {
+            bail!(
+                "backend {:?} has no reduced-precision compute path (precision {})",
+                self.name(),
+                prec.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// The active compute precision.
+    fn precision(&self) -> Precision {
+        Precision::F32
+    }
+
+    /// Install the loss scale for subsequent grad runs (the f16 dynamic
+    /// scaler's per-step value; meaningful only when
+    /// [`Precision::needs_loss_scaling`]).  Backends that never scale may
+    /// ignore it.
+    fn set_loss_scale(&mut self, _scale: f32) {}
+
+    /// The loss scale the next grad run's backward seed will carry.
+    fn loss_scale(&self) -> f32 {
+        1.0
+    }
+
+    /// Record non-finite-gradient events into this backend's
+    /// [`RuntimeStats`] (`nonfinite_grad_tensors` / `nonfinite_grad_steps`).
+    /// Strategies call it after each step with what their sink observed.
+    fn note_numerics(&mut self, _nonfinite_grads: u64, _step_skipped: bool) {}
+
+    /// Record the dynamic loss scaler's current scale and grow/backoff
+    /// transition into [`RuntimeStats`].
+    fn note_loss_scale(&mut self, _scale: f32, _event: ScalerEvent) {}
+
     /// Configure the host-memory paging tier (`--offload host`): inactive
     /// HiFT groups' parameter masters physically leave the arena into a
     /// host pool and return on demand during the walk (see
@@ -647,6 +708,7 @@ pub fn build_backend(
 /// [`build_backend`] from the environment: `HIFT_ARTIFACTS` (PJRT),
 /// `HIFT_PRESET` (native geometry, default `tiny`), `HIFT_SEED`,
 /// `HIFT_ACT_CKPT` (activation-checkpoint policy: `none|sqrt|every_k(K)`),
+/// `HIFT_PRECISION` (compute precision: `f32|bf16|f16`),
 /// `HIFT_OFFLOAD`/`HIFT_OFFLOAD_COMPRESS`/`HIFT_PREFETCH` (host paging
 /// tier: `host|none`, `f16|none`, `1|0`).
 pub fn from_env() -> Result<Box<dyn ExecBackend>> {
@@ -658,6 +720,9 @@ pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     let mut be = build_backend(artifacts.as_deref(), preset.as_deref(), seed)?;
     if let Some(p) = std::env::var("HIFT_ACT_CKPT").ok().filter(|s| !s.is_empty()) {
         be.set_act_ckpt(ActCkpt::parse(&p)?)?;
+    }
+    if let Some(p) = std::env::var("HIFT_PRECISION").ok().filter(|s| !s.is_empty()) {
+        be.set_precision(Precision::parse(&p)?)?;
     }
     let offload = OffloadCfg::from_env()?;
     if offload.enabled {

@@ -32,6 +32,7 @@ use anyhow::{bail, Context, Result};
 use super::manifest::ModelCfg;
 use super::par;
 use super::{ActCkpt, Batch};
+use crate::tensor::half::{PrecBuf, Precision};
 use crate::tensor::paged::UnitPager;
 use crate::tensor::{Tensor, TensorSet};
 
@@ -187,58 +188,64 @@ fn scatter_heads(src: &[f32], b: usize, t: usize, h: usize, dh: usize) -> Vec<f3
     out
 }
 
-/// Per-layer activation cache.
+/// Per-layer activation cache.  The large `[BT, *]` buffers are stored at
+/// the compute precision's width ([`PrecBuf`]: plain f32 vectors in f32
+/// mode, packed 16-bit codewords under `--precision bf16|f16` — the
+/// physically halved retention the memory model's halved activation term
+/// describes).  LayerNorm row statistics stay f32 (standard mixed-precision
+/// practice; they are `O(BT)` against the buffers' `O(BT·D)`).
 struct LayerState {
-    x_in: Vec<f32>,
-    h1: Vec<f32>,
+    x_in: PrecBuf,
+    h1: PrecBuf,
     ln1: LnState,
     /// Effective W_q / W_v (LoRA-merged; plain copies otherwise).
-    wq_eff: Vec<f32>,
-    wv_eff: Vec<f32>,
+    wq_eff: PrecBuf,
+    wv_eff: PrecBuf,
     /// Post-IA³ q/k/v, flat `[BT, D]`.
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    q: PrecBuf,
+    k: PrecBuf,
+    v: PrecBuf,
     /// Pre-IA³ k/v (empty unless the variant is ia3).
-    k0: Vec<f32>,
-    v0: Vec<f32>,
+    k0: PrecBuf,
+    v0: PrecBuf,
     /// Softmax attention probabilities, `[B*H, T*T]` (0 above the diagonal).
-    probs: Vec<f32>,
+    probs: PrecBuf,
     /// Attention output before the out-projection, `[BT, D]`.
-    attn: Vec<f32>,
-    x_mid: Vec<f32>,
-    h2: Vec<f32>,
+    attn: PrecBuf,
+    x_mid: PrecBuf,
+    h2: PrecBuf,
     ln2: LnState,
     /// Pre-GELU FFN activation, `[BT, F]`.
-    a1: Vec<f32>,
-    mid0: Vec<f32>,
+    a1: PrecBuf,
+    mid0: PrecBuf,
     /// Post-IA³ FFN hidden (empty unless ia3).
-    mid_ia3: Vec<f32>,
+    mid_ia3: PrecBuf,
 }
 
 impl LayerState {
-    /// Bytes of activation buffers this cache retains (f32).
+    /// Bytes of activation buffers this cache retains (at their stored
+    /// width: 4 bytes/elem for f32 buffers, 2 for half-precision ones).
     fn bytes(&self) -> usize {
-        4 * (self.x_in.len()
-            + self.h1.len()
-            + self.wq_eff.len()
-            + self.wv_eff.len()
-            + self.q.len()
-            + self.k.len()
-            + self.v.len()
-            + self.k0.len()
-            + self.v0.len()
-            + self.probs.len()
-            + self.attn.len()
-            + self.x_mid.len()
-            + self.h2.len()
-            + self.a1.len()
-            + self.mid0.len()
-            + self.mid_ia3.len()
-            + self.ln1.mean.len()
-            + self.ln1.inv.len()
-            + self.ln2.mean.len()
-            + self.ln2.inv.len())
+        self.x_in.bytes()
+            + self.h1.bytes()
+            + self.wq_eff.bytes()
+            + self.wv_eff.bytes()
+            + self.q.bytes()
+            + self.k.bytes()
+            + self.v.bytes()
+            + self.k0.bytes()
+            + self.v0.bytes()
+            + self.probs.bytes()
+            + self.attn.bytes()
+            + self.x_mid.bytes()
+            + self.h2.bytes()
+            + self.a1.bytes()
+            + self.mid0.bytes()
+            + self.mid_ia3.bytes()
+            + 4 * (self.ln1.mean.len()
+                + self.ln1.inv.len()
+                + self.ln2.mean.len()
+                + self.ln2.inv.len())
     }
 }
 
@@ -253,17 +260,20 @@ pub struct FwdState {
     /// `Some` at checkpoint layers under a recompute policy.  Policy
     /// [`ActCkpt::None`] keeps each layer's input inside its `LayerState`
     /// instead, so every entry is `None`.
-    boundaries: Vec<Option<Vec<f32>>>,
-    x_fin: Vec<f32>,
-    hf: Vec<f32>,
+    boundaries: Vec<Option<PrecBuf>>,
+    x_fin: PrecBuf,
+    hf: PrecBuf,
     lnf: LnState,
     /// Final hidden states for the real (non-prefix) positions, `[BS, D]` —
     /// empty when there are no prefix positions (`hf` is used directly).
-    hf_s: Vec<f32>,
+    hf_s: PrecBuf,
     /// Output softmax probabilities, `[BS, V]`.
-    probs_out: Vec<f32>,
+    probs_out: PrecBuf,
     denom: f32,
     n_pre: usize,
+    /// Compute precision this forward ran at; backward replays it (same
+    /// quantization points) so the whole step is one consistent regime.
+    prec: Precision,
 }
 
 impl FwdState {
@@ -275,14 +285,24 @@ impl FwdState {
     /// and is deliberately not part of this cache figure.
     pub fn act_resident_bytes(&self) -> u64 {
         let layers: usize = self.layers.iter().flatten().map(LayerState::bytes).sum();
-        let bounds: usize = self.boundaries.iter().flatten().map(|b| b.len() * 4).sum();
-        let head = 4 * (self.x_fin.len()
-            + self.hf.len()
-            + self.hf_s.len()
-            + self.probs_out.len()
-            + self.lnf.mean.len()
-            + self.lnf.inv.len());
+        let bounds: usize = self.boundaries.iter().flatten().map(PrecBuf::bytes).sum();
+        let head = self.x_fin.bytes()
+            + self.hf.bytes()
+            + self.hf_s.bytes()
+            + self.probs_out.bytes()
+            + 4 * (self.lnf.mean.len() + self.lnf.inv.len());
         (layers + bounds + head) as u64
+    }
+
+    /// The compute precision the forward ran at.
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    /// Output softmax probabilities, `[BS, V]` (decoded to f32; borrowed —
+    /// free — in f32 mode).
+    pub fn probs_out(&self) -> std::borrow::Cow<'_, [f32]> {
+        self.probs_out.load()
     }
 }
 
@@ -337,8 +357,17 @@ fn check_variant(variant: &str) -> Result<()> {
 /// Shared by the cache-building forward, the checkpoint-only forward and
 /// the backward-time recompute (`recompute_layer`), so all three perform
 /// the exact same arithmetic — the recompute path is bit-identical by
-/// construction.  Returns the layer's activation cache and its output
+/// construction (quantization is deterministic, so this holds at every
+/// precision).  Returns the layer's activation cache and its output
 /// residual stream.
+///
+/// Under a half `prec`, every hot-loop product (projections, attention
+/// probabilities and context, GELU, residual sums) is rounded to the
+/// target precision the moment it is produced — downstream ops consume the
+/// rounded values, exactly as if the matmuls had emitted bf16/f16 — and
+/// the cache stores the rounded buffers at 16-bit width.  `Precision::F32`
+/// makes every one of these hooks a structural no-op.
+#[allow(clippy::too_many_arguments)]
 fn layer_fwd(
     cfg: &ModelCfg,
     variant: &str,
@@ -347,6 +376,7 @@ fn layer_fwd(
     x_in: Vec<f32>,
     bsz: usize,
     t_: usize,
+    prec: Precision,
 ) -> Result<(LayerState, Vec<f32>)> {
     let (d, heads, f_) = (cfg.d_model, cfg.n_heads, cfg.d_ff);
     let dh = d / heads;
@@ -357,14 +387,16 @@ fn layer_fwd(
     let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
     let pfx = format!("l{i}.");
 
-    let (h1, ln1) = ln_fwd(
+    let (mut h1, ln1) = ln_fwd(
         &x_in,
         &get(params, &format!("{pfx}ln1.scale"))?.data,
         &get(params, &format!("{pfx}ln1.bias"))?.data,
         d,
     );
+    prec.quantize_slice(&mut h1);
 
-    // effective projections (LoRA merges into W_q / W_v)
+    // effective projections (LoRA merges into W_q / W_v); under a half
+    // precision these are the layer's cast working copies of the weights.
     let mut wq_eff = get(params, &format!("{pfx}attn.wq"))?.data.clone();
     let mut wv_eff = get(params, &format!("{pfx}attn.wv"))?.data.clone();
     if lora {
@@ -380,16 +412,21 @@ fn layer_fwd(
         par::matmul(&av.data, &bv.data, &mut delta, d, r, d);
         axpy(&mut wv_eff, lora_sc, &delta);
     }
+    prec.quantize_slice(&mut wq_eff);
+    prec.quantize_slice(&mut wv_eff);
 
     let mut q = vec![0.0f32; bt * d];
     par::matmul(&h1, &wq_eff, &mut q, bt, d, d);
     add_bias(&mut q, &get(params, &format!("{pfx}attn.bq"))?.data);
+    prec.quantize_slice(&mut q);
     let mut k = vec![0.0f32; bt * d];
     par::matmul(&h1, &get(params, &format!("{pfx}attn.wk"))?.data, &mut k, bt, d, d);
     add_bias(&mut k, &get(params, &format!("{pfx}attn.bk"))?.data);
+    prec.quantize_slice(&mut k);
     let mut v = vec![0.0f32; bt * d];
     par::matmul(&h1, &wv_eff, &mut v, bt, d, d);
     add_bias(&mut v, &get(params, &format!("{pfx}attn.bv"))?.data);
+    prec.quantize_slice(&mut v);
 
     let (mut k0, mut v0) = (Vec::new(), Vec::new());
     if ia3 {
@@ -407,6 +444,8 @@ fn layer_fwd(
                 *vj *= lj;
             }
         }
+        prec.quantize_slice(&mut k);
+        prec.quantize_slice(&mut v);
     }
 
     // causal attention, head-major
@@ -435,8 +474,16 @@ fn layer_fwd(
             }
             let inv = 1.0 / sum;
             let orow = &mut och[ti * dh..][..dh];
+            // Probabilities are rounded *before* the context accumulation
+            // consumes them, so the cached probs backward reads are exactly
+            // the values the forward multiplied against V — the
+            // quantize-at-the-op contract.  (In f32 `quantize` is the
+            // identity and the split loop performs the same per-element
+            // arithmetic in the same order: bit-identical.)
+            for pj in prow.iter_mut().take(ti + 1) {
+                *pj = prec.quantize(*pj * inv);
+            }
             for j in 0..=ti {
-                prow[j] *= inv;
                 let pij = prow[j];
                 if pij != 0.0 {
                     axpy(orow, pij, &vb[j * dh..][..dh]);
@@ -444,28 +491,33 @@ fn layer_fwd(
             }
         }
     });
-    let attn = scatter_heads(&o_hm, bsz, t_, heads, dh);
+    let mut attn = scatter_heads(&o_hm, bsz, t_, heads, dh);
+    prec.quantize_slice(&mut attn);
 
     let mut x_mid = vec![0.0f32; bt * d];
     par::matmul(&attn, &get(params, &format!("{pfx}attn.wo"))?.data, &mut x_mid, bt, d, d);
     add_bias(&mut x_mid, &get(params, &format!("{pfx}attn.bo"))?.data);
     axpy(&mut x_mid, 1.0, &x_in);
+    prec.quantize_slice(&mut x_mid);
 
-    let (h2, ln2) = ln_fwd(
+    let (mut h2, ln2) = ln_fwd(
         &x_mid,
         &get(params, &format!("{pfx}ln2.scale"))?.data,
         &get(params, &format!("{pfx}ln2.bias"))?.data,
         d,
     );
+    prec.quantize_slice(&mut h2);
     let mut a1 = vec![0.0f32; bt * f_];
     par::matmul(&h2, &get(params, &format!("{pfx}ffn.w1"))?.data, &mut a1, bt, d, f_);
     add_bias(&mut a1, &get(params, &format!("{pfx}ffn.b1"))?.data);
+    prec.quantize_slice(&mut a1);
     let mut mid0 = a1.clone();
     par::par_rows(&mut mid0, f_, (32_768 / f_.max(1)).max(1), |_, chunk| {
         for z in chunk.iter_mut() {
             *z = gelu(*z);
         }
     });
+    prec.quantize_slice(&mut mid0);
     let mut mid_ia3 = Vec::new();
     if ia3 {
         let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
@@ -475,33 +527,35 @@ fn layer_fwd(
                 *mj *= lj;
             }
         }
+        prec.quantize_slice(&mut mid_ia3);
     }
     let mid_ref: &[f32] = if ia3 { &mid_ia3 } else { &mid0 };
     let mut x_out = vec![0.0f32; bt * d];
     par::matmul(mid_ref, &get(params, &format!("{pfx}ffn.w2"))?.data, &mut x_out, bt, f_, d);
     add_bias(&mut x_out, &get(params, &format!("{pfx}ffn.b2"))?.data);
     axpy(&mut x_out, 1.0, &x_mid);
+    prec.quantize_slice(&mut x_out);
 
     Ok((
         LayerState {
-            x_in,
-            h1,
+            x_in: PrecBuf::store(prec, x_in),
+            h1: PrecBuf::store(prec, h1),
             ln1,
-            wq_eff,
-            wv_eff,
-            q,
-            k,
-            v,
-            k0,
-            v0,
-            probs,
-            attn,
-            x_mid,
-            h2,
+            wq_eff: PrecBuf::store(prec, wq_eff),
+            wv_eff: PrecBuf::store(prec, wv_eff),
+            q: PrecBuf::store(prec, q),
+            k: PrecBuf::store(prec, k),
+            v: PrecBuf::store(prec, v),
+            k0: PrecBuf::store(prec, k0),
+            v0: PrecBuf::store(prec, v0),
+            probs: PrecBuf::store(prec, probs),
+            attn: PrecBuf::store(prec, attn),
+            x_mid: PrecBuf::store(prec, x_mid),
+            h2: PrecBuf::store(prec, h2),
             ln2,
-            a1,
-            mid0,
-            mid_ia3,
+            a1: PrecBuf::store(prec, a1),
+            mid0: PrecBuf::store(prec, mid0),
+            mid_ia3: PrecBuf::store(prec, mid_ia3),
         },
         x_out,
     ))
@@ -516,15 +570,16 @@ fn layer_flops(cfg: &ModelCfg, bsz: usize, t_: usize) -> u64 {
     (2 * bt * d * (4 * d + 2 * f) + 4 * bt * t_ * d) as u64
 }
 
-/// Run the model forward with full activation caching ([`ActCkpt::None`])
-/// and no paging; see [`forward_ckpt`] for the checkpointing/paged variant.
+/// Run the model forward with full activation caching ([`ActCkpt::None`]),
+/// no paging and f32 compute; see [`forward_ckpt`] for the
+/// checkpointing/paged/reduced-precision variant.
 pub fn forward(
     cfg: &ModelCfg,
     variant: &str,
     params: &mut TensorSet,
     batch: &Batch,
 ) -> Result<FwdState> {
-    forward_ckpt(cfg, variant, params, batch, ActCkpt::None, None)
+    forward_ckpt(cfg, variant, params, batch, ActCkpt::None, None, Precision::F32)
 }
 
 /// Run the model forward under an activation-checkpointing `policy`;
@@ -540,6 +595,14 @@ pub fn forward(
 /// behind the compute, and evicts units it has passed — only pinned units
 /// (the run's trainable group) stay resident.  Lossless paging restores the
 /// exact bits, so results stay bit-identical to the resident walk.
+///
+/// `prec` selects the compute precision (`--precision f32|bf16|f16`):
+/// under a half mode every block-level product is rounded to the target
+/// format as it is produced and the retained caches store 16-bit words
+/// (half the activation residency); the softmax/loss head stays f32, as is
+/// standard for mixed-precision training.  [`Precision::F32`] is
+/// bit-identical to the historical path — every hook is a no-op.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_ckpt(
     cfg: &ModelCfg,
     variant: &str,
@@ -547,6 +610,7 @@ pub fn forward_ckpt(
     batch: &Batch,
     policy: ActCkpt,
     mut pager: Option<&mut UnitPager>,
+    prec: Precision,
 ) -> Result<FwdState> {
     check_variant(variant)?;
     batch.validate()?;
@@ -600,11 +664,12 @@ pub fn forward_ckpt(
     if let Some(pg) = pager.as_deref_mut() {
         pg.release_unit(params, 0)?;
     }
+    prec.quantize_slice(&mut x0);
 
     // --- transformer blocks -------------------------------------------
     let seg = policy.seg_len(cfg.n_layers);
     let mut layers: Vec<Option<LayerState>> = Vec::with_capacity(cfg.n_layers);
-    let mut boundaries: Vec<Option<Vec<f32>>> = Vec::with_capacity(cfg.n_layers);
+    let mut boundaries: Vec<Option<PrecBuf>> = Vec::with_capacity(cfg.n_layers);
     let mut x = x0;
     for i in 0..cfg.n_layers {
         if let Some(pg) = pager.as_deref_mut() {
@@ -614,7 +679,7 @@ pub fn forward_ckpt(
             pg.prefetch_unit(if i + 2 <= cfg.n_layers { i + 2 } else { cfg.n_layers + 1 });
         }
         let x_in = x;
-        let (state, x_out) = layer_fwd(cfg, variant, params, i, x_in, bsz, t_)?;
+        let (state, x_out) = layer_fwd(cfg, variant, params, i, x_in, bsz, t_, prec)?;
         if let Some(pg) = pager.as_deref_mut() {
             pg.release_unit(params, i + 1)?;
         }
@@ -640,8 +705,9 @@ pub fn forward_ckpt(
     if let Some(pg) = pager.as_deref_mut() {
         pg.ensure_unit(params, cfg.n_layers + 1)?;
     }
-    let (hf, lnf) =
+    let (mut hf, lnf) =
         ln_fwd(&x_fin, &get(params, "ln_f.scale")?.data, &get(params, "ln_f.bias")?.data, d);
+    prec.quantize_slice(&mut hf);
     let hf_s = if p_ == 0 {
         Vec::new() // hf already is [BS, D]; avoid duplicating it
     } else {
@@ -658,6 +724,9 @@ pub fn forward_ckpt(
     let mut logits = vec![0.0f32; bs * v_];
     par::matmul(hf_s_ref, &get(params, "head.w")?.data, &mut logits, bs, d, v_);
     add_bias(&mut logits, &get(params, "head.b")?.data);
+    // The logits leave the half-precision region here: softmax and the
+    // masked loss run in f32 (standard mixed-precision head handling).
+    prec.quantize_slice(&mut logits);
 
     // In-place softmax; per-row (nll, correct) side-channel.
     let mut rowstats = vec![0.0f32; bs * 2];
@@ -696,19 +765,30 @@ pub fn forward_ckpt(
         loss_acc += rowstats[r * 2] as f64 * w;
         ncorrect += rowstats[r * 2 + 1] as f64 * w;
     }
-    let denom = wsum.max(1e-6) as f32;
+    if wsum <= 0.0 {
+        // The old `wsum.max(1e-6)` fallback silently produced loss 0 /
+        // all-zero gradients for a batch whose loss mask selects nothing —
+        // a config bug that then reads as a perfectly converged model.
+        // Bail like the PR 3 empty-batch eval fix.
+        bail!(
+            "batch [{bsz}x{s}] has zero total loss-mask weight: no position is supervised \
+             (weighted loss would be 0/0)"
+        );
+    }
+    let denom = wsum as f32;
     Ok(FwdState {
         loss: (loss_acc / denom as f64) as f32,
         ncorrect: ncorrect as f32,
         layers,
         boundaries,
-        x_fin,
-        hf,
+        x_fin: PrecBuf::store(prec, x_fin),
+        hf: PrecBuf::store(prec, hf),
         lnf,
-        hf_s,
-        probs_out: logits,
+        hf_s: PrecBuf::store(prec, hf_s),
+        probs_out: PrecBuf::store(prec, logits),
         denom,
         n_pre: p_,
+        prec,
     })
 }
 
@@ -733,7 +813,7 @@ pub fn backward(
         grads.insert(name.to_string(), g);
         Ok(())
     };
-    backward_streamed(st, cfg, variant, params, batch, spec, &mut emit, None)?;
+    backward_streamed(st, cfg, variant, params, batch, spec, &mut emit, None, 1.0)?;
     Ok(grads)
 }
 
@@ -770,11 +850,12 @@ fn recompute_layer(
     bsz: usize,
     t_: usize,
     i: usize,
-    scratch: &mut [Option<Vec<f32>>],
+    scratch: &mut [Option<PrecBuf>],
     scratch_bytes: &mut u64,
     stats: &mut BwdStats,
     mut pager: Option<&mut UnitPager>,
 ) -> Result<LayerState> {
+    let prec = st.prec;
     // Nearest available boundary at or below layer i.
     let mut c = i;
     while scratch[c].is_none() && st.boundaries[c].is_none() {
@@ -785,6 +866,8 @@ fn recompute_layer(
     }
     // Chain the residual stream from the boundary up to layer i, parking
     // each intermediate layer input in `scratch` for the walk's descent.
+    // Scratch entries are stored at the compute precision's width (the
+    // parked values are already representable, so the round trip is exact).
     for j in c..i {
         // Paged walk: the chained layers' parameters return transiently
         // (their gradients have not been emitted, so re-reading them is
@@ -794,10 +877,10 @@ fn recompute_layer(
             pg.ensure_unit(params, j + 1)?;
         }
         let (x_j, from_scratch) = match scratch[j].take() {
-            Some(b) => (b, true),
-            None => (st.boundaries[j].as_ref().unwrap().clone(), false),
+            Some(b) => (b.into_vec(), true),
+            None => (st.boundaries[j].as_ref().unwrap().load().into_owned(), false),
         };
-        let (stj, x_out) = layer_fwd(cfg, variant, params, j, x_j, bsz, t_)?;
+        let (stj, x_out) = layer_fwd(cfg, variant, params, j, x_j, bsz, t_, prec)?;
         if let Some(pg) = pager.as_deref_mut() {
             pg.release_unit(params, j + 1)?;
         }
@@ -808,8 +891,9 @@ fn recompute_layer(
             scratch[j] = Some(x_in); // return the borrowed boundary
         }
         if scratch[j + 1].is_none() && st.boundaries[j + 1].is_none() {
-            *scratch_bytes += (x_out.len() * 4) as u64;
-            scratch[j + 1] = Some(x_out);
+            let parked = PrecBuf::store(prec, x_out);
+            *scratch_bytes += parked.bytes() as u64;
+            scratch[j + 1] = Some(parked);
             stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(*scratch_bytes);
         }
     }
@@ -817,12 +901,12 @@ fn recompute_layer(
     // `x_in`), so it leaves the scratch accounting.
     let x_i = match scratch[i].take() {
         Some(b) => {
-            *scratch_bytes -= (b.len() * 4) as u64;
-            b
+            *scratch_bytes -= b.bytes() as u64;
+            b.into_vec()
         }
-        None => st.boundaries[i].as_ref().unwrap().clone(),
+        None => st.boundaries[i].as_ref().unwrap().load().into_owned(),
     };
-    let (state, _x_out) = layer_fwd(cfg, variant, params, i, x_i, bsz, t_)?;
+    let (state, _x_out) = layer_fwd(cfg, variant, params, i, x_i, bsz, t_, prec)?;
     stats.recompute_layers += 1;
     stats.recompute_flops += layer_flops(cfg, bsz, t_);
     Ok(state)
@@ -854,6 +938,14 @@ fn recompute_layer(
 /// `recompute_layer` just before that layer's gradients are emitted; the
 /// returned [`BwdStats`] reports the recompute work and scratch residency
 /// (all zero on the fully-cached path).
+///
+/// The walk replays the forward's compute precision (`st.precision()`):
+/// under a half mode every propagated gradient buffer is rounded to the
+/// target format as it is produced.  `loss_scale` multiplies the backward
+/// seed (dynamic loss scaling for f16 — keep it `1.0` otherwise, which is
+/// bit-exact); emitted gradients carry the scale, and the caller divides
+/// it back out in f32 after emission (the native backend does, before the
+/// sink sees the gradient).
 #[allow(clippy::too_many_arguments)]
 pub fn backward_streamed(
     st: &FwdState,
@@ -864,6 +956,7 @@ pub fn backward_streamed(
     spec: &GradSpec,
     emit: &mut EmitFn<'_>,
     mut pager: Option<&mut UnitPager>,
+    loss_scale: f32,
 ) -> Result<BwdStats> {
     check_variant(variant)?;
     let (bsz, s) = (batch.b, batch.s);
@@ -879,17 +972,22 @@ pub fn backward_streamed(
     let ia3 = variant == "ia3";
     let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
     let head_unit = cfg.n_layers + 1;
+    let prec = st.prec;
 
     // --- loss → logits -------------------------------------------------
-    let mut dlogits = st.probs_out.clone();
+    // The seed carries the loss scale: every downstream f16 intermediate
+    // is shifted up by it, keeping small gradients above the subnormal
+    // floor.  (`w * 1.0` is exact, so the f32 path is untouched.)
+    let mut dlogits = st.probs_out.load().into_owned();
     for r in 0..bs {
-        let w = batch.weights[r] / st.denom;
+        let w = batch.weights[r] * loss_scale / st.denom;
         let row = &mut dlogits[r * v_..(r + 1) * v_];
         row[batch.targets[r] as usize] -= 1.0;
         for z in row.iter_mut() {
             *z *= w;
         }
     }
+    prec.quantize_slice(&mut dlogits);
 
     // --- head ----------------------------------------------------------
     // Propagate through the head *before* emitting its gradients: once a
@@ -900,6 +998,7 @@ pub fn backward_streamed(
         let head_w = get(params, "head.w")?;
         par::matmul_bt(&dlogits, &head_w.data, &mut dhf_s, bs, v_, d);
     }
+    prec.quantize_slice(&mut dhf_s);
     let dhf = if p_ == 0 {
         dhf_s
     } else {
@@ -912,16 +1011,20 @@ pub fn backward_streamed(
         }
         out
     };
+    let x_fin_l = st.x_fin.load();
     let (mut dx, dscale_f, dbias_f) = {
         let scale_f = get(params, "ln_f.scale")?;
-        ln_bwd(&dhf, &st.x_fin, &st.lnf, &scale_f.data, d)
+        ln_bwd(&dhf, &x_fin_l, &st.lnf, &scale_f.data, d)
     };
     drop(dhf);
+    prec.quantize_slice(&mut dx);
     if spec.emit(head_unit) {
         emit("ln_f.scale", Tensor::from_vec(dscale_f, &[d]), params)?;
         emit("ln_f.bias", Tensor::from_vec(dbias_f, &[d]), params)?;
         if spec.dense {
-            let hf_s: &[f32] = if p_ == 0 { &st.hf } else { &st.hf_s };
+            let hf_l = st.hf.load();
+            let hfs_l = st.hf_s.load();
+            let hf_s: &[f32] = if p_ == 0 { &hf_l } else { &hfs_l };
             let mut dhead_w = vec![0.0f32; d * v_];
             par::matmul_at(hf_s, &dlogits, &mut dhead_w, bs, d, v_);
             emit("head.w", Tensor::from_vec(dhead_w, &[d, v_]), params)?;
@@ -937,7 +1040,7 @@ pub fn backward_streamed(
 
     // --- blocks, top-down ----------------------------------------------
     let mut bstats = BwdStats::default();
-    let mut scratch: Vec<Option<Vec<f32>>> = vec![None; cfg.n_layers];
+    let mut scratch: Vec<Option<PrecBuf>> = vec![None; cfg.n_layers];
     let mut scratch_bytes = 0u64;
     for i in (0..cfg.n_layers).rev() {
         if i + 1 < spec.min_unit {
@@ -973,7 +1076,26 @@ pub fn backward_streamed(
         let pfx = format!("l{i}.");
         let emit_unit = spec.emit(i + 1);
         let emit_w = emit_unit && spec.dense;
-        let mid_ref: &[f32] = if ia3 { &ls.mid_ia3 } else { &ls.mid0 };
+        // Decode the layer's caches once (borrowed — free — in f32 mode;
+        // an owned 16→32-bit expansion under the half modes, transient
+        // working memory like backward's own gradient temporaries).
+        let a1_l = ls.a1.load();
+        let mid0_l = ls.mid0.load();
+        let mid_ia3_l = ls.mid_ia3.load();
+        let x_in_l = ls.x_in.load();
+        let x_mid_l = ls.x_mid.load();
+        let h1_l = ls.h1.load();
+        let h2_l = ls.h2.load();
+        let q_l = ls.q.load();
+        let k_l = ls.k.load();
+        let v_l = ls.v.load();
+        let k0_l = ls.k0.load();
+        let v0_l = ls.v0.load();
+        let probs_l = ls.probs.load();
+        let attn_l = ls.attn.load();
+        let wq_eff_l = ls.wq_eff.load();
+        let wv_eff_l = ls.wv_eff.load();
+        let mid_ref: &[f32] = if ia3 { &mid_ia3_l } else { &mid0_l };
 
         // ---- phase 1: propagate activation gradients.  Every read of
         // this layer's parameters happens here, before any of its
@@ -991,7 +1113,7 @@ pub fn backward_streamed(
                 dlff = vec![0.0f32; f_];
                 for r in 0..bt {
                     for j in 0..f_ {
-                        dlff[j] += dmid[r * f_ + j] * ls.mid0[r * f_ + j];
+                        dlff[j] += dmid[r * f_ + j] * mid0_l[r * f_ + j];
                     }
                 }
             }
@@ -1001,10 +1123,11 @@ pub fn backward_streamed(
                 }
             }
         }
+        prec.quantize_slice(&mut dmid);
         // GELU'
         let mut da1 = dmid;
         {
-            let a1 = &ls.a1;
+            let a1: &[f32] = &a1_l;
             par::par_rows(&mut da1, f_, (32_768 / f_.max(1)).max(1), |r0, chunk| {
                 let base = r0 * f_;
                 for (off, z) in chunk.iter_mut().enumerate() {
@@ -1012,14 +1135,16 @@ pub fn backward_streamed(
                 }
             });
         }
+        prec.quantize_slice(&mut da1);
         let mut dh2 = vec![0.0f32; bt * d];
         {
             let w1 = get(params, &format!("{pfx}ffn.w1"))?;
             par::matmul_bt(&da1, &w1.data, &mut dh2, bt, f_, d);
         }
+        prec.quantize_slice(&mut dh2);
         let (dx_ln2, dsc2, dbi2) = {
             let sc2 = get(params, &format!("{pfx}ln2.scale"))?;
-            ln_bwd(&dh2, &ls.x_mid, &ls.ln2, &sc2.data, d)
+            ln_bwd(&dh2, &x_mid_l, &ls.ln2, &sc2.data, d)
         };
         drop(dh2);
         // Keep the layer-top gradient alive only when phase 2 will consume
@@ -1029,6 +1154,7 @@ pub fn backward_streamed(
             if emit_unit { (dx_in.clone(), dx_in) } else { (dx_in, Vec::new()) };
         axpy(&mut dx_mid, 1.0, &dx_ln2);
         drop(dx_ln2);
+        prec.quantize_slice(&mut dx_mid);
 
         // attention out-projection input gradient
         let mut dattn = vec![0.0f32; bt * d];
@@ -1036,16 +1162,18 @@ pub fn backward_streamed(
             let wo = get(params, &format!("{pfx}attn.wo"))?;
             par::matmul_bt(&dx_mid, &wo.data, &mut dattn, bt, d, d);
         }
+        prec.quantize_slice(&mut dattn);
 
         // attention core
-        let q_hm = gather_heads(&ls.q, bsz, t_, heads, dh);
-        let k_hm = gather_heads(&ls.k, bsz, t_, heads, dh);
-        let v_hm = gather_heads(&ls.v, bsz, t_, heads, dh);
+        let q_hm = gather_heads(&q_l, bsz, t_, heads, dh);
+        let k_hm = gather_heads(&k_l, bsz, t_, heads, dh);
+        let v_hm = gather_heads(&v_l, bsz, t_, heads, dh);
         let do_hm = gather_heads(&dattn, bsz, t_, heads, dh);
         drop(dattn);
         let mut dq_hm = vec![0.0f32; bsz * heads * t_ * dh];
         let mut dk_hm = vec![0.0f32; bsz * heads * t_ * dh];
         let mut dv_hm = vec![0.0f32; bsz * heads * t_ * dh];
+        let probs_s: &[f32] = &probs_l;
         par::par_items3(
             &mut dq_hm,
             t_ * dh,
@@ -1054,7 +1182,7 @@ pub fn backward_streamed(
             &mut dv_hm,
             t_ * dh,
             |bh, dqc, dkc, dvc| {
-                let pch = &ls.probs[bh * t_ * t_..][..t_ * t_];
+                let pch = &probs_s[bh * t_ * t_..][..t_ * t_];
                 let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
                 let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
                 let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
@@ -1083,9 +1211,10 @@ pub fn backward_streamed(
                 }
             },
         );
-        let dq = scatter_heads(&dq_hm, bsz, t_, heads, dh);
+        let mut dq = scatter_heads(&dq_hm, bsz, t_, heads, dh);
         let mut dk = scatter_heads(&dk_hm, bsz, t_, heads, dh);
         let mut dv = scatter_heads(&dv_hm, bsz, t_, heads, dh);
+        prec.quantize_slice(&mut dq);
 
         // IA³ on k/v (gradients flow to the pre-scale activations)
         let (mut dlk, mut dlv) = (Vec::new(), Vec::new());
@@ -1097,8 +1226,8 @@ pub fn backward_streamed(
                 dlv = vec![0.0f32; d];
                 for r in 0..bt {
                     for j in 0..d {
-                        dlk[j] += dk[r * d + j] * ls.k0[r * d + j];
-                        dlv[j] += dv[r * d + j] * ls.v0[r * d + j];
+                        dlk[j] += dk[r * d + j] * k0_l[r * d + j];
+                        dlv[j] += dv[r * d + j] * v0_l[r * d + j];
                     }
                 }
             }
@@ -1113,6 +1242,8 @@ pub fn backward_streamed(
                 }
             }
         }
+        prec.quantize_slice(&mut dk);
+        prec.quantize_slice(&mut dv);
 
         // LoRA factor gradients (chain rule through dW_q/dW_v) are
         // computed before any emission so the reads of the LoRA factors
@@ -1122,9 +1253,9 @@ pub fn backward_streamed(
         if lora && spec.adapters {
             let r = cfg.lora_rank;
             let mut dwq_full = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dq, &mut dwq_full, bt, d, d);
+            par::matmul_at(&h1_l, &dq, &mut dwq_full, bt, d, d);
             let mut dwv_full = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dv, &mut dwv_full, bt, d, d);
+            par::matmul_at(&h1_l, &dv, &mut dwv_full, bt, d, d);
             let aq = get(params, &format!("{pfx}lora.aq"))?;
             let bq = get(params, &format!("{pfx}lora.bq"))?;
             let av = get(params, &format!("{pfx}lora.av"))?;
@@ -1149,15 +1280,16 @@ pub fn backward_streamed(
 
         // dh1 and the LN1 backward complete the layer's parameter reads.
         let mut dh1 = vec![0.0f32; bt * d];
-        par::matmul_bt(&dq, &ls.wq_eff, &mut dh1, bt, d, d);
+        par::matmul_bt(&dq, &wq_eff_l, &mut dh1, bt, d, d);
         {
             let wk = get(params, &format!("{pfx}attn.wk"))?;
             par::matmul_bt(&dk, &wk.data, &mut dh1, bt, d, d);
         }
-        par::matmul_bt(&dv, &ls.wv_eff, &mut dh1, bt, d, d);
+        par::matmul_bt(&dv, &wv_eff_l, &mut dh1, bt, d, d);
+        prec.quantize_slice(&mut dh1);
         let (dx_ln1, dsc1, dbi1) = {
             let sc1 = get(params, &format!("{pfx}ln1.scale"))?;
-            ln_bwd(&dh1, &ls.x_in, &ls.ln1, &sc1.data, d)
+            ln_bwd(&dh1, &x_in_l, &ls.ln1, &sc1.data, d)
         };
         drop(dh1);
 
@@ -1170,7 +1302,7 @@ pub fn backward_streamed(
         }
         if emit_w {
             let mut dwq = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dq, &mut dwq, bt, d, d);
+            par::matmul_at(&h1_l, &dq, &mut dwq, bt, d, d);
             emit(&format!("{pfx}attn.wq"), Tensor::from_vec(dwq, &[d, d]), params)?;
         }
         if emit_unit {
@@ -1178,7 +1310,7 @@ pub fn backward_streamed(
         }
         if emit_w {
             let mut dwk = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dk, &mut dwk, bt, d, d);
+            par::matmul_at(&h1_l, &dk, &mut dwk, bt, d, d);
             emit(&format!("{pfx}attn.wk"), Tensor::from_vec(dwk, &[d, d]), params)?;
         }
         if emit_unit {
@@ -1186,7 +1318,7 @@ pub fn backward_streamed(
         }
         if emit_w {
             let mut dwv = vec![0.0f32; d * d];
-            par::matmul_at(&ls.h1, &dv, &mut dwv, bt, d, d);
+            par::matmul_at(&h1_l, &dv, &mut dwv, bt, d, d);
             emit(&format!("{pfx}attn.wv"), Tensor::from_vec(dwv, &[d, d]), params)?;
         }
         if emit_unit {
@@ -1194,7 +1326,7 @@ pub fn backward_streamed(
         }
         if emit_w {
             let mut dwo = vec![0.0f32; d * d];
-            par::matmul_at(&ls.attn, &dx_mid, &mut dwo, bt, d, d);
+            par::matmul_at(&attn_l, &dx_mid, &mut dwo, bt, d, d);
             emit(&format!("{pfx}attn.wo"), Tensor::from_vec(dwo, &[d, d]), params)?;
         }
         if emit_unit {
@@ -1204,7 +1336,7 @@ pub fn backward_streamed(
         }
         if emit_w {
             let mut dw1 = vec![0.0f32; d * f_];
-            par::matmul_at(&ls.h2, &da1, &mut dw1, bt, d, f_);
+            par::matmul_at(&h2_l, &da1, &mut dw1, bt, d, f_);
             emit(&format!("{pfx}ffn.w1"), Tensor::from_vec(dw1, &[d, f_]), params)?;
         }
         if emit_unit {
@@ -1232,6 +1364,7 @@ pub fn backward_streamed(
 
         dx = dx_mid;
         axpy(&mut dx, 1.0, &dx_ln1);
+        prec.quantize_slice(&mut dx);
         if let Some(pg) = pager.as_deref_mut() {
             pg.release_unit(params, i + 1)?;
         }
@@ -1373,7 +1506,8 @@ mod tests {
         let mut params = tiny_params(&cfg);
         let batch = tiny_batch(&cfg, 5);
         let st = forward(&cfg, "base", &mut params, &batch).unwrap();
-        for row in st.probs_out.chunks(cfg.vocab) {
+        let probs = st.probs_out();
+        for row in probs.chunks(cfg.vocab) {
             let sum: f32 = row.iter().sum();
             assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
         }
@@ -1444,17 +1578,120 @@ mod tests {
     }
 
     #[test]
-    fn zero_weights_give_zero_grads() {
+    fn zero_weight_batch_is_an_error() {
+        // Regression (numerics sweep): the old `wsum.max(1e-6)` fallback
+        // silently returned loss 0 / all-zero grads for a batch whose mask
+        // supervises nothing — indistinguishable from a converged model.
         let cfg = tiny_cfg();
         let mut params = tiny_params(&cfg);
         let mut batch = tiny_batch(&cfg, 11);
         batch.weights.iter_mut().for_each(|w| *w = 0.0);
+        let err = forward(&cfg, "base", &mut params, &batch).unwrap_err();
+        assert!(
+            err.to_string().contains("loss-mask weight"),
+            "error must name the zero-weight mask: {err}"
+        );
+        // A partially-masked batch still works (the normal case).
+        batch.weights[0] = 1.0;
+        assert!(forward(&cfg, "base", &mut params, &batch).is_ok());
+    }
+
+    #[test]
+    fn half_precision_forward_backward_drift_is_bounded() {
+        let mut cfg = tiny_cfg();
+        cfg.n_layers = 2;
+        let n_units = cfg.n_units();
+        let mut params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 21);
+        let spec = GradSpec::all(n_units, false);
+        let st32 =
+            forward_ckpt(&cfg, "base", &mut params, &batch, ActCkpt::None, None, Precision::F32)
+                .unwrap();
+        let g32 = backward(&st32, &cfg, "base", &mut params, &batch, &spec).unwrap();
+        for prec in [Precision::Bf16, Precision::F16] {
+            let sth =
+                forward_ckpt(&cfg, "base", &mut params, &batch, ActCkpt::None, None, prec)
+                    .unwrap();
+            assert!(sth.loss.is_finite());
+            let rel = (sth.loss - st32.loss).abs() / st32.loss.abs().max(1e-6);
+            assert!(rel < 0.05, "{prec:?}: loss drift {rel} ({} vs {})", sth.loss, st32.loss);
+            assert_ne!(sth.loss.to_bits(), st32.loss.to_bits(), "{prec:?} provably quantizes");
+            assert!(
+                sth.act_resident_bytes() < (st32.act_resident_bytes() * 6) / 10,
+                "{prec:?}: half storage must cut retained activations ({} vs {})",
+                sth.act_resident_bytes(),
+                st32.act_resident_bytes()
+            );
+            let gh = backward(&sth, &cfg, "base", &mut params, &batch, &spec).unwrap();
+            assert_eq!(gh.len(), g32.len());
+            for (name, g) in &gh {
+                assert!(g.data.iter().all(|x| x.is_finite()), "{prec:?} {name} non-finite");
+                // grads track the f32 reference in relative L2
+                let r = &g32[name];
+                let mut num = 0.0f64;
+                let mut den = 0.0f64;
+                for (a, b) in g.data.iter().zip(&r.data) {
+                    num += ((a - b) as f64).powi(2);
+                    den += (*b as f64).powi(2);
+                }
+                let rel = num.sqrt() / den.sqrt().max(1e-12);
+                assert!(rel < 0.35, "{prec:?} {name}: grad rel-L2 drift {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_is_bit_identical_within_a_half_precision() {
+        // Quantization is deterministic, so the ckpt/recompute walk must
+        // reproduce the cached walk's gradients bit-for-bit at bf16 too.
+        let mut cfg = tiny_cfg();
+        cfg.n_layers = 3;
+        let n_units = cfg.n_units();
+        let mut params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 23);
+        let spec = GradSpec::all(n_units, false);
+        let prec = Precision::Bf16;
+        let st =
+            forward_ckpt(&cfg, "base", &mut params, &batch, ActCkpt::None, None, prec).unwrap();
+        let full = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
+        let stc =
+            forward_ckpt(&cfg, "base", &mut params, &batch, ActCkpt::Sqrt, None, prec).unwrap();
+        assert_eq!(st.loss, stc.loss, "bf16 ckpt loss must be bit-identical");
+        let g = backward(&stc, &cfg, "base", &mut params, &batch, &spec).unwrap();
+        for (name, grad) in &g {
+            assert_eq!(grad.data, full[name].data, "bf16 recomputed grad {name}");
+        }
+    }
+
+    #[test]
+    fn loss_scale_is_divided_out_exactly_in_f32() {
+        // Power-of-two scaling of the backward seed must cancel exactly
+        // when divided back out (f32: every op is exact under *2^k).
+        let cfg = tiny_cfg();
+        let n_units = cfg.n_units();
+        let mut params = tiny_params(&cfg);
+        let batch = tiny_batch(&cfg, 31);
+        let spec = GradSpec::all(n_units, false);
         let st = forward(&cfg, "base", &mut params, &batch).unwrap();
-        assert_eq!(st.loss, 0.0);
-        let spec = GradSpec::all(cfg.n_units(), false);
-        let grads = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
-        for (name, g) in &grads {
-            assert!(g.data.iter().all(|&x| x == 0.0), "{name} nonzero under zero mask");
+        let base = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
+        let mut scaled: Grads = HashMap::new();
+        {
+            let mut emit = |name: &str, mut g: Tensor, _ps: &mut TensorSet| -> Result<()> {
+                g.scale(1.0 / 1024.0);
+                scaled.insert(name.to_string(), g);
+                Ok(())
+            };
+            backward_streamed(
+                &st, &cfg, "base", &mut params, &batch, &spec, &mut emit, None, 1024.0,
+            )
+            .unwrap();
+        }
+        for (name, g) in &scaled {
+            let b = &base[name];
+            for (x, y) in g.data.iter().zip(&b.data) {
+                let rel = (x - y).abs() / y.abs().max(1e-12);
+                assert!(rel < 1e-5, "{name}: scaled/unscaled grad mismatch {x} vs {y}");
+            }
         }
     }
 }

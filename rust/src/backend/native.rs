@@ -19,7 +19,9 @@ use anyhow::{bail, Context, Result};
 use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 use super::model;
 use super::{unit_artifact, ActCkpt, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
+use crate::optim::ScalerEvent;
 use crate::rng::Pcg32;
+use crate::tensor::half::Precision;
 use crate::tensor::paged::{OffloadCfg, UnitPager};
 use crate::tensor::{Tensor, TensorSet};
 
@@ -248,6 +250,12 @@ pub struct NativeBackend {
     /// live in a host pool and return on demand during the walk.
     pager: Option<UnitPager>,
     offload: OffloadCfg,
+    /// Compute precision (`--precision f32|bf16|f16`): forward activations,
+    /// backward intermediates and pre-upcast gradients; masters stay f32.
+    precision: Precision,
+    /// Loss scale applied to the backward seed of grad runs (installed per
+    /// step by the strategies' f16 scaler; 1.0 = off, bit-exact).
+    loss_scale: f32,
     pub stats: RuntimeStats,
 }
 
@@ -267,6 +275,8 @@ impl NativeBackend {
             act_ckpt: ActCkpt::None,
             pager: None,
             offload: OffloadCfg::default(),
+            precision: Precision::F32,
+            loss_scale: 1.0,
             stats: RuntimeStats::default(),
         })
     }
@@ -314,6 +324,10 @@ impl NativeBackend {
                 } else {
                     params.tensors[i].bytes()
                 };
+                // Half-precision compute uploads half-width working copies
+                // of the weights (the f32 masters stay host-side) — the
+                // halved h2d term of the memory model.
+                let bytes = if self.precision == Precision::F32 { bytes } else { bytes / 2 };
                 self.uploaded.insert(name.clone(), key);
                 self.stats.h2d_bytes += bytes as u64;
                 self.stats.cache_misses += 1;
@@ -368,27 +382,46 @@ impl NativeBackend {
             self.act_ckpt
         };
         let t0 = std::time::Instant::now();
-        let fwd = model::forward_ckpt(&cfg, variant, params, batch, policy, self.pager.as_mut())?;
+        let prec = self.precision;
+        let loss_scale = self.loss_scale;
+        let fwd =
+            model::forward_ckpt(&cfg, variant, params, batch, policy, self.pager.as_mut(), prec)?;
         let mut act_peak = fwd.act_resident_bytes();
         if !slots.is_empty() {
             let bw = {
                 let stats = &mut self.stats;
                 let pager = self.pager.as_mut();
                 let mut emitted = 0usize;
-                let mut emit = |name: &str, g: Tensor, ps: &mut TensorSet| -> Result<()> {
+                let mut emit = |name: &str, mut g: Tensor, ps: &mut TensorSet| -> Result<()> {
                     let slot = *slots
                         .get(name)
                         .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
-                    let bytes = g.bytes() as u64;
+                    // The gradient leaves the device at the compute
+                    // precision (rounded here, half d2h bytes), then the
+                    // loss scale is divided back out in f32 — exact, the
+                    // scale is a power of two — so the sink clips and
+                    // updates on honest magnitudes ("grads are emitted
+                    // upcast to f32").  Non-finite values survive both
+                    // steps (Inf/2^k = Inf), so overflow detection at the
+                    // sink still fires.
+                    prec.quantize_slice(&mut g.data);
+                    if loss_scale != 1.0 {
+                        g.scale(1.0 / loss_scale);
+                    }
+                    let bytes = if prec == Precision::F32 {
+                        g.bytes() as u64
+                    } else {
+                        g.bytes() as u64 / 2
+                    };
                     stats.d2h_bytes += bytes;
-                    stats.note_grad_resident(bytes + sink.resident_bytes());
+                    stats.note_grad_resident(g.bytes() as u64 + sink.resident_bytes());
                     sink.grad(slot, name, g, ps)?;
                     stats.note_grad_resident(sink.resident_bytes());
                     emitted += 1;
                     Ok(())
                 };
                 let bw = model::backward_streamed(
-                    &fwd, &cfg, variant, params, batch, gspec, &mut emit, pager,
+                    &fwd, &cfg, variant, params, batch, gspec, &mut emit, pager, loss_scale,
                 )?;
                 if emitted != slots.len() {
                     bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
@@ -567,6 +600,45 @@ impl ExecBackend for NativeBackend {
         self.act_ckpt
     }
 
+    fn set_precision(&mut self, prec: Precision) -> Result<()> {
+        self.precision = prec;
+        if !prec.needs_loss_scaling() {
+            self.loss_scale = 1.0;
+        }
+        Ok(())
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn set_loss_scale(&mut self, scale: f32) {
+        // Only f16 backward runs scaled; in f32/bf16 the seed multiplier
+        // stays the exact 1.0.
+        self.loss_scale = if self.precision.needs_loss_scaling() { scale.max(1.0) } else { 1.0 };
+        self.stats.loss_scale = self.loss_scale as f64;
+    }
+
+    fn loss_scale(&self) -> f32 {
+        self.loss_scale
+    }
+
+    fn note_numerics(&mut self, nonfinite_grads: u64, step_skipped: bool) {
+        self.stats.nonfinite_grad_tensors += nonfinite_grads;
+        if step_skipped {
+            self.stats.nonfinite_grad_steps += 1;
+        }
+    }
+
+    fn note_loss_scale(&mut self, scale: f32, event: ScalerEvent) {
+        self.stats.loss_scale = scale as f64;
+        match event {
+            ScalerEvent::Grew => self.stats.loss_scale_growths += 1,
+            ScalerEvent::BackedOff => self.stats.loss_scale_backoffs += 1,
+            ScalerEvent::None => {}
+        }
+    }
+
     fn set_offload(&mut self, cfg: OffloadCfg) -> Result<()> {
         // Replacing an attached pager discards its pool.  While evicted
         // masters live there the pool is their *only* copy, so switching
@@ -638,6 +710,10 @@ impl ExecBackend for NativeBackend {
         self.stats.peak_param_resident_bytes = 0;
         self.stats.peak_prefetch_buffer_bytes = 0;
         self.stats.peak_host_pool_bytes = 0;
+        // The loss-scale gauge is per-run too: an f16 run repopulates it on
+        // its first step; a f32/bf16 run correctly reports "never engaged"
+        // instead of a stale scale from a previous run on a shared backend.
+        self.stats.loss_scale = 0.0;
         if let Some(pg) = self.pager.as_mut() {
             pg.reset_peaks();
         }

@@ -11,15 +11,18 @@
 //!             [--steps 200] [--optim adamw] [--lr 4e-3] [--warmup 0] [--m 1]
 //!             [--order b2u] [--seed 0] [--eval-every 50] [--log-every 10]
 //!             [--out runs/run.json] [--act-ckpt none|sqrt|every_k(K)]
+//!             [--precision f32|bf16|f16]
 //!             [--offload host|none] [--offload-compress none|f16] [--prefetch 1|0]
 //!             [--save-ckpt DIR] [--save-every N] [--resume DIR]
 //! hift eval   [--preset tiny | --artifacts DIR] [--variant base] --task motif4
-//!             [--seed 0] [--offload host|none]
+//!             [--seed 0] [--precision f32|bf16|f16] [--offload host|none]
 //! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
+//!             [--precision f32|bf16|f16]
 //! hift info   [--preset tiny | --artifacts DIR] [--seed 0]
 //! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-//!              |tables8_12|appendix_b|act_ckpt|offload|all>
-//!             [--preset P] [--artifacts DIR] [--act-ckpt P] [--offload host]
+//!              |tables8_12|appendix_b|act_ckpt|offload|precision|all>
+//!             [--preset P] [--artifacts DIR] [--act-ckpt P] [--precision P]
+//!             [--offload host]
 //! ```
 //!
 //! `docs/CLI.md` documents every flag and `HIFT_*` environment variable;
@@ -44,12 +47,12 @@ pub use args::Args;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{build_backend, ActCkpt, ExecBackend, OffloadCfg};
+use crate::backend::{build_backend, ActCkpt, ExecBackend, OffloadCfg, Precision};
 use crate::bench::{exhibits, Bench};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::coordinator::trainer::{self, CkptOpts, TrainCfg};
 use crate::data::{build_task, TaskGeom, TASK_NAMES};
-use crate::memmodel::{account, by_name, Dtype, Method, Workload, GIB, MIB};
+use crate::memmodel::{account, account_prec, by_name, Dtype, Method, Workload, GIB, MIB};
 use crate::optim::OptimKind;
 use crate::ser::emit_pretty;
 use crate::strategies::{StrategySpec, STRATEGY_NAMES};
@@ -63,19 +66,21 @@ const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
          --task TASK --steps N --optim adamw|sgd|sgdm|adagrad|adafactor
          --lr F --warmup N --m M --order b2u|t2d|ran --seed N
          --eval-every N --log-every N --out FILE.json
-         --act-ckpt none|sqrt|every_k(K)
+         --act-ckpt none|sqrt|every_k(K) --precision f32|bf16|f16
          --offload host|none --offload-compress none|f16 --prefetch 1|0
          --save-ckpt DIR --save-every N --resume DIR
-  eval   --variant base|lora|ia3|prefix --task TASK --seed N --offload host|none
-  memory-report --model NAME --batch N --seq N --m M
+  eval   --variant base|lora|ia3|prefix --task TASK --seed N
+         --precision f32|bf16|f16 --offload host|none
+  memory-report --model NAME --batch N --seq N --m M --precision f32|bf16|f16
   info   (prints manifest, variants, artifacts, strategies, tasks)
   bench  table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-         |tables8_12|appendix_b|act_ckpt|offload|all
-         (flags --preset/--artifacts/--act-ckpt/--offload* set the HIFT_* env)
+         |tables8_12|appendix_b|act_ckpt|offload|precision|all
+         (flags --preset/--artifacts/--act-ckpt/--precision/--offload* set
+          the HIFT_* env)
 
-  env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_OFFLOAD
-       HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH HIFT_PIPELINE HIFT_THREADS
-       HIFT_QUICK HIFT_OUT    (full inventory: docs/CLI.md)";
+  env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_PRECISION
+       HIFT_OFFLOAD HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH HIFT_PIPELINE
+       HIFT_THREADS HIFT_QUICK HIFT_OUT    (full inventory: docs/CLI.md)";
 
 /// Binary entrypoint.
 pub fn main_entry() -> Result<()> {
@@ -129,6 +134,9 @@ fn cmd_train(a: &Args) -> Result<()> {
     if let Some(p) = a.get("act-ckpt") {
         be.set_act_ckpt(ActCkpt::parse(p)?)?;
     }
+    if let Some(p) = a.get("precision") {
+        be.set_precision(Precision::parse(p)?)?;
+    }
     let offload = offload_from(a)?;
     if offload.enabled {
         if strategy_name.starts_with("mezo") {
@@ -163,6 +171,10 @@ fn cmd_train(a: &Args) -> Result<()> {
     };
     if let Some(dir) = a.get("resume") {
         let ck = checkpoint::load(dir).with_context(|| format!("loading checkpoint {dir}"))?;
+        // A precision switch mid-run would silently change the loss
+        // surface, the drift profile and the scaler state — reject it.
+        Precision::check_resume(ck.meta.precision.as_deref(), be.precision())
+            .with_context(|| format!("resuming checkpoint {dir}"))?;
         if ck.meta.strategy != strategy.name() {
             bail!(
                 "checkpoint {dir} was written by strategy {:?} but this run is configured as \
@@ -237,6 +249,9 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let task_name = a.get("task").unwrap_or("motif4");
     let seed = a.get_num("seed").unwrap_or(0.0) as u64;
     let mut be = backend_from(a, seed)?;
+    if let Some(p) = a.get("precision") {
+        be.set_precision(Precision::parse(p)?)?;
+    }
     let offload = offload_from(a)?;
     if offload.enabled {
         be.set_offload(offload)?;
@@ -260,6 +275,10 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
         seq: a.get_num("seq").unwrap_or(512.0) as usize,
     };
     let m = a.get_num("m").unwrap_or(1.0) as usize;
+    // Compute precision column: with --precision bf16|f16 the table gains
+    // Res/Tot columns at the halved activation term (the compute-precision
+    // analogue of the paper's mixed-precision residual discussion).
+    let prec = Precision::parse(a.get("precision").unwrap_or("f32"))?;
     let models: Vec<String> = match a.get("model") {
         Some(one) => vec![one.to_string()],
         None => crate::memmodel::zoo().iter().map(|z| z.name.clone()).collect(),
@@ -273,11 +292,19 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
             arch.peak_group_params(m) as f64 / 1e6,
             arch.peak_group_params(m) as f64 / arch.total_params() as f64 * 100.0,
         );
-        println!(
+        let mut header = format!(
             "  {:<10} {:<8} {:<5} {:>10} {:>10} {:>12} {:>10} {:>9} {:>9} {:>9}",
             "optim", "dtype", "ftype", "#Para(MiB)", "#Gra(MiB)", "#GraStr(MiB)", "#Sta(MiB)",
             "PGS(GiB)", "Res(GiB)", "Tot(GiB)"
         );
+        if prec != Precision::F32 {
+            header.push_str(&format!(
+                " {:>12} {:>12}",
+                format!("Res@{}(GiB)", prec.name()),
+                format!("Tot@{}(GiB)", prec.name())
+            ));
+        }
+        println!("{header}");
         for opt in OptimKind::ALL {
             for (dt, meth) in [
                 (Dtype::Fp32, Method::Fpft),
@@ -291,7 +318,7 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
                     Method::Fpft => "FPFT",
                     _ => "HiFT",
                 };
-                println!(
+                let mut line = format!(
                     "  {:<10} {:<8} {:<5} {:>10.2} {:>10.2} {:>12.2} {:>10.2} {:>9.2} {:>9.2} {:>9.2}",
                     opt.name(),
                     dt.name(),
@@ -304,6 +331,15 @@ fn cmd_memory_report(a: &Args) -> Result<()> {
                     r.residual / GIB,
                     r.total / GIB
                 );
+                if prec != Precision::F32 {
+                    let rp = account_prec(&arch, opt, dt, meth, w, ActCkpt::None, prec);
+                    line.push_str(&format!(
+                        " {:>12.2} {:>12.2}",
+                        rp.residual / GIB,
+                        rp.total / GIB
+                    ));
+                }
+                println!("{line}");
             }
         }
     }
@@ -349,6 +385,9 @@ fn cmd_bench(a: &Args) -> Result<()> {
     if let Some(p) = a.get("act-ckpt") {
         std::env::set_var("HIFT_ACT_CKPT", p);
     }
+    if let Some(p) = a.get("precision") {
+        std::env::set_var("HIFT_PRECISION", p);
+    }
     if let Some(p) = a.get("offload") {
         std::env::set_var("HIFT_OFFLOAD", p);
     }
@@ -375,12 +414,14 @@ fn cmd_bench(a: &Args) -> Result<()> {
             "appendix_b" => exhibits::appendix_b(b),
             "act_ckpt" | "actckpt" => exhibits::act_ckpt(b),
             "offload" => exhibits::offload(b),
+            "precision" => exhibits::precision(b),
             other => bail!("unknown exhibit {other:?}"),
         }
     };
     if which == "all" {
-        for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "offload", "table5", "fig3",
-                     "fig4", "table3", "table4", "mtbench", "table2", "table1", "fig5"] {
+        for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "offload", "precision",
+                     "table5", "fig3", "fig4", "table3", "table4", "mtbench", "table2", "table1",
+                     "fig5"] {
             run(&mut b, name)?;
         }
         Ok(())

@@ -84,6 +84,8 @@ pub struct RunRecord {
     pub wall_secs: f64,
     pub steps_per_sec: f64,
     pub exec_secs: f64,
+    /// Compute precision the run executed at (`"f32"|"bf16"|"f16"`).
+    pub precision: String,
     pub peak_trainable_params: usize,
     pub optimizer_state_bytes: usize,
     /// Paging ledger summary (HiFT only): (h2d, d2h, max_inflight, peak_device).
@@ -111,6 +113,7 @@ impl RunRecord {
             ("wall_secs", self.wall_secs.into()),
             ("steps_per_sec", self.steps_per_sec.into()),
             ("exec_secs", self.exec_secs.into()),
+            ("precision", self.precision.as_str().into()),
             ("peak_trainable_params", self.peak_trainable_params.into()),
             ("optimizer_state_bytes", self.optimizer_state_bytes.into()),
             (
@@ -166,6 +169,25 @@ impl RunRecord {
                 ("recompute_flops", (b.recompute_flops as usize).into()),
             ]),
         ));
+        // Numerics block (absent when nothing noteworthy happened):
+        // non-finite-gradient events and the f16 dynamic loss scaler's
+        // trajectory.
+        let scaler_active = b.loss_scale != 0.0 && b.loss_scale != 1.0;
+        if b.nonfinite_grad_tensors + b.nonfinite_grad_steps > 0
+            || b.loss_scale_growths + b.loss_scale_backoffs > 0
+            || scaler_active
+        {
+            pairs.push((
+                "numerics",
+                Value::obj(vec![
+                    ("nonfinite_grad_tensors", (b.nonfinite_grad_tensors as usize).into()),
+                    ("nonfinite_grad_steps", (b.nonfinite_grad_steps as usize).into()),
+                    ("loss_scale_growths", (b.loss_scale_growths as usize).into()),
+                    ("loss_scale_backoffs", (b.loss_scale_backoffs as usize).into()),
+                    ("loss_scale", b.loss_scale.into()),
+                ]),
+            ));
+        }
         // Host paging tier (all-zero when --offload is off): measured
         // transfers, enforced residency peaks, prefetch effectiveness.
         if b.offload_page_ins + b.offload_page_outs > 0 {
@@ -309,6 +331,7 @@ pub fn train_ckpt(
                     sweep: Some(strategy.sweeps_done()),
                     strategy: strategy.name().to_string(),
                     task: task.name().to_string(),
+                    precision: Some(be.precision().name().to_string()),
                 };
                 checkpoint::save_replace(dir, params, &meta, &strategy.export_opt_state())?;
                 // …and back out afterwards, so a mid-run save neither
@@ -345,6 +368,7 @@ pub fn train_ckpt(
         wall_secs: wall,
         steps_per_sec: if wall > 0.0 { executed as f64 / wall } else { 0.0 },
         exec_secs,
+        precision: be.precision().name().to_string(),
         peak_trainable_params: strategy.peak_trainable_params(),
         optimizer_state_bytes: strategy.optimizer_state_bytes(),
         paging: strategy

@@ -53,6 +53,16 @@
 //! `peak_param_resident_bytes` is measured from real evictions, not
 //! modeled.
 //!
+//! Compute is **precision-selectable** (`--precision f32|bf16|f16`,
+//! [`tensor::half`]): forward activations, backward intermediates and the
+//! hot loops run at the chosen width — with retained activation caches
+//! physically stored as 16-bit words — while parameter masters and
+//! optimizer state stay f32.  f16 backward runs under dynamic loss
+//! scaling ([`optim::LossScaler`]) with atomic skip-step on overflow; a
+//! non-finite gradient can never reach the optimizer in any mode
+//! (the [`optim::FusedApply`] safety net).  `--precision f32` remains
+//! bit-identical to the historical path.
+//!
 //! Deeper docs: `docs/ARCHITECTURE.md` (layering + contracts),
 //! `docs/PAPER_MAP.md` (paper exhibit → harness map), `docs/CLI.md`
 //! (flags + `HIFT_*` env inventory).
@@ -63,10 +73,10 @@
 //! |---|---|
 //! | [`ser`] | minimal JSON (no serde in the offline vendor set) |
 //! | [`rng`] | deterministic PCG RNG (MeZO perturbations, shuffles) |
-//! | [`tensor`] | flat f32 tensors, crash-safe checkpoint save/load (`tensor::checkpoint`), host paging tier with async double-buffered prefetch (`tensor::paged`) |
-//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, `ActCkpt` recompute policies, manifest, native CPU model, thread helpers |
+//! | [`tensor`] | flat f32 tensors, crash-safe checkpoint save/load (`tensor::checkpoint`), shared f16/bf16 codecs + precision-tagged buffers (`tensor::half`), host paging tier with async double-buffered prefetch (`tensor::paged`) |
+//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, `ActCkpt` recompute policies, `Precision` compute modes, manifest, native CPU model, thread helpers |
 //! | [`runtime`] | PJRT client, artifact registry, executable cache (`pjrt` feature; streams via post-execute drain) |
-//! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger + fused/pipelined update sinks |
+//! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger + fused/pipelined update sinks + the f16 dynamic loss scaler |
 //! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer (+ checkpoint/resume loop) |
 //! | [`strategies`] | FPFT, LoRA, IA3, prefix, BitFit, LP, MeZO, LOMO, … |
 //! | [`memmodel`] | analytic GPU-memory accounting (Tables 5, 8–12, Fig. 6) incl. streamed-gradient residency |

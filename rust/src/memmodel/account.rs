@@ -32,6 +32,7 @@
 use super::arch::Arch;
 use crate::backend::ActCkpt;
 use crate::optim::OptimKind;
+use crate::tensor::half::Precision;
 
 pub const MIB: f64 = 1024.0 * 1024.0;
 pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
@@ -306,6 +307,44 @@ pub fn account(arch: &Arch, opt: OptimKind, dtype: Dtype, method: Method, w: Wor
     account_ckpt(arch, opt, dtype, method, w, ActCkpt::None)
 }
 
+/// Activation-storage multiplier of a *native compute precision*
+/// (`--precision f32|bf16|f16`): the retained activation buffers are
+/// physically half-width under the half modes (`tensor/half.rs::PrecBuf`),
+/// so the activation term — and the recompute scratch it includes under a
+/// checkpointing policy — halves.
+pub fn precision_act_factor(prec: Precision) -> f64 {
+    prec.act_bytes_per_elem() as f64 / 4.0
+}
+
+/// [`account_ckpt`] under a native compute precision: the activation part
+/// of the residual term (`act_ckpt`, which under a recompute policy is
+/// boundaries + segment scratch + one working layer) scales by
+/// [`precision_act_factor`].  The `extras` slice of the residual — the
+/// softmax/loss head, which the native backend keeps in f32 as is standard
+/// for mixed precision — and the #Para/#Gra/#Sta terms are untouched:
+/// parameter *masters*, gradients-as-updated and optimizer state stay f32
+/// (the `Dtype` axis continues to model the paper's own mixed-precision
+/// weight-copy regimes; this knob is orthogonal to it).
+pub fn account_prec(
+    arch: &Arch,
+    opt: OptimKind,
+    dtype: Dtype,
+    method: Method,
+    w: Workload,
+    policy: ActCkpt,
+    prec: Precision,
+) -> MemRow {
+    let mut r = account_ckpt(arch, opt, dtype, method, w, policy);
+    let f = precision_act_factor(prec);
+    if f != 1.0 {
+        let scaled = r.act_ckpt * f;
+        r.residual += scaled - r.act_ckpt;
+        r.act_ckpt = scaled;
+        r.total = r.pgs + r.residual;
+    }
+    r
+}
+
 /// The Appendix-B closed form: ζ_hift/ζ_fpft = (k+3)/(4k) for AdamW @ fp32
 /// over params+grads+states with *uniform* layer sizes.
 pub fn appendix_b_ratio(k: usize) -> f64 {
@@ -472,6 +511,38 @@ mod tests {
             none.act_ckpt_gib(),
             sq.act_ckpt_gib()
         );
+    }
+
+    #[test]
+    fn compute_precision_halves_the_activation_term_only() {
+        let a = by_name("llama-7b").unwrap();
+        let w = Workload { batch: 6, seq: 512 };
+        let hift = Method::Hift { m: 1 };
+        for policy in [ActCkpt::None, ActCkpt::Sqrt] {
+            let f32_row =
+                account_prec(&a, OptimKind::AdamW, Dtype::Fp32, hift, w, policy, Precision::F32);
+            let ref_row = account_ckpt(&a, OptimKind::AdamW, Dtype::Fp32, hift, w, policy);
+            assert_eq!(f32_row.act_ckpt, ref_row.act_ckpt, "f32 knob is the identity");
+            assert_eq!(f32_row.total, ref_row.total);
+            for prec in [Precision::Bf16, Precision::F16] {
+                let h = account_prec(&a, OptimKind::AdamW, Dtype::Fp32, hift, w, policy, prec);
+                assert!(
+                    (h.act_ckpt - 0.5 * ref_row.act_ckpt).abs() < 1.0,
+                    "{prec:?}: activation term must halve ({:.2} vs {:.2} GiB)",
+                    h.act_ckpt_gib(),
+                    ref_row.act_ckpt_gib()
+                );
+                assert_eq!(h.pgs, ref_row.pgs, "masters/grads/state stay f32");
+                assert!(h.residual < ref_row.residual && h.total < ref_row.total);
+                // extras (the f32 loss head) are preserved, so the
+                // residual shrinks by exactly the activation half.
+                let extras = ref_row.residual - ref_row.act_ckpt;
+                assert!((h.residual - (h.act_ckpt + extras)).abs() < 1.0);
+            }
+        }
+        assert_eq!(precision_act_factor(Precision::F32), 1.0);
+        assert_eq!(precision_act_factor(Precision::Bf16), 0.5);
+        assert_eq!(precision_act_factor(Precision::F16), 0.5);
     }
 
     #[test]

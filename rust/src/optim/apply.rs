@@ -8,6 +8,28 @@
 //! group's `Vec<Tensor>` — and the per-tensor sequence (clip, page-in,
 //! update, page-out) is exactly the one the old collected loop ran, so the
 //! resulting parameters and ledger are bit-identical to it.
+//!
+//! ## Non-finite gradients
+//!
+//! Low-precision compute is exactly where NaN/Inf gradients appear, so the
+//! sink is the numerics safety net.  Every incoming gradient's norm is
+//! checked (free — [`clip_grad`] computes it anyway) and a non-finite one
+//! is **never** fed to the optimizer.  Two policies:
+//!
+//! * [`NonFinitePolicy::SkipTensor`] (default) — drop just the offending
+//!   tensor's update; everything else in the step still applies.  The
+//!   always-on guard for f32/bf16 runs.
+//! * [`NonFinitePolicy::SkipStep`] — the f16 loss-scaler contract: updates
+//!   are *deferred* until [`GradSink::finish`]; if any gradient in the run
+//!   came back non-finite the whole step is dropped, leaving parameters
+//!   AND optimizer state bit-identical to pre-step (AdamW's per-tensor `t`
+//!   included), so the scaler can halve its scale and retry.  The deferral
+//!   trades the streamed one-tensor gradient residency for the collected
+//!   group sum — the price of an atomic skip, paid only in f16 mode and
+//!   honestly reported through [`GradSink::resident_bytes`].
+//!   Applying at `finish` is bit-identical to applying at emission when no
+//!   overflow occurs: updates are per-tensor and the backward walk never
+//!   reads a parameter again after emitting its gradient.
 
 use anyhow::{bail, Result};
 
@@ -15,8 +37,21 @@ use super::{clip_grad, OffloadLedger, Optimizer};
 use crate::backend::GradSink;
 use crate::tensor::{Tensor, TensorSet};
 
+/// What to do when a gradient arrives with a NaN/Inf norm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NonFinitePolicy {
+    /// Skip only that tensor's update (default safety net).
+    #[default]
+    SkipTensor,
+    /// Defer all updates to `finish`; drop the entire step if any gradient
+    /// is non-finite (atomic skip-step for the f16 loss scaler).
+    SkipStep,
+}
+
 /// A [`GradSink`] that applies the optimizer update the moment a gradient
-/// arrives and drops it immediately.
+/// arrives and drops it immediately (or, under
+/// [`NonFinitePolicy::SkipStep`], at `finish` once the whole step is known
+/// to be finite).
 pub struct FusedApply<'a> {
     optimizer: &'a mut dyn Optimizer,
     ledger: Option<&'a mut OffloadLedger>,
@@ -24,11 +59,21 @@ pub struct FusedApply<'a> {
     slot_param: &'a [usize],
     grad_clip: f32,
     lr: f32,
+    policy: NonFinitePolicy,
+    /// Clipped updates awaiting `finish` (SkipStep mode only), in emit
+    /// order.
+    deferred: Vec<(usize, Tensor)>,
+    /// Any gradient in this run came back non-finite.
+    overflow: bool,
     /// Total parameter elements updated so far (the per-step trainable
     /// count the strategies report).
     pub updated_elems: usize,
     /// Gradients consumed so far.
     pub grads_seen: usize,
+    /// Gradients whose norm came back NaN/Inf (their updates were skipped).
+    pub nonfinite_grads: usize,
+    /// True once `finish` dropped the whole step (SkipStep + overflow).
+    pub step_skipped: bool,
 }
 
 impl<'a> FusedApply<'a> {
@@ -39,7 +84,45 @@ impl<'a> FusedApply<'a> {
         grad_clip: f32,
         lr: f32,
     ) -> Self {
-        FusedApply { optimizer, ledger, slot_param, grad_clip, lr, updated_elems: 0, grads_seen: 0 }
+        FusedApply {
+            optimizer,
+            ledger,
+            slot_param,
+            grad_clip,
+            lr,
+            policy: NonFinitePolicy::SkipTensor,
+            deferred: Vec::new(),
+            overflow: false,
+            updated_elems: 0,
+            grads_seen: 0,
+            nonfinite_grads: 0,
+            step_skipped: false,
+        }
+    }
+
+    /// Select the non-finite policy (builder style).
+    pub fn non_finite(mut self, policy: NonFinitePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Clip → page state in → update → page state out, for one tensor.
+    fn apply_now(&mut self, idx: usize, grad: Tensor, params: &mut TensorSet) {
+        let grad_bytes = grad.bytes() as u64;
+        let pre = self.optimizer.state_bytes(idx) as u64;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.page_in(pre);
+        }
+        let p = params.tensor_mut(idx);
+        self.updated_elems += p.numel();
+        self.optimizer.update(idx, p, &grad, self.lr);
+        let post = self.optimizer.state_bytes(idx) as u64;
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.alloc_on_device(post.saturating_sub(pre));
+            l.page_out(post);
+            l.grad_out(grad_bytes);
+        }
+        // `grad` dropped here — "Clear gradients" (Algorithm 1 step g)
     }
 }
 
@@ -60,27 +143,62 @@ impl GradSink for FusedApply<'_> {
                 params.names[idx]
             );
         }
-        clip_grad(&mut grad, self.grad_clip);
+        let norm = clip_grad(&mut grad, self.grad_clip);
+        self.grads_seen += 1;
         let grad_bytes = grad.bytes() as u64;
         if let Some(l) = self.ledger.as_deref_mut() {
             l.grad_in(grad_bytes);
         }
-        let pre = self.optimizer.state_bytes(idx) as u64;
-        if let Some(l) = self.ledger.as_deref_mut() {
-            l.page_in(pre);
+        if !norm.is_finite() {
+            // Never feed a NaN/Inf gradient to the optimizer: its moments
+            // would absorb the poison and every later step would inherit it.
+            self.nonfinite_grads += 1;
+            self.overflow = true;
+            if let Some(l) = self.ledger.as_deref_mut() {
+                l.grad_out(grad_bytes);
+            }
+            return Ok(());
         }
-        let p = params.tensor_mut(idx);
-        self.updated_elems += p.numel();
-        self.optimizer.update(idx, p, &grad, self.lr);
-        let post = self.optimizer.state_bytes(idx) as u64;
-        if let Some(l) = self.ledger.as_deref_mut() {
-            l.alloc_on_device(post.saturating_sub(pre));
-            l.page_out(post);
-            l.grad_out(grad_bytes);
+        match self.policy {
+            NonFinitePolicy::SkipTensor => self.apply_now(idx, grad, params),
+            NonFinitePolicy::SkipStep => {
+                if self.overflow {
+                    // Step already doomed: don't accumulate further grads.
+                    if let Some(l) = self.ledger.as_deref_mut() {
+                        l.grad_out(grad_bytes);
+                    }
+                } else {
+                    self.deferred.push((idx, grad));
+                }
+            }
         }
-        self.grads_seen += 1;
         Ok(())
-        // `grad` dropped here — "Clear gradients" (Algorithm 1 step g)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.deferred.iter().map(|(_, g)| g.bytes() as u64).sum()
+    }
+
+    fn finish(&mut self, params: &mut TensorSet) -> Result<()> {
+        if self.policy != NonFinitePolicy::SkipStep {
+            return Ok(());
+        }
+        let deferred = std::mem::take(&mut self.deferred);
+        if self.overflow {
+            // Atomic skip: nothing was applied, so params and optimizer
+            // state are bit-identical to pre-step by construction.
+            self.step_skipped = true;
+            for (_, g) in &deferred {
+                if let Some(l) = self.ledger.as_deref_mut() {
+                    l.grad_out(g.bytes() as u64);
+                }
+            }
+            return Ok(());
+        }
+        for (idx, grad) in deferred {
+            self.apply_now(idx, grad, params);
+        }
+        Ok(())
     }
 }
 
@@ -122,6 +240,7 @@ mod tests {
         sink.grad(1, "b", gb, &mut p).unwrap();
         assert_eq!(sink.updated_elems, 5);
         assert_eq!(sink.grads_seen, 2);
+        assert_eq!(sink.nonfinite_grads, 0);
 
         for (x, y) in p.tensors.iter().zip(&p_ref.tensors) {
             assert_eq!(x.data, y.data, "fused update must equal collected update");
@@ -140,5 +259,116 @@ mod tests {
         let g = Tensor::from_vec(vec![0.0, 0.0], &[2]);
         assert!(sink.grad(0, "b", g.clone(), &mut p).is_err(), "name/slot mismatch");
         assert!(sink.grad(7, "a", g, &mut p).is_err(), "slot outside plan");
+    }
+
+    #[test]
+    fn nonfinite_grad_skips_only_that_tensor_by_default() {
+        let cfg = OptimCfg::new(OptimKind::AdamW);
+        let mut p = toy_params();
+        let before_a = p.tensors[0].data.clone();
+        let mut opt = build(cfg, 2);
+        let slots = [0usize, 1];
+        let (nonfinite, skipped, updated) = {
+            let mut sink = FusedApply::new(&mut *opt, None, &slots, cfg.grad_clip, 0.01);
+            sink.grad(0, "a", Tensor::from_vec(vec![f32::NAN, 1.0], &[2]), &mut p).unwrap();
+            sink.grad(1, "b", Tensor::from_vec(vec![1.0, 0.0, -1.0], &[3]), &mut p).unwrap();
+            sink.finish(&mut p).unwrap();
+            (sink.nonfinite_grads, sink.step_skipped, sink.updated_elems)
+        };
+        assert_eq!(nonfinite, 1);
+        assert!(!skipped, "SkipTensor never drops the step");
+        assert_eq!(updated, 3, "only b's elements counted");
+        assert_eq!(p.tensors[0].data, before_a, "poisoned tensor untouched");
+        assert_ne!(p.tensors[1].data, vec![3.0, 4.0, 5.0], "healthy tensor still updated");
+        assert_eq!(opt.state_bytes(0), 0, "no moments were allocated for the skipped tensor");
+    }
+
+    #[test]
+    fn skip_step_is_atomic_for_params_and_optimizer_state() {
+        let cfg = OptimCfg::new(OptimKind::AdamW);
+        let mut p = toy_params();
+        let mut opt = build(cfg, 2);
+        // One healthy step first, so optimizer state (m/v/t) is non-trivial.
+        {
+            let slots = [0usize, 1];
+            let mut sink = FusedApply::new(&mut *opt, None, &slots, cfg.grad_clip, 0.01)
+                .non_finite(NonFinitePolicy::SkipStep);
+            sink.grad(0, "a", Tensor::from_vec(vec![0.5, -0.5], &[2]), &mut p).unwrap();
+            sink.grad(1, "b", Tensor::from_vec(vec![1.0, 0.0, -1.0], &[3]), &mut p).unwrap();
+            sink.finish(&mut p).unwrap();
+            assert!(!sink.step_skipped);
+            assert_eq!(sink.updated_elems, 5, "finite deferred step applies fully");
+        }
+        let params_snapshot: Vec<Vec<f32>> = p.tensors.iter().map(|t| t.data.clone()).collect();
+        let state_snapshot = opt.export_state();
+
+        // Overflow step: tensor a's grad is fine, b's is Inf.  The whole
+        // step must vanish — a's applied-then-rolled-back would show up as
+        // a param or `t` counter drift.
+        let mut ledger = OffloadLedger::new();
+        {
+            let slots = [0usize, 1];
+            let mut sink =
+                FusedApply::new(&mut *opt, Some(&mut ledger), &slots, cfg.grad_clip, 0.01)
+                    .non_finite(NonFinitePolicy::SkipStep);
+            sink.grad(0, "a", Tensor::from_vec(vec![0.1, 0.2], &[2]), &mut p).unwrap();
+            sink.grad(1, "b", Tensor::from_vec(vec![f32::INFINITY, 0.0, 1.0], &[3]), &mut p)
+                .unwrap();
+            sink.finish(&mut p).unwrap();
+            assert!(sink.step_skipped);
+            assert_eq!(sink.nonfinite_grads, 1);
+            assert_eq!(sink.updated_elems, 0, "nothing applied on a skipped step");
+        }
+        for (t, snap) in p.tensors.iter().zip(&params_snapshot) {
+            assert_eq!(&t.data, snap, "params must be bit-identical to pre-step");
+        }
+        let state_after = opt.export_state();
+        assert_eq!(state_after.len(), state_snapshot.len());
+        for ((ka, ta), (kb, tb)) in state_after.iter().zip(&state_snapshot) {
+            assert_eq!(ka, kb);
+            assert_eq!(ta.data, tb.data, "optimizer state {ka} must be bit-identical");
+        }
+        assert_eq!(ledger.grad_resident(), 0, "deferred grads fully drained");
+    }
+
+    #[test]
+    fn deferred_apply_is_bit_identical_to_immediate() {
+        let cfg = OptimCfg::new(OptimKind::AdamW);
+        let ga = Tensor::from_vec(vec![0.5, -0.5], &[2]);
+        let gb = Tensor::from_vec(vec![1.0, 0.0, -1.0], &[3]);
+
+        let mut p_now = toy_params();
+        let mut opt_now = build(cfg, 2);
+        {
+            let slots = [0usize, 1];
+            let mut sink = FusedApply::new(&mut *opt_now, None, &slots, cfg.grad_clip, 0.01);
+            sink.grad(0, "a", ga.clone(), &mut p_now).unwrap();
+            sink.grad(1, "b", gb.clone(), &mut p_now).unwrap();
+            sink.finish(&mut p_now).unwrap();
+        }
+
+        let mut p_def = toy_params();
+        let mut opt_def = build(cfg, 2);
+        let mut ledger = OffloadLedger::new();
+        {
+            let slots = [0usize, 1];
+            let mut sink =
+                FusedApply::new(&mut *opt_def, Some(&mut ledger), &slots, cfg.grad_clip, 0.01)
+                    .non_finite(NonFinitePolicy::SkipStep);
+            sink.grad(0, "a", ga, &mut p_def).unwrap();
+            sink.grad(1, "b", gb, &mut p_def).unwrap();
+            // Deferred mode holds the collected sum until finish.
+            assert_eq!(sink.resident_bytes(), 8 + 12);
+            sink.finish(&mut p_def).unwrap();
+        }
+        for (x, y) in p_def.tensors.iter().zip(&p_now.tensors) {
+            assert_eq!(x.data, y.data, "deferred apply must equal immediate apply");
+        }
+        assert_eq!(
+            ledger.peak_grad_resident_bytes,
+            8 + 12,
+            "skip-step honestly reports the collected residency"
+        );
+        assert_eq!(ledger.grad_resident(), 0);
     }
 }

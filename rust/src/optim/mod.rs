@@ -33,13 +33,15 @@ mod adagrad;
 mod adamw;
 mod apply;
 mod par;
+mod scaler;
 mod sgd;
 
 pub use adafactor::Adafactor;
 pub use adagrad::Adagrad;
 pub use adamw::AdamW;
-pub use apply::FusedApply;
+pub use apply::{FusedApply, NonFinitePolicy};
 pub use par::PipelinedApply;
+pub use scaler::{LossScaler, ScalerEvent};
 pub use sgd::{Sgd, Sgdm};
 
 use anyhow::Result;
@@ -191,9 +193,21 @@ pub fn build(cfg: OptimCfg, n_params: usize) -> Box<dyn Optimizer> {
     }
 }
 
-/// Clip a gradient tensor to `max_norm` (no-op if 0); returns the pre-clip norm.
+/// Clip a gradient tensor to `max_norm` (no-op if 0); returns the pre-clip
+/// norm.
+///
+/// A NaN/Inf gradient is left **untouched** and signalled through the
+/// returned non-finite norm: scaling by `max_norm / inf` would zero the
+/// finite entries and turn the Inf entries into NaN, silently feeding a
+/// corrupt-but-plausible update into the optimizer.  Callers (the
+/// [`FusedApply`]/[`PipelinedApply`] sinks) check `norm.is_finite()` and
+/// skip the update instead — the safety net the f16 loss scaler's
+/// skip-step path is built on.
 pub fn clip_grad(grad: &mut Tensor, max_norm: f32) -> f32 {
     let norm = grad.l2_norm();
+    if !norm.is_finite() {
+        return norm;
+    }
     if max_norm > 0.0 && norm > max_norm {
         grad.scale(max_norm / (norm + 1e-12));
     }
@@ -403,6 +417,22 @@ mod tests {
         let mut g2 = Tensor::from_vec(vec![0.3, 0.4], &[2]);
         clip_grad(&mut g2, 1.0);
         assert!((g2.l2_norm() - 0.5).abs() < 1e-6, "below threshold untouched");
+    }
+
+    #[test]
+    fn clip_grad_leaves_nonfinite_grads_untouched() {
+        // Regression: clipping used to scale by max/inf = 0, turning an
+        // Inf gradient into a mix of zeros and NaNs that the optimizer
+        // would then absorb as a plausible update.
+        let mut g = Tensor::from_vec(vec![1.0, f32::INFINITY, -2.0], &[3]);
+        let norm = clip_grad(&mut g, 1.0);
+        assert!(!norm.is_finite(), "non-finite norm must be surfaced");
+        assert_eq!(g.data[0], 1.0, "finite entries untouched");
+        assert_eq!(g.data[1], f32::INFINITY, "Inf preserved, not laundered to NaN");
+        let mut g = Tensor::from_vec(vec![f32::NAN, 0.5], &[2]);
+        let norm = clip_grad(&mut g, 1.0);
+        assert!(norm.is_nan());
+        assert_eq!(g.data[1], 0.5);
     }
 
     #[test]

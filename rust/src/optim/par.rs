@@ -28,7 +28,17 @@ enum Job {
 }
 
 enum Done {
-    Applied { idx: usize, param: Tensor, grad_bytes: u64, pre_state: u64, post_state: u64, elems: usize },
+    Applied {
+        idx: usize,
+        param: Tensor,
+        grad_bytes: u64,
+        pre_state: u64,
+        post_state: u64,
+        elems: usize,
+        /// The gradient's norm came back NaN/Inf — the update was skipped
+        /// (same per-tensor safety net as the serial [`super::FusedApply`]).
+        nonfinite: bool,
+    },
     Optimizer(Box<dyn Optimizer>),
 }
 
@@ -51,6 +61,11 @@ pub struct PipelinedApply<'a> {
     pending_grad_bytes: u64,
     /// Total parameter elements updated so far.
     pub updated_elems: usize,
+    /// Gradients whose norm came back NaN/Inf (their updates were skipped
+    /// on the worker — the per-tensor safety net; the pipelined sink does
+    /// not support the f16 skip-step protocol, which needs the serial
+    /// [`super::FusedApply`] in [`super::NonFinitePolicy::SkipStep`] mode).
+    pub nonfinite_grads: usize,
     optimizer_back: Option<Box<dyn Optimizer>>,
 }
 
@@ -69,13 +84,27 @@ impl<'a> PipelinedApply<'a> {
             while let Ok(job) = job_rx.recv() {
                 match job {
                     Job::Apply { idx, mut param, mut grad, lr, clip } => {
-                        clip_grad(&mut grad, clip);
+                        let norm = clip_grad(&mut grad, clip);
+                        let nonfinite = !norm.is_finite();
                         let grad_bytes = grad.bytes() as u64;
                         let pre_state = opt.state_bytes(idx) as u64;
-                        let elems = param.numel();
-                        opt.update(idx, &mut param, &grad, lr);
+                        let elems = if nonfinite { 0 } else { param.numel() };
+                        if !nonfinite {
+                            // A NaN/Inf gradient never reaches the
+                            // optimizer: its moments would absorb the
+                            // poison and every later step would inherit it.
+                            opt.update(idx, &mut param, &grad, lr);
+                        }
                         let post_state = opt.state_bytes(idx) as u64;
-                        let done = Done::Applied { idx, param, grad_bytes, pre_state, post_state, elems };
+                        let done = Done::Applied {
+                            idx,
+                            param,
+                            grad_bytes,
+                            pre_state,
+                            post_state,
+                            elems,
+                            nonfinite,
+                        };
                         if done_tx.send(done).is_err() {
                             return;
                         }
@@ -98,6 +127,7 @@ impl<'a> PipelinedApply<'a> {
             pending: None,
             pending_grad_bytes: 0,
             updated_elems: 0,
+            nonfinite_grads: 0,
             optimizer_back: None,
         }
     }
@@ -109,7 +139,9 @@ impl<'a> PipelinedApply<'a> {
             return Ok(());
         };
         let done = self.done.recv().map_err(|_| anyhow!("update worker died"))?;
-        let Done::Applied { idx, param, grad_bytes, pre_state, post_state, elems } = done else {
+        let Done::Applied { idx, param, grad_bytes, pre_state, post_state, elems, nonfinite } =
+            done
+        else {
             bail!("update worker returned out-of-order result");
         };
         if idx != expect {
@@ -119,10 +151,17 @@ impl<'a> PipelinedApply<'a> {
         // upload cache refreshes it — same as a tensor_mut update.
         *params.tensor_mut(idx) = param;
         self.updated_elems += elems;
+        if nonfinite {
+            self.nonfinite_grads += 1;
+        }
         if let Some(l) = self.ledger.as_deref_mut() {
-            l.page_in(pre_state);
-            l.alloc_on_device(post_state.saturating_sub(pre_state));
-            l.page_out(post_state);
+            if !nonfinite {
+                // A skipped update never touched the optimizer state, so
+                // no state transfer happened to account.
+                l.page_in(pre_state);
+                l.alloc_on_device(post_state.saturating_sub(pre_state));
+                l.page_out(post_state);
+            }
             l.grad_out(grad_bytes);
         }
         self.pending_grad_bytes = 0;
@@ -261,6 +300,30 @@ mod tests {
         assert_eq!(led_pipe.peak_device_bytes, led_serial.peak_device_bytes);
         assert_eq!(led_pipe.peak_grad_resident_bytes, led_serial.peak_grad_resident_bytes);
         assert_eq!((led_pipe.page_ins, led_pipe.page_outs), (led_serial.page_ins, led_serial.page_outs));
+    }
+
+    #[test]
+    fn pipelined_skips_nonfinite_grads() {
+        let mut p = toy_params();
+        let before = p.tensors[0].data.clone();
+        let mut sink = PipelinedApply::new(
+            build(OptimCfg::new(OptimKind::AdamW), 3),
+            None,
+            vec![0, 1, 2],
+            1.0,
+            0.1,
+        );
+        sink.grad(0, "a", Tensor::from_vec(vec![f32::NAN, 0.0, 0.0, 0.0], &[4]), &mut p)
+            .unwrap();
+        sink.grad(1, "b", Tensor::from_vec(vec![1.0, -1.0], &[2]), &mut p).unwrap();
+        sink.finish(&mut p).unwrap();
+        let (nf, updated) = (sink.nonfinite_grads, sink.updated_elems);
+        let opt = sink.into_optimizer().unwrap();
+        assert_eq!(nf, 1, "NaN gradient detected");
+        assert_eq!(updated, 2, "only the healthy tensor's elements counted");
+        assert_eq!(p.tensors[0].data, before, "poisoned tensor untouched");
+        assert_ne!(p.tensors[1].data, vec![-1.0, 0.5], "healthy tensor updated");
+        assert_eq!(opt.state_bytes(0), 0, "no moments allocated for the skipped tensor");
     }
 
     #[test]

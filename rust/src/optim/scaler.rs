@@ -1,0 +1,204 @@
+//! Dynamic loss scaling for f16 backward passes — the grow/backoff state
+//! machine (Micikevicius et al., 2018) that keeps small gradients above
+//! f16's subnormal floor without letting large ones overflow.
+//!
+//! Protocol per step (the strategies drive it):
+//!
+//! 1. `scale()` is installed on the backend (`ExecBackend::set_loss_scale`);
+//!    the backward seed is multiplied by it, so every f16 intermediate and
+//!    emitted gradient is shifted up by `scale`.
+//! 2. The backend divides each gradient by `scale` (exact — the scale is
+//!    always a power of two) before handing it to the sink, so clipping and
+//!    the optimizer see honest magnitudes.
+//! 3. The sink ([`super::FusedApply`] in skip-step mode) detects any
+//!    NaN/Inf gradient and drops the whole step atomically.
+//! 4. `note_step(overflow)` advances the machine: an overflow halves the
+//!    scale and resets the good-step counter; `growth_interval` consecutive
+//!    good steps double it.
+//!
+//! Scales are clamped to powers of two in `[min_scale, max_scale]`, so
+//! scale/unscale round trips are bit-exact on every normal f32 value.
+
+/// What [`LossScaler::note_step`] did to the scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalerEvent {
+    /// Scale unchanged.
+    None,
+    /// `growth_interval` good steps elapsed — scale doubled.
+    Grew,
+    /// Overflow — scale halved (and the step was skipped by the sink).
+    BackedOff,
+}
+
+use crate::backend::ExecBackend;
+
+/// The grow/backoff loss-scale state machine.
+#[derive(Debug, Clone)]
+pub struct LossScaler {
+    scale: f32,
+    growth_interval: u32,
+    good_steps: u32,
+    min_scale: f32,
+    max_scale: f32,
+    /// Times the scale doubled.
+    pub growths: u64,
+    /// Times the scale halved on overflow.
+    pub backoffs: u64,
+    /// Steps dropped because a gradient came back non-finite.
+    pub skipped_steps: u64,
+}
+
+impl LossScaler {
+    /// `init` should be a power of two; `growth_interval` is the number of
+    /// consecutive overflow-free steps before the scale doubles.
+    pub fn new(init: f32, growth_interval: u32) -> Self {
+        LossScaler {
+            scale: init,
+            growth_interval: growth_interval.max(1),
+            good_steps: 0,
+            min_scale: 1.0,
+            max_scale: 16_777_216.0, // 2^24
+            growths: 0,
+            backoffs: 0,
+            skipped_steps: 0,
+        }
+    }
+
+    /// The default machine for f16 runs: init 2^12 with a short growth
+    /// interval — reference-scale runs are tens-to-hundreds of steps, so a
+    /// production-style 2000-step interval would never fire.  (PyTorch's
+    /// GradScaler defaults to 2^16 / 2000; the dynamics are identical,
+    /// only the time constants are scaled to this codebase's runs.)
+    pub fn default_f16() -> Self {
+        LossScaler::new(4096.0, 200)
+    }
+
+    /// The scale to seed the next backward with (always a power of two).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Advance the machine after a step: `overflow` = the sink saw a
+    /// non-finite gradient and dropped the step.
+    pub fn note_step(&mut self, overflow: bool) -> ScalerEvent {
+        if overflow {
+            self.skipped_steps += 1;
+            self.good_steps = 0;
+            let next = (self.scale * 0.5).max(self.min_scale);
+            if next < self.scale {
+                self.scale = next;
+                self.backoffs += 1;
+                return ScalerEvent::BackedOff;
+            }
+            return ScalerEvent::None; // already at the floor
+        }
+        self.good_steps += 1;
+        if self.good_steps >= self.growth_interval {
+            self.good_steps = 0;
+            let next = (self.scale * 2.0).min(self.max_scale);
+            if next > self.scale {
+                self.scale = next;
+                self.growths += 1;
+                return ScalerEvent::Grew;
+            }
+        }
+        ScalerEvent::None
+    }
+
+    /// Pre-step half of the scaler protocol, shared by every gradient
+    /// strategy: lazily engage a scaler in `slot` iff the backend's
+    /// precision needs loss scaling, install this step's scale, and report
+    /// whether scaling is active (the sink must then run in
+    /// [`super::NonFinitePolicy::SkipStep`]).
+    pub fn prepare_step(slot: &mut Option<LossScaler>, be: &mut dyn ExecBackend) -> bool {
+        if be.precision().needs_loss_scaling() && slot.is_none() {
+            *slot = Some(LossScaler::default_f16());
+        }
+        match slot {
+            Some(sc) => {
+                be.set_loss_scale(sc.scale());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Post-step half: fold what the sink observed into the backend's
+    /// [`crate::backend::RuntimeStats`] and advance the state machine.
+    pub fn finish_step(
+        slot: &mut Option<LossScaler>,
+        be: &mut dyn ExecBackend,
+        nonfinite_grads: usize,
+        step_skipped: bool,
+    ) {
+        if nonfinite_grads > 0 || step_skipped {
+            be.note_numerics(nonfinite_grads as u64, step_skipped);
+        }
+        if let Some(sc) = slot {
+            let event = sc.note_step(step_skipped);
+            be.note_loss_scale(sc.scale(), event);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_after_interval_of_good_steps() {
+        let mut s = LossScaler::new(1024.0, 4);
+        for _ in 0..3 {
+            assert_eq!(s.note_step(false), ScalerEvent::None);
+        }
+        assert_eq!(s.note_step(false), ScalerEvent::Grew);
+        assert_eq!(s.scale(), 2048.0);
+        assert_eq!(s.growths, 1);
+        // counter restarts: three more good steps don't grow again yet
+        for _ in 0..3 {
+            assert_eq!(s.note_step(false), ScalerEvent::None);
+        }
+        assert_eq!(s.note_step(false), ScalerEvent::Grew);
+        assert_eq!(s.scale(), 4096.0);
+    }
+
+    #[test]
+    fn overflow_halves_and_resets_the_good_counter() {
+        let mut s = LossScaler::new(1024.0, 4);
+        s.note_step(false);
+        s.note_step(false);
+        s.note_step(false);
+        assert_eq!(s.note_step(true), ScalerEvent::BackedOff);
+        assert_eq!(s.scale(), 512.0);
+        assert_eq!((s.backoffs, s.skipped_steps), (1, 1));
+        // the 3 pre-overflow good steps were forgotten
+        for _ in 0..3 {
+            assert_eq!(s.note_step(false), ScalerEvent::None);
+        }
+        assert_eq!(s.note_step(false), ScalerEvent::Grew);
+    }
+
+    #[test]
+    fn scale_clamps_at_floor_and_ceiling() {
+        let mut s = LossScaler::new(2.0, 1);
+        assert_eq!(s.note_step(true), ScalerEvent::BackedOff);
+        assert_eq!(s.scale(), 1.0);
+        assert_eq!(s.note_step(true), ScalerEvent::None, "floor: no further halving");
+        assert_eq!(s.scale(), 1.0);
+        assert_eq!(s.skipped_steps, 2, "skips still counted at the floor");
+
+        let mut s = LossScaler::new(16_777_216.0, 1);
+        assert_eq!(s.note_step(false), ScalerEvent::None, "ceiling: no growth past max");
+        assert_eq!(s.scale(), 16_777_216.0);
+    }
+
+    #[test]
+    fn scales_stay_powers_of_two() {
+        let mut s = LossScaler::default_f16();
+        for i in 0..500 {
+            s.note_step(i % 7 == 0);
+            let sc = s.scale();
+            assert!(sc >= 1.0 && sc.log2().fract() == 0.0, "scale {sc} not a power of two");
+        }
+    }
+}

@@ -37,7 +37,10 @@ use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
 use crate::coordinator::scheduler::{HiftScheduler, SchedulerCfg};
 use crate::coordinator::strategy::UpdateStrategy;
-use crate::optim::{self, FusedApply, OffloadLedger, OptimCfg, Optimizer, PipelinedApply};
+use crate::optim::{
+    self, FusedApply, LossScaler, NonFinitePolicy, OffloadLedger, OptimCfg, Optimizer,
+    PipelinedApply,
+};
 use crate::tensor::TensorSet;
 
 /// HiFT hyperparameters.
@@ -66,6 +69,10 @@ pub struct Hift {
     unit_sizes: Vec<usize>,
     peak_trainable: usize,
     pipeline: bool,
+    /// Dynamic loss scaler, engaged lazily when the backend runs at f16
+    /// ([`crate::backend::Precision::needs_loss_scaling`]); `None` under
+    /// f32/bf16 compute.
+    scaler: Option<LossScaler>,
     name: String,
 }
 
@@ -101,6 +108,7 @@ impl Hift {
             unit_sizes,
             peak_trainable: 0,
             pipeline,
+            scaler: None,
             name,
         })
     }
@@ -140,12 +148,20 @@ impl FineTuneStrategy for Hift {
         // paging tier; coalesced with the walk's own one-unit-ahead
         // prefetch (no duplicate transfers).
         be.prefetch_units(&self.scheduler.peek_next());
+        // f16 compute: engage the dynamic loss scaler lazily (the backend's
+        // precision is only known here) and install this step's scale
+        // before the run seeds its backward.
+        let scaling = LossScaler::prepare_step(&mut self.scaler, be);
         // Gradient slot order = concatenation of the group's unit parameter
         // lists — the contract of `run_group_streamed`.
         let slot_param: Vec<usize> =
             plan.units.iter().flat_map(|&u| self.unit_params[u].iter().copied()).collect();
+        let planned: usize = plan.units.iter().map(|&u| self.unit_sizes[u]).sum();
 
-        let (out, trainable) = if self.pipeline {
+        // The pipelined sink cannot drop a step atomically (its worker
+        // applies updates as they stream), so loss-scaled f16 runs fall
+        // back to the serial fused sink in skip-step mode.
+        let (out, trainable, nonfinite, skipped) = if self.pipeline && !scaling {
             let Some(opt) = self.optimizer.take() else {
                 anyhow::bail!("HiFT optimizer was lost by a previous failed pipelined step");
             };
@@ -158,10 +174,11 @@ impl FineTuneStrategy for Hift {
             );
             let run = be.run_group_streamed(&plan.units, params, batch, &mut sink);
             let trainable = sink.updated_elems;
+            let nonfinite = sink.nonfinite_grads;
             match run {
                 Ok(out) => {
                     self.optimizer = Some(sink.into_optimizer()?);
-                    (out, trainable)
+                    (out, trainable, nonfinite, false)
                 }
                 Err(e) => {
                     // Best-effort recovery: drain the worker, restore any
@@ -184,14 +201,20 @@ impl FineTuneStrategy for Hift {
                 &slot_param,
                 self.cfg.optim.grad_clip,
                 plan.lr,
-            );
+            )
+            .non_finite(if scaling {
+                NonFinitePolicy::SkipStep
+            } else {
+                NonFinitePolicy::SkipTensor
+            });
             let out = be.run_group_streamed(&plan.units, params, batch, &mut sink)?;
-            (out, sink.updated_elems)
+            (out, sink.updated_elems, sink.nonfinite_grads, sink.step_skipped)
         };
-        self.peak_trainable = self.peak_trainable.max(trainable);
-        debug_assert_eq!(
-            trainable,
-            plan.units.iter().map(|&u| self.unit_sizes[u]).sum::<usize>()
+        LossScaler::finish_step(&mut self.scaler, be, nonfinite, skipped);
+        self.peak_trainable = self.peak_trainable.max(planned);
+        debug_assert!(
+            skipped || nonfinite > 0 || trainable == planned,
+            "healthy step updated {trainable} of {planned} planned elements"
         );
 
         let weight_sum: f32 = batch.weights.iter().sum();
@@ -200,7 +223,9 @@ impl FineTuneStrategy for Hift {
             ncorrect: out.ncorrect,
             weight_sum,
             lr: plan.lr,
-            trainable_params: trainable,
+            // The step's trainable *set* (the paper's axis) — on a scaler
+            // skip-step the set was planned even though no element moved.
+            trainable_params: planned,
             exec_time: out.exec_time,
         })
     }

@@ -22,7 +22,7 @@ use anyhow::Result;
 use super::{grad_param_indices, FineTuneStrategy, StepStats};
 use crate::backend::{Batch, ExecBackend, Manifest};
 use crate::coordinator::lr::LrSchedule;
-use crate::optim::{self, FusedApply, OptimCfg, OptimKind, Optimizer};
+use crate::optim::{self, FusedApply, LossScaler, NonFinitePolicy, OptimCfg, OptimKind, Optimizer};
 use crate::tensor::TensorSet;
 
 /// A baseline that always trains the same parameter subset.
@@ -36,8 +36,12 @@ pub struct SubsetTune {
     grad_clip: f32,
     schedule: LrSchedule,
     step: u64,
+    /// The subset's parameter-element count (known from the manifest at
+    /// build time — the trainable *set* is fixed, so a step that skips a
+    /// non-finite tensor's update still reports the full set).
     trainable: usize,
-    trainable_known: bool,
+    /// Dynamic loss scaler, engaged lazily when the backend runs at f16.
+    scaler: Option<LossScaler>,
 }
 
 impl SubsetTune {
@@ -50,7 +54,9 @@ impl SubsetTune {
         schedule: LrSchedule,
     ) -> Result<Self> {
         let param_idxs = grad_param_indices(manifest, artifact, variant)?;
-        let n_params = manifest.variant(variant)?.params.len();
+        let vinfo = manifest.variant(variant)?;
+        let n_params = vinfo.params.len();
+        let trainable: usize = param_idxs.iter().map(|&i| vinfo.params[i].size).sum();
         Ok(SubsetTune {
             name: name.to_string(),
             variant: variant.to_string(),
@@ -60,8 +66,8 @@ impl SubsetTune {
             grad_clip: ocfg.grad_clip,
             schedule,
             step: 0,
-            trainable: 0,
-            trainable_known: false,
+            trainable,
+            scaler: None,
         })
     }
 
@@ -114,21 +120,30 @@ impl FineTuneStrategy for SubsetTune {
     ) -> Result<StepStats> {
         let lr = self.schedule.at(self.step as usize);
         self.step += 1;
-        let (out, updated) = {
+        // f16 compute: lazy scaler + per-step scale install (see Hift).
+        let scaling = LossScaler::prepare_step(&mut self.scaler, be);
+        let (out, updated, nonfinite, skipped) = {
             let mut sink = FusedApply::new(
                 &mut *self.optimizer,
                 None,
                 &self.param_idxs,
                 self.grad_clip,
                 lr,
-            );
+            )
+            .non_finite(if scaling {
+                NonFinitePolicy::SkipStep
+            } else {
+                NonFinitePolicy::SkipTensor
+            });
             let out = be.run_streamed(&self.artifact, params, batch, &mut sink)?;
-            (out, sink.updated_elems)
+            (out, sink.updated_elems, sink.nonfinite_grads, sink.step_skipped)
         };
-        if !self.trainable_known {
-            self.trainable = updated;
-            self.trainable_known = true;
-        }
+        LossScaler::finish_step(&mut self.scaler, be, nonfinite, skipped);
+        debug_assert!(
+            skipped || nonfinite > 0 || updated == self.trainable,
+            "healthy step updated {updated} of {} subset elements",
+            self.trainable
+        );
         Ok(StepStats {
             loss: out.loss,
             ncorrect: out.ncorrect,

@@ -42,6 +42,11 @@ pub struct CkptMeta {
     pub sweep: Option<u64>,
     pub strategy: String,
     pub task: String,
+    /// Compute precision the run trained at (`"f32"|"bf16"|"f16"`).
+    /// Resume rejects a precision mismatch
+    /// ([`crate::tensor::half::Precision::check_resume`]); `None` for
+    /// checkpoints predating the field, which were necessarily f32.
+    pub precision: Option<String>,
 }
 
 /// A loaded checkpoint.
@@ -96,6 +101,9 @@ pub fn save(
     ];
     if let Some(sweep) = meta.sweep {
         pairs.push(("sweep", (sweep as usize).into()));
+    }
+    if let Some(prec) = &meta.precision {
+        pairs.push(("precision", prec.as_str().into()));
     }
     if !opt_state.is_empty() {
         let (obin, otensors, ototal) =
@@ -244,6 +252,8 @@ pub fn load(dir: impl AsRef<Path>) -> Result<Ckpt> {
             sweep: v.get("sweep").as_i64().map(|s| s as u64),
             strategy: v.get("strategy").as_str().unwrap_or("").to_string(),
             task: v.get("task").as_str().unwrap_or("").to_string(),
+            // Absent in pre-precision checkpoints: None (≡ f32 at resume).
+            precision: v.get("precision").as_str().map(str::to_string),
         },
         opt_state,
     })
@@ -276,6 +286,7 @@ mod tests {
             sweep: Some(30),
             strategy: "hift".into(),
             task: "motif4".into(),
+            precision: Some("bf16".into()),
         };
         let opt = vec![
             ("0.m".to_string(), Tensor::ones(&[12])),

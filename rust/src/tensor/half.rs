@@ -1,0 +1,483 @@
+//! Shared half-precision support: the IEEE binary16 (f16) and bfloat16
+//! codecs, the [`Precision`] compute-mode selector, and [`PrecBuf`] — a
+//! precision-tagged activation buffer that genuinely stores half-width bits
+//! when a reduced-precision mode is active.
+//!
+//! The f16 codec started life inside the host-paging tier
+//! (`tensor/paged.rs`, `--offload-compress f16`) and was promoted here when
+//! the compute path gained `--precision bf16|f16`: both consumers now share
+//! one round-to-nearest-even implementation, so paged storage and compute
+//! quantization can never drift apart.
+//!
+//! ## Non-finite and out-of-range behavior (defined, deterministic)
+//!
+//! * NaN (any payload) → the **canonical quiet NaN** of the target format
+//!   (f16 `0x7e00`, bf16 `0x7fc0`), sign preserved.  Payloads are *not*
+//!   carried across the round trip — two encodes of different NaNs yield
+//!   the same bits, so paged/requantized runs stay deterministic.
+//! * ±Inf → ±Inf.
+//! * |x| > max finite target value → ±Inf (overflow rounds to infinity,
+//!   matching IEEE round-to-nearest).  For bf16 this happens through the
+//!   ordinary mantissa-carry path; f16 checks the exponent explicitly.
+//! * |x| below the smallest subnormal → ±0 (sign preserved).
+//!
+//! Every decoded value is exactly representable in f32, so a second
+//! round trip is a fixed point (idempotency is what lets a parked page or a
+//! requantized activation sit through arbitrarily many round trips without
+//! further drift) — asserted in the tests below for normals, subnormals,
+//! and the non-finite edges.
+
+use std::borrow::Cow;
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// f16 codec
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE-754 binary16 bits, round-to-nearest-even (ties-to-even):
+/// NaN → canonical quiet NaN (sign kept), overflow → ±inf, graceful
+/// subnormals, underflow → signed zero.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf stays inf; every NaN collapses to the canonical quiet NaN so
+        // the round trip is deterministic and idempotent.
+        return sign | if man != 0 { 0x7e00 } else { 0x7c00 };
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal: shift the (implicit-1) 24-bit mantissa into place
+        let man = man | 0x0080_0000;
+        let shift = (14 - e16) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && (half & 1) == 1) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = ((e16 as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    // Mantissa overflow carries into the exponent, which is the correct
+    // rounding there too (… 0x7bff + 1 = 0x7c00 = inf).
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE-754 binary16 bits → f32 (exact — every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize into f32's implicit-1 form
+            let mut e32: i32 = 127 - 15 + 1;
+            let mut m = man << 13;
+            while m & 0x0080_0000 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | ((e32 as u32) << 23) | (m & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// bf16 codec
+// ---------------------------------------------------------------------------
+
+/// f32 → bfloat16 bits, round-to-nearest-even.  bf16 keeps f32's exponent
+/// range, so there is no overflow-to-inf short of rounding f32::MAX's
+/// mantissa upward (which correctly carries into ±inf); NaN collapses to
+/// the canonical quiet NaN `0x7fc0` (sign kept).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16 & 0x8000) | 0x7fc0;
+    }
+    let upper = bits >> 16;
+    let lower = bits & 0xffff;
+    let rounded =
+        if lower > 0x8000 || (lower == 0x8000 && (upper & 1) == 1) { upper + 1 } else { upper };
+    rounded as u16
+}
+
+/// bfloat16 bits → f32 (exact: bf16 is f32's top half).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// Precision — the compute-mode selector
+// ---------------------------------------------------------------------------
+
+/// Compute precision of the native backend's forward activations, backward
+/// intermediates and emitted (pre-upcast) gradients.  Parameter masters and
+/// optimizer state stay f32 regardless (mixed precision with full-precision
+/// master state, the QFT/ChunkFT recipe the paper's §G.2 builds on).
+///
+/// `F32` is the default and is **bit-identical** to the historical
+/// f32-everywhere path: every quantization hook is a structural no-op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f32 compute (bit-identical to pre-precision-mode builds).
+    #[default]
+    F32,
+    /// bfloat16 compute: f32's exponent range, 8-bit mantissa.  Runs
+    /// unscaled — overflow is as (un)likely as in f32.
+    Bf16,
+    /// IEEE binary16 compute: 11-bit mantissa but max finite value 65504,
+    /// so backward runs under dynamic loss scaling
+    /// ([`crate::optim::LossScaler`]) with skip-step on overflow.
+    F16,
+}
+
+impl Precision {
+    /// Parse `"f32"`, `"bf16"`, `"f16"` (plus common aliases).
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "f32" | "fp32" | "float32" | "full" => Ok(Precision::F32),
+            "bf16" | "bfloat16" => Ok(Precision::Bf16),
+            "f16" | "fp16" | "half" | "float16" => Ok(Precision::F16),
+            other => bail!("bad precision {other:?} (f32|bf16|f16)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "f16",
+        }
+    }
+
+    /// Storage bytes per activation element in this precision.
+    pub fn act_bytes_per_elem(&self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    /// Does backward need dynamic loss scaling in this precision?  Only
+    /// f16: its max finite value (65504) is small enough that honest
+    /// gradients overflow; bf16 shares f32's exponent range.
+    pub fn needs_loss_scaling(&self) -> bool {
+        *self == Precision::F16
+    }
+
+    /// Round one value to this precision's representable set (identity for
+    /// [`Precision::F32`]).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+            Precision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+        }
+    }
+
+    /// Round a buffer in place.  [`Precision::F32`] returns without
+    /// touching the slice at all, so the default path stays bit-identical
+    /// by construction.
+    pub fn quantize_slice(&self, data: &mut [f32]) {
+        match self {
+            Precision::F32 => {}
+            Precision::Bf16 => {
+                for x in data.iter_mut() {
+                    *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+                }
+            }
+            Precision::F16 => {
+                for x in data.iter_mut() {
+                    *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+                }
+            }
+        }
+    }
+
+    /// Encode one value to this precision's 16-bit storage form.  Only
+    /// meaningful for the half modes ([`PrecBuf`] never calls it for f32).
+    #[inline]
+    fn encode(&self, x: f32) -> u16 {
+        match self {
+            Precision::F32 => unreachable!("f32 buffers are stored as f32"),
+            Precision::Bf16 => f32_to_bf16_bits(x),
+            Precision::F16 => f32_to_f16_bits(x),
+        }
+    }
+
+    /// Decode one 16-bit stored value back to f32.
+    #[inline]
+    fn decode(&self, h: u16) -> f32 {
+        match self {
+            Precision::F32 => unreachable!("f32 buffers are stored as f32"),
+            Precision::Bf16 => bf16_bits_to_f32(h),
+            Precision::F16 => f16_bits_to_f32(h),
+        }
+    }
+
+    /// Validate that a checkpoint written at `saved` precision (`None` for
+    /// pre-precision checkpoints, which were necessarily f32) may resume
+    /// under `current`.  A mismatch is rejected: the loss surface the run
+    /// was descending, the activation drift profile and the loss-scaler
+    /// state are all precision-specific, so silently switching would
+    /// corrupt the "resume is bit-identical" contract.
+    pub fn check_resume(saved: Option<&str>, current: Precision) -> Result<()> {
+        let saved_p = match saved {
+            Some(s) => Precision::parse(s)?,
+            None => Precision::F32,
+        };
+        if saved_p != current {
+            bail!(
+                "checkpoint was written at --precision {} but this run uses --precision {}; \
+                 resume with the matching precision (or start a fresh run)",
+                saved_p.name(),
+                current.name()
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PrecBuf — a precision-tagged activation buffer
+// ---------------------------------------------------------------------------
+
+/// An activation buffer stored at the compute precision's width: plain
+/// `Vec<f32>` under [`Precision::F32`] (zero-cost, bit-identical), packed
+/// 16-bit codewords under the half modes — the storage that genuinely
+/// halves retained-activation residency (`FwdState::act_resident_bytes`,
+/// `peak_act_resident_bytes`), not just an accounting fiction.
+///
+/// [`PrecBuf::store`] rounds through the codec; storing values that are
+/// already representable (the model quantizes in place right after each
+/// op, then stores) is exact, so load-after-store returns precisely the
+/// values compute saw.
+#[derive(Debug, Clone)]
+pub enum PrecBuf {
+    F32(Vec<f32>),
+    Half { prec: Precision, bits: Vec<u16> },
+}
+
+impl PrecBuf {
+    /// Wrap (f32) or encode (half modes) `data` at `prec`.
+    pub fn store(prec: Precision, data: Vec<f32>) -> PrecBuf {
+        match prec {
+            Precision::F32 => PrecBuf::F32(data),
+            p => PrecBuf::Half { prec: p, bits: data.iter().map(|&x| p.encode(x)).collect() },
+        }
+    }
+
+    /// An empty f32 buffer (placeholder for variant-dependent caches).
+    pub fn empty() -> PrecBuf {
+        PrecBuf::F32(Vec::new())
+    }
+
+    /// Decode to f32 for compute: borrowed (free) for f32 buffers, an owned
+    /// decode for half buffers.
+    pub fn load(&self) -> Cow<'_, [f32]> {
+        match self {
+            PrecBuf::F32(v) => Cow::Borrowed(v.as_slice()),
+            PrecBuf::Half { prec, bits } => {
+                Cow::Owned(bits.iter().map(|&h| prec.decode(h)).collect())
+            }
+        }
+    }
+
+    /// Decode into an owned `Vec<f32>` (moves the f32 case out for free).
+    pub fn into_vec(self) -> Vec<f32> {
+        match self {
+            PrecBuf::F32(v) => v,
+            PrecBuf::Half { prec, bits } => bits.into_iter().map(|h| prec.decode(h)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PrecBuf::F32(v) => v.len(),
+            PrecBuf::Half { bits, .. } => bits.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Physical storage bytes (4 per element for f32, 2 for half modes).
+    pub fn bytes(&self) -> usize {
+        match self {
+            PrecBuf::F32(v) => v.len() * 4,
+            PrecBuf::Half { bits, .. } => bits.len() * 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_is_idempotent_and_exact_on_representables() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 2.0f32.powi(-14), 0.099976] {
+            let once = f16_bits_to_f32(f32_to_f16_bits(x));
+            let twice = f16_bits_to_f32(f32_to_f16_bits(once));
+            assert_eq!(once.to_bits(), twice.to_bits(), "roundtrip must be idempotent for {x}");
+        }
+        // exactly-representable values survive untouched
+        for &x in &[1.0f32, 0.25, -3.5, 1024.0, 2.0f32.powi(-24)] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x} is f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_handles_specials_and_rounding() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00, "overflow → inf");
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00, "just past max_f16 rounds to inf");
+        assert_eq!(f32_to_f16_bits(1e-9), 0, "underflow → 0");
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000, "underflow keeps the sign");
+        // ties-to-even: 1 + 2^-11 is exactly halfway between 1.0 and the
+        // next f16 (1 + 2^-10) → rounds to the even mantissa (0x3c00).
+        let tie = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie), 0x3c00, "tie rounds to even");
+        // error of a random-ish value is within half an ulp (2^-11 rel.)
+        let x = 0.123456789f32;
+        let r = f16_bits_to_f32(f32_to_f16_bits(x));
+        assert!((r - x).abs() / x < 1e-3, "{x} → {r}");
+    }
+
+    #[test]
+    fn f16_nan_is_canonical_and_deterministic() {
+        // Two NaNs with different payloads must encode to the same bits —
+        // the round trip defines ONE representative per sign.
+        let nan_a = f32::from_bits(0x7fc0_0001);
+        let nan_b = f32::from_bits(0x7f80_0001);
+        assert_eq!(f32_to_f16_bits(nan_a), 0x7e00);
+        assert_eq!(f32_to_f16_bits(nan_b), 0x7e00);
+        let neg_nan = f32::from_bits(0xffc1_2345);
+        assert_eq!(f32_to_f16_bits(neg_nan), 0xfe00, "sign survives canonicalization");
+        // idempotent: decode(encode(NaN)) re-encodes to the same bits
+        let once = f16_bits_to_f32(0x7e00);
+        assert!(once.is_nan());
+        assert_eq!(f32_to_f16_bits(once), 0x7e00);
+    }
+
+    #[test]
+    fn f16_infinities_roundtrip_exactly() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        // overflow-to-inf is sticky: the decoded inf re-encodes as inf
+        let over = f16_bits_to_f32(f32_to_f16_bits(1e30));
+        assert_eq!(over, f32::INFINITY);
+        assert_eq!(f32_to_f16_bits(over), 0x7c00);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e30)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_specials() {
+        // bf16-exact values survive untouched (any f32 with a 7-bit mantissa)
+        for &x in &[0.0f32, -0.0, 1.0, -2.0, 0.5, 1.5, 3.0e38, 1e-38] {
+            let r = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            let rr = bf16_bits_to_f32(f32_to_bf16_bits(r));
+            assert_eq!(r.to_bits(), rr.to_bits(), "idempotent for {x}");
+        }
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0)), 1.0);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        assert_eq!(f32_to_bf16_bits(f32::NEG_INFINITY), 0xff80);
+        // NaN → canonical 0x7fc0 (sign kept), regardless of payload
+        assert_eq!(f32_to_bf16_bits(f32::NAN) & 0x7fff, 0x7fc0);
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0xff80_0001)), 0xffc0);
+        assert!(bf16_bits_to_f32(0x7fc0).is_nan());
+        // f32::MAX's mantissa rounds up → carries into inf (defined overflow)
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7f80);
+        assert_eq!(f32_to_bf16_bits(-f32::MAX), 0xff80);
+        // ties-to-even on the 16th bit: 1 + 2^-8 is halfway between
+        // 1.0 (0x3f80) and the next bf16 (0x3f81) → even wins (0x3f80).
+        assert_eq!(f32_to_bf16_bits(1.0 + 2.0f32.powi(-8)), 0x3f80);
+        // relative error bound ~2^-8
+        let x = 0.123456789f32;
+        let r = bf16_bits_to_f32(f32_to_bf16_bits(x));
+        assert!((r - x).abs() / x < 4e-3, "{x} → {r}");
+    }
+
+    #[test]
+    fn precision_parse_and_props() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("half").unwrap(), Precision::F16);
+        assert!(Precision::parse("f8").is_err());
+        for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Precision::F32.act_bytes_per_elem(), 4);
+        assert_eq!(Precision::Bf16.act_bytes_per_elem(), 2);
+        assert!(Precision::F16.needs_loss_scaling());
+        assert!(!Precision::Bf16.needs_loss_scaling());
+    }
+
+    #[test]
+    fn quantize_slice_is_a_true_noop_for_f32() {
+        let orig = vec![0.1f32, f32::NAN, 1e30, -0.0];
+        let mut v = orig.clone();
+        Precision::F32.quantize_slice(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 mode must not rewrite any bit");
+        }
+    }
+
+    #[test]
+    fn precbuf_storage_width_and_roundtrip() {
+        let data = vec![0.5f32, -1.25, 3.0, 0.099976];
+        let b32 = PrecBuf::store(Precision::F32, data.clone());
+        assert_eq!(b32.bytes(), 16);
+        assert_eq!(b32.load().as_ref(), data.as_slice(), "f32 load is verbatim");
+
+        let b16 = PrecBuf::store(Precision::F16, data.clone());
+        assert_eq!(b16.bytes(), 8, "half storage is physically half");
+        assert_eq!(b16.len(), 4);
+        let dec = b16.load();
+        assert_eq!(dec[0], 0.5, "f16-exact values survive");
+        // store(quantized) is exact: quantize first, then store+load
+        let mut q = data.clone();
+        Precision::F16.quantize_slice(&mut q);
+        let b = PrecBuf::store(Precision::F16, q.clone());
+        assert_eq!(b.load().as_ref(), q.as_slice(), "load-after-store of representables is exact");
+        assert_eq!(b.into_vec(), q);
+        assert!(PrecBuf::empty().is_empty());
+    }
+
+    #[test]
+    fn resume_precision_check() {
+        use Precision::*;
+        assert!(Precision::check_resume(None, F32).is_ok(), "legacy checkpoints are f32");
+        assert!(Precision::check_resume(Some("f32"), F32).is_ok());
+        assert!(Precision::check_resume(Some("bf16"), Bf16).is_ok());
+        assert!(Precision::check_resume(None, F16).is_err());
+        assert!(Precision::check_resume(Some("f16"), F32).is_err());
+        let err = Precision::check_resume(Some("f32"), Bf16).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
+        assert!(Precision::check_resume(Some("garbage"), F32).is_err());
+    }
+}

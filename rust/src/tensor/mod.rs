@@ -6,6 +6,7 @@
 //! loops) is the L3 hot path profiled in EXPERIMENTS.md §Perf.
 
 pub mod checkpoint;
+pub mod half;
 pub mod paged;
 
 use crate::rng::Pcg32;

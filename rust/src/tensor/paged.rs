@@ -54,73 +54,11 @@ use anyhow::{anyhow, bail, Result};
 use super::TensorSet;
 use crate::optim::OffloadLedger;
 
-// ---------------------------------------------------------------------------
-// f16 codec (no `half` crate in the offline vendor set)
-// ---------------------------------------------------------------------------
-
-/// f32 → IEEE-754 binary16 bits, round-to-nearest-even (ties-to-even), with
-/// overflow to ±inf, graceful subnormals and NaN payload preservation.
-pub fn f32_to_f16_bits(x: f32) -> u16 {
-    let bits = x.to_bits();
-    let sign = ((bits >> 16) & 0x8000) as u16;
-    let exp = ((bits >> 23) & 0xff) as i32;
-    let man = bits & 0x007f_ffff;
-    if exp == 0xff {
-        // inf / NaN (keep NaNs quiet and non-zero-mantissa)
-        let payload = (man >> 13) as u16 & 0x3ff;
-        return sign | 0x7c00 | if man != 0 { payload | 0x0200 } else { 0 };
-    }
-    let e16 = exp - 127 + 15;
-    if e16 >= 0x1f {
-        return sign | 0x7c00; // overflow → inf
-    }
-    if e16 <= 0 {
-        if e16 < -10 {
-            return sign; // underflow → signed zero
-        }
-        // subnormal: shift the (implicit-1) 24-bit mantissa into place
-        let man = man | 0x0080_0000;
-        let shift = (14 - e16) as u32; // 14..=24
-        let half = man >> shift;
-        let rem = man & ((1u32 << shift) - 1);
-        let halfway = 1u32 << (shift - 1);
-        let rounded =
-            if rem > halfway || (rem == halfway && (half & 1) == 1) { half + 1 } else { half };
-        return sign | rounded as u16;
-    }
-    let half = ((e16 as u32) << 10) | (man >> 13);
-    let rem = man & 0x1fff;
-    // Mantissa overflow carries into the exponent, which is the correct
-    // rounding there too (… 0x7bff + 1 = 0x7c00 = inf).
-    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) { half + 1 } else { half };
-    sign | rounded as u16
-}
-
-/// IEEE-754 binary16 bits → f32 (exact — every f16 value is representable).
-pub fn f16_bits_to_f32(h: u16) -> f32 {
-    let sign = ((h & 0x8000) as u32) << 16;
-    let exp = ((h >> 10) & 0x1f) as u32;
-    let man = (h & 0x3ff) as u32;
-    let bits = if exp == 0x1f {
-        sign | 0x7f80_0000 | (man << 13)
-    } else if exp == 0 {
-        if man == 0 {
-            sign
-        } else {
-            // subnormal: normalize into f32's implicit-1 form
-            let mut e32: i32 = 127 - 15 + 1;
-            let mut m = man << 13;
-            while m & 0x0080_0000 == 0 {
-                m <<= 1;
-                e32 -= 1;
-            }
-            sign | ((e32 as u32) << 23) | (m & 0x007f_ffff)
-        }
-    } else {
-        sign | ((exp + 127 - 15) << 23) | (man << 13)
-    };
-    f32::from_bits(bits)
-}
+// The f16 codec now lives in the shared `tensor/half.rs` (the compute path
+// — `--precision bf16|f16` — uses the same round-to-nearest-even
+// implementation, so paged storage and compute quantization cannot drift
+// apart).  Re-exported here for the paging tier's historical callers.
+pub use super::half::{f16_bits_to_f32, f32_to_f16_bits};
 
 // ---------------------------------------------------------------------------
 // Configuration
@@ -834,37 +772,8 @@ mod tests {
     use super::*;
     use crate::tensor::Tensor;
 
-    #[test]
-    fn f16_roundtrip_is_idempotent_and_exact_on_representables() {
-        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 2.0f32.powi(-14), 0.099976] {
-            let once = f16_bits_to_f32(f32_to_f16_bits(x));
-            let twice = f16_bits_to_f32(f32_to_f16_bits(once));
-            assert_eq!(once.to_bits(), twice.to_bits(), "roundtrip must be idempotent for {x}");
-        }
-        // exactly-representable values survive untouched
-        for &x in &[1.0f32, 0.25, -3.5, 1024.0, 2.0f32.powi(-24)] {
-            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x} is f16-exact");
-        }
-    }
-
-    #[test]
-    fn f16_handles_specials_and_rounding() {
-        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
-        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
-        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
-        assert_eq!(f32_to_f16_bits(1e9), 0x7c00, "overflow → inf");
-        assert_eq!(f32_to_f16_bits(1e-9), 0, "underflow → 0");
-        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000, "underflow keeps the sign");
-        // ties-to-even: 2049/2048 is exactly halfway between 1.0 and the
-        // next f16 (1 + 2^-10) → rounds to the even mantissa (1.0 + 2^-10
-        // has odd LSB? 0x3c00 is even, 0x3c01 odd → picks 0x3c00).
-        let tie = 1.0f32 + 2.0f32.powi(-11);
-        assert_eq!(f32_to_f16_bits(tie), 0x3c00, "tie rounds to even");
-        // error of a random-ish value is within half an ulp (2^-11 rel.)
-        let x = 0.123456789f32;
-        let r = f16_bits_to_f32(f32_to_f16_bits(x));
-        assert!((r - x).abs() / x < 1e-3, "{x} → {r}");
-    }
+    // The codec's own edge tests (NaN canonicalization, overflow→inf,
+    // ties-to-even, idempotency) live with the codec in `tensor/half.rs`.
 
     #[test]
     fn host_pool_roundtrips_lossless_and_compresses_f16() {
