@@ -1,0 +1,11 @@
+//! `cargo bench --bench bench_kernels` — the kernel-layer exhibit: naive
+//! vs cache-blocked vs blocked+SIMD GEMM throughput (bit-identical f32
+//! results), end-to-end per-kind runs, and the fused streaming-softmax
+//! attention's measured peak-activation saving (see hift::bench::exhibits).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::kernels(&mut b)?;
+    eprintln!("[bench_kernels] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

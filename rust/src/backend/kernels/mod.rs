@@ -1,0 +1,732 @@
+//! The native backend's compute-kernel layer: cache-blocked GEMM with
+//! packed panels, optional `std::simd` micro-kernels (cargo feature
+//! `simd`), and the SIMD-vectorized elementwise kernels (GELU, LayerNorm
+//! normalize, AdamW update) the hot loops in [`super::par`],
+//! [`super::model`] and [`crate::optim`] call into.
+//!
+//! ## The reduction-order guarantee
+//!
+//! Every kernel in this module computes each output element as a **single
+//! fixed-order reduction**: partial products accumulate in ascending
+//! reduction-index order into a zero-initialized f32 accumulator, which is
+//! added to the output exactly once.  No fused multiply-add, no lane-split
+//! reductions, no reassociation.  Because IEEE-754 `+ - * / sqrt` are
+//! correctly rounded and `std::simd` lanes perform the same scalar
+//! operations element-wise, the three GEMM schedules — [`KernelKind::Naive`]
+//! (textbook triple loop, the retained reference), [`KernelKind::Blocked`]
+//! (packed panels + register tiles) and [`KernelKind::Simd`] (the same
+//! schedule with explicit 8-lane vectors) — produce **bit-identical** f32
+//! results, and so do the scalar/SIMD flavors of every elementwise kernel.
+//! That is what lets `--kernels` switch schedules without perturbing any
+//! streaming/checkpoint/offload/precision identity test.
+//!
+//! The tile schedule (blocked path): output columns are processed in
+//! strips of [`NC`]; per strip, the B operand is packed once into a
+//! contiguous `[K, NC]` panel (transposed packing for the `a @ bᵀ` and
+//! `aᵀ @ b` forms, so all three GEMM shapes reduce to one micro-kernel);
+//! rows are processed in register blocks of [`MR`] with the reduction
+//! dimension consumed in [`KC`]-deep passes so the active panel slice
+//! stays L1-resident while `MR × NC` accumulators live in registers /
+//! the stack.  Threading (via [`super::par::par_rows`]) only ever splits
+//! **disjoint output rows**, which does not touch reduction order.
+//!
+//! Kernel selection is process-global (`HIFT_KERNELS` env or
+//! [`set_kind`], surfaced as `--kernels naive|blocked|simd`); since all
+//! kinds agree bit-for-bit in f32 this is a pure performance knob.  The
+//! module also keeps process-global flop/nanosecond counters
+//! ([`counters`]) that the native backend snapshots around each execution
+//! into `RuntimeStats::kernel_flops`/`kernel_nanos` — measured GFLOP/s,
+//! not modeled.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::par;
+
+/// Column-strip width of the packed B panel.
+const NC: usize = 128;
+/// Row block (register tile height) of the micro-kernel.
+const MR: usize = 8;
+/// Reduction-depth of one packed-panel pass (keeps the active
+/// `KC × NC` panel slice ≈ 32 KiB — L1-resident).
+const KC: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Kernel selection
+// ---------------------------------------------------------------------------
+
+/// Which GEMM/attention schedule the native backend runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Textbook triple-loop GEMM and materialized `[B*H, T*T]` attention
+    /// probabilities — the retained reference the other kinds are
+    /// bit-compared against.
+    Naive,
+    /// Cache-blocked GEMM (packed panels, register tiles) and the fused
+    /// streaming-softmax attention path.  The default.
+    #[default]
+    Blocked,
+    /// [`KernelKind::Blocked`] with explicit `std::simd` micro-kernels.
+    /// Requires the `simd` cargo feature (nightly `portable_simd`);
+    /// without it the scalar blocked micro-kernel runs instead.
+    Simd,
+}
+
+impl KernelKind {
+    /// Parse `"naive"`, `"blocked"`, `"simd"`.
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "blocked" => Ok(KernelKind::Blocked),
+            "naive" => Ok(KernelKind::Naive),
+            "simd" => Ok(KernelKind::Simd),
+            other => bail!("bad kernel kind {other:?} (naive|blocked|simd)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Naive => "naive",
+            KernelKind::Blocked => "blocked",
+            KernelKind::Simd => "simd",
+        }
+    }
+
+    /// Does this kind run the fused streaming-softmax attention path
+    /// (never materializing the `[B*H, T*T]` probability matrix)?
+    pub fn fused_attention(&self) -> bool {
+        !matches!(self, KernelKind::Naive)
+    }
+
+    /// Should the micro-kernels use explicit SIMD?  True only for
+    /// [`KernelKind::Simd`] in a build with the `simd` feature.
+    fn simd(&self) -> bool {
+        matches!(self, KernelKind::Simd) && simd_available()
+    }
+}
+
+/// Was this binary built with the `simd` cargo feature (explicit
+/// `std::simd` micro-kernels)?  Without it [`KernelKind::Simd`] falls back
+/// to the scalar blocked micro-kernel — same schedule, same bits.
+pub const fn simd_available() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// `u8::MAX` = "no override installed; use the env default".
+static KIND_OVERRIDE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn env_default() -> KernelKind {
+    static CACHE: OnceLock<KernelKind> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("HIFT_KERNELS")
+            .ok()
+            .and_then(|s| KernelKind::parse(&s).ok())
+            .unwrap_or_default()
+    })
+}
+
+/// The active kernel kind: the last [`set_kind`] override, else
+/// `HIFT_KERNELS`, else [`KernelKind::Blocked`].
+pub fn kind() -> KernelKind {
+    match KIND_OVERRIDE.load(Ordering::Relaxed) {
+        0 => KernelKind::Naive,
+        1 => KernelKind::Blocked,
+        2 => KernelKind::Simd,
+        _ => env_default(),
+    }
+}
+
+/// Install a process-global kernel-kind override (`--kernels`,
+/// `ExecBackend::set_kernels`).  Safe to flip between runs: every kind is
+/// bit-identical in f32, so concurrent readers can never observe a
+/// numerically different model.
+pub fn set_kind(k: KernelKind) {
+    KIND_OVERRIDE.store(k as u8, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Measured kernel throughput
+// ---------------------------------------------------------------------------
+
+static KERNEL_FLOPS: AtomicU64 = AtomicU64::new(0);
+static KERNEL_NANOS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative `(flops, nanoseconds)` spent inside kernel entry points
+/// (GEMM and the attention cores) process-wide.  The native backend
+/// snapshots deltas around each execution into
+/// `RuntimeStats::kernel_flops` / `kernel_nanos`; `flops / nanos` is
+/// GFLOP/s by construction.
+pub fn counters() -> (u64, u64) {
+    (KERNEL_FLOPS.load(Ordering::Relaxed), KERNEL_NANOS.load(Ordering::Relaxed))
+}
+
+/// Fold one kernel invocation into the process-wide counters.
+pub(crate) fn note(flops: u64, nanos: u64) {
+    KERNEL_FLOPS.fetch_add(flops, Ordering::Relaxed);
+    KERNEL_NANOS.fetch_add(nanos, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// GEMM — three forms, one reduction discipline
+// ---------------------------------------------------------------------------
+
+/// `c += a @ b` (`a: [M,K]`, `b: [K,N]`, `c: [M,N]`, row-major) under an
+/// explicit kernel kind.  [`super::par::matmul`] is the
+/// current-global-kind wrapper.
+pub fn matmul_with(kind: KernelKind, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul: a");
+    assert_eq!(b.len(), k * n, "matmul: b");
+    assert_eq!(c.len(), m * n, "matmul: c");
+    let t0 = Instant::now();
+    let row_cost = 2 * k * n;
+    match kind {
+        KernelKind::Naive => par::par_rows(c, n, row_cost, |r0, cc| {
+            for (ri, crow) in cc.chunks_mut(n).enumerate() {
+                let arow = &a[(r0 + ri) * k..][..k];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (kk, &aik) in arow.iter().enumerate() {
+                        acc += aik * b[kk * n + j];
+                    }
+                    *cj += acc;
+                }
+            }
+        }),
+        _ => {
+            let simd = kind.simd();
+            par::par_rows(c, n, row_cost, |r0, cc| {
+                let rows = cc.len() / n;
+                let arows = &a[r0 * k..][..rows * k];
+                gemm_chunk_blocked(simd, arows, k, cc, n, rows, &|j0, bp, nc| {
+                    for kk in 0..k {
+                        bp[kk * nc..][..nc].copy_from_slice(&b[kk * n + j0..][..nc]);
+                    }
+                });
+            });
+        }
+    }
+    note((2 * m * k * n) as u64, t0.elapsed().as_nanos() as u64);
+}
+
+/// `c += aᵀ @ b` (`a: [M,K]`, `b: [M,N]`, `c: [K,N]` — the weight-grad
+/// form `dW = Xᵀ dY`) under an explicit kernel kind.
+pub fn matmul_at_with(kind: KernelKind, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_at: a");
+    assert_eq!(b.len(), m * n, "matmul_at: b");
+    assert_eq!(c.len(), k * n, "matmul_at: c");
+    let t0 = Instant::now();
+    let row_cost = 2 * m * n;
+    match kind {
+        KernelKind::Naive => par::par_rows(c, n, row_cost, |r0, cc| {
+            for (ri, crow) in cc.chunks_mut(n).enumerate() {
+                let kk = r0 + ri;
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for i in 0..m {
+                        acc += a[i * k + kk] * b[i * n + j];
+                    }
+                    *cj += acc;
+                }
+            }
+        }),
+        _ => {
+            let simd = kind.simd();
+            par::par_rows(c, n, row_cost, |r0, cc| {
+                let rows = cc.len() / n;
+                // Pack this chunk's slice of aᵀ once: row r (output row
+                // r0+r) holds a[., r0+r] contiguously over the reduction
+                // index i — a pure copy, so reduction order is untouched.
+                let mut at = vec![0.0f32; rows * m];
+                for (r, atrow) in at.chunks_mut(m).enumerate() {
+                    let col = r0 + r;
+                    for (i, slot) in atrow.iter_mut().enumerate() {
+                        *slot = a[i * k + col];
+                    }
+                }
+                gemm_chunk_blocked(simd, &at, m, cc, n, rows, &|j0, bp, nc| {
+                    for ii in 0..m {
+                        bp[ii * nc..][..nc].copy_from_slice(&b[ii * n + j0..][..nc]);
+                    }
+                });
+            });
+        }
+    }
+    note((2 * m * k * n) as u64, t0.elapsed().as_nanos() as u64);
+}
+
+/// `c += a @ bᵀ` (`a: [M,K]`, `b: [N,K]`, `c: [M,N]` — the input-grad
+/// form `dX = dY Wᵀ`) under an explicit kernel kind.
+pub fn matmul_bt_with(kind: KernelKind, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_bt: a");
+    assert_eq!(b.len(), n * k, "matmul_bt: b");
+    assert_eq!(c.len(), m * n, "matmul_bt: c");
+    let t0 = Instant::now();
+    let row_cost = 2 * k * n;
+    match kind {
+        KernelKind::Naive => par::par_rows(c, n, row_cost, |r0, cc| {
+            for (ri, crow) in cc.chunks_mut(n).enumerate() {
+                let arow = &a[(r0 + ri) * k..][..k];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let brow = &b[j * k..][..k];
+                    let mut acc = 0.0f32;
+                    for (&x, &y) in arow.iter().zip(brow.iter()) {
+                        acc += x * y;
+                    }
+                    *cj += acc;
+                }
+            }
+        }),
+        _ => {
+            let simd = kind.simd();
+            par::par_rows(c, n, row_cost, |r0, cc| {
+                let rows = cc.len() / n;
+                let arows = &a[r0 * k..][..rows * k];
+                // Pack bᵀ panels: bp[kk][jj] = b[(j0+jj)*k + kk] — a pure
+                // transpose copy.
+                gemm_chunk_blocked(simd, arows, k, cc, n, rows, &|j0, bp, nc| {
+                    for kk in 0..k {
+                        let dst = &mut bp[kk * nc..][..nc];
+                        for (jj, slot) in dst.iter_mut().enumerate() {
+                            *slot = b[(j0 + jj) * k + kk];
+                        }
+                    }
+                });
+            });
+        }
+    }
+    note((2 * m * k * n) as u64, t0.elapsed().as_nanos() as u64);
+}
+
+/// One thread-chunk of the blocked schedule: `rows` consecutive output
+/// rows (`cc`, row stride `n`) with their reduction vectors stored
+/// contiguously in `arows` (row stride `kr`).  `pack_b(j0, bp, nc)` fills
+/// the packed `[kr, nc]` panel for the column strip at `j0`.
+fn gemm_chunk_blocked(
+    simd: bool,
+    arows: &[f32],
+    kr: usize,
+    cc: &mut [f32],
+    n: usize,
+    rows: usize,
+    pack_b: &(dyn Fn(usize, &mut [f32], usize) + Sync),
+) {
+    let mut bp = vec![0.0f32; kr * NC.min(n.max(1))];
+    let mut j0 = 0;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        pack_b(j0, &mut bp[..kr * nc], nc);
+        let mut r0 = 0;
+        while r0 < rows {
+            let mr = MR.min(rows - r0);
+            micro_kernel(simd, &arows[r0 * kr..][..mr * kr], kr, &bp[..kr * nc], nc, cc, n, j0, r0, mr);
+            r0 += mr;
+        }
+        j0 += nc;
+    }
+}
+
+/// `MR × NC` register-tile micro-kernel: accumulators are zero-initialized,
+/// consume the packed panel in ascending-k [`KC`]-deep passes, and are
+/// added to C exactly once — the reduction-order guarantee.
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    simd: bool,
+    ablock: &[f32],
+    kr: usize,
+    bp: &[f32],
+    nc: usize,
+    cc: &mut [f32],
+    n: usize,
+    j0: usize,
+    r0: usize,
+    mr: usize,
+) {
+    let mut acc = [[0.0f32; NC]; MR];
+    let mut k0 = 0;
+    while k0 < kr {
+        let kc = KC.min(kr - k0);
+        for (ri, accr) in acc.iter_mut().enumerate().take(mr) {
+            let ar = &ablock[ri * kr + k0..][..kc];
+            axpy_strip(simd, ar, &bp[k0 * nc..][..kc * nc], nc, accr);
+        }
+        k0 += kc;
+    }
+    for (ri, accr) in acc.iter().enumerate().take(mr) {
+        let crow = &mut cc[(r0 + ri) * n + j0..][..nc];
+        for (cj, &aj) in crow.iter_mut().zip(accr[..nc].iter()) {
+            *cj += aj;
+        }
+    }
+}
+
+/// `accr[j] += Σ_kk ar[kk] * panel[kk*nc + j]`, ascending `kk` — the
+/// innermost loop of the blocked schedule.  The SIMD flavor vectorizes the
+/// `j` lanes only; per lane it performs the same mul-then-add sequence as
+/// the scalar loop, so both flavors are bit-identical.
+fn axpy_strip(simd: bool, ar: &[f32], panel: &[f32], nc: usize, accr: &mut [f32; NC]) {
+    #[cfg(feature = "simd")]
+    if simd {
+        axpy_strip_simd(ar, panel, nc, accr);
+        return;
+    }
+    let _ = simd;
+    for (kk, &av) in ar.iter().enumerate() {
+        let brow = &panel[kk * nc..][..nc];
+        for (aj, &bj) in accr[..nc].iter_mut().zip(brow.iter()) {
+            *aj += av * bj;
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+fn axpy_strip_simd(ar: &[f32], panel: &[f32], nc: usize, accr: &mut [f32; NC]) {
+    use std::simd::f32x8;
+    const L: usize = 8;
+    let lanes = nc / L * L;
+    for (kk, &av) in ar.iter().enumerate() {
+        let avv = f32x8::splat(av);
+        let brow = &panel[kk * nc..][..nc];
+        let mut j = 0;
+        while j < lanes {
+            let mut acc = f32x8::from_slice(&accr[j..]);
+            acc = acc + avv * f32x8::from_slice(&brow[j..]);
+            acc.copy_to_slice(&mut accr[j..j + L]);
+            j += L;
+        }
+        for jj in lanes..nc {
+            accr[jj] += av * brow[jj];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels (GELU, LayerNorm normalize, AdamW update)
+// ---------------------------------------------------------------------------
+//
+// Each has one scalar expression of record; the SIMD flavor performs the
+// identical operation sequence per lane (tanh, which `std::simd` lacks,
+// stays a per-lane scalar call), so scalar and SIMD builds agree
+// bit-for-bit.
+
+pub(crate) const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+pub(crate) const GELU_A: f32 = 0.044_715;
+
+/// Scalar tanh-GELU (the expression of record).
+#[inline]
+pub(crate) fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+/// Scalar tanh-GELU derivative (the expression of record).
+#[inline]
+pub(crate) fn dgelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    let th = u.tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// In-place GELU over a slice.  SIMD builds vectorize the polynomial /
+/// combine arithmetic around a per-lane scalar tanh.
+pub fn gelu_slice(xs: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::f32x8;
+        const L: usize = 8;
+        let half = f32x8::splat(0.5);
+        let one = f32x8::splat(1.0);
+        let gc = f32x8::splat(GELU_C);
+        let ga = f32x8::splat(GELU_A);
+        let mut chunks = xs.chunks_exact_mut(L);
+        for ch in &mut chunks {
+            let x = f32x8::from_slice(ch);
+            // u = GELU_C * (x + ((GELU_A*x)*x)*x)  — same association as
+            // the scalar `GELU_A * x * x * x`.
+            let u = gc * (x + ((ga * x) * x) * x);
+            let mut t = [0.0f32; L];
+            u.copy_to_slice(&mut t);
+            for v in t.iter_mut() {
+                *v = v.tanh();
+            }
+            let th = f32x8::from_slice(&t);
+            let y = (half * x) * (one + th);
+            y.copy_to_slice(ch);
+        }
+        for x in chunks.into_remainder() {
+            *x = gelu(*x);
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    for x in xs.iter_mut() {
+        *x = gelu(*x);
+    }
+}
+
+/// `dz[i] *= dgelu(a[i])` — the GELU backward scaling.
+pub fn dgelu_slice(dz: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(dz.len(), a.len());
+    for (z, &x) in dz.iter_mut().zip(a.iter()) {
+        *z *= dgelu(x);
+    }
+}
+
+/// LayerNorm normalize step for one row:
+/// `y[j] = (x[j] - mean) * inv * scale[j] + bias[j]` (the row reductions
+/// that produce `mean`/`inv` stay scalar in the caller — fixed order).
+pub fn ln_norm_row(xr: &[f32], yr: &mut [f32], mean: f32, inv: f32, scale: &[f32], bias: &[f32]) {
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::f32x8;
+        const L: usize = 8;
+        let n = xr.len();
+        let lanes = n / L * L;
+        let mu = f32x8::splat(mean);
+        let iv = f32x8::splat(inv);
+        let mut j = 0;
+        while j < lanes {
+            let x = f32x8::from_slice(&xr[j..]);
+            let sc = f32x8::from_slice(&scale[j..]);
+            let bi = f32x8::from_slice(&bias[j..]);
+            // ((x - mu) * iv) * sc + bi — same association as the scalar
+            // expression of record.
+            let y = ((x - mu) * iv) * sc + bi;
+            y.copy_to_slice(&mut yr[j..j + L]);
+            j += L;
+        }
+        for jj in lanes..n {
+            yr[jj] = (xr[jj] - mean) * inv * scale[jj] + bias[jj];
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    for j in 0..xr.len() {
+        yr[j] = (xr[j] - mean) * inv * scale[j] + bias[j];
+    }
+}
+
+/// Fused AdamW update over one chunk (the optimizer hot loop):
+///
+/// ```text
+/// m ← β₁·m + (1-β₁)·g          v ← β₂·v + (1-β₂)·g·g
+/// p ← p − lr·( (m/bc₁) / (√(v/bc₂) + ε) + wd·p )
+/// ```
+///
+/// Same expression order in both flavors; `std::simd` div/sqrt are
+/// correctly rounded per lane, so scalar and SIMD agree bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_chunk(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    wd: f32,
+    lr: f32,
+) {
+    debug_assert!(p.len() == m.len() && p.len() == v.len() && p.len() == g.len());
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::{f32x8, StdFloat};
+        const L: usize = 8;
+        let n = p.len();
+        let lanes = n / L * L;
+        let b1v = f32x8::splat(b1);
+        let b1c = f32x8::splat(1.0 - b1);
+        let b2v = f32x8::splat(b2);
+        let b2c = f32x8::splat(1.0 - b2);
+        let bc1v = f32x8::splat(bc1);
+        let bc2v = f32x8::splat(bc2);
+        let epsv = f32x8::splat(eps);
+        let wdv = f32x8::splat(wd);
+        let lrv = f32x8::splat(lr);
+        let mut i = 0;
+        while i < lanes {
+            let gv = f32x8::from_slice(&g[i..]);
+            let mv = b1v * f32x8::from_slice(&m[i..]) + b1c * gv;
+            let vv = b2v * f32x8::from_slice(&v[i..]) + (b2c * gv) * gv;
+            mv.copy_to_slice(&mut m[i..i + L]);
+            vv.copy_to_slice(&mut v[i..i + L]);
+            let mhat = mv / bc1v;
+            let vhat = vv / bc2v;
+            let pv = f32x8::from_slice(&p[i..]);
+            let upd = pv - lrv * (mhat / (vhat.sqrt() + epsv) + wdv * pv);
+            upd.copy_to_slice(&mut p[i..i + L]);
+            i += L;
+        }
+        adamw_chunk_scalar(
+            &mut p[lanes..],
+            &mut m[lanes..],
+            &mut v[lanes..],
+            &g[lanes..],
+            b1,
+            b2,
+            bc1,
+            bc2,
+            eps,
+            wd,
+            lr,
+        );
+        return;
+    }
+    #[allow(unreachable_code)]
+    adamw_chunk_scalar(p, m, v, g, b1, b2, bc1, bc2, eps, wd, lr)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adamw_chunk_scalar(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    wd: f32,
+    lr: f32,
+) {
+    for i in 0..p.len() {
+        let gi = g[i];
+        let m_new = b1 * m[i] + (1.0 - b1) * gi;
+        let v_new = b2 * v[i] + (1.0 - b2) * gi * gi;
+        m[i] = m_new;
+        v[i] = v_new;
+        let mhat = m_new / bc1;
+        let vhat = v_new / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * scale - 0.4).collect()
+    }
+
+    const KINDS: [KernelKind; 3] = [KernelKind::Naive, KernelKind::Blocked, KernelKind::Simd];
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for k in KINDS {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(KernelKind::parse("").unwrap(), KernelKind::Blocked);
+        assert!(KernelKind::parse("fast").is_err());
+        assert!(!KernelKind::Naive.fused_attention());
+        assert!(KernelKind::Blocked.fused_attention());
+    }
+
+    /// The module's core contract: all three schedules are bit-identical,
+    /// including on ragged shapes that exercise partial NC/MR/KC tiles and
+    /// on non-zero (accumulating) C.
+    #[test]
+    fn gemm_kinds_are_bit_identical() {
+        for &(m, k, n) in
+            &[(1, 1, 1), (7, 5, 9), (8, 64, 128), (9, 65, 129), (33, 130, 127), (16, 3, 260)]
+        {
+            let a = seq(m * k, 0.13);
+            let b_nn = seq(k * n, 0.07);
+            let b_at = seq(m * n, 0.07);
+            let b_bt = seq(n * k, 0.07);
+            let c0 = seq(m * n, 0.01);
+            let c0_at = seq(k * n, 0.01);
+
+            let run = |kind: KernelKind| {
+                let mut c1 = c0.clone();
+                matmul_with(kind, &a, &b_nn, &mut c1, m, k, n);
+                let mut c2 = c0_at.clone();
+                matmul_at_with(kind, &a, &b_at, &mut c2, m, k, n);
+                let mut c3 = c0.clone();
+                matmul_bt_with(kind, &a, &b_bt, &mut c3, m, k, n);
+                (c1, c2, c3)
+            };
+            let base = run(KernelKind::Naive);
+            for kind in [KernelKind::Blocked, KernelKind::Simd] {
+                let got = run(kind);
+                for (which, (x, y)) in [
+                    ("nn", (&base.0, &got.0)),
+                    ("at", (&base.1, &got.1)),
+                    ("bt", (&base.2, &got.2)),
+                ] {
+                    assert!(
+                        x.iter().zip(y.iter()).all(|(u, w)| u.to_bits() == w.to_bits()),
+                        "{which} {m}x{k}x{n}: naive vs {} not bit-identical",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_reference_values() {
+        // 2x2 sanity against hand computation: [[1,2],[3,4]] @ [[5,6],[7,8]].
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        for kind in KINDS {
+            let mut c = vec![0.0f32; 4];
+            matmul_with(kind, &a, &b, &mut c, 2, 2, 2);
+            assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0], "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let (f0, _) = counters();
+        let a = seq(16, 0.1);
+        let b = seq(16, 0.1);
+        let mut c = vec![0.0f32; 16];
+        matmul_with(KernelKind::Blocked, &a, &b, &mut c, 4, 4, 4);
+        let (f1, _) = counters();
+        assert!(f1 - f0 >= 2 * 4 * 4 * 4, "flop counter must grow");
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_expressions() {
+        let xs0: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.3).collect();
+        let mut xs = xs0.clone();
+        gelu_slice(&mut xs);
+        for (y, &x) in xs.iter().zip(xs0.iter()) {
+            assert_eq!(y.to_bits(), gelu(x).to_bits());
+        }
+        let mut dz = vec![1.0f32; 37];
+        dgelu_slice(&mut dz, &xs0);
+        for (z, &x) in dz.iter().zip(xs0.iter()) {
+            assert_eq!(z.to_bits(), dgelu(x).to_bits());
+        }
+
+        let xr = seq(21, 0.2);
+        let scale = seq(21, 0.05);
+        let bias = seq(21, 0.02);
+        let mut yr = vec![0.0f32; 21];
+        ln_norm_row(&xr, &mut yr, 0.1, 2.0, &scale, &bias);
+        for j in 0..21 {
+            let want = (xr[j] - 0.1) * 2.0 * scale[j] + bias[j];
+            assert_eq!(yr[j].to_bits(), want.to_bits(), "ln row elem {j}");
+        }
+    }
+
+    #[test]
+    fn adamw_kernel_matches_scalar_reference() {
+        let n = 29; // forces a SIMD tail
+        let g = seq(n, 0.3);
+        let (mut p1, mut m1, mut v1) = (seq(n, 0.5), vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        adamw_chunk(&mut p1, &mut m1, &mut v1, &g, 0.9, 0.999, 0.1, 0.001999, 1e-8, 0.01, 0.1);
+        adamw_chunk_scalar(&mut p2, &mut m2, &mut v2, &g, 0.9, 0.999, 0.1, 0.001999, 1e-8, 0.01, 0.1);
+        for i in 0..n {
+            assert_eq!(p1[i].to_bits(), p2[i].to_bits(), "p[{i}]");
+            assert_eq!(m1[i].to_bits(), m2[i].to_bits(), "m[{i}]");
+            assert_eq!(v1[i].to_bits(), v2[i].to_bits(), "v[{i}]");
+        }
+    }
+}

@@ -49,6 +49,7 @@
 //! guarantee they never read a parameter tensor again after emitting its
 //! gradient.
 
+pub mod kernels;
 pub mod manifest;
 pub mod model;
 pub mod native;
@@ -63,6 +64,7 @@ use crate::tensor::paged::OffloadCounters;
 use crate::tensor::{Tensor, TensorSet};
 pub use crate::tensor::half::Precision;
 pub use crate::tensor::paged::{Compression, OffloadCfg};
+pub use kernels::KernelKind;
 pub use manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 pub use native::{NativeBackend, PRESET_NAMES};
 
@@ -318,6 +320,14 @@ pub struct RuntimeStats {
     /// Estimated flops spent on those recomputations (dense matmuls +
     /// attention forms; adapter extras excluded).
     pub recompute_flops: u64,
+    /// Flops executed by the kernel layer (GEMM + attention inner loops),
+    /// **measured** at the kernel entry points — not modeled from shapes.
+    /// Divide by `kernel_nanos` for achieved GFLOP/s
+    /// ([`RuntimeStats::kernel_gflops`]).
+    pub kernel_flops: u64,
+    /// Wall nanoseconds spent inside those kernels (sum over calls; under
+    /// threading this is span time per call, not CPU time).
+    pub kernel_nanos: u64,
     /// Host-paging page-in events (tensors admitted back into the arena).
     /// All `offload_*`/`prefetch_*` fields are zero when `--offload` is
     /// off; they mirror the paging tier's [`crate::optim::OffloadLedger`].
@@ -379,6 +389,8 @@ impl RuntimeStats {
             peak_act_resident_bytes: self.peak_act_resident_bytes,
             recompute_layers: self.recompute_layers - start.recompute_layers,
             recompute_flops: self.recompute_flops - start.recompute_flops,
+            kernel_flops: self.kernel_flops - start.kernel_flops,
+            kernel_nanos: self.kernel_nanos - start.kernel_nanos,
             offload_page_ins: self.offload_page_ins - start.offload_page_ins,
             offload_page_outs: self.offload_page_outs - start.offload_page_outs,
             offload_h2d_bytes: self.offload_h2d_bytes - start.offload_h2d_bytes,
@@ -395,6 +407,16 @@ impl RuntimeStats {
             loss_scale_growths: self.loss_scale_growths - start.loss_scale_growths,
             loss_scale_backoffs: self.loss_scale_backoffs - start.loss_scale_backoffs,
             loss_scale: self.loss_scale,
+        }
+    }
+
+    /// Achieved kernel-layer throughput in GFLOP/s (measured flops over
+    /// measured span time; 0 when no kernel ran).
+    pub fn kernel_gflops(&self) -> f64 {
+        if self.kernel_nanos == 0 {
+            0.0
+        } else {
+            self.kernel_flops as f64 / self.kernel_nanos as f64
         }
     }
 
@@ -568,6 +590,21 @@ pub trait ExecBackend {
         ActCkpt::None
     }
 
+    /// Select the kernel implementation for subsequent runs
+    /// (`--kernels naive|blocked|simd`).  Backends without the native
+    /// kernel layer (PJRT artifacts ship their own compiled kernels; test
+    /// doubles) accept only the default [`KernelKind::Blocked`].
+    fn set_kernels(&mut self, kind: KernelKind) -> Result<()> {
+        if kind != KernelKind::default() {
+            bail!(
+                "backend {:?} has no selectable kernel layer (kind {})",
+                self.name(),
+                kind.name()
+            );
+        }
+        Ok(())
+    }
+
     /// Select the compute precision for subsequent runs
     /// (`--precision f32|bf16|f16`): forward activations, backward
     /// intermediates and pre-upcast gradients run at this width while
@@ -709,6 +746,7 @@ pub fn build_backend(
 /// `HIFT_PRESET` (native geometry, default `tiny`), `HIFT_SEED`,
 /// `HIFT_ACT_CKPT` (activation-checkpoint policy: `none|sqrt|every_k(K)`),
 /// `HIFT_PRECISION` (compute precision: `f32|bf16|f16`),
+/// `HIFT_KERNELS` (kernel layer: `naive|blocked|simd`),
 /// `HIFT_OFFLOAD`/`HIFT_OFFLOAD_COMPRESS`/`HIFT_PREFETCH` (host paging
 /// tier: `host|none`, `f16|none`, `1|0`).
 pub fn from_env() -> Result<Box<dyn ExecBackend>> {
@@ -723,6 +761,9 @@ pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     }
     if let Some(p) = std::env::var("HIFT_PRECISION").ok().filter(|s| !s.is_empty()) {
         be.set_precision(Precision::parse(&p)?)?;
+    }
+    if let Some(p) = std::env::var("HIFT_KERNELS").ok().filter(|s| !s.is_empty()) {
+        be.set_kernels(KernelKind::parse(&p)?)?;
     }
     let offload = OffloadCfg::from_env()?;
     if offload.enabled {

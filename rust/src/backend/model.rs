@@ -22,13 +22,22 @@
 //! is built on.  [`backward`] is the collect-into-a-map wrapper.
 //!
 //! Hot loops (matmuls, attention, GELU, softmax) run through the
-//! [`super::par`] thread-chunking helpers; all reductions are fixed-order,
-//! so results are bit-identical across thread counts.
+//! [`super::par`] thread-chunking helpers and the [`super::kernels`]
+//! compute layer; all reductions are fixed-order, so results are
+//! bit-identical across thread counts *and* across kernel schedules
+//! (naive / blocked / blocked+SIMD).  Under the blocked/simd kinds the
+//! attention core runs the fused streaming-softmax path: the `[B*H, T*T]`
+//! probability matrix is never materialized — forward consumes each
+//! query row's O(T) score scratch immediately and backward recomputes
+//! rows on the fly — so `LayerState` and the recompute scratch shrink
+//! from O(T²) to O(T) per head while staying bit-identical to the
+//! materializing naive reference.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use super::kernels;
 use super::manifest::ModelCfg;
 use super::par;
 use super::{ActCkpt, Batch};
@@ -57,6 +66,39 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Causal-attention probabilities for one query row, written into
+/// `srow[..=ti]`: score sweep with online row max, two-sweep softmax over
+/// the O(T) row, then quantize-at-the-op rounding.  Shared verbatim by the
+/// materialized forward (row of the cached probs matrix), the fused
+/// forward (transient scratch row), and the fused backward's row
+/// recompute — so all three observe identical bits.
+fn attn_prob_row(
+    qb: &[f32],
+    kb: &[f32],
+    srow: &mut [f32],
+    ti: usize,
+    dh: usize,
+    scale: f32,
+    prec: Precision,
+) {
+    let qrow = &qb[ti * dh..][..dh];
+    let mut maxv = f32::NEG_INFINITY;
+    for (j, sj) in srow.iter_mut().enumerate().take(ti + 1) {
+        let sc = dot(qrow, &kb[j * dh..][..dh]) * scale;
+        *sj = sc;
+        maxv = maxv.max(sc);
+    }
+    let mut sum = 0.0f32;
+    for sj in srow.iter_mut().take(ti + 1) {
+        *sj = (*sj - maxv).exp();
+        sum += *sj;
+    }
+    let inv = 1.0 / sum;
+    for sj in srow.iter_mut().take(ti + 1) {
+        *sj = prec.quantize(*sj * inv);
+    }
+}
+
 /// Column sums of a row-major `[rows, cols]` buffer.
 fn colsum(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), rows * cols);
@@ -73,19 +115,6 @@ fn add_bias(x: &mut [f32], bias: &[f32]) {
     for row in x.chunks_mut(cols) {
         axpy(row, 1.0, bias);
     }
-}
-
-const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
-const GELU_A: f32 = 0.044_715;
-
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
-}
-
-fn dgelu(x: f32) -> f32 {
-    let u = GELU_C * (x + GELU_A * x * x * x);
-    let th = u.tanh();
-    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
 }
 
 /// Per-row LayerNorm statistics cached for backward.
@@ -109,9 +138,7 @@ fn ln_fwd(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> (Vec<f32>, LnStat
         var /= d as f32;
         let iv = 1.0 / (var + LN_EPS).sqrt();
         let yr = &mut y[r * d..(r + 1) * d];
-        for j in 0..d {
-            yr[j] = (xr[j] - mu) * iv * scale[j] + bias[j];
-        }
+        kernels::ln_norm_row(xr, yr, mu, iv, scale, bias);
         mean[r] = mu;
         inv[r] = iv;
     }
@@ -208,7 +235,10 @@ struct LayerState {
     /// Pre-IA³ k/v (empty unless the variant is ia3).
     k0: PrecBuf,
     v0: PrecBuf,
-    /// Softmax attention probabilities, `[B*H, T*T]` (0 above the diagonal).
+    /// Softmax attention probabilities, `[B*H, T*T]` (0 above the
+    /// diagonal) — cached only under the naive kernel kind.  The fused
+    /// streaming-softmax path leaves this empty and backward recomputes
+    /// rows from `q`/`k` on the fly (the O(T²) → O(T) saving).
     probs: PrecBuf,
     /// Attention output before the out-projection, `[BT, D]`.
     attn: PrecBuf,
@@ -448,49 +478,76 @@ fn layer_fwd(
         prec.quantize_slice(&mut v);
     }
 
-    // causal attention, head-major
+    // causal attention, head-major.  Two paths, bit-identical per element:
+    //
+    // * naive kernels materialize the full `[B*H, T*T]` probability matrix
+    //   into the layer cache (the reference the fused path is compared
+    //   against, and what backward reads when present);
+    // * blocked/simd kernels run the fused streaming-softmax path — per
+    //   query row the scores live in an O(T) scratch, the row max is
+    //   tracked online during the score sweep, and the normalized row is
+    //   consumed by the context accumulation immediately, so nothing
+    //   quadratic in T is ever cached (backward recomputes rows on the
+    //   fly).  The softmax stays a fixed-order two-sweep over the O(T)
+    //   row rather than a rescale-as-you-go accumulation, because
+    //   rescaling would reassociate the reduction and break bit-stability
+    //   against the reference.
+    //
+    // Probabilities are rounded *before* the context accumulation
+    // consumes them, so what backward reads (cached or recomputed) is
+    // exactly what the forward multiplied against V — the
+    // quantize-at-the-op contract.  (In f32 `quantize` is the identity
+    // and the split loop performs the same per-element arithmetic in the
+    // same order: bit-identical.)
+    let fused = kernels::kind().fused_attention();
     let q_hm = gather_heads(&q, bsz, t_, heads, dh);
     let k_hm = gather_heads(&k, bsz, t_, heads, dh);
     let v_hm = gather_heads(&v, bsz, t_, heads, dh);
-    let mut probs = vec![0.0f32; bsz * heads * t_ * t_];
     let mut o_hm = vec![0.0f32; bsz * heads * t_ * dh];
-    par::par_items2(&mut probs, t_ * t_, &mut o_hm, t_ * dh, |bh, pch, och| {
-        let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
-        let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
-        let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
-        for ti in 0..t_ {
-            let qrow = &qb[ti * dh..][..dh];
-            let prow = &mut pch[ti * t_..][..t_];
-            let mut maxv = f32::NEG_INFINITY;
-            for (j, pj) in prow.iter_mut().enumerate().take(ti + 1) {
-                let sc = dot(qrow, &kb[j * dh..][..dh]) * scale;
-                *pj = sc;
-                maxv = maxv.max(sc);
-            }
-            let mut sum = 0.0f32;
-            for pj in prow.iter_mut().take(ti + 1) {
-                *pj = (*pj - maxv).exp();
-                sum += *pj;
-            }
-            let inv = 1.0 / sum;
-            let orow = &mut och[ti * dh..][..dh];
-            // Probabilities are rounded *before* the context accumulation
-            // consumes them, so the cached probs backward reads are exactly
-            // the values the forward multiplied against V — the
-            // quantize-at-the-op contract.  (In f32 `quantize` is the
-            // identity and the split loop performs the same per-element
-            // arithmetic in the same order: bit-identical.)
-            for pj in prow.iter_mut().take(ti + 1) {
-                *pj = prec.quantize(*pj * inv);
-            }
-            for j in 0..=ti {
-                let pij = prow[j];
-                if pij != 0.0 {
-                    axpy(orow, pij, &vb[j * dh..][..dh]);
+    let mut probs = Vec::new();
+    let attn_t0 = std::time::Instant::now();
+    if fused {
+        par::par_rows(&mut o_hm, t_ * dh, 2 * t_ * t_ * dh, |bh0, chunk| {
+            let mut srow = vec![0.0f32; t_];
+            for (bi, och) in chunk.chunks_mut(t_ * dh).enumerate() {
+                let bh = bh0 + bi;
+                let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
+                let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
+                let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
+                for ti in 0..t_ {
+                    attn_prob_row(qb, kb, &mut srow, ti, dh, scale, prec);
+                    let orow = &mut och[ti * dh..][..dh];
+                    for (j, &pij) in srow.iter().enumerate().take(ti + 1) {
+                        if pij != 0.0 {
+                            axpy(orow, pij, &vb[j * dh..][..dh]);
+                        }
+                    }
                 }
             }
-        }
-    });
+        });
+    } else {
+        probs = vec![0.0f32; bsz * heads * t_ * t_];
+        par::par_items2(&mut probs, t_ * t_, &mut o_hm, t_ * dh, |bh, pch, och| {
+            let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
+            let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
+            let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
+            for ti in 0..t_ {
+                let prow = &mut pch[ti * t_..][..t_];
+                attn_prob_row(qb, kb, prow, ti, dh, scale, prec);
+                let orow = &mut och[ti * dh..][..dh];
+                for (j, &pij) in prow.iter().enumerate().take(ti + 1) {
+                    if pij != 0.0 {
+                        axpy(orow, pij, &vb[j * dh..][..dh]);
+                    }
+                }
+            }
+        });
+    }
+    // Scores + context accumulation ≈ 2·(2·dh)·T(T+1)/2 flops per head.
+    kernels::note(
+        (bsz * heads) as u64 * 2 * dh as u64 * (t_ * (t_ + 1)) as u64,
+        attn_t0.elapsed().as_nanos() as u64,
+    );
     let mut attn = scatter_heads(&o_hm, bsz, t_, heads, dh);
     prec.quantize_slice(&mut attn);
 
@@ -512,10 +569,8 @@ fn layer_fwd(
     add_bias(&mut a1, &get(params, &format!("{pfx}ffn.b1"))?.data);
     prec.quantize_slice(&mut a1);
     let mut mid0 = a1.clone();
-    par::par_rows(&mut mid0, f_, (32_768 / f_.max(1)).max(1), |_, chunk| {
-        for z in chunk.iter_mut() {
-            *z = gelu(*z);
-        }
+    par::par_rows(&mut mid0, f_, 4 * f_, |_, chunk| {
+        kernels::gelu_slice(chunk);
     });
     prec.quantize_slice(&mut mid0);
     let mut mid_ia3 = Vec::new();
@@ -1128,11 +1183,9 @@ pub fn backward_streamed(
         let mut da1 = dmid;
         {
             let a1: &[f32] = &a1_l;
-            par::par_rows(&mut da1, f_, (32_768 / f_.max(1)).max(1), |r0, chunk| {
+            par::par_rows(&mut da1, f_, 4 * f_, |r0, chunk| {
                 let base = r0 * f_;
-                for (off, z) in chunk.iter_mut().enumerate() {
-                    *z *= dgelu(a1[base + off]);
-                }
+                kernels::dgelu_slice(chunk, &a1[base..base + chunk.len()]);
             });
         }
         prec.quantize_slice(&mut da1);
@@ -1173,7 +1226,14 @@ pub fn backward_streamed(
         let mut dq_hm = vec![0.0f32; bsz * heads * t_ * dh];
         let mut dk_hm = vec![0.0f32; bsz * heads * t_ * dh];
         let mut dv_hm = vec![0.0f32; bsz * heads * t_ * dh];
+        // A fused-attention forward cached no probs matrix; recompute each
+        // query row's probabilities from q/k on the fly (O(T) scratch per
+        // thread).  The recompute shares `attn_prob_row` with the forward,
+        // so the values are bit-identical to what a materializing forward
+        // would have cached.
         let probs_s: &[f32] = &probs_l;
+        let fused_bwd = probs_s.is_empty();
+        let attn_bwd_t0 = std::time::Instant::now();
         par::par_items3(
             &mut dq_hm,
             t_ * dh,
@@ -1182,15 +1242,21 @@ pub fn backward_streamed(
             &mut dv_hm,
             t_ * dh,
             |bh, dqc, dkc, dvc| {
-                let pch = &probs_s[bh * t_ * t_..][..t_ * t_];
                 let qb = &q_hm[bh * t_ * dh..][..t_ * dh];
                 let kb = &k_hm[bh * t_ * dh..][..t_ * dh];
                 let vb = &v_hm[bh * t_ * dh..][..t_ * dh];
                 let dob = &do_hm[bh * t_ * dh..][..t_ * dh];
+                let pch: &[f32] = if fused_bwd { &[] } else { &probs_s[bh * t_ * t_..][..t_ * t_] };
+                let mut srow = if fused_bwd { vec![0.0f32; t_] } else { Vec::new() };
                 let mut dp = vec![0.0f32; t_];
                 for ti in 0..t_ {
                     let dorow = &dob[ti * dh..][..dh];
-                    let prow = &pch[ti * t_..][..t_];
+                    let prow: &[f32] = if fused_bwd {
+                        attn_prob_row(qb, kb, &mut srow, ti, dh, scale, prec);
+                        &srow
+                    } else {
+                        &pch[ti * t_..][..t_]
+                    };
                     let mut pdp = 0.0f32;
                     for j in 0..=ti {
                         let pij = prow[j];
@@ -1210,6 +1276,14 @@ pub fn backward_streamed(
                     }
                 }
             },
+        );
+        // dV + dP dots + dQ/dK rank-1 updates ≈ 8·dh flops per (ti, j)
+        // pair, plus the 2·dh-flop row recompute on the fused path.
+        kernels::note(
+            (bsz * heads) as u64
+                * (if fused_bwd { 5 } else { 4 }) * dh as u64
+                * (t_ * (t_ + 1)) as u64,
+            attn_bwd_t0.elapsed().as_nanos() as u64,
         );
         let mut dq = scatter_heads(&dq_hm, bsz, t_, heads, dh);
         let mut dk = scatter_heads(&dk_hm, bsz, t_, heads, dh);
@@ -1560,7 +1634,9 @@ mod tests {
         let st = forward(&cfg, "base", &mut params, &batch).unwrap();
         let full = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
         for policy in [ActCkpt::EveryK(1), ActCkpt::EveryK(2), ActCkpt::Sqrt] {
-            let stc = forward_ckpt(&cfg, "base", &mut params, &batch, policy, None).unwrap();
+            let stc =
+                forward_ckpt(&cfg, "base", &mut params, &batch, policy, None, Precision::F32)
+                    .unwrap();
             assert_eq!(st.loss, stc.loss, "{policy:?}: loss must be bit-identical");
             assert!(
                 stc.act_resident_bytes() < st.act_resident_bytes(),

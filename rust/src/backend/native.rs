@@ -16,6 +16,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use super::kernels::{self, KernelKind};
 use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 use super::model;
 use super::{unit_artifact, ActCkpt, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
@@ -382,6 +383,7 @@ impl NativeBackend {
             self.act_ckpt
         };
         let t0 = std::time::Instant::now();
+        let kern0 = kernels::counters();
         let prec = self.precision;
         let loss_scale = self.loss_scale;
         let fwd =
@@ -446,6 +448,10 @@ impl NativeBackend {
         let exec_time = t0.elapsed();
         self.stats.executions += 1;
         self.stats.exec_secs += exec_time.as_secs_f64();
+        // Kernel counters are process-global; attribute this run's delta.
+        let kern1 = kernels::counters();
+        self.stats.kernel_flops += kern1.0 - kern0.0;
+        self.stats.kernel_nanos += kern1.1 - kern0.1;
         Ok(StreamOutput { loss: fwd.loss, ncorrect: fwd.ncorrect, exec_time })
     }
 
@@ -598,6 +604,21 @@ impl ExecBackend for NativeBackend {
 
     fn act_ckpt(&self) -> ActCkpt {
         self.act_ckpt
+    }
+
+    fn set_kernels(&mut self, kind: KernelKind) -> Result<()> {
+        if kind == KernelKind::Simd && !kernels::simd_available() {
+            bail!(
+                "kernel kind `simd` requires building with `--features simd` \
+                 (falling back silently would misreport benchmarks)"
+            );
+        }
+        // The kernel layer is selected process-globally (the model walk
+        // calls free kernel functions, not backend methods); record the
+        // choice in the manifest so run records carry it.
+        kernels::set_kind(kind);
+        self.manifest.kernels = format!("native+{}", kind.name());
+        Ok(())
     }
 
     fn set_precision(&mut self, prec: Precision) -> Result<()> {

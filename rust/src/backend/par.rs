@@ -1,4 +1,5 @@
-//! `std::thread` chunking helpers for the native backend's hot loops.
+//! `std::thread` chunking helpers and the shared thread budget for the
+//! native backend's hot loops.
 //!
 //! Everything here is deterministic regardless of thread count: work is
 //! split into disjoint output regions and every output element is produced
@@ -8,8 +9,35 @@
 //!
 //! Small inputs fall back to the serial path (spawning threads costs more
 //! than a few thousand flops), so the tiny test models pay no overhead.
+//! [`par_rows`] derives its serial cutoff from the caller-supplied
+//! per-row cost rather than a fixed row count, so cheap rows (tiny GELU
+//! chunks) and expensive rows (wide GEMM panels) both land near the same
+//! flops-per-spawn break-even point.
+//!
+//! ## The thread budget
+//!
+//! All helpers draw spawned threads from one process-wide
+//! [`ThreadBudget`] capped at [`max_threads`] (`HIFT_THREADS` env).
+//! Long-lived worker threads — the pipelined optimizer's update thread —
+//! [`register_worker`] themselves against the same budget, so when an
+//! optimizer update runs concurrently with the backward walk the two
+//! sides *share* the cap instead of each assuming they own the machine
+//! (the oversubscription bug this replaces).  Leasing is lock-free and
+//! never blocks: a caller always keeps at least its own thread, so the
+//! worst contention outcome is a serial loop, never a stall.  The budget
+//! changes only *how many* threads split the work, and chunk boundaries
+//! are data-independent per call site — never correctness or bits within
+//! one call (each output element's reduction order is fixed regardless).
+//!
+//! The GEMM entry points ([`matmul`], [`matmul_at`], [`matmul_bt`]) are
+//! thin wrappers routing to the active [`super::kernels`] schedule
+//! (naive reference, cache-blocked, or blocked+SIMD — all bit-identical
+//! in f32; see the kernel module's reduction-order guarantee).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+use super::kernels;
 
 /// Minimum flops of per-thread work before a loop is split across threads.
 const MIN_FLOPS: usize = 1 << 17;
@@ -32,11 +60,119 @@ pub fn max_threads() -> usize {
     })
 }
 
+/// A shared cap on concurrently running threads.  `in_flight` counts
+/// threads beyond the callers' own: lease extras plus registered workers.
+pub struct ThreadBudget {
+    cap: usize,
+    in_flight: AtomicUsize,
+}
+
+impl ThreadBudget {
+    pub const fn new(cap: usize) -> Self {
+        ThreadBudget { cap, in_flight: AtomicUsize::new(0) }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Extra threads (lease grants + registered workers) currently charged
+    /// against the budget.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Try to reserve up to `want` concurrent threads (including the
+    /// calling thread, which is always granted).  Never blocks: under
+    /// contention the grant shrinks, bottoming out at 1 (serial).  The
+    /// reservation is released when the [`Lease`] drops.
+    pub fn lease(&self, want: usize) -> Lease<'_> {
+        let want = want.max(1);
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            // The caller occupies one slot itself; extras come from what's
+            // left after every other lease/worker in flight.
+            let avail = self.cap.saturating_sub(1 + cur);
+            let extra = (want - 1).min(avail);
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + extra,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Lease { budget: self, extra },
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Charge one long-lived worker thread against the budget until the
+    /// returned guard drops (the pipelined optimizer's update thread).
+    pub fn register_worker(&self) -> WorkerSlot<'_> {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        WorkerSlot { budget: self }
+    }
+}
+
+/// A temporary thread reservation; see [`ThreadBudget::lease`].
+pub struct Lease<'a> {
+    budget: &'a ThreadBudget,
+    extra: usize,
+}
+
+impl Lease<'_> {
+    /// Total threads this lease allows, calling thread included (≥ 1).
+    pub fn granted(&self) -> usize {
+        1 + self.extra
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        if self.extra > 0 {
+            self.budget.in_flight.fetch_sub(self.extra, Ordering::Relaxed);
+        }
+    }
+}
+
+/// RAII registration of a long-lived worker thread; see
+/// [`ThreadBudget::register_worker`].
+pub struct WorkerSlot<'a> {
+    budget: &'a ThreadBudget,
+}
+
+impl Drop for WorkerSlot<'_> {
+    fn drop(&mut self) {
+        self.budget.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The process-wide budget every helper in this module draws from,
+/// capped at [`max_threads`].
+fn budget() -> &'static ThreadBudget {
+    static B: OnceLock<ThreadBudget> = OnceLock::new();
+    B.get_or_init(|| ThreadBudget::new(max_threads()))
+}
+
+/// Register a long-lived worker thread against the process-wide budget.
+/// Call on the *spawning* thread and move the guard into the worker, so
+/// the slot is charged before the worker's first instruction.
+pub fn register_worker() -> WorkerSlot<'static> {
+    budget().register_worker()
+}
+
+/// Extra threads currently charged against the process-wide budget
+/// (observability for the oversubscription regression tests).
+pub fn budget_in_flight() -> usize {
+    budget().in_flight()
+}
+
 /// Split `data` into row-aligned chunks (`row_len` elements per row) and run
-/// `f(first_row, chunk)` on each chunk, using up to [`max_threads`] scoped
-/// threads.  Runs serially when fewer than `min_rows` rows per thread would
-/// be available.
-pub fn par_rows<F>(data: &mut [f32], row_len: usize, min_rows: usize, f: F)
+/// `f(first_row, chunk)` on each chunk, using threads leased from the shared
+/// budget.  `row_cost` is the approximate flops (or elements touched) per
+/// row; rows are grouped so each thread gets at least ~[`MIN_FLOPS`] of
+/// work, and anything cheaper runs serially on the calling thread.
+pub fn par_rows<F>(data: &mut [f32], row_len: usize, row_cost: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
@@ -45,7 +181,14 @@ where
     if rows == 0 {
         return;
     }
-    let threads = max_threads().min(rows.div_ceil(min_rows.max(1)));
+    let min_rows = MIN_FLOPS.div_ceil(row_cost.max(1)).max(1);
+    let want = max_threads().min(rows.div_ceil(min_rows));
+    if want <= 1 {
+        f(0, data);
+        return;
+    }
+    let lease = budget().lease(want);
+    let threads = lease.granted();
     if threads <= 1 {
         f(0, data);
         return;
@@ -59,73 +202,22 @@ where
     });
 }
 
-/// `c += a @ b` for row-major `a: [M,K]`, `b: [K,N]`, `c: [M,N]`, parallel
-/// over rows of `c`.
+/// `c += a @ b` for row-major `a: [M,K]`, `b: [K,N]`, `c: [M,N]` under the
+/// active kernel schedule (see [`super::kernels`]).
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k, "matmul: a");
-    assert_eq!(b.len(), k * n, "matmul: b");
-    assert_eq!(c.len(), m * n, "matmul: c");
-    let min_rows = MIN_FLOPS.div_ceil((k * n).max(1));
-    par_rows(c, n, min_rows, |r0, cc| {
-        for (ri, crow) in cc.chunks_mut(n).enumerate() {
-            let i = r0 + ri;
-            let arow = &a[i * k..(i + 1) * k];
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik != 0.0 {
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
-                        *cj += aik * bj;
-                    }
-                }
-            }
-        }
-    });
+    kernels::matmul_with(kernels::kind(), a, b, c, m, k, n);
 }
 
 /// `c += aᵀ @ b` for `a: [M,K]`, `b: [M,N]`, `c: [K,N]` — the weight-grad
-/// shape (`dW = Xᵀ dY`), parallel over rows of `c`.
+/// shape (`dW = Xᵀ dY`) — under the active kernel schedule.
 pub fn matmul_at(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k, "matmul_at: a");
-    assert_eq!(b.len(), m * n, "matmul_at: b");
-    assert_eq!(c.len(), k * n, "matmul_at: c");
-    let min_rows = MIN_FLOPS.div_ceil((m * n).max(1));
-    par_rows(c, n, min_rows, |r0, cc| {
-        for (ri, crow) in cc.chunks_mut(n).enumerate() {
-            let kk = r0 + ri;
-            for i in 0..m {
-                let aik = a[i * k + kk];
-                if aik != 0.0 {
-                    let brow = &b[i * n..(i + 1) * n];
-                    for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
-                        *cj += aik * bj;
-                    }
-                }
-            }
-        }
-    });
+    kernels::matmul_at_with(kernels::kind(), a, b, c, m, k, n);
 }
 
 /// `c += a @ bᵀ` for `a: [M,K]`, `b: [N,K]`, `c: [M,N]` — the input-grad
-/// shape (`dX = dY Wᵀ`), parallel over rows of `c`.
+/// shape (`dX = dY Wᵀ`) — under the active kernel schedule.
 pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k, "matmul_bt: a");
-    assert_eq!(b.len(), n * k, "matmul_bt: b");
-    assert_eq!(c.len(), m * n, "matmul_bt: c");
-    let min_rows = MIN_FLOPS.div_ceil((k * n).max(1));
-    par_rows(c, n, min_rows, |r0, cc| {
-        for (ri, crow) in cc.chunks_mut(n).enumerate() {
-            let i = r0 + ri;
-            let arow = &a[i * k..(i + 1) * k];
-            for (j, cj) in crow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (x, y) in arow.iter().zip(brow.iter()) {
-                    acc += x * y;
-                }
-                *cj += acc;
-            }
-        }
-    });
+    kernels::matmul_bt_with(kernels::kind(), a, b, c, m, k, n);
 }
 
 /// Process `n` independent items across threads, where item `i` owns the
@@ -141,7 +233,9 @@ where
     if n == 0 {
         return;
     }
-    let threads = max_threads().min(n).min((a.len() + b.len()).div_ceil(MIN_ELEMS));
+    let want = max_threads().min(n).min((a.len() + b.len()).div_ceil(MIN_ELEMS));
+    let lease = if want > 1 { Some(budget().lease(want)) } else { None };
+    let threads = lease.as_ref().map_or(1, Lease::granted);
     if threads <= 1 {
         for (i, (ai, bi)) in a.chunks_mut(a_item).zip(b.chunks_mut(b_item)).enumerate() {
             f(i, ai, bi);
@@ -183,7 +277,9 @@ pub fn par_items3<F>(
         return;
     }
     let work = a.len() + b.len() + c.len();
-    let threads = max_threads().min(n).min(work.div_ceil(MIN_ELEMS));
+    let want = max_threads().min(n).min(work.div_ceil(MIN_ELEMS));
+    let lease = if want > 1 { Some(budget().lease(want)) } else { None };
+    let threads = lease.as_ref().map_or(1, Lease::granted);
     if threads <= 1 {
         for (i, ((ai, bi), ci)) in
             a.chunks_mut(a_item).zip(b.chunks_mut(b_item)).zip(c.chunks_mut(c_item)).enumerate()
@@ -219,7 +315,9 @@ where
 {
     assert_eq!(p.len(), g.len());
     let n = p.len();
-    let threads = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let want = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let lease = if want > 1 { Some(budget().lease(want)) } else { None };
+    let threads = lease.as_ref().map_or(1, Lease::granted);
     if threads <= 1 {
         for (pi, &gi) in p.iter_mut().zip(g.iter()) {
             f(pi, gi);
@@ -247,7 +345,9 @@ where
     assert_eq!(p.len(), g.len());
     assert_eq!(p.len(), st.len());
     let n = p.len();
-    let threads = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let want = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let lease = if want > 1 { Some(budget().lease(want)) } else { None };
+    let threads = lease.as_ref().map_or(1, Lease::granted);
     if threads <= 1 {
         for i in 0..n {
             f(&mut p[i], &mut st[i], g[i]);
@@ -276,7 +376,9 @@ where
     assert_eq!(p.len(), m.len());
     assert_eq!(p.len(), v.len());
     let n = p.len();
-    let threads = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let want = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let lease = if want > 1 { Some(budget().lease(want)) } else { None };
+    let threads = lease.as_ref().map_or(1, Lease::granted);
     if threads <= 1 {
         for i in 0..n {
             f(&mut p[i], &mut m[i], &mut v[i], g[i]);
@@ -294,6 +396,38 @@ where
                     f(&mut pc[i], &mut mc[i], &mut vc[i], gc[i]);
                 }
             });
+        }
+    });
+}
+
+/// Chunked variant of [`par_apply4`]: `f` receives whole equal-length
+/// sub-slices instead of single elements, so callers can run vectorized
+/// kernels over each chunk (the AdamW update path).
+pub fn par_chunks4<F>(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], f: F)
+where
+    F: Fn(&mut [f32], &mut [f32], &mut [f32], &[f32]) + Sync,
+{
+    assert_eq!(p.len(), g.len());
+    assert_eq!(p.len(), m.len());
+    assert_eq!(p.len(), v.len());
+    let n = p.len();
+    if n == 0 {
+        return;
+    }
+    let want = max_threads().min(n.div_ceil(MIN_ELEMS));
+    let lease = if want > 1 { Some(budget().lease(want)) } else { None };
+    let threads = lease.as_ref().map_or(1, Lease::granted);
+    if threads <= 1 {
+        f(p, m, v, g);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (((pc, mc), vc), gc) in
+            p.chunks_mut(per).zip(m.chunks_mut(per)).zip(v.chunks_mut(per)).zip(g.chunks(per))
+        {
+            let f = &f;
+            s.spawn(move || f(pc, mc, vc, gc));
         }
     });
 }
@@ -373,7 +507,8 @@ mod tests {
     #[test]
     fn par_rows_covers_every_row_once() {
         let mut data = vec![0.0f32; 13 * 4];
-        par_rows(&mut data, 4, 1, |r0, chunk| {
+        // row_cost = MIN_FLOPS makes min_rows 1, the old many-thread split.
+        par_rows(&mut data, 4, MIN_FLOPS, |r0, chunk| {
             for (ri, row) in chunk.chunks_mut(4).enumerate() {
                 for x in row.iter_mut() {
                     *x += (r0 + ri) as f32;
@@ -383,6 +518,57 @@ mod tests {
         for (r, row) in data.chunks(4).enumerate() {
             assert!(row.iter().all(|&x| x == r as f32), "row {r}");
         }
+    }
+
+    #[test]
+    fn par_rows_cheap_rows_take_serial_fast_path() {
+        use std::sync::Mutex;
+        // 8 rows × cost 8 flops ≪ MIN_FLOPS: must be exactly one serial
+        // call spanning the whole buffer, regardless of HIFT_THREADS.
+        let calls = Mutex::new(Vec::new());
+        let mut data = vec![0.0f32; 8 * 4];
+        par_rows(&mut data, 4, 8, |r0, chunk| {
+            calls.lock().unwrap().push((r0, chunk.len()));
+        });
+        assert_eq!(*calls.lock().unwrap(), vec![(0, 32)]);
+    }
+
+    #[test]
+    fn thread_budget_grants_within_cap() {
+        let b = ThreadBudget::new(4);
+        let l1 = b.lease(4);
+        assert_eq!(l1.granted(), 4, "caller + 3 extras fit the cap");
+        assert_eq!(b.in_flight(), 3);
+        let l2 = b.lease(4);
+        assert_eq!(l2.granted(), 1, "budget exhausted: caller thread only");
+        drop(l2);
+        drop(l1);
+        assert_eq!(b.in_flight(), 0, "drops release the reservation");
+        let l3 = b.lease(2);
+        assert_eq!(l3.granted(), 2);
+    }
+
+    #[test]
+    fn registered_worker_shrinks_leases() {
+        let b = ThreadBudget::new(4);
+        let w = b.register_worker();
+        assert_eq!(b.in_flight(), 1);
+        let l = b.lease(8);
+        // cap 4 − worker 1 − caller 1 = 2 extras.
+        assert_eq!(l.granted(), 3);
+        drop(l);
+        drop(w);
+        assert_eq!(b.in_flight(), 0);
+    }
+
+    #[test]
+    fn lease_always_grants_the_calling_thread() {
+        let b = ThreadBudget::new(1);
+        let w = b.register_worker();
+        let l = b.lease(16);
+        assert_eq!(l.granted(), 1, "even a saturated budget grants the caller");
+        drop(l);
+        drop(w);
     }
 
     #[test]
@@ -408,6 +594,27 @@ mod tests {
         par_apply2(&mut p, &g, |pi, gi| *pi += gi);
         for (i, x) in p.iter().enumerate() {
             assert_eq!(*x, 1.0 + i as f32);
+        }
+    }
+
+    #[test]
+    fn par_chunks4_covers_every_element() {
+        let n = 100;
+        let mut p = vec![0.0f32; n];
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let g: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        par_chunks4(&mut p, &mut m, &mut v, &g, |pc, mc, vc, gc| {
+            for i in 0..pc.len() {
+                pc[i] += gc[i];
+                mc[i] += 1.0;
+                vc[i] += 2.0;
+            }
+        });
+        for i in 0..n {
+            assert_eq!(p[i], i as f32);
+            assert_eq!(m[i], 1.0);
+            assert_eq!(v[i], 2.0);
         }
     }
 }

@@ -8,11 +8,12 @@
 use anyhow::Result;
 
 use super::{acc_cell, default_spec, print_table, Bench};
+use crate::backend::kernels::{self, KernelKind};
 use crate::backend::{ActCkpt, Compression, ExecBackend, OffloadCfg, Precision};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::memmodel::{
-    account, account_ckpt, account_prec, by_name, paged_host_bound, paged_param_bound, Dtype,
-    Method, Workload, GIB, MIB,
+    account, account_ckpt, account_prec, by_name, native_probs_bytes, paged_host_bound,
+    paged_param_bound, Dtype, Method, Workload, GIB, MIB,
 };
 use crate::optim::OptimKind;
 use crate::ser::Value;
@@ -911,6 +912,165 @@ pub fn precision(b: &mut Bench) -> Result<()> {
         &rows,
     );
     b.save("precision", &Value::Arr(json))
+}
+
+/// Kernel layer — three panels: raw GEMM throughput per kernel kind
+/// (naive reference vs cache-blocked vs blocked+SIMD) with bit-identity
+/// checked across kinds; an end-to-end per-kind training run (losses must
+/// be bit-identical — the schedule changes, the bits don't); and the fused
+/// streaming-softmax attention's measured activation saving, which must
+/// equal the analytic `L·B·H·T²` probs term *exactly* under
+/// [`ActCkpt::None`].
+pub fn kernels(b: &mut Bench) -> Result<()> {
+    let mut json = Vec::new();
+
+    // Panel 1 — raw GEMM GFLOP/s (C += A·B).  The naive kind is the
+    // strided dot-form reference the identity tests pin bits against; the
+    // blocked/SIMD kinds must reproduce those bits while going faster.
+    let shapes: &[(usize, usize, usize)] =
+        if b.quick { &[(48, 64, 80)] } else { &[(128, 128, 128), (256, 256, 256), (96, 384, 160)] };
+    let reps: u32 = if b.quick { 2 } else { 6 };
+    let kinds: &[KernelKind] = if kernels::simd_available() {
+        &[KernelKind::Naive, KernelKind::Blocked, KernelKind::Simd]
+    } else {
+        &[KernelKind::Naive, KernelKind::Blocked]
+    };
+    let mut rows = Vec::new();
+    for &(m, k, n) in shapes {
+        let a: Vec<f32> =
+            (0..m * k).map(|i| ((i * 37 + 11) % 101) as f32 / 101.0 - 0.5).collect();
+        let bm: Vec<f32> =
+            (0..k * n).map(|i| ((i * 53 + 29) % 97) as f32 / 97.0 - 0.5).collect();
+        let mut ref_bits: Option<Vec<u32>> = None;
+        let mut naive_gf = 0.0f64;
+        for &kind in kinds {
+            let mut c = vec![0.0f32; m * n];
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                c.iter_mut().for_each(|x| *x = 0.0);
+                kernels::matmul_with(kind, &a, &bm, &mut c, m, k, n);
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let gflops = 2.0 * (m * k * n) as f64 * reps as f64 / secs / 1e9;
+            let bits: Vec<u32> = c.iter().map(|x| x.to_bits()).collect();
+            match &ref_bits {
+                None => ref_bits = Some(bits),
+                Some(r) => assert_eq!(
+                    r, &bits,
+                    "{} GEMM diverges bitwise from naive on {m}x{k}x{n}",
+                    kind.name()
+                ),
+            }
+            if kind == KernelKind::Naive {
+                naive_gf = gflops;
+            }
+            // The headline perf claim, checked on the default bench shape
+            // (big enough that tiling/SIMD dominate fixed overheads).
+            if kind == KernelKind::Simd && !b.quick && m * k * n >= 128 * 128 * 128 {
+                assert!(
+                    gflops >= 3.0 * naive_gf,
+                    "blocked+SIMD GEMM must be >= 3x naive on {m}x{k}x{n}: \
+                     {gflops:.2} vs {naive_gf:.2} GFLOP/s"
+                );
+            }
+            rows.push(vec![
+                format!("{m}x{k}x{n}"),
+                kind.name().to_string(),
+                format!("{gflops:.2}"),
+                format!("{:.2}", gflops / naive_gf.max(1e-12)),
+            ]);
+            json.push(Value::obj(vec![
+                ("panel", "gemm".into()),
+                ("shape", format!("{m}x{k}x{n}").into()),
+                ("kind", kind.name().into()),
+                ("gflops", gflops.into()),
+                ("speedup_vs_naive", (gflops / naive_gf.max(1e-12)).into()),
+            ]));
+        }
+    }
+    print_table(
+        &format!(
+            "Kernel layer — raw GEMM throughput (bit-identical across kinds; simd {})",
+            if kernels::simd_available() { "on" } else { "off (feature not built)" }
+        ),
+        &["shape", "kind", "GFLOP/s", "vs naive"],
+        &rows,
+    );
+
+    // Panels 2+3 — end-to-end per kernel kind: same seeds, same bits,
+    // different schedule; the fused kinds never materialize the
+    // [B*H, T*T] probs cache, and under `none` checkpointing the measured
+    // peak-act delta is exactly that buffer.
+    b.rt.set_act_ckpt(ActCkpt::None)?;
+    b.rt.set_precision(Precision::F32)?;
+    let steps = b.steps(24);
+    let mut rows = Vec::new();
+    let mut naive_loss = f64::NAN;
+    let mut naive_peak = 0u64;
+    let mut blocked_peak = 0u64;
+    for &kind in kinds {
+        b.rt.set_kernels(kind)?;
+        let spec = default_spec("hift", steps);
+        let rec = b.run_one(&spec, "markovlm", steps, 1)?;
+        let loss = rec.losses.tail_mean(8);
+        let bk = &rec.backend;
+        if kind == KernelKind::Naive {
+            naive_loss = loss;
+            naive_peak = bk.peak_act_resident_bytes;
+        } else {
+            assert!(
+                loss == naive_loss,
+                "{}: final loss {loss} != naive {naive_loss} — kernel kinds must be bit-identical",
+                kind.name()
+            );
+            if kind == KernelKind::Blocked {
+                blocked_peak = bk.peak_act_resident_bytes;
+            }
+        }
+        rows.push(vec![
+            kind.name().to_string(),
+            format!("{:.2}", rec.steps_per_sec),
+            format!("{:.2}", bk.kernel_gflops()),
+            format!("{:.1}", bk.peak_act_resident_bytes as f64 / 1024.0),
+            format!("{loss:.4}"),
+        ]);
+        json.push(Value::obj(vec![
+            ("panel", "e2e".into()),
+            ("kind", kind.name().into()),
+            ("steps_per_sec", rec.steps_per_sec.into()),
+            ("kernel_gflops", bk.kernel_gflops().into()),
+            ("kernel_flops", (bk.kernel_flops as usize).into()),
+            ("peak_act_resident_bytes", (bk.peak_act_resident_bytes as usize).into()),
+            ("final_train_loss", loss.into()),
+        ]));
+    }
+    b.rt.set_kernels(KernelKind::default())?;
+    let c = b.rt.manifest().config.clone();
+    let probs = native_probs_bytes(c.n_layers, c.batch, c.n_heads, c.seq_len, Precision::F32);
+    let delta = naive_peak - blocked_peak;
+    assert_eq!(
+        delta, probs,
+        "fused attention's measured peak-act saving must equal the removed \
+         L*B*H*T^2 probs term ({naive_peak} - {blocked_peak} vs {probs})"
+    );
+    rows.push(vec![
+        "(probs saved)".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", delta as f64 / 1024.0),
+        "-".into(),
+    ]);
+    json.push(Value::obj(vec![
+        ("panel", "fused_attn".into()),
+        ("measured_saving_bytes", (delta as usize).into()),
+        ("analytic_probs_bytes", (probs as usize).into()),
+    ]));
+    print_table(
+        &format!("Kernel layer — end-to-end per kind (HiFT, {steps} steps, ckpt none)"),
+        &["kind", "steps/s", "kernel GFLOP/s", "peak act KiB", "final loss"],
+        &rows,
+    );
+    b.save("kernels", &Value::Arr(json))
 }
 
 /// Appendix-B sanity print: closed-form ratio vs k.

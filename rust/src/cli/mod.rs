@@ -11,18 +11,19 @@
 //!             [--steps 200] [--optim adamw] [--lr 4e-3] [--warmup 0] [--m 1]
 //!             [--order b2u] [--seed 0] [--eval-every 50] [--log-every 10]
 //!             [--out runs/run.json] [--act-ckpt none|sqrt|every_k(K)]
-//!             [--precision f32|bf16|f16]
+//!             [--precision f32|bf16|f16] [--kernels naive|blocked|simd]
 //!             [--offload host|none] [--offload-compress none|f16] [--prefetch 1|0]
 //!             [--save-ckpt DIR] [--save-every N] [--resume DIR]
 //! hift eval   [--preset tiny | --artifacts DIR] [--variant base] --task motif4
-//!             [--seed 0] [--precision f32|bf16|f16] [--offload host|none]
+//!             [--seed 0] [--precision f32|bf16|f16] [--kernels naive|blocked|simd]
+//!             [--offload host|none]
 //! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
 //!             [--precision f32|bf16|f16]
 //! hift info   [--preset tiny | --artifacts DIR] [--seed 0]
 //! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-//!              |tables8_12|appendix_b|act_ckpt|offload|precision|all>
+//!              |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|all>
 //!             [--preset P] [--artifacts DIR] [--act-ckpt P] [--precision P]
-//!             [--offload host]
+//!             [--kernels K] [--offload host]
 //! ```
 //!
 //! `docs/CLI.md` documents every flag and `HIFT_*` environment variable;
@@ -47,7 +48,7 @@ pub use args::Args;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{build_backend, ActCkpt, ExecBackend, OffloadCfg, Precision};
+use crate::backend::{build_backend, ActCkpt, ExecBackend, KernelKind, OffloadCfg, Precision};
 use crate::bench::{exhibits, Bench};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::coordinator::trainer::{self, CkptOpts, TrainCfg};
@@ -67,20 +68,23 @@ const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
          --lr F --warmup N --m M --order b2u|t2d|ran --seed N
          --eval-every N --log-every N --out FILE.json
          --act-ckpt none|sqrt|every_k(K) --precision f32|bf16|f16
+         --kernels naive|blocked|simd
          --offload host|none --offload-compress none|f16 --prefetch 1|0
          --save-ckpt DIR --save-every N --resume DIR
   eval   --variant base|lora|ia3|prefix --task TASK --seed N
-         --precision f32|bf16|f16 --offload host|none
+         --precision f32|bf16|f16 --kernels naive|blocked|simd
+         --offload host|none
   memory-report --model NAME --batch N --seq N --m M --precision f32|bf16|f16
   info   (prints manifest, variants, artifacts, strategies, tasks)
   bench  table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-         |tables8_12|appendix_b|act_ckpt|offload|precision|all
-         (flags --preset/--artifacts/--act-ckpt/--precision/--offload* set
-          the HIFT_* env)
+         |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|all
+         (flags --preset/--artifacts/--act-ckpt/--precision/--kernels/
+          --offload* set the HIFT_* env)
 
   env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_PRECISION
-       HIFT_OFFLOAD HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH HIFT_PIPELINE
-       HIFT_THREADS HIFT_QUICK HIFT_OUT    (full inventory: docs/CLI.md)";
+       HIFT_KERNELS HIFT_OFFLOAD HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH
+       HIFT_PIPELINE HIFT_THREADS HIFT_QUICK HIFT_OUT
+       (full inventory: docs/CLI.md)";
 
 /// Binary entrypoint.
 pub fn main_entry() -> Result<()> {
@@ -136,6 +140,9 @@ fn cmd_train(a: &Args) -> Result<()> {
     }
     if let Some(p) = a.get("precision") {
         be.set_precision(Precision::parse(p)?)?;
+    }
+    if let Some(p) = a.get("kernels") {
+        be.set_kernels(KernelKind::parse(p)?)?;
     }
     let offload = offload_from(a)?;
     if offload.enabled {
@@ -251,6 +258,9 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let mut be = backend_from(a, seed)?;
     if let Some(p) = a.get("precision") {
         be.set_precision(Precision::parse(p)?)?;
+    }
+    if let Some(p) = a.get("kernels") {
+        be.set_kernels(KernelKind::parse(p)?)?;
     }
     let offload = offload_from(a)?;
     if offload.enabled {
@@ -388,6 +398,9 @@ fn cmd_bench(a: &Args) -> Result<()> {
     if let Some(p) = a.get("precision") {
         std::env::set_var("HIFT_PRECISION", p);
     }
+    if let Some(p) = a.get("kernels") {
+        std::env::set_var("HIFT_KERNELS", p);
+    }
     if let Some(p) = a.get("offload") {
         std::env::set_var("HIFT_OFFLOAD", p);
     }
@@ -415,13 +428,14 @@ fn cmd_bench(a: &Args) -> Result<()> {
             "act_ckpt" | "actckpt" => exhibits::act_ckpt(b),
             "offload" => exhibits::offload(b),
             "precision" => exhibits::precision(b),
+            "kernels" => exhibits::kernels(b),
             other => bail!("unknown exhibit {other:?}"),
         }
     };
     if which == "all" {
         for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "offload", "precision",
-                     "table5", "fig3", "fig4", "table3", "table4", "mtbench", "table2", "table1",
-                     "fig5"] {
+                     "kernels", "table5", "fig3", "fig4", "table3", "table4", "mtbench", "table2",
+                     "table1", "fig5"] {
             run(&mut b, name)?;
         }
         Ok(())

@@ -167,6 +167,8 @@ impl RunRecord {
                 ("peak_act_resident_bytes", (b.peak_act_resident_bytes as usize).into()),
                 ("recompute_layers", (b.recompute_layers as usize).into()),
                 ("recompute_flops", (b.recompute_flops as usize).into()),
+                ("kernel_flops", (b.kernel_flops as usize).into()),
+                ("kernel_gflops", b.kernel_gflops().into()),
             ]),
         ));
         // Numerics block (absent when nothing noteworthy happened):

@@ -74,7 +74,7 @@
 //! | [`ser`] | minimal JSON (no serde in the offline vendor set) |
 //! | [`rng`] | deterministic PCG RNG (MeZO perturbations, shuffles) |
 //! | [`tensor`] | flat f32 tensors, crash-safe checkpoint save/load (`tensor::checkpoint`), shared f16/bf16 codecs + precision-tagged buffers (`tensor::half`), host paging tier with async double-buffered prefetch (`tensor::paged`) |
-//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, `ActCkpt` recompute policies, `Precision` compute modes, manifest, native CPU model, thread helpers |
+//! | [`backend`] | the streamed execution seam: `ExecBackend`, `GradSink`, `ActCkpt` recompute policies, `Precision` compute modes, manifest, native CPU model, the cache-blocked/SIMD kernel layer (`backend::kernels`), thread-budgeted parallel helpers |
 //! | [`runtime`] | PJRT client, artifact registry, executable cache (`pjrt` feature; streams via post-execute drain) |
 //! | [`optim`] | AdamW / SGD / SGDM / Adagrad / Adafactor + paging ledger + fused/pipelined update sinks + the f16 dynamic loss scaler |
 //! | [`coordinator`] | HiFT itself: queue, strategies, grouping, delayed LR, trainer (+ checkpoint/resume loop) |
@@ -84,6 +84,10 @@
 //! | [`metrics`] | loss/accuracy/throughput trackers |
 //! | [`bench`] | table/figure harnesses shared by `cargo bench` targets |
 //! | [`proptest`] | minimal property-testing harness (offline substitute) |
+
+// Portable SIMD is still nightly-gated; the `simd` cargo feature opts in
+// (see `backend::kernels` — scalar blocked kernels compile without it).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod backend;
 pub mod bench;

@@ -161,12 +161,21 @@ fn state_bytes(shapes: &[&[usize]], opt: OptimKind) -> f64 {
 /// Activation ("residual state") model in bytes.  Returns
 /// `(total residual, activation layer part)` — the latter is the
 /// `act_ckpt` term surfaced in [`MemRow`].
+///
+/// `fused` models the fused streaming-softmax attention path: the
+/// `5·b·h·s·s_kv` probability slice of the per-layer footprint is never
+/// materialized (forward streams per-row, backward recomputes rows), so
+/// it drops out of both the retained-graph and the recompute-scratch
+/// branches.  The public `account*` entry points keep `fused = false` —
+/// the calibrated paper-table model — and [`fused_attn_savings`] exposes
+/// the delta as its own structural term.
 fn residual_bytes(
     arch: &Arch,
     w: Workload,
     dtype: Dtype,
     method: Method,
     policy: ActCkpt,
+    fused: bool,
 ) -> (f64, f64) {
     let (b, s, d, h, l) = (
         w.batch as f64,
@@ -182,7 +191,8 @@ fn residual_bytes(
         Some(w) => (s + s.min(w as f64)) / 2.0,
         None => s,
     };
-    let per_layer_fp16 = 34.0 * b * s * d + 5.0 * b * h * s * s_kv;
+    let probs_fp16 = 5.0 * b * h * s * s_kv;
+    let per_layer_fp16 = 34.0 * b * s * d + if fused { 0.0 } else { probs_fp16 };
     let extras = 4.0 * b * s * (arch.vocab as f64).min(8.0 * d) + 12.0 * b * s * d;
     let act_factor = match dtype {
         Dtype::Fp32 => 1.0,
@@ -297,7 +307,7 @@ pub fn account_ckpt(
     let gra = 4.0 * trainable as f64;
     let gra_streamed = 4.0 * largest as f64;
     let pgs = para + gra + sta;
-    let (residual, act_ckpt) = residual_bytes(arch, w, dtype, method, policy);
+    let (residual, act_ckpt) = residual_bytes(arch, w, dtype, method, policy, false);
     let total = pgs + residual;
     MemRow { trainable, para, gra, gra_streamed, sta, pgs, residual, act_ckpt, total }
 }
@@ -351,6 +361,39 @@ pub fn appendix_b_ratio(k: usize) -> f64 {
     (k as f64 + 3.0) / (4.0 * k as f64)
 }
 
+/// Exact bytes of the native backend's materialized attention-probability
+/// caches: `L·B·H·T²` elements at the compute precision's activation
+/// width.  This is precisely what the fused streaming-softmax kernel path
+/// stops retaining, so under [`ActCkpt::None`] the measured
+/// `peak_act_resident_bytes` of a naive-kernel run minus a fused run must
+/// equal this value *exactly* (asserted in `tests/kernels.rs`).
+pub fn native_probs_bytes(
+    n_layers: usize,
+    batch: usize,
+    heads: usize,
+    t: usize,
+    prec: Precision,
+) -> u64 {
+    (n_layers * batch * heads * t * t) as u64 * prec.act_bytes_per_elem() as u64
+}
+
+/// Analytic residual-memory saving (bytes) of the fused streaming-softmax
+/// attention path: the calibrated residual model with the `5·b·h·s·s_kv`
+/// probability slice materialized minus the same model with it fused away.
+/// Grows quadratically in sequence length, which is the point of the
+/// technique.
+pub fn fused_attn_savings(
+    arch: &Arch,
+    w: Workload,
+    dtype: Dtype,
+    method: Method,
+    policy: ActCkpt,
+) -> f64 {
+    let (materialized, _) = residual_bytes(arch, w, dtype, method, policy, false);
+    let (fused, _) = residual_bytes(arch, w, dtype, method, policy, true);
+    materialized - fused
+}
+
 // ---------------------------------------------------------------------------
 // Host paging tier bounds (enforced, not just modeled)
 // ---------------------------------------------------------------------------
@@ -399,6 +442,30 @@ mod tests {
     use crate::proptest::{prop_assert, run};
 
     const W512: Workload = Workload { batch: 8, seq: 512 };
+
+    #[test]
+    fn fused_attn_savings_are_positive_and_quadratic_in_seq() {
+        let arch = by_name("roberta-base").unwrap();
+        let w = |seq| Workload { batch: 8, seq };
+        let m = Method::Hift { m: 1 };
+        let s1 = fused_attn_savings(&arch, w(128), Dtype::Fp32, m, ActCkpt::None);
+        let s2 = fused_attn_savings(&arch, w(256), Dtype::Fp32, m, ActCkpt::None);
+        assert!(s1 > 0.0, "fused attention must save memory, got {s1}");
+        // Doubling seq quadruples the probs term but the per-layer base
+        // only doubles — the saving must grow superlinearly.
+        assert!(s2 > 3.0 * s1, "probs term is quadratic in seq: {s1} -> {s2}");
+        // The public account() stays on the calibrated materialized model.
+        let row = account(&arch, OptimKind::AdamW, Dtype::Fp32, m, w(128));
+        let fused_row_residual = row.residual - s1;
+        assert!(fused_row_residual > 0.0);
+    }
+
+    #[test]
+    fn native_probs_bytes_is_the_exact_cache_size() {
+        // tiny preset: 2 layers, 2 heads; batch 4, t 16 -> 2*4*2*16*16 el.
+        assert_eq!(native_probs_bytes(2, 4, 2, 16, Precision::F32), 4096 * 4);
+        assert_eq!(native_probs_bytes(2, 4, 2, 16, Precision::Bf16), 4096 * 2);
+    }
 
     #[test]
     fn roberta_base_adamw_fp32_matches_table8_pgs() {

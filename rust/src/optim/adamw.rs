@@ -7,7 +7,7 @@
 //! the global step — is the mathematically right correction.
 
 use super::{OptimCfg, OptimKind, Optimizer};
-use crate::backend::par;
+use crate::backend::{kernels, par};
 use crate::tensor::Tensor;
 
 struct State {
@@ -42,17 +42,13 @@ impl Optimizer for AdamW {
         let bc1 = 1.0 - b1.powi(st.t as i32);
         let bc2 = 1.0 - b2.powi(st.t as i32);
         // Single fused loop over the tensor — the L3 hot path, chunked
-        // across threads for large tensors (element-independent, so the
-        // result is identical at any thread count).
+        // across threads for large tensors and vectorized per chunk
+        // (element-independent and per-element expression order fixed, so
+        // the result is identical at any thread count and with SIMD on
+        // or off).
         let State { m, v, .. } = st;
-        par::par_apply4(&mut param.data, m, v, &grad.data, |p, mi, vi, g| {
-            let m_new = b1 * *mi + (1.0 - b1) * g;
-            let v_new = b2 * *vi + (1.0 - b2) * g * g;
-            *mi = m_new;
-            *vi = v_new;
-            let mhat = m_new / bc1;
-            let vhat = v_new / bc2;
-            *p -= lr * (mhat / (vhat.sqrt() + eps) + wd * *p);
+        par::par_chunks4(&mut param.data, m, v, &grad.data, |pc, mc, vc, gc| {
+            kernels::adamw_chunk(pc, mc, vc, gc, b1, b2, bc1, bc2, eps, wd, lr);
         });
     }
 

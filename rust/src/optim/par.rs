@@ -79,7 +79,14 @@ impl<'a> PipelinedApply<'a> {
     ) -> Self {
         let (jobs, job_rx) = channel::<Job>();
         let (done_tx, done) = channel::<Done>();
+        // Charge the worker against the shared thread budget *before* it
+        // spawns (deterministic accounting), and release when it exits —
+        // while an update overlaps the backward walk, the par helpers on
+        // both sides see one fewer slot instead of each assuming they own
+        // the whole `HIFT_THREADS` cap.
+        let budget_slot = crate::backend::par::register_worker();
         let worker = std::thread::spawn(move || {
+            let _budget_slot = budget_slot;
             let mut opt = optimizer;
             while let Ok(job) = job_rx.recv() {
                 match job {
@@ -324,6 +331,39 @@ mod tests {
         assert_eq!(p.tensors[0].data, before, "poisoned tensor untouched");
         assert_ne!(p.tensors[1].data, vec![-1.0, 0.5], "healthy tensor updated");
         assert_eq!(opt.state_bytes(0), 0, "no moments allocated for the skipped tensor");
+    }
+
+    #[test]
+    fn worker_threads_are_charged_to_the_shared_budget() {
+        // Regression test for thread oversubscription: each live worker must
+        // hold a slot in the process-wide thread budget so concurrent
+        // `par::*` calls (e.g. the backward walk) see a reduced cap instead
+        // of all sides assuming they own `HIFT_THREADS` cores.  Three live
+        // sinks ⇒ at least three charged slots, regardless of what other
+        // tests in this process are doing concurrently.
+        let mut sinks: Vec<PipelinedApply> = (0..3)
+            .map(|_| {
+                PipelinedApply::new(
+                    build(OptimCfg::new(OptimKind::Sgd), 3),
+                    None,
+                    vec![0, 1, 2],
+                    0.0,
+                    0.1,
+                )
+            })
+            .collect();
+        assert!(
+            crate::backend::par::budget_in_flight() >= 3,
+            "3 live workers must hold >= 3 budget slots, saw {}",
+            crate::backend::par::budget_in_flight()
+        );
+        let mut p = toy_params();
+        for sink in &mut sinks {
+            sink.finish(&mut p).unwrap();
+        }
+        for sink in sinks {
+            sink.into_optimizer().unwrap();
+        }
     }
 
     #[test]
