@@ -1,0 +1,12 @@
+//! `cargo bench --bench bench_parallel` — the data-parallel scaling
+//! exhibit: measured step throughput vs worker count N, bit-identity of
+//! the N-worker runs against the serial walk (losses, eval, kernel flop
+//! totals, peak grad residency), and the analytic replica-overhead panel
+//! (see hift::bench::exhibits).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::parallel(&mut b)?;
+    eprintln!("[bench_parallel] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -54,10 +54,11 @@ pub mod manifest;
 pub mod model;
 pub mod native;
 pub mod par;
+pub mod shard;
 
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::optim::ScalerEvent;
 use crate::tensor::paged::OffloadCounters;
@@ -700,6 +701,24 @@ pub trait ExecBackend {
     /// backend.
     fn reset_run_peaks(&mut self) {}
 
+    /// Configure data-parallel sharded execution (`--workers`/
+    /// `HIFT_WORKERS`): each run's batch splits across `n` worker replicas
+    /// whose gradients are combined by a deterministic tree all-reduce at
+    /// the emit seam — bit-identical to serial for any `n` (see
+    /// [`shard`]).  Backends without a worker topology accept only `n <=
+    /// 1`.
+    fn set_workers(&mut self, n: usize) -> Result<()> {
+        if n > 1 {
+            bail!("backend {:?} has no data-parallel worker support (workers {n})", self.name());
+        }
+        Ok(())
+    }
+
+    /// The configured worker-replica count (1 = serial).
+    fn workers(&self) -> usize {
+        1
+    }
+
     /// Initial parameters for `variant`.
     fn load_params(&self, variant: &str) -> Result<TensorSet>;
 
@@ -748,7 +767,8 @@ pub fn build_backend(
 /// `HIFT_PRECISION` (compute precision: `f32|bf16|f16`),
 /// `HIFT_KERNELS` (kernel layer: `naive|blocked|simd`),
 /// `HIFT_OFFLOAD`/`HIFT_OFFLOAD_COMPRESS`/`HIFT_PREFETCH` (host paging
-/// tier: `host|none`, `f16|none`, `1|0`).
+/// tier: `host|none`, `f16|none`, `1|0`),
+/// `HIFT_WORKERS` (data-parallel worker replicas, default 1).
 pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     // Empty values mean "unset" — `HIFT_ARTIFACTS= hift …` must fall back
     // to the native backend, not request PJRT with an empty dir.
@@ -768,6 +788,10 @@ pub fn from_env() -> Result<Box<dyn ExecBackend>> {
     let offload = OffloadCfg::from_env()?;
     if offload.enabled {
         be.set_offload(offload)?;
+    }
+    if let Some(w) = std::env::var("HIFT_WORKERS").ok().filter(|s| !s.is_empty()) {
+        let n: usize = w.parse().with_context(|| format!("bad HIFT_WORKERS {w:?}"))?;
+        be.set_workers(n)?;
     }
     Ok(be)
 }

@@ -25,7 +25,11 @@
 //! [`super::par`] thread-chunking helpers and the [`super::kernels`]
 //! compute layer; all reductions are fixed-order, so results are
 //! bit-identical across thread counts *and* across kernel schedules
-//! (naive / blocked / blocked+SIMD).  Under the blocked/simd kinds the
+//! (naive / blocked / blocked+SIMD).  Every reduction over the *batch-row*
+//! dimension (parameter gradients, the masked loss) additionally follows
+//! the canonical per-row-partials + fixed-tree-fold structure of
+//! [`super::shard`], which is what makes N data-parallel workers
+//! bit-identical to this serial walk — see that module's docs.  Under the blocked/simd kinds the
 //! attention core runs the fused streaming-softmax path: the `[B*H, T*T]`
 //! probability matrix is never materialized — forward consumes each
 //! query row's O(T) score scratch immediately and backward recomputes
@@ -40,6 +44,7 @@ use anyhow::{bail, Context, Result};
 use super::kernels;
 use super::manifest::ModelCfg;
 use super::par;
+use super::shard::{self, GradMsg};
 use super::{ActCkpt, Batch};
 use crate::tensor::half::{PrecBuf, Precision};
 use crate::tensor::paged::UnitPager;
@@ -99,16 +104,6 @@ fn attn_prob_row(
     }
 }
 
-/// Column sums of a row-major `[rows, cols]` buffer.
-fn colsum(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), rows * cols);
-    let mut out = vec![0.0f32; cols];
-    for r in 0..rows {
-        axpy(&mut out, 1.0, &x[r * cols..(r + 1) * cols]);
-    }
-    out
-}
-
 /// Add `bias[j]` to every row of `x: [rows, cols]`.
 fn add_bias(x: &mut [f32], bias: &[f32]) {
     let cols = bias.len();
@@ -145,29 +140,40 @@ fn ln_fwd(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> (Vec<f32>, LnStat
     (y, LnState { mean, inv })
 }
 
-/// Returns `(dx, dscale, dbias)` for `y = LN(x) * scale + bias`.
+/// Returns `(dx, dscale_parts, dbias_parts)` for `y = LN(x) * scale + bias`.
+///
+/// The scale/bias gradients come back as one partial per *batch* row
+/// (`rlen` consecutive LN rows each) — the canonical reduction grain of
+/// [`super::shard`].  Within a batch row the accumulation is the usual
+/// fixed sweep; the caller folds the partials with the canonical tree (or
+/// ships them to the shard reducer, which applies the same tree).
+#[allow(clippy::type_complexity)]
 fn ln_bwd(
     dy: &[f32],
     x: &[f32],
     st: &LnState,
     scale: &[f32],
     d: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    rlen: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
     let rows = x.len() / d;
+    debug_assert_eq!(rows % rlen, 0);
     let mut dx = vec![0.0f32; x.len()];
-    let mut dscale = vec![0.0f32; d];
-    let mut dbias = vec![0.0f32; d];
+    let mut dscale = vec![vec![0.0f32; d]; rows / rlen];
+    let mut dbias = vec![vec![0.0f32; d]; rows / rlen];
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
         let (mu, iv) = (st.mean[r], st.inv[r]);
+        let dsc = &mut dscale[r / rlen];
+        let dbi = &mut dbias[r / rlen];
         let mut g_mean = 0.0f32;
         let mut gx_mean = 0.0f32;
         for j in 0..d {
             let xhat = (xr[j] - mu) * iv;
             let g = dyr[j] * scale[j];
-            dscale[j] += dyr[j] * xhat;
-            dbias[j] += dyr[j];
+            dsc[j] += dyr[j] * xhat;
+            dbi[j] += dyr[j];
             g_mean += g;
             gx_mean += g * xhat;
         }
@@ -300,6 +306,10 @@ pub struct FwdState {
     /// Output softmax probabilities, `[BS, V]`.
     probs_out: PrecBuf,
     denom: f32,
+    /// Per-batch-row loss statistics `[Σw·nll, Σw, Σw·correct]` — the
+    /// canonical reduction grain; the shard reducer concatenates workers'
+    /// rows and folds them with the same tree the serial loss uses.
+    row_stats: Vec<[f64; 3]>,
     n_pre: usize,
     /// Compute precision this forward ran at; backward replays it (same
     /// quantization points) so the whole step is one consistent regime.
@@ -333,6 +343,11 @@ impl FwdState {
     /// free — in f32 mode).
     pub fn probs_out(&self) -> std::borrow::Cow<'_, [f32]> {
         self.probs_out.load()
+    }
+
+    /// Per-batch-row loss-statistic triples `[Σw·nll, Σw, Σw·correct]`.
+    pub fn row_stats(&self) -> &[[f64; 3]] {
+        &self.row_stats
     }
 }
 
@@ -371,7 +386,7 @@ impl GradSpec {
         GradSpec { min_unit: u, units, adapters: false, dense: true }
     }
 
-    fn emit(&self, u: usize) -> bool {
+    pub(crate) fn emit(&self, u: usize) -> bool {
         self.units.get(u).copied().unwrap_or(false)
     }
 }
@@ -380,6 +395,90 @@ fn check_variant(variant: &str) -> Result<()> {
     match variant {
         "base" | "lora" | "ia3" | "prefix" => Ok(()),
         other => bail!("native backend: unknown variant {other:?}"),
+    }
+}
+
+/// How a walk reaches the parameter set: exclusively (the plain path —
+/// required by the pager, which swaps tensor storage in and out mid-walk,
+/// and by fused sinks that update parameters in place at the emit seam),
+/// or as a shared read-only snapshot (data-parallel shard workers, which
+/// never page and never emit locally).
+enum ParamsView<'a> {
+    Excl { params: &'a mut TensorSet, pager: Option<&'a mut UnitPager> },
+    Shared(&'a TensorSet),
+}
+
+impl ParamsView<'_> {
+    fn view(&self) -> &TensorSet {
+        match self {
+            ParamsView::Excl { params, .. } => params,
+            ParamsView::Shared(p) => p,
+        }
+    }
+
+    /// The exclusive handle the emit seam needs.  Only the plain path
+    /// emits locally, so this is unreachable on a shared snapshot.
+    fn excl(&mut self) -> &mut TensorSet {
+        match self {
+            ParamsView::Excl { params, .. } => params,
+            ParamsView::Shared(_) => unreachable!("shard workers never emit gradients locally"),
+        }
+    }
+
+    fn ensure_unit(&mut self, u: usize) -> Result<()> {
+        if let ParamsView::Excl { params, pager: Some(pg) } = self {
+            pg.ensure_unit(params, u)?;
+        }
+        Ok(())
+    }
+
+    fn prefetch_unit(&mut self, u: usize) {
+        if let ParamsView::Excl { pager: Some(pg), .. } = self {
+            pg.prefetch_unit(u);
+        }
+    }
+
+    fn release_unit(&mut self, u: usize) -> Result<()> {
+        if let ParamsView::Excl { params, pager: Some(pg) } = self {
+            pg.release_unit(params, u)?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-batch-row gradient-partial consumer for the sharded walk: the
+/// worker hands each emission site's partials (and its special
+/// LoRA/embedding messages) to this callback in the plain walk's exact
+/// emission order; the reducer on the other end rendezvouses the streams.
+pub type ShipFn<'a> = dyn FnMut(GradMsg) -> Result<()> + 'a;
+
+/// Where a backward walk's parameter gradients go: folded to a single
+/// tensor and emitted locally (the plain path), or shipped as per-batch-
+/// row partials to the shard reducer (data-parallel workers).  Both arms
+/// of every site share the same partial grain and the same canonical tree
+/// fold, so the reducer reproduces the plain fold bit-for-bit.
+enum GradOut<'a, 'b> {
+    Fold(&'a mut EmitFn<'b>),
+    Ship(&'a mut ShipFn<'b>),
+}
+
+impl GradOut<'_, '_> {
+    /// One ordinary reduction site: fold-and-emit, or ship the partials.
+    fn rows(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        parts: Vec<Vec<f32>>,
+        ps: &mut ParamsView<'_>,
+    ) -> Result<()> {
+        match self {
+            GradOut::Fold(emit) => {
+                emit(name, Tensor::from_vec(shard::tree_fold(parts), shape), ps.excl())
+            }
+            GradOut::Ship(tx) => {
+                tx(GradMsg::Rows { name: name.to_string(), shape: shape.to_vec(), parts })
+            }
+        }
     }
 }
 
@@ -664,8 +763,41 @@ pub fn forward_ckpt(
     params: &mut TensorSet,
     batch: &Batch,
     policy: ActCkpt,
-    mut pager: Option<&mut UnitPager>,
+    pager: Option<&mut UnitPager>,
     prec: Precision,
+) -> Result<FwdState> {
+    forward_impl(cfg, variant, &mut ParamsView::Excl { params, pager }, batch, policy, prec, None)
+}
+
+/// One data-parallel worker's forward over its batch shard, against a
+/// shared read-only parameter snapshot (no pager — offload and sharding
+/// are mutually exclusive).  `denom` is the *global* loss-mask weight sum
+/// the coordinator derived for the whole batch: seeding backward with it
+/// makes every per-row gradient contribution identical to the plain
+/// walk's, so the reducer's tree fold needs no rescaling — and a shard
+/// whose rows are all mask-zero contributes exact zeros instead of
+/// tripping the plain path's 0/0 bail.
+pub fn forward_shard(
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    batch: &Batch,
+    policy: ActCkpt,
+    prec: Precision,
+    denom: f32,
+) -> Result<FwdState> {
+    forward_impl(cfg, variant, &mut ParamsView::Shared(params), batch, policy, prec, Some(denom))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_impl(
+    cfg: &ModelCfg,
+    variant: &str,
+    ps: &mut ParamsView<'_>,
+    batch: &Batch,
+    policy: ActCkpt,
+    prec: Precision,
+    denom_override: Option<f32>,
 ) -> Result<FwdState> {
     check_variant(variant)?;
     batch.validate()?;
@@ -689,12 +821,10 @@ pub fn forward_ckpt(
     let bs = bsz * s;
 
     // --- embeddings ---------------------------------------------------
-    if let Some(pg) = pager.as_deref_mut() {
-        pg.ensure_unit(params, 0)?;
-        pg.prefetch_unit(1);
-    }
-    let tok_emb = get(params, "tok_emb")?;
-    let pos_emb = get(params, "pos_emb")?;
+    ps.ensure_unit(0)?;
+    ps.prefetch_unit(1);
+    let tok_emb = get(ps.view(), "tok_emb")?;
+    let pos_emb = get(ps.view(), "pos_emb")?;
     let mut x0 = vec![0.0f32; bt * d];
     for b in 0..bsz {
         for tt in 0..t_ {
@@ -704,7 +834,7 @@ pub fn forward_ckpt(
                 // seq_len..seq_len+n_prefix, independent of the batch's
                 // runtime length (s may be < seq_len).
                 let base = cfg.seq_len + tt;
-                let pre = get(params, "prefix.emb")?;
+                let pre = get(ps.view(), "prefix.emb")?;
                 row.copy_from_slice(&pre.data[tt * d..(tt + 1) * d]);
                 axpy(row, 1.0, &pos_emb.data[base * d..(base + 1) * d]);
             } else {
@@ -716,9 +846,7 @@ pub fn forward_ckpt(
         }
     }
 
-    if let Some(pg) = pager.as_deref_mut() {
-        pg.release_unit(params, 0)?;
-    }
+    ps.release_unit(0)?;
     prec.quantize_slice(&mut x0);
 
     // --- transformer blocks -------------------------------------------
@@ -727,17 +855,13 @@ pub fn forward_ckpt(
     let mut boundaries: Vec<Option<PrecBuf>> = Vec::with_capacity(cfg.n_layers);
     let mut x = x0;
     for i in 0..cfg.n_layers {
-        if let Some(pg) = pager.as_deref_mut() {
-            pg.ensure_unit(params, i + 1)?;
-            // Double-buffer the next unit's page-in behind this layer's
-            // compute (the head unit follows the last block).
-            pg.prefetch_unit(if i + 2 <= cfg.n_layers { i + 2 } else { cfg.n_layers + 1 });
-        }
+        ps.ensure_unit(i + 1)?;
+        // Double-buffer the next unit's page-in behind this layer's
+        // compute (the head unit follows the last block).
+        ps.prefetch_unit(if i + 2 <= cfg.n_layers { i + 2 } else { cfg.n_layers + 1 });
         let x_in = x;
-        let (state, x_out) = layer_fwd(cfg, variant, params, i, x_in, bsz, t_, prec)?;
-        if let Some(pg) = pager.as_deref_mut() {
-            pg.release_unit(params, i + 1)?;
-        }
+        let (state, x_out) = layer_fwd(cfg, variant, ps.view(), i, x_in, bsz, t_, prec)?;
+        ps.release_unit(i + 1)?;
         match seg {
             None => {
                 layers.push(Some(state));
@@ -757,11 +881,13 @@ pub fn forward_ckpt(
     // --- head + masked loss -------------------------------------------
     // The head unit stays resident after the forward: a grad run's backward
     // reads it first (the caller's end-of-run sweep evicts it otherwise).
-    if let Some(pg) = pager.as_deref_mut() {
-        pg.ensure_unit(params, cfg.n_layers + 1)?;
-    }
-    let (mut hf, lnf) =
-        ln_fwd(&x_fin, &get(params, "ln_f.scale")?.data, &get(params, "ln_f.bias")?.data, d);
+    ps.ensure_unit(cfg.n_layers + 1)?;
+    let (mut hf, lnf) = ln_fwd(
+        &x_fin,
+        &get(ps.view(), "ln_f.scale")?.data,
+        &get(ps.view(), "ln_f.bias")?.data,
+        d,
+    );
     prec.quantize_slice(&mut hf);
     let hf_s = if p_ == 0 {
         Vec::new() // hf already is [BS, D]; avoid duplicating it
@@ -777,8 +903,8 @@ pub fn forward_ckpt(
     };
     let hf_s_ref: &[f32] = if p_ == 0 { &hf } else { &hf_s };
     let mut logits = vec![0.0f32; bs * v_];
-    par::matmul(hf_s_ref, &get(params, "head.w")?.data, &mut logits, bs, d, v_);
-    add_bias(&mut logits, &get(params, "head.b")?.data);
+    par::matmul(hf_s_ref, &get(ps.view(), "head.w")?.data, &mut logits, bs, d, v_);
+    add_bias(&mut logits, &get(ps.view(), "head.b")?.data);
     // The logits leave the half-precision region here: softmax and the
     // masked loss run in f32 (standard mixed-precision head handling).
     prec.quantize_slice(&mut logits);
@@ -811,26 +937,38 @@ pub fn forward_ckpt(
             st[1] = (arg == tgt) as u8 as f32;
         });
     }
-    let mut wsum = 0.0f64;
-    let mut loss_acc = 0.0f64;
-    let mut ncorrect = 0.0f64;
-    for r in 0..bs {
-        let w = batch.weights[r] as f64;
-        wsum += w;
-        loss_acc += rowstats[r * 2] as f64 * w;
-        ncorrect += rowstats[r * 2 + 1] as f64 * w;
+    // Per-batch-row statistics folded by the canonical tree (the grain +
+    // fold the shard reducer applies to N workers' rows), so the loss is
+    // invariant to the worker topology.
+    let mut row_stats: Vec<[f64; 3]> = Vec::with_capacity(bsz);
+    for b in 0..bsz {
+        let mut t = [0.0f64; 3];
+        for tc in 0..s {
+            let r = b * s + tc;
+            let w = batch.weights[r] as f64;
+            t[0] += rowstats[r * 2] as f64 * w;
+            t[1] += w;
+            t[2] += rowstats[r * 2 + 1] as f64 * w;
+        }
+        row_stats.push(t);
     }
-    if wsum <= 0.0 {
-        // The old `wsum.max(1e-6)` fallback silently produced loss 0 /
-        // all-zero gradients for a batch whose loss mask selects nothing —
-        // a config bug that then reads as a perfectly converged model.
-        // Bail like the PR 3 empty-batch eval fix.
-        bail!(
-            "batch [{bsz}x{s}] has zero total loss-mask weight: no position is supervised \
-             (weighted loss would be 0/0)"
-        );
-    }
-    let denom = wsum as f32;
+    let [loss_acc, wsum, ncorrect] = shard::tree_fold_stats(row_stats.clone());
+    let denom = match denom_override {
+        Some(global) => global,
+        None => {
+            if wsum <= 0.0 {
+                // The old `wsum.max(1e-6)` fallback silently produced loss 0 /
+                // all-zero gradients for a batch whose loss mask selects nothing —
+                // a config bug that then reads as a perfectly converged model.
+                // Bail like the PR 3 empty-batch eval fix.
+                bail!(
+                    "batch [{bsz}x{s}] has zero total loss-mask weight: no position is \
+                     supervised (weighted loss would be 0/0)"
+                );
+            }
+            wsum as f32
+        }
+    };
     Ok(FwdState {
         loss: (loss_acc / denom as f64) as f32,
         ncorrect: ncorrect as f32,
@@ -842,6 +980,7 @@ pub fn forward_ckpt(
         hf_s: PrecBuf::store(prec, hf_s),
         probs_out: PrecBuf::store(prec, logits),
         denom,
+        row_stats,
         n_pre: p_,
         prec,
     })
@@ -901,14 +1040,13 @@ fn recompute_layer(
     st: &FwdState,
     cfg: &ModelCfg,
     variant: &str,
-    params: &mut TensorSet,
+    ps: &mut ParamsView<'_>,
     bsz: usize,
     t_: usize,
     i: usize,
     scratch: &mut [Option<PrecBuf>],
     scratch_bytes: &mut u64,
     stats: &mut BwdStats,
-    mut pager: Option<&mut UnitPager>,
 ) -> Result<LayerState> {
     let prec = st.prec;
     // Nearest available boundary at or below layer i.
@@ -928,17 +1066,13 @@ fn recompute_layer(
         // (their gradients have not been emitted, so re-reading them is
         // within the streamed contract — and lossless paging restores the
         // exact bits the original forward read).
-        if let Some(pg) = pager.as_deref_mut() {
-            pg.ensure_unit(params, j + 1)?;
-        }
+        ps.ensure_unit(j + 1)?;
         let (x_j, from_scratch) = match scratch[j].take() {
             Some(b) => (b.into_vec(), true),
             None => (st.boundaries[j].as_ref().unwrap().load().into_owned(), false),
         };
-        let (stj, x_out) = layer_fwd(cfg, variant, params, j, x_j, bsz, t_, prec)?;
-        if let Some(pg) = pager.as_deref_mut() {
-            pg.release_unit(params, j + 1)?;
-        }
+        let (stj, x_out) = layer_fwd(cfg, variant, ps.view(), j, x_j, bsz, t_, prec)?;
+        ps.release_unit(j + 1)?;
         stats.recompute_layers += 1;
         stats.recompute_flops += layer_flops(cfg, bsz, t_);
         let LayerState { x_in, .. } = stj;
@@ -961,7 +1095,7 @@ fn recompute_layer(
         }
         None => st.boundaries[i].as_ref().unwrap().load().into_owned(),
     };
-    let (state, _x_out) = layer_fwd(cfg, variant, params, i, x_i, bsz, t_, prec)?;
+    let (state, _x_out) = layer_fwd(cfg, variant, ps.view(), i, x_i, bsz, t_, prec)?;
     stats.recompute_layers += 1;
     stats.recompute_flops += layer_flops(cfg, bsz, t_);
     Ok(state)
@@ -1010,7 +1144,45 @@ pub fn backward_streamed(
     batch: &Batch,
     spec: &GradSpec,
     emit: &mut EmitFn<'_>,
-    mut pager: Option<&mut UnitPager>,
+    pager: Option<&mut UnitPager>,
+    loss_scale: f32,
+) -> Result<BwdStats> {
+    let mut ps = ParamsView::Excl { params, pager };
+    let mut out = GradOut::Fold(emit);
+    backward_impl(st, cfg, variant, &mut ps, batch, spec, &mut out, loss_scale)
+}
+
+/// One data-parallel worker's streamed backward over its batch shard:
+/// identical walk to [`backward_streamed`], but parameters are a shared
+/// read-only snapshot and every emission site *ships* its per-batch-row
+/// partials through `ship` (in the plain walk's exact emission order)
+/// instead of folding and emitting locally — the shard reducer on the
+/// other end folds the global row set with the same canonical tree.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_shard(
+    st: &FwdState,
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &TensorSet,
+    batch: &Batch,
+    spec: &GradSpec,
+    ship: &mut ShipFn<'_>,
+    loss_scale: f32,
+) -> Result<BwdStats> {
+    let mut ps = ParamsView::Shared(params);
+    let mut out = GradOut::Ship(ship);
+    backward_impl(st, cfg, variant, &mut ps, batch, spec, &mut out, loss_scale)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_impl(
+    st: &FwdState,
+    cfg: &ModelCfg,
+    variant: &str,
+    ps: &mut ParamsView<'_>,
+    batch: &Batch,
+    spec: &GradSpec,
+    out: &mut GradOut<'_, '_>,
     loss_scale: f32,
 ) -> Result<BwdStats> {
     check_variant(variant)?;
@@ -1050,7 +1222,7 @@ pub fn backward_streamed(
     // reads of head.w / ln_f.scale must happen first.
     let mut dhf_s = vec![0.0f32; bs * d];
     {
-        let head_w = get(params, "head.w")?;
+        let head_w = get(ps.view(), "head.w")?;
         par::matmul_bt(&dlogits, &head_w.data, &mut dhf_s, bs, v_, d);
     }
     prec.quantize_slice(&mut dhf_s);
@@ -1068,30 +1240,26 @@ pub fn backward_streamed(
     };
     let x_fin_l = st.x_fin.load();
     let (mut dx, dscale_f, dbias_f) = {
-        let scale_f = get(params, "ln_f.scale")?;
-        ln_bwd(&dhf, &x_fin_l, &st.lnf, &scale_f.data, d)
+        let scale_f = get(ps.view(), "ln_f.scale")?;
+        ln_bwd(&dhf, &x_fin_l, &st.lnf, &scale_f.data, d, t_)
     };
     drop(dhf);
     prec.quantize_slice(&mut dx);
     if spec.emit(head_unit) {
-        emit("ln_f.scale", Tensor::from_vec(dscale_f, &[d]), params)?;
-        emit("ln_f.bias", Tensor::from_vec(dbias_f, &[d]), params)?;
+        out.rows("ln_f.scale", &[d], dscale_f, ps)?;
+        out.rows("ln_f.bias", &[d], dbias_f, ps)?;
         if spec.dense {
             let hf_l = st.hf.load();
             let hfs_l = st.hf_s.load();
             let hf_s: &[f32] = if p_ == 0 { &hf_l } else { &hfs_l };
-            let mut dhead_w = vec![0.0f32; d * v_];
-            par::matmul_at(hf_s, &dlogits, &mut dhead_w, bs, d, v_);
-            emit("head.w", Tensor::from_vec(dhead_w, &[d, v_]), params)?;
+            out.rows("head.w", &[d, v_], shard::matmul_at_rows(hf_s, &dlogits, bsz, s, d, v_), ps)?;
         }
-        emit("head.b", Tensor::from_vec(colsum(&dlogits, bs, v_), &[v_]), params)?;
+        out.rows("head.b", &[v_], shard::colsum_rows(&dlogits, bsz, s, v_), ps)?;
     }
     drop(dlogits);
-    if let Some(pg) = pager.as_deref_mut() {
-        // The head's reads and emits are done; a pinned head (its grads
-        // were emitted and updated in place) survives this as a no-op.
-        pg.release_unit(params, head_unit)?;
-    }
+    // The head's reads and emits are done; a pinned head (its grads were
+    // emitted and updated in place) survives this release as a no-op.
+    ps.release_unit(head_unit)?;
 
     // --- blocks, top-down ----------------------------------------------
     let mut bstats = BwdStats::default();
@@ -1102,11 +1270,9 @@ pub fn backward_streamed(
             // Truncated backprop: nothing below this unit was requested.
             return Ok(bstats);
         }
-        if let Some(pg) = pager.as_deref_mut() {
-            pg.ensure_unit(params, i + 1)?;
-            if i > 0 {
-                pg.prefetch_unit(i); // the next unit the descent will touch
-            }
+        ps.ensure_unit(i + 1)?;
+        if i > 0 {
+            ps.prefetch_unit(i); // the next unit the descent will touch
         }
         let ls_owned;
         let ls: &LayerState = match st.layers[i].as_ref() {
@@ -1116,14 +1282,13 @@ pub fn backward_streamed(
                     st,
                     cfg,
                     variant,
-                    params,
+                    ps,
                     bsz,
                     t_,
                     i,
                     &mut scratch,
                     &mut scratch_bytes,
                     &mut bstats,
-                    pager.as_deref_mut(),
                 )?;
                 &ls_owned
             }
@@ -1158,18 +1323,22 @@ pub fn backward_streamed(
         let dx_in = dx;
         let mut dmid = vec![0.0f32; bt * f_];
         {
-            let w2 = get(params, &format!("{pfx}ffn.w2"))?;
+            let w2 = get(ps.view(), &format!("{pfx}ffn.w2"))?;
             par::matmul_bt(&dx_in, &w2.data, &mut dmid, bt, d, f_);
         }
-        let mut dlff = Vec::new();
+        let mut dlff: Vec<Vec<f32>> = Vec::new();
         if ia3 {
-            let lff = &get(params, &format!("{pfx}ia3.lff"))?.data;
+            let lff = &get(ps.view(), &format!("{pfx}ia3.lff"))?.data;
             if spec.adapters {
-                dlff = vec![0.0f32; f_];
-                for r in 0..bt {
-                    for j in 0..f_ {
-                        dlff[j] += dmid[r * f_ + j] * mid0_l[r * f_ + j];
+                // Per-batch-row partials (canonical reduction grain).
+                for b in 0..bsz {
+                    let mut part = vec![0.0f32; f_];
+                    for r in b * t_..(b + 1) * t_ {
+                        for j in 0..f_ {
+                            part[j] += dmid[r * f_ + j] * mid0_l[r * f_ + j];
+                        }
                     }
+                    dlff.push(part);
                 }
             }
             for row in dmid.chunks_mut(f_) {
@@ -1191,13 +1360,13 @@ pub fn backward_streamed(
         prec.quantize_slice(&mut da1);
         let mut dh2 = vec![0.0f32; bt * d];
         {
-            let w1 = get(params, &format!("{pfx}ffn.w1"))?;
+            let w1 = get(ps.view(), &format!("{pfx}ffn.w1"))?;
             par::matmul_bt(&da1, &w1.data, &mut dh2, bt, f_, d);
         }
         prec.quantize_slice(&mut dh2);
         let (dx_ln2, dsc2, dbi2) = {
-            let sc2 = get(params, &format!("{pfx}ln2.scale"))?;
-            ln_bwd(&dh2, &x_mid_l, &ls.ln2, &sc2.data, d)
+            let sc2 = get(ps.view(), &format!("{pfx}ln2.scale"))?;
+            ln_bwd(&dh2, &x_mid_l, &ls.ln2, &sc2.data, d, t_)
         };
         drop(dh2);
         // Keep the layer-top gradient alive only when phase 2 will consume
@@ -1212,7 +1381,7 @@ pub fn backward_streamed(
         // attention out-projection input gradient
         let mut dattn = vec![0.0f32; bt * d];
         {
-            let wo = get(params, &format!("{pfx}attn.wo"))?;
+            let wo = get(ps.view(), &format!("{pfx}attn.wo"))?;
             par::matmul_bt(&dx_mid, &wo.data, &mut dattn, bt, d, d);
         }
         prec.quantize_slice(&mut dattn);
@@ -1291,18 +1460,22 @@ pub fn backward_streamed(
         prec.quantize_slice(&mut dq);
 
         // IA³ on k/v (gradients flow to the pre-scale activations)
-        let (mut dlk, mut dlv) = (Vec::new(), Vec::new());
+        let (mut dlk, mut dlv): (Vec<Vec<f32>>, Vec<Vec<f32>>) = (Vec::new(), Vec::new());
         if ia3 {
-            let lk = &get(params, &format!("{pfx}ia3.lk"))?.data;
-            let lv = &get(params, &format!("{pfx}ia3.lv"))?.data;
+            let lk = &get(ps.view(), &format!("{pfx}ia3.lk"))?.data;
+            let lv = &get(ps.view(), &format!("{pfx}ia3.lv"))?.data;
             if spec.adapters {
-                dlk = vec![0.0f32; d];
-                dlv = vec![0.0f32; d];
-                for r in 0..bt {
-                    for j in 0..d {
-                        dlk[j] += dk[r * d + j] * k0_l[r * d + j];
-                        dlv[j] += dv[r * d + j] * v0_l[r * d + j];
+                for b in 0..bsz {
+                    let mut pk = vec![0.0f32; d];
+                    let mut pv = vec![0.0f32; d];
+                    for r in b * t_..(b + 1) * t_ {
+                        for j in 0..d {
+                            pk[j] += dk[r * d + j] * k0_l[r * d + j];
+                            pv[j] += dv[r * d + j] * v0_l[r * d + j];
+                        }
                     }
+                    dlk.push(pk);
+                    dlv.push(pv);
                 }
             }
             for row in dk.chunks_mut(d) {
@@ -1319,51 +1492,61 @@ pub fn backward_streamed(
         prec.quantize_slice(&mut dk);
         prec.quantize_slice(&mut dv);
 
-        // LoRA factor gradients (chain rule through dW_q/dW_v) are
-        // computed before any emission so the reads of the LoRA factors
-        // precede their own updates; the dW intermediates are dropped
-        // immediately.
+        // LoRA factor gradients (chain rule through dW_q/dW_v).  The dW
+        // intermediates are built as per-batch-row partials (canonical
+        // grain).  On the plain path they are folded and chained into the
+        // factor gradients here — before any emission, so the reads of
+        // the LoRA factors precede their own updates.  Sharded workers
+        // park the partials instead and ship them at the layer's LoRA
+        // emission point; the reducer folds and runs the same chain rule
+        // against the snapshot factors.
         let mut lora_grads: Vec<(String, Tensor)> = Vec::new();
+        let mut lora_parts: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
         if lora && spec.adapters {
-            let r = cfg.lora_rank;
-            let mut dwq_full = vec![0.0f32; d * d];
-            par::matmul_at(&h1_l, &dq, &mut dwq_full, bt, d, d);
-            let mut dwv_full = vec![0.0f32; d * d];
-            par::matmul_at(&h1_l, &dv, &mut dwv_full, bt, d, d);
-            let aq = get(params, &format!("{pfx}lora.aq"))?;
-            let bq = get(params, &format!("{pfx}lora.bq"))?;
-            let av = get(params, &format!("{pfx}lora.av"))?;
-            let bv = get(params, &format!("{pfx}lora.bv"))?;
-            let mut daq = vec![0.0f32; d * r];
-            par::matmul_bt(&dwq_full, &bq.data, &mut daq, d, d, r);
-            daq.iter_mut().for_each(|z| *z *= lora_sc);
-            let mut dbq = vec![0.0f32; r * d];
-            par::matmul_at(&aq.data, &dwq_full, &mut dbq, d, r, d);
-            dbq.iter_mut().for_each(|z| *z *= lora_sc);
-            let mut dav = vec![0.0f32; d * r];
-            par::matmul_bt(&dwv_full, &bv.data, &mut dav, d, d, r);
-            dav.iter_mut().for_each(|z| *z *= lora_sc);
-            let mut dbv = vec![0.0f32; r * d];
-            par::matmul_at(&av.data, &dwv_full, &mut dbv, d, r, d);
-            dbv.iter_mut().for_each(|z| *z *= lora_sc);
-            lora_grads.push((format!("{pfx}lora.aq"), Tensor::from_vec(daq, &[d, r])));
-            lora_grads.push((format!("{pfx}lora.bq"), Tensor::from_vec(dbq, &[r, d])));
-            lora_grads.push((format!("{pfx}lora.av"), Tensor::from_vec(dav, &[d, r])));
-            lora_grads.push((format!("{pfx}lora.bv"), Tensor::from_vec(dbv, &[r, d])));
+            let dwq_parts = shard::matmul_at_rows(&h1_l, &dq, bsz, t_, d, d);
+            let dwv_parts = shard::matmul_at_rows(&h1_l, &dv, bsz, t_, d, d);
+            match out {
+                GradOut::Ship(_) => lora_parts = Some((dwq_parts, dwv_parts)),
+                GradOut::Fold(_) => {
+                    let r = cfg.lora_rank;
+                    let dwq_full = shard::tree_fold(dwq_parts);
+                    let dwv_full = shard::tree_fold(dwv_parts);
+                    let aq = get(ps.view(), &format!("{pfx}lora.aq"))?;
+                    let bq = get(ps.view(), &format!("{pfx}lora.bq"))?;
+                    let av = get(ps.view(), &format!("{pfx}lora.av"))?;
+                    let bv = get(ps.view(), &format!("{pfx}lora.bv"))?;
+                    let mut daq = vec![0.0f32; d * r];
+                    par::matmul_bt(&dwq_full, &bq.data, &mut daq, d, d, r);
+                    daq.iter_mut().for_each(|z| *z *= lora_sc);
+                    let mut dbq = vec![0.0f32; r * d];
+                    par::matmul_at(&aq.data, &dwq_full, &mut dbq, d, r, d);
+                    dbq.iter_mut().for_each(|z| *z *= lora_sc);
+                    let mut dav = vec![0.0f32; d * r];
+                    par::matmul_bt(&dwv_full, &bv.data, &mut dav, d, d, r);
+                    dav.iter_mut().for_each(|z| *z *= lora_sc);
+                    let mut dbv = vec![0.0f32; r * d];
+                    par::matmul_at(&av.data, &dwv_full, &mut dbv, d, r, d);
+                    dbv.iter_mut().for_each(|z| *z *= lora_sc);
+                    lora_grads.push((format!("{pfx}lora.aq"), Tensor::from_vec(daq, &[d, r])));
+                    lora_grads.push((format!("{pfx}lora.bq"), Tensor::from_vec(dbq, &[r, d])));
+                    lora_grads.push((format!("{pfx}lora.av"), Tensor::from_vec(dav, &[d, r])));
+                    lora_grads.push((format!("{pfx}lora.bv"), Tensor::from_vec(dbv, &[r, d])));
+                }
+            }
         }
 
         // dh1 and the LN1 backward complete the layer's parameter reads.
         let mut dh1 = vec![0.0f32; bt * d];
         par::matmul_bt(&dq, &wq_eff_l, &mut dh1, bt, d, d);
         {
-            let wk = get(params, &format!("{pfx}attn.wk"))?;
+            let wk = get(ps.view(), &format!("{pfx}attn.wk"))?;
             par::matmul_bt(&dk, &wk.data, &mut dh1, bt, d, d);
         }
         par::matmul_bt(&dv, &wv_eff_l, &mut dh1, bt, d, d);
         prec.quantize_slice(&mut dh1);
         let (dx_ln1, dsc1, dbi1) = {
-            let sc1 = get(params, &format!("{pfx}ln1.scale"))?;
-            ln_bwd(&dh1, &x_in_l, &ls.ln1, &sc1.data, d)
+            let sc1 = get(ps.view(), &format!("{pfx}ln1.scale"))?;
+            ln_bwd(&dh1, &x_in_l, &ls.ln1, &sc1.data, d, t_)
         };
         drop(dh1);
 
@@ -1371,77 +1554,78 @@ pub fn backward_streamed(
         // parameter order, each emitted (and dropped by the sink) before
         // the next is materialized.
         if emit_unit {
-            emit(&format!("{pfx}ln1.scale"), Tensor::from_vec(dsc1, &[d]), params)?;
-            emit(&format!("{pfx}ln1.bias"), Tensor::from_vec(dbi1, &[d]), params)?;
+            out.rows(&format!("{pfx}ln1.scale"), &[d], dsc1, ps)?;
+            out.rows(&format!("{pfx}ln1.bias"), &[d], dbi1, ps)?;
         }
         if emit_w {
-            let mut dwq = vec![0.0f32; d * d];
-            par::matmul_at(&h1_l, &dq, &mut dwq, bt, d, d);
-            emit(&format!("{pfx}attn.wq"), Tensor::from_vec(dwq, &[d, d]), params)?;
+            let parts = shard::matmul_at_rows(&h1_l, &dq, bsz, t_, d, d);
+            out.rows(&format!("{pfx}attn.wq"), &[d, d], parts, ps)?;
         }
         if emit_unit {
-            emit(&format!("{pfx}attn.bq"), Tensor::from_vec(colsum(&dq, bt, d), &[d]), params)?;
+            out.rows(&format!("{pfx}attn.bq"), &[d], shard::colsum_rows(&dq, bsz, t_, d), ps)?;
         }
         if emit_w {
-            let mut dwk = vec![0.0f32; d * d];
-            par::matmul_at(&h1_l, &dk, &mut dwk, bt, d, d);
-            emit(&format!("{pfx}attn.wk"), Tensor::from_vec(dwk, &[d, d]), params)?;
+            let parts = shard::matmul_at_rows(&h1_l, &dk, bsz, t_, d, d);
+            out.rows(&format!("{pfx}attn.wk"), &[d, d], parts, ps)?;
         }
         if emit_unit {
-            emit(&format!("{pfx}attn.bk"), Tensor::from_vec(colsum(&dk, bt, d), &[d]), params)?;
+            out.rows(&format!("{pfx}attn.bk"), &[d], shard::colsum_rows(&dk, bsz, t_, d), ps)?;
         }
         if emit_w {
-            let mut dwv = vec![0.0f32; d * d];
-            par::matmul_at(&h1_l, &dv, &mut dwv, bt, d, d);
-            emit(&format!("{pfx}attn.wv"), Tensor::from_vec(dwv, &[d, d]), params)?;
+            let parts = shard::matmul_at_rows(&h1_l, &dv, bsz, t_, d, d);
+            out.rows(&format!("{pfx}attn.wv"), &[d, d], parts, ps)?;
         }
         if emit_unit {
-            emit(&format!("{pfx}attn.bv"), Tensor::from_vec(colsum(&dv, bt, d), &[d]), params)?;
+            out.rows(&format!("{pfx}attn.bv"), &[d], shard::colsum_rows(&dv, bsz, t_, d), ps)?;
         }
         if emit_w {
-            let mut dwo = vec![0.0f32; d * d];
-            par::matmul_at(&attn_l, &dx_mid, &mut dwo, bt, d, d);
-            emit(&format!("{pfx}attn.wo"), Tensor::from_vec(dwo, &[d, d]), params)?;
+            let parts = shard::matmul_at_rows(&attn_l, &dx_mid, bsz, t_, d, d);
+            out.rows(&format!("{pfx}attn.wo"), &[d, d], parts, ps)?;
         }
         if emit_unit {
-            emit(&format!("{pfx}attn.bo"), Tensor::from_vec(colsum(&dx_mid, bt, d), &[d]), params)?;
-            emit(&format!("{pfx}ln2.scale"), Tensor::from_vec(dsc2, &[d]), params)?;
-            emit(&format!("{pfx}ln2.bias"), Tensor::from_vec(dbi2, &[d]), params)?;
+            out.rows(&format!("{pfx}attn.bo"), &[d], shard::colsum_rows(&dx_mid, bsz, t_, d), ps)?;
+            out.rows(&format!("{pfx}ln2.scale"), &[d], dsc2, ps)?;
+            out.rows(&format!("{pfx}ln2.bias"), &[d], dbi2, ps)?;
         }
         if emit_w {
-            let mut dw1 = vec![0.0f32; d * f_];
-            par::matmul_at(&h2_l, &da1, &mut dw1, bt, d, f_);
-            emit(&format!("{pfx}ffn.w1"), Tensor::from_vec(dw1, &[d, f_]), params)?;
+            let parts = shard::matmul_at_rows(&h2_l, &da1, bsz, t_, d, f_);
+            out.rows(&format!("{pfx}ffn.w1"), &[d, f_], parts, ps)?;
         }
         if emit_unit {
-            emit(&format!("{pfx}ffn.b1"), Tensor::from_vec(colsum(&da1, bt, f_), &[f_]), params)?;
+            out.rows(&format!("{pfx}ffn.b1"), &[f_], shard::colsum_rows(&da1, bsz, t_, f_), ps)?;
         }
         drop(da1);
         if emit_w {
-            let mut dw2 = vec![0.0f32; f_ * d];
-            par::matmul_at(mid_ref, &dx_top, &mut dw2, bt, f_, d);
-            emit(&format!("{pfx}ffn.w2"), Tensor::from_vec(dw2, &[f_, d]), params)?;
+            let parts = shard::matmul_at_rows(mid_ref, &dx_top, bsz, t_, f_, d);
+            out.rows(&format!("{pfx}ffn.w2"), &[f_, d], parts, ps)?;
         }
         if emit_unit {
-            emit(&format!("{pfx}ffn.b2"), Tensor::from_vec(colsum(&dx_top, bt, d), &[d]), params)?;
+            out.rows(&format!("{pfx}ffn.b2"), &[d], shard::colsum_rows(&dx_top, bsz, t_, d), ps)?;
         }
         drop(dx_top);
         // this layer's adapter gradients follow its base tensors
-        for (name, g) in lora_grads {
-            emit(&name, g, params)?;
+        match out {
+            GradOut::Fold(emit) => {
+                for (name, g) in lora_grads {
+                    emit(&name, g, ps.excl())?;
+                }
+            }
+            GradOut::Ship(tx) => {
+                if let Some((dwq, dwv)) = lora_parts.take() {
+                    tx(GradMsg::LoraDw { layer: i, dwq, dwv })?;
+                }
+            }
         }
         if ia3 && spec.adapters {
-            emit(&format!("{pfx}ia3.lk"), Tensor::from_vec(dlk, &[d]), params)?;
-            emit(&format!("{pfx}ia3.lv"), Tensor::from_vec(dlv, &[d]), params)?;
-            emit(&format!("{pfx}ia3.lff"), Tensor::from_vec(dlff, &[f_]), params)?;
+            out.rows(&format!("{pfx}ia3.lk"), &[d], dlk, ps)?;
+            out.rows(&format!("{pfx}ia3.lv"), &[d], dlv, ps)?;
+            out.rows(&format!("{pfx}ia3.lff"), &[f_], dlff, ps)?;
         }
 
         dx = dx_mid;
         axpy(&mut dx, 1.0, &dx_ln1);
         prec.quantize_slice(&mut dx);
-        if let Some(pg) = pager.as_deref_mut() {
-            pg.release_unit(params, i + 1)?;
-        }
+        ps.release_unit(i + 1)?;
     }
 
     // --- embeddings (unit 0) + prefix adapter ---------------------------
@@ -1453,8 +1637,22 @@ pub fn backward_streamed(
     // accumulation sequences — and hence the f32 results — are unchanged.
     let want_emb = spec.emit(0);
     let want_prefix = p_ > 0 && spec.adapters;
+    let emit = match out {
+        GradOut::Fold(emit) => emit,
+        GradOut::Ship(tx) => {
+            // The scatters' accumulation grain is the token *occurrence*,
+            // not the batch row, so sharded workers ship their dx rows
+            // once and the reducer replays these exact serial loops over
+            // the concatenated global rows (bit-identical, and far
+            // smaller than per-row `[V, D]` partials).
+            if want_emb || want_prefix {
+                tx(GradMsg::EmbDx { dx })?;
+            }
+            return Ok(bstats);
+        }
+    };
     if want_emb {
-        let pos_shape = get(params, "pos_emb")?.shape.clone();
+        let pos_shape = get(ps.view(), "pos_emb")?.shape.clone();
         let mut dtok = vec![0.0f32; v_ * d];
         for b in 0..bsz {
             for tt in p_..t_ {
@@ -1464,7 +1662,7 @@ pub fn backward_streamed(
                 axpy(&mut dtok[tok * d..(tok + 1) * d], 1.0, row);
             }
         }
-        emit("tok_emb", Tensor::from_vec(dtok, &[v_, d]), params)?;
+        emit("tok_emb", Tensor::from_vec(dtok, &[v_, d]), ps.excl())?;
         let mut dpos = vec![0.0f32; pos_shape.iter().product()];
         for b in 0..bsz {
             for tt in 0..t_ {
@@ -1478,7 +1676,7 @@ pub fn backward_streamed(
                 }
             }
         }
-        emit("pos_emb", Tensor::from_vec(dpos, &pos_shape), params)?;
+        emit("pos_emb", Tensor::from_vec(dpos, &pos_shape), ps.excl())?;
     }
     if want_prefix {
         let mut dpre = vec![0.0f32; p_ * d];
@@ -1488,7 +1686,7 @@ pub fn backward_streamed(
                 axpy(&mut dpre[tt * d..(tt + 1) * d], 1.0, row);
             }
         }
-        emit("prefix.emb", Tensor::from_vec(dpre, &[p_, d]), params)?;
+        emit("prefix.emb", Tensor::from_vec(dpre, &[p_, d]), ps.excl())?;
     }
     Ok(bstats)
 }

@@ -19,6 +19,7 @@ use anyhow::{bail, Context, Result};
 use super::kernels::{self, KernelKind};
 use super::manifest::{ArtifactInfo, Manifest, ModelCfg, ParamInfo, VariantInfo};
 use super::model;
+use super::shard;
 use super::{unit_artifact, ActCkpt, Batch, ExecBackend, GradSink, RuntimeStats, StreamOutput};
 use crate::optim::ScalerEvent;
 use crate::rng::Pcg32;
@@ -257,7 +258,27 @@ pub struct NativeBackend {
     /// Loss scale applied to the backward seed of grad runs (installed per
     /// step by the strategies' f16 scaler; 1.0 = off, bit-exact).
     loss_scale: f32,
+    /// Data-parallel worker replicas per step (`--workers`/`HIFT_WORKERS`);
+    /// 1 = the plain serial walk.  Gradients from the workers are combined
+    /// by the deterministic tree all-reduce in [`shard`], so every count is
+    /// bit-identical to serial.
+    workers: usize,
     pub stats: RuntimeStats,
+}
+
+/// Initial worker count for a freshly built backend: `HIFT_WORKERS` when set
+/// to a positive integer, else 1 (the plain serial walk).  Reading the env
+/// here — not only in [`super::from_env`] — lets a CI job re-run the whole
+/// identity suite under a multi-worker default without touching each test.
+/// Sharding is bit-identical to serial, so the default only changes wall
+/// clock; `set_workers` still overrides it per backend.
+fn default_workers() -> usize {
+    std::env::var("HIFT_WORKERS")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 impl NativeBackend {
@@ -278,6 +299,7 @@ impl NativeBackend {
             offload: OffloadCfg::default(),
             precision: Precision::F32,
             loss_scale: 1.0,
+            workers: default_workers(),
             stats: RuntimeStats::default(),
         })
     }
@@ -383,56 +405,110 @@ impl NativeBackend {
             self.act_ckpt
         };
         let t0 = std::time::Instant::now();
+        // The kernel counters are process-global atomics, so one delta
+        // snapshot brackets the whole step — including every concurrent
+        // worker walk of the sharded topology — without losing increments.
         let kern0 = kernels::counters();
         let prec = self.precision;
         let loss_scale = self.loss_scale;
-        let fwd =
-            model::forward_ckpt(&cfg, variant, params, batch, policy, self.pager.as_mut(), prec)?;
-        let mut act_peak = fwd.act_resident_bytes();
-        if !slots.is_empty() {
-            let bw = {
-                let stats = &mut self.stats;
-                let pager = self.pager.as_mut();
-                let mut emitted = 0usize;
-                let mut emit = |name: &str, mut g: Tensor, ps: &mut TensorSet| -> Result<()> {
-                    let slot = *slots
-                        .get(name)
-                        .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
-                    // The gradient leaves the device at the compute
-                    // precision (rounded here, half d2h bytes), then the
-                    // loss scale is divided back out in f32 — exact, the
-                    // scale is a power of two — so the sink clips and
-                    // updates on honest magnitudes ("grads are emitted
-                    // upcast to f32").  Non-finite values survive both
-                    // steps (Inf/2^k = Inf), so overflow detection at the
-                    // sink still fires.
-                    prec.quantize_slice(&mut g.data);
-                    if loss_scale != 1.0 {
-                        g.scale(1.0 / loss_scale);
-                    }
-                    let bytes = if prec == Precision::F32 {
-                        g.bytes() as u64
-                    } else {
-                        g.bytes() as u64 / 2
-                    };
-                    stats.d2h_bytes += bytes;
-                    stats.note_grad_resident(g.bytes() as u64 + sink.resident_bytes());
-                    sink.grad(slot, name, g, ps)?;
-                    stats.note_grad_resident(sink.resident_bytes());
-                    emitted += 1;
-                    Ok(())
+        let n_active = self.workers.min(batch.b.max(1));
+        let loss;
+        let ncorrect;
+        let mut act_peak;
+        {
+            let stats = &mut self.stats;
+            let mut pager = self.pager.as_mut();
+            let mut emitted = 0usize;
+            let mut emit = |name: &str, mut g: Tensor, ps: &mut TensorSet| -> Result<()> {
+                let slot = *slots
+                    .get(name)
+                    .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
+                // The gradient leaves the device at the compute
+                // precision (rounded here, half d2h bytes), then the
+                // loss scale is divided back out in f32 — exact, the
+                // scale is a power of two — so the sink clips and
+                // updates on honest magnitudes ("grads are emitted
+                // upcast to f32").  Non-finite values survive both
+                // steps (Inf/2^k = Inf), so overflow detection at the
+                // sink still fires.
+                prec.quantize_slice(&mut g.data);
+                if loss_scale != 1.0 {
+                    g.scale(1.0 / loss_scale);
+                }
+                let bytes = if prec == Precision::F32 {
+                    g.bytes() as u64
+                } else {
+                    g.bytes() as u64 / 2
                 };
-                let bw = model::backward_streamed(
-                    &fwd, &cfg, variant, params, batch, gspec, &mut emit, pager, loss_scale,
+                stats.d2h_bytes += bytes;
+                stats.note_grad_resident(g.bytes() as u64 + sink.resident_bytes());
+                sink.grad(slot, name, g, ps)?;
+                stats.note_grad_resident(sink.resident_bytes());
+                emitted += 1;
+                Ok(())
+            };
+            if n_active > 1 {
+                // `set_workers`/`set_offload` enforce the exclusivity; the
+                // pager mutates `params` mid-walk, which would race the
+                // workers' shared read-only view of the snapshot.
+                debug_assert!(
+                    pager.is_none(),
+                    "offload and workers>1 are mutually exclusive (enforced at configure time)"
+                );
+                let sum = shard::run_sharded(
+                    &cfg,
+                    variant,
+                    params,
+                    batch,
+                    gspec,
+                    policy,
+                    prec,
+                    loss_scale,
+                    n_active,
+                    !slots.is_empty(),
+                    &mut emit,
                 )?;
                 if emitted != slots.len() {
                     bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
                 }
-                bw
-            };
-            act_peak = act_peak.max(fwd.act_resident_bytes() + bw.peak_scratch_bytes);
-            self.stats.recompute_layers += bw.recompute_layers;
-            self.stats.recompute_flops += bw.recompute_flops;
+                stats.recompute_layers += sum.recompute_layers;
+                stats.recompute_flops += sum.recompute_flops;
+                act_peak = sum.act_peak_bytes;
+                loss = sum.loss;
+                ncorrect = sum.ncorrect;
+            } else {
+                let fwd = model::forward_ckpt(
+                    &cfg,
+                    variant,
+                    params,
+                    batch,
+                    policy,
+                    pager.as_deref_mut(),
+                    prec,
+                )?;
+                act_peak = fwd.act_resident_bytes();
+                if !slots.is_empty() {
+                    let bw = model::backward_streamed(
+                        &fwd,
+                        &cfg,
+                        variant,
+                        params,
+                        batch,
+                        gspec,
+                        &mut emit,
+                        pager.as_deref_mut(),
+                        loss_scale,
+                    )?;
+                    if emitted != slots.len() {
+                        bail!("streamed backward emitted {emitted} of {} gradients", slots.len());
+                    }
+                    act_peak = act_peak.max(fwd.act_resident_bytes() + bw.peak_scratch_bytes);
+                    stats.recompute_layers += bw.recompute_layers;
+                    stats.recompute_flops += bw.recompute_flops;
+                }
+                loss = fwd.loss;
+                ncorrect = fwd.ncorrect;
+            }
         }
         self.stats.note_act_resident(act_peak);
         sink.finish(params)?;
@@ -452,7 +528,7 @@ impl NativeBackend {
         let kern1 = kernels::counters();
         self.stats.kernel_flops += kern1.0 - kern0.0;
         self.stats.kernel_nanos += kern1.1 - kern0.1;
-        Ok(StreamOutput { loss: fwd.loss, ncorrect: fwd.ncorrect, exec_time })
+        Ok(StreamOutput { loss, ncorrect, exec_time })
     }
 
     /// Pool-side transfer-event counts `(stores, fetches)` of the paging
@@ -660,7 +736,36 @@ impl ExecBackend for NativeBackend {
         }
     }
 
+    fn set_workers(&mut self, n: usize) -> Result<()> {
+        if n == 0 {
+            bail!("workers must be >= 1 (1 = the plain serial walk)");
+        }
+        // The pager mutates the parameter set mid-walk (evict/fetch), which
+        // cannot coexist with N workers reading a shared snapshot of it.
+        if n > 1 && self.offload.enabled {
+            bail!(
+                "workers {n} is incompatible with --offload {}: the host pager \
+                 mutates parameters mid-walk while worker replicas read them",
+                self.offload.name()
+            );
+        }
+        self.workers = n;
+        Ok(())
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
     fn set_offload(&mut self, cfg: OffloadCfg) -> Result<()> {
+        if cfg.enabled && self.workers > 1 {
+            bail!(
+                "--offload {} is incompatible with workers {}: the host pager \
+                 mutates parameters mid-walk while worker replicas read them",
+                cfg.name(),
+                self.workers
+            );
+        }
         // Replacing an attached pager discards its pool.  While evicted
         // masters live there the pool is their *only* copy, so switching
         // modes then would silently destroy parameters — refuse instead.

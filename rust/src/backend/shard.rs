@@ -1,0 +1,578 @@
+//! Data-parallel sharded execution: the multi-worker topology and the
+//! deterministic gradient all-reduce it feeds (`--workers` / `HIFT_WORKERS`).
+//!
+//! ## The canonical batch-row reduction
+//!
+//! Every parameter gradient (and the masked loss) is a reduction over the
+//! batch-row dimension.  A data-parallel split changes *where* each row's
+//! contribution is computed, and f32 addition is not associative — so the
+//! only way N workers can be bit-identical to one is to fix the reduction
+//! structure **independently of the worker count**.  This module owns that
+//! contract:
+//!
+//! * every bt-dimension reduction site produces **one partial per batch
+//!   row** (the within-row accumulation order is the kernel layer's usual
+//!   fixed order), and
+//! * partials are combined by [`tree_fold`] — a fixed, balanced pairwise
+//!   tree over the *global* row index (separate mul + add, no FMA — the
+//!   kernel layer's discipline).
+//!
+//! The plain single-threaded walk ([`super::model`]) folds its own rows'
+//! partials with the very same tree; the sharded reducer folds the same
+//! per-row partials collected from N workers.  Because the partial grain
+//! (one batch row) and the fold shape depend only on the batch geometry,
+//! **any worker count — including 1 — produces identical bits**, for every
+//! gradient, the loss, and hence whole training trajectories.  Embedding
+//! scatters (whose accumulation grain is the token occurrence, not the
+//! row) are instead *replayed serially by the reducer* over the
+//! concatenated row gradients, which reproduces the plain walk's exact
+//! accumulation sequence.
+//!
+//! ## Topology
+//!
+//! [`run_sharded`] splits the batch into `min(workers, B)` contiguous row
+//! ranges, clones one shared read-only parameter snapshot, and runs one
+//! full `forward`/`backward` walk per shard on scoped worker threads (each
+//! registered against the shared [`super::par::ThreadBudget`], so kernels
+//! + workers never oversubscribe).  Workers stream per-row partials over
+//! bounded channels in the walk's fixed emission order; the coordinator
+//! rendezvouses one site at a time — reduce, then emit a *single* tensor
+//! into the ordinary [`super::GradSink`] seam — so
+//! `peak_grad_resident_bytes` stays at max-single-tensor, never N live
+//! copies of a gradient.
+
+use std::ops::Range;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ModelCfg;
+use super::model::{self, BwdStats, GradSpec};
+use super::par;
+use super::{ActCkpt, Batch};
+use crate::tensor::half::Precision;
+use crate::tensor::{Tensor, TensorSet};
+
+/// Bounded rendezvous capacity per worker: how many sites a fast worker
+/// may run ahead of the reducer before its `send` blocks.  Small, so the
+/// in-flight partial set stays a couple of tensors per worker.
+const CHANNEL_CAP: usize = 2;
+
+// ---------------------------------------------------------------------------
+// The canonical reduction (shared by the plain walk and the reducer)
+// ---------------------------------------------------------------------------
+
+/// Fold per-batch-row partials with a fixed, balanced pairwise tree:
+/// adjacent pairs are summed (separate loads, one add — no FMA), halving
+/// the list until one buffer remains; an odd tail passes through a round
+/// unchanged.  The tree shape depends only on the number of rows, so any
+/// contiguous sharding of the rows reproduces the same bits.
+pub fn tree_fold(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!parts.is_empty(), "tree_fold of zero partials");
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (x, &y) in a.iter_mut().zip(b.iter()) {
+                    *x += y;
+                }
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
+}
+
+/// [`tree_fold`] over per-row scalar triples `[w·nll, w, w·correct]` —
+/// the masked-loss statistics.  Lane-wise, same tree.
+pub fn tree_fold_stats(mut parts: Vec<[f64; 3]>) -> [f64; 3] {
+    assert!(!parts.is_empty(), "tree_fold_stats of zero rows");
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    *x += y;
+                }
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
+}
+
+/// Per-batch-row partials of `a^T · b` where `a: [rows·rlen, m]` and
+/// `b: [rows·rlen, n]` — one `[m, n]` partial GEMM per batch row (`rlen`
+/// positions each).  `tree_fold` of the result is the canonical form of
+/// the old single `matmul_at` over all `rows·rlen` positions.
+pub fn matmul_at_rows(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    rlen: usize,
+    m: usize,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let mut parts = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut p = vec![0.0f32; m * n];
+        let ar = &a[r * rlen * m..][..rlen * m];
+        let br = &b[r * rlen * n..][..rlen * n];
+        par::matmul_at(ar, br, &mut p, rlen, m, n);
+        parts.push(p);
+    }
+    parts
+}
+
+/// Per-batch-row column sums of `x: [rows·rlen, n]` (the canonical form
+/// of bias gradients).
+pub fn colsum_rows(x: &[f32], rows: usize, rlen: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut parts = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut p = vec![0.0f32; n];
+        for t in 0..rlen {
+            let src = &x[(r * rlen + t) * n..][..n];
+            for (pj, &sj) in p.iter_mut().zip(src.iter()) {
+                *pj += sj;
+            }
+        }
+        parts.push(p);
+    }
+    parts
+}
+
+/// The batch's total loss-mask weight, computed with the same per-row
+/// accumulation + canonical fold the forward pass uses — so the global
+/// denominator the coordinator hands each worker is bit-equal to the one
+/// a plain walk over the whole batch would derive.
+pub fn batch_denom(batch: &Batch) -> f64 {
+    let mut rows = Vec::with_capacity(batch.b);
+    for b in 0..batch.b {
+        let mut w = 0.0f64;
+        for tc in 0..batch.s {
+            w += batch.weights[b * batch.s + tc] as f64;
+        }
+        rows.push([0.0, w, 0.0]);
+    }
+    tree_fold_stats(rows)[1]
+}
+
+// ---------------------------------------------------------------------------
+// Batch sharding
+// ---------------------------------------------------------------------------
+
+/// Contiguous row ranges for `workers` shards of a `b`-row batch.  A batch
+/// smaller than the worker count degrades to fewer active shards (never an
+/// empty one); the split is balanced with the longer shards first.
+pub fn split_rows(b: usize, workers: usize) -> Vec<Range<usize>> {
+    let n = workers.clamp(1, b.max(1));
+    let base = b / n;
+    let extra = b % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for w in 0..n {
+        let len = base + usize::from(w < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    debug_assert_eq!(lo, b);
+    out
+}
+
+/// The sub-batch of rows `lo..hi` (same seq length, sliced buffers).
+pub fn batch_rows(batch: &Batch, r: &Range<usize>) -> Batch {
+    let s = batch.s;
+    Batch {
+        tokens: batch.tokens[r.start * s..r.end * s].to_vec(),
+        targets: batch.targets[r.start * s..r.end * s].to_vec(),
+        weights: batch.weights[r.start * s..r.end * s].to_vec(),
+        b: r.len(),
+        s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The worker → reducer protocol
+// ---------------------------------------------------------------------------
+
+/// One message on a worker's reduce channel.  Workers send these in the
+/// walk's fixed emission order, so the coordinator can rendezvous site by
+/// site without buffering the stream.
+pub enum GradMsg {
+    /// Forward summary: per-row `[w·nll, w, w·correct]` triples for this
+    /// shard's rows (always the first message).
+    Fwd { rows: Vec<[f64; 3]> },
+    /// One reduced-gradient site: per-batch-row partials for this shard's
+    /// rows, in row order.
+    Rows { name: String, shape: Vec<usize>, parts: Vec<Vec<f32>> },
+    /// LoRA dW intermediates for layer `layer`: per-row partials of the
+    /// full `dW_q`/`dW_v`, from which the reducer derives the four adapter
+    /// factor gradients after folding (exactly as the plain walk does).
+    LoraDw { layer: usize, dwq: Vec<Vec<f32>>, dwv: Vec<Vec<f32>> },
+    /// Embedding-level activation gradient rows `[shard_rows·t, d]`: the
+    /// reducer concatenates all shards' rows and replays the plain walk's
+    /// serial scatters (token / position / prefix embeddings).
+    EmbDx { dx: Vec<f32> },
+}
+
+/// What one worker reports back through its join handle.
+struct WorkerDone {
+    act_peak: u64,
+    bwd: BwdStats,
+}
+
+/// Scalars + accounting the sharded execution hands back to the backend.
+pub struct ShardSummary {
+    pub loss: f32,
+    pub ncorrect: f32,
+    /// Gradients emitted into the sink (the backend cross-checks this
+    /// against the artifact's slot count).
+    pub emitted: usize,
+    /// Sum of the workers' retained activation peaks (the shards' caches
+    /// are resident concurrently) plus the reducer's in-flight partials.
+    pub act_peak_bytes: u64,
+    pub recompute_layers: u64,
+    pub recompute_flops: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The driver
+// ---------------------------------------------------------------------------
+
+/// Execute one forward + streamed backward as `workers` data-parallel
+/// shards over a shared read-only parameter snapshot, reducing per-row
+/// gradient partials with the canonical tree and emitting each reduced
+/// tensor through `emit` (the backend's ordinary quantize → unscale →
+/// account → sink seam).  Bit-identical to the plain walk for any worker
+/// count; see the module docs for why.
+///
+/// `emit` receives `(name, reduced gradient, params)` in the exact plain-
+/// walk emission order.  `grads` is false for forward-only runs (eval,
+/// MeZO), which still shard the forward and merge loss/ncorrect.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded(
+    cfg: &ModelCfg,
+    variant: &str,
+    params: &mut TensorSet,
+    batch: &Batch,
+    gspec: &GradSpec,
+    policy: ActCkpt,
+    prec: Precision,
+    loss_scale: f32,
+    workers: usize,
+    grads: bool,
+    emit: &mut dyn FnMut(&str, Tensor, &mut TensorSet) -> Result<()>,
+) -> Result<ShardSummary> {
+    batch.validate()?;
+    let wsum = batch_denom(batch);
+    if wsum <= 0.0 {
+        // Mirror the plain forward's zero-mask bail (PR 5): a batch whose
+        // loss mask selects nothing is a config bug, not loss 0.
+        bail!(
+            "batch [{}x{}] has zero total loss-mask weight: no position is supervised \
+             (weighted loss would be 0/0)",
+            batch.b,
+            batch.s
+        );
+    }
+    let denom = wsum as f32;
+    let ranges = split_rows(batch.b, workers);
+    let n = ranges.len();
+    // One shared read-only snapshot for every worker (params do not scale
+    // with N).  Cloned before any sink emission, so workers read the same
+    // pre-update values the plain walk would — the sink may then update
+    // the *real* set in place behind them without aliasing.
+    let snapshot = params.clone();
+
+    let mut txs: Vec<Option<SyncSender<GradMsg>>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Receiver<GradMsg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = sync_channel(CHANNEL_CAP);
+        txs.push(Some(tx));
+        rxs.push(rx);
+    }
+
+    let (reduced, joined) = std::thread::scope(|scope| {
+        let snapshot = &snapshot;
+        let handles: Vec<_> = ranges
+            .iter()
+            .enumerate()
+            .map(|(w, range)| {
+                let tx = txs[w].take().expect("worker channel handed out twice");
+                let sub = batch_rows(batch, range);
+                // Charge the worker before it spawns (the pipelined
+                // optimizer's discipline), so budget accounting is
+                // deterministic: kernels inside the workers lease only
+                // what the registered walks leave free.
+                let slot = par::register_worker();
+                scope.spawn(move || -> Result<WorkerDone> {
+                    let _slot = slot;
+                    let fwd =
+                        model::forward_shard(cfg, variant, snapshot, &sub, policy, prec, denom)?;
+                    tx.send(GradMsg::Fwd { rows: fwd.row_stats().to_vec() })
+                        .map_err(|_| anyhow::anyhow!("gradient reducer hung up"))?;
+                    let mut act_peak = fwd.act_resident_bytes();
+                    let mut bwd = BwdStats::default();
+                    if grads {
+                        let mut ship = |m: GradMsg| -> Result<()> {
+                            tx.send(m).map_err(|_| anyhow::anyhow!("gradient reducer hung up"))
+                        };
+                        bwd = model::backward_shard(
+                            &fwd, cfg, variant, snapshot, &sub, gspec, &mut ship, loss_scale,
+                        )?;
+                        act_peak = act_peak.max(fwd.act_resident_bytes() + bwd.peak_scratch_bytes);
+                    }
+                    Ok(WorkerDone { act_peak, bwd })
+                })
+            })
+            .collect();
+
+        // The coordinator reduces on this thread while the workers walk.
+        // On any reduce error the receivers drop, failing the workers'
+        // sends, so joins below can never deadlock.
+        let reduced = reduce(rxs, cfg, variant, snapshot, params, batch, gspec, grads, denom, emit);
+        let joined: Vec<_> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect();
+        (reduced, joined)
+    });
+
+    // Worker errors are the root cause of any reducer channel error —
+    // surface them first.
+    let mut act_peak = 0u64;
+    let mut rlayers = 0u64;
+    let mut rflops = 0u64;
+    for done in joined {
+        let done = done.context("sharded worker walk failed")?;
+        act_peak += done.act_peak;
+        rlayers += done.bwd.recompute_layers;
+        rflops += done.bwd.recompute_flops;
+    }
+    let red = reduced?;
+    Ok(ShardSummary {
+        loss: red.loss,
+        ncorrect: red.ncorrect,
+        emitted: red.emitted,
+        act_peak_bytes: act_peak + red.partials_peak,
+        recompute_layers: rlayers,
+        recompute_flops: rflops,
+    })
+}
+
+struct Reduced {
+    loss: f32,
+    ncorrect: f32,
+    emitted: usize,
+    /// Peak bytes of per-row partials the reducer held in flight at once.
+    partials_peak: u64,
+}
+
+/// The coordinator side: rendezvous each emission site across all worker
+/// streams (fixed worker order), fold with the canonical tree, emit one
+/// reduced tensor.  Consumes the receivers so that dropping them on error
+/// unblocks any worker mid-`send`.
+#[allow(clippy::too_many_arguments)]
+fn reduce(
+    rxs: Vec<Receiver<GradMsg>>,
+    cfg: &ModelCfg,
+    variant: &str,
+    snapshot: &TensorSet,
+    params: &mut TensorSet,
+    batch: &Batch,
+    spec: &GradSpec,
+    grads: bool,
+    denom: f32,
+    emit: &mut dyn FnMut(&str, Tensor, &mut TensorSet) -> Result<()>,
+) -> Result<Reduced> {
+    // --- forward merge: global per-row stats, canonical fold -------------
+    let mut row_stats: Vec<[f64; 3]> = Vec::with_capacity(batch.b);
+    for rx in &rxs {
+        match rx.recv() {
+            Ok(GradMsg::Fwd { rows }) => row_stats.extend(rows),
+            Ok(_) => bail!("worker stream began with a gradient message"),
+            Err(_) => bail!("worker exited before its forward summary"),
+        }
+    }
+    if row_stats.len() != batch.b {
+        bail!("forward summaries cover {} of {} batch rows", row_stats.len(), batch.b);
+    }
+    let [loss_acc, _, ncorrect] = tree_fold_stats(row_stats);
+    let loss = (loss_acc / denom as f64) as f32;
+    let ncorrect = ncorrect as f32;
+    let mut red = Reduced { loss, ncorrect, emitted: 0, partials_peak: 0 };
+    if !grads {
+        return Ok(red);
+    }
+
+    let lora_sc = (cfg.lora_alpha / cfg.lora_rank.max(1) as f64) as f32;
+    let p_ = if variant == "prefix" { cfg.n_prefix } else { 0 };
+    let (d, v_, s) = (cfg.d_model, cfg.vocab, batch.s);
+    let t_ = s + p_;
+
+    // --- gradient rendezvous loop ----------------------------------------
+    loop {
+        let first = match rxs[0].recv() {
+            Ok(m) => m,
+            Err(_) => break, // worker 0 closed: end of stream (or its error, surfaced by join)
+        };
+        match first {
+            GradMsg::Rows { name, shape, mut parts } => {
+                for rx in &rxs[1..] {
+                    match rx.recv() {
+                        Ok(GradMsg::Rows { name: n2, parts: p2, .. }) if n2 == name => {
+                            parts.extend(p2)
+                        }
+                        Ok(_) => bail!("worker streams diverged at site {name:?}"),
+                        Err(_) => bail!("worker exited mid-stream at site {name:?}"),
+                    }
+                }
+                note_partials(&mut red, &parts);
+                let g = Tensor::from_vec(tree_fold(parts), &shape);
+                emit(&name, g, params)?;
+                red.emitted += 1;
+            }
+            GradMsg::LoraDw { layer, mut dwq, mut dwv } => {
+                for rx in &rxs[1..] {
+                    match rx.recv() {
+                        Ok(GradMsg::LoraDw { layer: l2, dwq: q2, dwv: v2 }) if l2 == layer => {
+                            dwq.extend(q2);
+                            dwv.extend(v2);
+                        }
+                        Ok(_) => bail!("worker streams diverged at layer {layer} LoRA site"),
+                        Err(_) => bail!("worker exited mid-stream at layer {layer} LoRA site"),
+                    }
+                }
+                note_partials(&mut red, &dwq);
+                note_partials(&mut red, &dwv);
+                // Fold the full dW intermediates, then derive the factor
+                // gradients exactly as the plain walk does.  The factors
+                // have not been emitted yet this run, so the live set
+                // still holds their pre-update (snapshot) values.
+                let dwq_full = tree_fold(dwq);
+                let dwv_full = tree_fold(dwv);
+                let r = cfg.lora_rank;
+                let pfx = format!("l{layer}.");
+                let aq = get(snapshot, &format!("{pfx}lora.aq"))?;
+                let bq = get(snapshot, &format!("{pfx}lora.bq"))?;
+                let av = get(snapshot, &format!("{pfx}lora.av"))?;
+                let bv = get(snapshot, &format!("{pfx}lora.bv"))?;
+                let mut daq = vec![0.0f32; d * r];
+                par::matmul_bt(&dwq_full, &bq.data, &mut daq, d, d, r);
+                daq.iter_mut().for_each(|z| *z *= lora_sc);
+                let mut dbq = vec![0.0f32; r * d];
+                par::matmul_at(&aq.data, &dwq_full, &mut dbq, d, r, d);
+                dbq.iter_mut().for_each(|z| *z *= lora_sc);
+                let mut dav = vec![0.0f32; d * r];
+                par::matmul_bt(&dwv_full, &bv.data, &mut dav, d, d, r);
+                dav.iter_mut().for_each(|z| *z *= lora_sc);
+                let mut dbv = vec![0.0f32; r * d];
+                par::matmul_at(&av.data, &dwv_full, &mut dbv, d, r, d);
+                dbv.iter_mut().for_each(|z| *z *= lora_sc);
+                emit(&format!("{pfx}lora.aq"), Tensor::from_vec(daq, &[d, r]), params)?;
+                emit(&format!("{pfx}lora.bq"), Tensor::from_vec(dbq, &[r, d]), params)?;
+                emit(&format!("{pfx}lora.av"), Tensor::from_vec(dav, &[d, r]), params)?;
+                emit(&format!("{pfx}lora.bv"), Tensor::from_vec(dbv, &[r, d]), params)?;
+                red.emitted += 4;
+            }
+            GradMsg::EmbDx { mut dx } => {
+                for rx in &rxs[1..] {
+                    match rx.recv() {
+                        Ok(GradMsg::EmbDx { dx: d2 }) => dx.extend(d2),
+                        Ok(_) => bail!("worker streams diverged at the embedding site"),
+                        Err(_) => bail!("worker exited mid-stream at the embedding site"),
+                    }
+                }
+                red.partials_peak = red.partials_peak.max(4 * dx.len() as u64);
+                let want = batch.b * t_ * d;
+                if dx.len() != want {
+                    bail!("embedding row gradients cover {} of {want} values", dx.len());
+                }
+                // Serial scatter replay over the *global* rows — the exact
+                // loops (and accumulation order) of the plain walk.
+                emit_embeddings(
+                    cfg, snapshot, params, batch, spec, &dx, p_, v_, d, &mut red, emit,
+                )?;
+            }
+            GradMsg::Fwd { .. } => bail!("unexpected second forward summary"),
+        }
+    }
+    Ok(red)
+}
+
+fn note_partials(red: &mut Reduced, parts: &[Vec<f32>]) {
+    let bytes: u64 = parts.iter().map(|p| 4 * p.len() as u64).sum();
+    red.partials_peak = red.partials_peak.max(bytes);
+}
+
+fn get<'a>(set: &'a TensorSet, name: &str) -> Result<&'a Tensor> {
+    set.get(name).with_context(|| format!("parameter {name:?} missing from snapshot"))
+}
+
+/// Replay the plain walk's embedding scatters over the concatenated row
+/// gradients `dx: [B·T, D]` — same loops, same (b, t) visit order, so the
+/// accumulated f32 values are bit-identical to the serial path.
+#[allow(clippy::too_many_arguments)]
+fn emit_embeddings(
+    cfg: &ModelCfg,
+    snapshot: &TensorSet,
+    params: &mut TensorSet,
+    batch: &Batch,
+    spec: &GradSpec,
+    dx: &[f32],
+    p_: usize,
+    v_: usize,
+    d: usize,
+    red: &mut Reduced,
+    emit: &mut dyn FnMut(&str, Tensor, &mut TensorSet) -> Result<()>,
+) -> Result<()> {
+    let (bsz, s) = (batch.b, batch.s);
+    let t_ = s + p_;
+    // Same gating as the plain walk's embedding section: workers ship
+    // `EmbDx` iff one of these holds.
+    if spec.emit(0) {
+        let pos_shape = get(snapshot, "pos_emb")?.shape.clone();
+        let mut dtok = vec![0.0f32; v_ * d];
+        for b in 0..bsz {
+            for tt in p_..t_ {
+                let row = &dx[(b * t_ + tt) * d..][..d];
+                let tc = tt - p_;
+                let tok = batch.tokens[b * s + tc] as usize;
+                for (dj, &rj) in dtok[tok * d..(tok + 1) * d].iter_mut().zip(row.iter()) {
+                    *dj += rj;
+                }
+            }
+        }
+        emit("tok_emb", Tensor::from_vec(dtok, &[v_, d]), params)?;
+        let mut dpos = vec![0.0f32; pos_shape.iter().product()];
+        for b in 0..bsz {
+            for tt in 0..t_ {
+                let row = &dx[(b * t_ + tt) * d..][..d];
+                let base = if tt < p_ { cfg.seq_len + tt } else { tt - p_ };
+                for (dj, &rj) in dpos[base * d..(base + 1) * d].iter_mut().zip(row.iter()) {
+                    *dj += rj;
+                }
+            }
+        }
+        emit("pos_emb", Tensor::from_vec(dpos, &pos_shape), params)?;
+        red.emitted += 2;
+    }
+    if p_ > 0 && spec.adapters {
+        let mut dpre = vec![0.0f32; p_ * d];
+        for b in 0..bsz {
+            for tt in 0..p_ {
+                let row = &dx[(b * t_ + tt) * d..][..d];
+                for (dj, &rj) in dpre[tt * d..(tt + 1) * d].iter_mut().zip(row.iter()) {
+                    *dj += rj;
+                }
+            }
+        }
+        emit("prefix.emb", Tensor::from_vec(dpre, &[p_, d]), params)?;
+        red.emitted += 1;
+    }
+    Ok(())
+}

@@ -9,11 +9,12 @@ use anyhow::Result;
 
 use super::{acc_cell, default_spec, print_table, Bench};
 use crate::backend::kernels::{self, KernelKind};
+use crate::backend::par;
 use crate::backend::{ActCkpt, Compression, ExecBackend, OffloadCfg, Precision};
 use crate::coordinator::strategy::UpdateStrategy;
 use crate::memmodel::{
     account, account_ckpt, account_prec, by_name, native_probs_bytes, paged_host_bound,
-    paged_param_bound, Dtype, Method, Workload, GIB, MIB,
+    paged_param_bound, workers_overhead, Dtype, Method, Workload, GIB, MIB,
 };
 use crate::optim::OptimKind;
 use crate::ser::Value;
@@ -1071,6 +1072,144 @@ pub fn kernels(b: &mut Bench) -> Result<()> {
         &rows,
     );
     b.save("kernels", &Value::Arr(json))
+}
+
+/// Data-parallel sharded execution (`hift bench parallel`): measured step
+/// throughput vs worker count N, with the determinism contract checked on
+/// every multi-worker run — the loss curve, the final eval, the measured
+/// kernel flop total, and `peak_grad_resident_bytes` must all be
+/// bit-identical to (resp. exactly equal to) the N=1 serial walk.  The
+/// reducer folds per-batch-row partials with the same fixed balanced tree
+/// the serial path uses, so the split is invisible in the bits; the emit
+/// seam still sees exactly one tensor per site, so grad residency never
+/// grows with N.  In full mode on a multi-core host the N=2 run must also
+/// clear a ≥ 1.7× step-throughput gate; on a single-core host (or under
+/// `HIFT_QUICK`) the measured ratio is reported but not gated, since
+/// worker replicas can't overlap without a second core.
+pub fn parallel(b: &mut Bench) -> Result<()> {
+    let steps = b.steps(32);
+    let host_threads = par::max_threads();
+    let counts: &[usize] = if b.quick { &[1, 2] } else { &[1, 2, 4] };
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut base_sps = f64::NAN;
+    let mut base_losses: Vec<f64> = Vec::new();
+    let mut base_eval = (f64::NAN, f64::NAN);
+    let mut base_grad_peak = 0u64;
+    let mut base_flops = 0u64;
+    for &n in counts {
+        b.rt.set_workers(n)?;
+        let spec = default_spec("hift", steps);
+        let rec = b.run_one(&spec, "markovlm", steps, 1)?;
+        let bk = &rec.backend;
+        let speedup;
+        if n == 1 {
+            base_sps = rec.steps_per_sec;
+            base_losses = rec.losses.values.clone();
+            base_eval = (rec.final_eval.loss, rec.final_eval.acc);
+            base_grad_peak = bk.peak_grad_resident_bytes;
+            base_flops = bk.kernel_flops;
+            speedup = 1.0;
+        } else {
+            assert!(
+                rec.losses.values == base_losses,
+                "workers={n}: loss curve diverged from serial — the sharded walk \
+                 must be bit-identical"
+            );
+            assert!(
+                rec.final_eval.loss == base_eval.0 && rec.final_eval.acc == base_eval.1,
+                "workers={n}: final eval ({}, {}) != serial ({}, {})",
+                rec.final_eval.loss,
+                rec.final_eval.acc,
+                base_eval.0,
+                base_eval.1
+            );
+            assert_eq!(
+                bk.peak_grad_resident_bytes, base_grad_peak,
+                "workers={n}: peak grad residency must stay at max-single-tensor"
+            );
+            assert_eq!(
+                bk.kernel_flops, base_flops,
+                "workers={n}: measured kernel flop total must equal serial exactly \
+                 (same math, different schedule)"
+            );
+            speedup = rec.steps_per_sec / base_sps.max(1e-12);
+            if n == 2 && !b.quick && host_threads >= 2 {
+                assert!(
+                    speedup >= 1.7,
+                    "workers=2 must reach >= 1.7x serial step throughput on a \
+                     multi-core host: {:.2} vs {:.2} steps/s ({speedup:.2}x)",
+                    rec.steps_per_sec,
+                    base_sps
+                );
+            }
+        }
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.2}", rec.steps_per_sec),
+            format!("{speedup:.2}"),
+            format!("{:.1}", bk.peak_grad_resident_bytes as f64 / 1024.0),
+            format!("{:.2}", bk.kernel_gflops()),
+            format!("{:.4}", rec.losses.tail_mean(8)),
+            format!("{:.3}", rec.final_eval.acc),
+        ]);
+        json.push(Value::obj(vec![
+            ("workers", n.into()),
+            ("steps_per_sec", rec.steps_per_sec.into()),
+            ("speedup_vs_serial", speedup.into()),
+            ("peak_grad_resident_bytes", (bk.peak_grad_resident_bytes as usize).into()),
+            ("peak_act_resident_bytes", (bk.peak_act_resident_bytes as usize).into()),
+            ("kernel_flops", (bk.kernel_flops as usize).into()),
+            ("kernel_gflops", bk.kernel_gflops().into()),
+            ("final_train_loss", rec.losses.tail_mean(8).into()),
+            ("final_eval_acc", rec.final_eval.acc.into()),
+            ("speedup_gated", (n == 2 && !b.quick && host_threads >= 2).into()),
+        ]));
+    }
+    b.rt.set_workers(1)?;
+    print_table(
+        &format!(
+            "Data-parallel workers — measured scaling (HiFT, {steps} steps, \
+             host threads {host_threads}{})",
+            if b.quick || host_threads < 2 { "; speedup gate skipped" } else { "" }
+        ),
+        &[
+            "workers",
+            "steps/s",
+            "vs serial",
+            "peak grad KiB",
+            "kernel GFLOP/s",
+            "final loss",
+            "eval acc",
+        ],
+        &rows,
+    );
+
+    // Analytic panel — the worker-replica overhead term at paper scale:
+    // one shared read-only snapshot (4·P, independent of N) plus the
+    // reducer's transient per-row partial buffers.  A step function of
+    // "topology on", not a multiple of N.
+    let w = Workload { batch: 8, seq: 512 };
+    let mut rows = Vec::new();
+    for model in ["roberta-large", "llama-7b"] {
+        let a = by_name(model).unwrap();
+        for n in [1usize, 2, 4, 8] {
+            let o = workers_overhead(&a, w, n);
+            rows.push(vec![model.to_string(), n.to_string(), format!("{:.3}", o / GIB)]);
+            json.push(Value::obj(vec![
+                ("panel", "overhead".into()),
+                ("model", model.into()),
+                ("workers", n.into()),
+                ("overhead_bytes", (o as usize).into()),
+            ]));
+        }
+    }
+    print_table(
+        "Data-parallel workers — analytic replica overhead (b=8 s=512; flat in N)",
+        &["model", "workers", "overhead(GiB)"],
+        &rows,
+    );
+    b.save("parallel", &Value::Arr(json))
 }
 
 /// Appendix-B sanity print: closed-form ratio vs k.

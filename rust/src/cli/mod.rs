@@ -13,17 +13,17 @@
 //!             [--out runs/run.json] [--act-ckpt none|sqrt|every_k(K)]
 //!             [--precision f32|bf16|f16] [--kernels naive|blocked|simd]
 //!             [--offload host|none] [--offload-compress none|f16] [--prefetch 1|0]
-//!             [--save-ckpt DIR] [--save-every N] [--resume DIR]
+//!             [--workers N] [--save-ckpt DIR] [--save-every N] [--resume DIR]
 //! hift eval   [--preset tiny | --artifacts DIR] [--variant base] --task motif4
 //!             [--seed 0] [--precision f32|bf16|f16] [--kernels naive|blocked|simd]
-//!             [--offload host|none]
+//!             [--offload host|none] [--workers N]
 //! hift memory-report [--model llama-7b] [--batch 8] [--seq 512] [--m 1]
 //!             [--precision f32|bf16|f16]
 //! hift info   [--preset tiny | --artifacts DIR] [--seed 0]
 //! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-//!              |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|all>
+//!              |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|parallel|all>
 //!             [--preset P] [--artifacts DIR] [--act-ckpt P] [--precision P]
-//!             [--kernels K] [--offload host]
+//!             [--kernels K] [--offload host] [--workers N]
 //! ```
 //!
 //! `docs/CLI.md` documents every flag and `HIFT_*` environment variable;
@@ -70,20 +70,20 @@ const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
          --act-ckpt none|sqrt|every_k(K) --precision f32|bf16|f16
          --kernels naive|blocked|simd
          --offload host|none --offload-compress none|f16 --prefetch 1|0
-         --save-ckpt DIR --save-every N --resume DIR
+         --workers N --save-ckpt DIR --save-every N --resume DIR
   eval   --variant base|lora|ia3|prefix --task TASK --seed N
          --precision f32|bf16|f16 --kernels naive|blocked|simd
-         --offload host|none
+         --offload host|none --workers N
   memory-report --model NAME --batch N --seq N --m M --precision f32|bf16|f16
   info   (prints manifest, variants, artifacts, strategies, tasks)
   bench  table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-         |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|all
+         |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|parallel|all
          (flags --preset/--artifacts/--act-ckpt/--precision/--kernels/
-          --offload* set the HIFT_* env)
+          --offload*/--workers set the HIFT_* env)
 
   env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_PRECISION
        HIFT_KERNELS HIFT_OFFLOAD HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH
-       HIFT_PIPELINE HIFT_THREADS HIFT_QUICK HIFT_OUT
+       HIFT_WORKERS HIFT_PIPELINE HIFT_THREADS HIFT_QUICK HIFT_OUT
        (full inventory: docs/CLI.md)";
 
 /// Binary entrypoint.
@@ -155,6 +155,9 @@ fn cmd_train(a: &Args) -> Result<()> {
             );
         }
         be.set_offload(offload)?;
+    }
+    if let Some(w) = a.get_num("workers") {
+        be.set_workers(w as usize)?;
     }
     let optim = OptimKind::parse(a.get("optim").unwrap_or("adamw"))
         .context("bad --optim (adamw|sgd|sgdm|adagrad|adafactor)")?;
@@ -265,6 +268,9 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let offload = offload_from(a)?;
     if offload.enabled {
         be.set_offload(offload)?;
+    }
+    if let Some(w) = a.get_num("workers") {
+        be.set_workers(w as usize)?;
     }
     let mut params = be.load_params(variant)?;
     let task = build_task(task_name, geom(be.as_ref()), seed)
@@ -410,6 +416,9 @@ fn cmd_bench(a: &Args) -> Result<()> {
     if let Some(p) = a.get("prefetch") {
         std::env::set_var("HIFT_PREFETCH", p);
     }
+    if let Some(p) = a.get("workers") {
+        std::env::set_var("HIFT_WORKERS", p);
+    }
     let mut b = Bench::from_env()?;
     let run = |b: &mut Bench, name: &str| -> Result<()> {
         match name {
@@ -429,13 +438,14 @@ fn cmd_bench(a: &Args) -> Result<()> {
             "offload" => exhibits::offload(b),
             "precision" => exhibits::precision(b),
             "kernels" => exhibits::kernels(b),
+            "parallel" => exhibits::parallel(b),
             other => bail!("unknown exhibit {other:?}"),
         }
     };
     if which == "all" {
         for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "offload", "precision",
-                     "kernels", "table5", "fig3", "fig4", "table3", "table4", "mtbench", "table2",
-                     "table1", "fig5"] {
+                     "kernels", "parallel", "table5", "fig3", "fig4", "table3", "table4",
+                     "mtbench", "table2", "table1", "fig5"] {
             run(&mut b, name)?;
         }
         Ok(())

@@ -86,6 +86,9 @@ pub struct RunRecord {
     pub exec_secs: f64,
     /// Compute precision the run executed at (`"f32"|"bf16"|"f16"`).
     pub precision: String,
+    /// Data-parallel worker replicas the backend ran each step with
+    /// (1 = serial; N > 1 is bit-identical to serial by construction).
+    pub workers: usize,
     pub peak_trainable_params: usize,
     pub optimizer_state_bytes: usize,
     /// Paging ledger summary (HiFT only): (h2d, d2h, max_inflight, peak_device).
@@ -114,6 +117,7 @@ impl RunRecord {
             ("steps_per_sec", self.steps_per_sec.into()),
             ("exec_secs", self.exec_secs.into()),
             ("precision", self.precision.as_str().into()),
+            ("workers", self.workers.into()),
             ("peak_trainable_params", self.peak_trainable_params.into()),
             ("optimizer_state_bytes", self.optimizer_state_bytes.into()),
             (
@@ -371,6 +375,7 @@ pub fn train_ckpt(
         steps_per_sec: if wall > 0.0 { executed as f64 / wall } else { 0.0 },
         exec_secs,
         precision: be.precision().name().to_string(),
+        workers: be.workers(),
         peak_trainable_params: strategy.peak_trainable_params(),
         optimizer_state_bytes: strategy.optimizer_state_bytes(),
         paging: strategy

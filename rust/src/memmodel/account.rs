@@ -29,7 +29,7 @@
 //! of Tables 8–12 in `rust/tests/memmodel_paper.rs`); Residual/Total are a
 //! model and validated in band.
 
-use super::arch::Arch;
+use super::arch::{Arch, PShape};
 use crate::backend::ActCkpt;
 use crate::optim::OptimKind;
 use crate::tensor::half::Precision;
@@ -352,6 +352,64 @@ pub fn account_prec(
         r.act_ckpt = scaled;
         r.total = r.pgs + r.residual;
     }
+    r
+}
+
+/// Additional device bytes of the data-parallel worker topology
+/// (`--workers n`): zero at `n <= 1`, and a *constant* (n-independent)
+/// overhead once the topology is on, because batch-split parallelism
+/// replicates almost nothing:
+///
+/// * **one parameter snapshot** — all workers share a single read-only
+///   clone of the parameter set (4 bytes/elem) while the sink updates the
+///   live one behind them; this term does not scale with `n`.
+/// * **reducer partials** — the coordinator holds one emission site's
+///   per-batch-row partials while folding (`B ×` the largest weight
+///   tensor, whichever of the per-row-partial sites or the `[B·T, D]`
+///   embedding-row gradient is bigger).  The partial grain is the batch
+///   row, so this too is independent of `n`.
+///
+/// Activations do **not** scale ×n either: each of the `n` active workers
+/// walks `B/n` batch rows, so the workers' retained graphs *sum* to the
+/// serial batch's activation bytes.  #Gra/#Sta are untouched — the
+/// reduce-then-emit seam hands the sink one gradient at a time
+/// (`gra_streamed` stays max-single-tensor) and optimizer state never
+/// replicates.  Params/grads/state staying N-independent while only
+/// snapshot + partials are added is the HiFT asymmetry at multi-core.
+pub fn workers_overhead(arch: &Arch, w: Workload, workers: usize) -> f64 {
+    if workers <= 1 {
+        return 0.0;
+    }
+    let snapshot = 4.0 * arch.total_params() as f64;
+    // Largest per-row-partial site: the biggest non-embedding tensor (the
+    // head projection or a layer weight).  Embedding gradients travel as
+    // `[B·T, D]` activation rows instead of per-row `[V, D]` partials.
+    let largest_site =
+        arch.params().iter().filter(|p| p.unit > 0).map(PShape::numel).max().unwrap_or(0);
+    let emb_rows = w.batch * w.seq * arch.d_model;
+    let partials = 4.0 * w.batch as f64 * largest_site as f64;
+    let partials = partials.max(4.0 * emb_rows as f64);
+    snapshot + partials
+}
+
+/// [`account_prec`] under data-parallel sharded execution: the
+/// [`workers_overhead`] term folds into the residual (it is working
+/// memory, not params/grads/state — those are exactly serial).
+#[allow(clippy::too_many_arguments)]
+pub fn account_workers(
+    arch: &Arch,
+    opt: OptimKind,
+    dtype: Dtype,
+    method: Method,
+    w: Workload,
+    policy: ActCkpt,
+    prec: Precision,
+    workers: usize,
+) -> MemRow {
+    let mut r = account_prec(arch, opt, dtype, method, w, policy, prec);
+    let extra = workers_overhead(arch, w, workers);
+    r.residual += extra;
+    r.total += extra;
     r
 }
 
@@ -691,6 +749,40 @@ mod tests {
             // m = all units: nothing is parked.
             assert_eq!(paged_host_bound(&arch, arch.n_units(), false), 0.0, "{}", arch.name);
         }
+    }
+
+    #[test]
+    fn workers_overhead_is_flat_in_n_and_leaves_pgs_alone() {
+        let a = by_name("roberta-base").unwrap();
+        assert_eq!(workers_overhead(&a, W512, 0), 0.0);
+        assert_eq!(workers_overhead(&a, W512, 1), 0.0, "serial pays nothing");
+        let o2 = workers_overhead(&a, W512, 2);
+        assert!(o2 > 0.0, "the topology costs a snapshot + partials");
+        // Batch-split: the overhead is a step function of the topology
+        // being on, not a ×N activation blow-up.
+        assert_eq!(o2, workers_overhead(&a, W512, 8));
+        // One snapshot is the floor.
+        assert!(o2 >= 4.0 * a.total_params() as f64);
+
+        let m = Method::Hift { m: 1 };
+        let serial =
+            account_prec(&a, OptimKind::AdamW, Dtype::Fp32, m, W512, ActCkpt::None, Precision::F32);
+        let par = account_workers(
+            &a,
+            OptimKind::AdamW,
+            Dtype::Fp32,
+            m,
+            W512,
+            ActCkpt::None,
+            Precision::F32,
+            4,
+        );
+        // Params/grads/state are exactly serial — the HiFT asymmetry.
+        assert_eq!(par.pgs, serial.pgs);
+        assert_eq!(par.gra_streamed, serial.gra_streamed);
+        assert_eq!(par.sta, serial.sta);
+        assert_eq!(par.residual, serial.residual + o2);
+        assert_eq!(par.total, serial.total + o2);
     }
 
     #[test]

@@ -6,8 +6,8 @@ pub mod account;
 pub mod arch;
 
 pub use account::{
-    account, account_ckpt, account_prec, appendix_b_ratio, fused_attn_savings, native_probs_bytes,
-    paged_host_bound, paged_param_bound, precision_act_factor, savings_pct, Dtype, MemRow, Method,
-    Workload, GIB, MIB,
+    account, account_ckpt, account_prec, account_workers, appendix_b_ratio, fused_attn_savings,
+    native_probs_bytes, paged_host_bound, paged_param_bound, precision_act_factor, savings_pct,
+    workers_overhead, Dtype, MemRow, Method, Workload, GIB, MIB,
 };
 pub use arch::{by_name, zoo, Arch, Family, PShape};

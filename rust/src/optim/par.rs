@@ -12,6 +12,14 @@
 //!
 //! Ledger accounting happens on the main thread at completion time, in
 //! dispatch order, so the event trace is identical to the serial sink's.
+//!
+//! Under data-parallel sharded execution (`--workers`, see
+//! [`crate::backend::shard`]) nothing here changes: the reducer combines
+//! the workers' per-row partials into one tensor per site *before* the
+//! emit seam, so this sink still sees exactly one gradient per parameter,
+//! in the same fixed order, with the same bits as a serial walk.  The
+//! pipelined worker and the shard workers both register against the shared
+//! [`crate::backend::par::ThreadBudget`], so kernels never oversubscribe.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
