@@ -5,7 +5,7 @@
 //! byte offsets into `params.bin`, layer-unit assignments, and the artifact
 //! inventory with exact input/output orderings.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -110,7 +110,9 @@ pub struct Manifest {
     pub seed: u64,
     pub config: ModelCfg,
     pub n_units: usize,
-    pub variants: HashMap<String, VariantInfo>,
+    /// Keyed by variant name; BTreeMap so any iteration (CLI listings,
+    /// synth checks) is deterministic — see docs/CONTRACTS.md (D2).
+    pub variants: BTreeMap<String, VariantInfo>,
     pub artifacts: Vec<ArtifactInfo>,
 }
 
@@ -121,7 +123,7 @@ impl Manifest {
             bail!("unsupported manifest schema {:?}", v.get("schema"));
         }
         let config = ModelCfg::from_json(v.get("config"))?;
-        let mut variants = HashMap::new();
+        let mut variants = BTreeMap::new();
         if let Some(obj) = v.get("variants").as_obj() {
             for (name, vv) in obj.iter() {
                 let params = vv

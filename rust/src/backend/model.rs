@@ -37,7 +37,7 @@
 //! from O(T²) to O(T) per head while staying bit-identical to the
 //! materializing naive reference.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
@@ -125,6 +125,7 @@ fn ln_fwd(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> (Vec<f32>, LnStat
     let mut inv = vec![0.0f32; rows];
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
+        // hift-lint: allow(float-reduction): sequential per-row mean in slice order — one fixed schedule, bit-stable
         let mu = xr.iter().sum::<f32>() / d as f32;
         let mut var = 0.0f32;
         for &v in xr {
@@ -351,8 +352,10 @@ impl FwdState {
     }
 }
 
-/// Gradients keyed by parameter name.
-pub type Grads = HashMap<String, Tensor>;
+/// Gradients keyed by parameter name.  BTreeMap so every consumer that
+/// walks the map (tests, batch sinks) sees one deterministic order —
+/// see docs/CONTRACTS.md (D2).
+pub type Grads = BTreeMap<String, Tensor>;
 
 /// Which gradients a backward pass must produce.  Backward always
 /// propagates `dx` down to `min_unit`, but weight-gradient matmuls, bias
@@ -1002,7 +1005,7 @@ pub fn backward(
     batch: &Batch,
     spec: &GradSpec,
 ) -> Result<Grads> {
-    let mut grads: Grads = HashMap::new();
+    let mut grads: Grads = Grads::new();
     let mut emit = |name: &str, g: Tensor, _ps: &mut TensorSet| -> Result<()> {
         grads.insert(name.to_string(), g);
         Ok(())
@@ -1948,7 +1951,7 @@ mod tests {
         let spec = GradSpec::all(n_units, false);
         let st = forward(&cfg, "base", &mut params, &batch).unwrap();
         let base = backward(&st, &cfg, "base", &mut params, &batch, &spec).unwrap();
-        let mut scaled: Grads = HashMap::new();
+        let mut scaled: Grads = Grads::new();
         {
             let mut emit = |name: &str, mut g: Tensor, _ps: &mut TensorSet| -> Result<()> {
                 g.scale(1.0 / 1024.0);

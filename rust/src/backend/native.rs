@@ -12,7 +12,7 @@
 //! the same scheme as `model.init_params` (fan-in-scaled normals for
 //! weights, zeros for biases and LoRA B, ones for LN scales and IA³).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Context, Result};
 
@@ -187,7 +187,7 @@ fn variant_info(c: &ModelCfg, variant: &str) -> VariantInfo {
 
 /// Build the full synthetic manifest for `cfg`.
 fn synth_manifest(cfg: &ModelCfg, seed: u64) -> Manifest {
-    let mut variants = HashMap::new();
+    let mut variants = BTreeMap::new();
     for v in ["base", "lora", "ia3", "prefix"] {
         variants.insert(v.to_string(), variant_info(cfg, v));
     }
@@ -412,6 +412,14 @@ impl NativeBackend {
         let prec = self.precision;
         let loss_scale = self.loss_scale;
         let n_active = self.workers.min(batch.b.max(1));
+        // Contracts (HIFT_CHECK): validate the emission sequence against the
+        // manifest — every gradient once, units strictly head→embedding,
+        // manifest order within a unit (see docs/CONTRACTS.md).
+        let mut checker = if crate::contracts::enabled() && !slots.is_empty() {
+            Some(crate::contracts::EmitChecker::new(self.manifest.variant(variant)?, slots)?)
+        } else {
+            None
+        };
         let loss;
         let ncorrect;
         let mut act_peak;
@@ -419,10 +427,14 @@ impl NativeBackend {
             let stats = &mut self.stats;
             let mut pager = self.pager.as_mut();
             let mut emitted = 0usize;
+            let checker = &mut checker;
             let mut emit = |name: &str, mut g: Tensor, ps: &mut TensorSet| -> Result<()> {
                 let slot = *slots
                     .get(name)
                     .with_context(|| format!("backward emitted unexpected gradient {name:?}"))?;
+                if let Some(c) = checker.as_mut() {
+                    c.observe(slot, name)?;
+                }
                 // The gradient leaves the device at the compute
                 // precision (rounded here, half d2h bytes), then the
                 // loss scale is divided back out in f32 — exact, the
@@ -511,6 +523,9 @@ impl NativeBackend {
             }
         }
         self.stats.note_act_resident(act_peak);
+        if let Some(c) = &checker {
+            c.finalize().context("emission-order contract (HIFT_CHECK)")?;
+        }
         sink.finish(params)?;
         // Page the just-finished group (and anything else resident) back
         // out — async under prefetch, so the store overlaps whatever the

@@ -130,7 +130,17 @@ impl Lease<'_> {
 impl Drop for Lease<'_> {
     fn drop(&mut self) {
         if self.extra > 0 {
-            self.budget.in_flight.fetch_sub(self.extra, Ordering::Relaxed);
+            let prev = self.budget.in_flight.fetch_sub(self.extra, Ordering::Relaxed);
+            // Contracts (HIFT_CHECK): a release larger than what is in
+            // flight means some lease was double-released or never charged
+            // — the budget would wrap and oversubscribe every later grant.
+            if crate::contracts::enabled() {
+                assert!(
+                    prev >= self.extra,
+                    "ThreadBudget lease imbalance: releasing {} with only {prev} in flight",
+                    self.extra
+                );
+            }
         }
     }
 }
@@ -143,7 +153,11 @@ pub struct WorkerSlot<'a> {
 
 impl Drop for WorkerSlot<'_> {
     fn drop(&mut self) {
-        self.budget.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let prev = self.budget.in_flight.fetch_sub(1, Ordering::Relaxed);
+        // Contracts (HIFT_CHECK): same wrap hazard as the Lease drop.
+        if crate::contracts::enabled() {
+            assert!(prev >= 1, "ThreadBudget worker slot released with nothing in flight");
+        }
     }
 }
 

@@ -1,0 +1,271 @@
+//! Runtime contract checks (`--features contracts`, toggled by `HIFT_CHECK`).
+//!
+//! The static half of every invariant lives in `tools/hift-lint`
+//! (`cargo xtask lint`); this module is the dynamic half — assertions that
+//! fire while a real step runs.  `docs/CONTRACTS.md` maps each lint to the
+//! check here that backs it.
+//!
+//! Three seams are covered:
+//!
+//! * **GradSink emission order** ([`EmitChecker`]): the streamed backward
+//!   must emit every expected gradient exactly once, walking layer units
+//!   strictly head→embedding and each unit's parameters in manifest order —
+//!   the property that makes group sweeps and kill+resume bit-identical.
+//! * **OffloadLedger conservation** (`OffloadLedger::check_conservation`,
+//!   in `optim`): bytes paged in plus bytes allocated on-device equal bytes
+//!   paged out plus bytes still resident.
+//! * **ThreadBudget lease balance** (underflow asserts in the `Lease` /
+//!   `WorkerSlot` drops in `backend::par`).
+//!
+//! Everything here compiles unconditionally (the types are pure logic and
+//! unit-tested without the feature); only the *call sites* are gated, via
+//! [`enabled`], so the default build pays nothing.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::OnceLock;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::manifest::VariantInfo;
+
+/// True when the `contracts` feature is compiled in and `HIFT_CHECK` is not
+/// `"0"` (the feature defaults to on once compiled; set `HIFT_CHECK=0` to
+/// silence it without rebuilding).
+pub fn enabled() -> bool {
+    if !cfg!(feature = "contracts") {
+        return false;
+    }
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("HIFT_CHECK").map(|v| v != "0").unwrap_or(true))
+}
+
+/// Validates a streamed-backward emission sequence against the manifest.
+///
+/// Built from the artifact's name→slot map; [`EmitChecker::observe`] is
+/// called once per emitted gradient and [`EmitChecker::finalize`] once the
+/// walk ends.  The enforced contract:
+///
+/// * every slot is emitted exactly once, under its manifest name;
+/// * within a layer unit, slots are contiguous and ascending (unit
+///   parameters are contiguous in manifest order, and slot maps preserve
+///   relative order);
+/// * across units the walk is strictly descending (head = `L+1` first,
+///   embedding = `0` last) and a closed unit is never re-entered;
+/// * adapter parameters (unit `-1`) are exempt from the ordering rules —
+///   their updates are whole-tensor and order-independent — but still
+///   checked for duplicates, names, and coverage.
+pub struct EmitChecker {
+    /// Slot → (expected name, layer unit).
+    expected: Vec<(String, i64)>,
+    seen: Vec<bool>,
+    /// Last non-adapter emission: (slot, unit).
+    last: Option<(usize, i64)>,
+    closed: BTreeSet<i64>,
+    /// First (minimum) slot of each non-adapter unit.
+    unit_min: BTreeMap<i64, usize>,
+}
+
+impl EmitChecker {
+    pub fn new(vinfo: &VariantInfo, slots: &HashMap<String, usize>) -> Result<EmitChecker> {
+        let mut expected: Vec<Option<(String, i64)>> = vec![None; slots.len()];
+        for (name, &slot) in slots {
+            let unit = vinfo
+                .params
+                .iter()
+                .find(|p| &p.name == name)
+                .map(|p| p.unit)
+                .with_context(|| format!("slot map names {name:?}, absent from the manifest"))?;
+            ensure!(slot < expected.len(), "slot {slot} out of range for {} gradients", expected.len());
+            ensure!(expected[slot].is_none(), "slot {slot} assigned twice in the slot map");
+            expected[slot] = Some((name.clone(), unit));
+        }
+        let expected: Vec<(String, i64)> = expected
+            .into_iter()
+            .map(|e| e.context("slot map leaves a gap"))
+            .collect::<Result<_>>()?;
+        let mut unit_min = BTreeMap::new();
+        for (slot, (_, unit)) in expected.iter().enumerate() {
+            if *unit >= 0 {
+                unit_min.entry(*unit).or_insert(slot);
+            }
+        }
+        let seen = vec![false; expected.len()];
+        Ok(EmitChecker { expected, seen, last: None, closed: BTreeSet::new(), unit_min })
+    }
+
+    pub fn observe(&mut self, slot: usize, name: &str) -> Result<()> {
+        ensure!(
+            slot < self.expected.len(),
+            "emitted slot {slot} out of range ({} expected)",
+            self.expected.len()
+        );
+        let (exp_name, unit) = &self.expected[slot];
+        let unit = *unit;
+        ensure!(
+            exp_name == name,
+            "slot {slot} emitted as {name:?}, manifest says {exp_name:?}"
+        );
+        ensure!(!self.seen[slot], "gradient {name:?} (slot {slot}) emitted twice");
+        self.seen[slot] = true;
+        if unit < 0 {
+            return Ok(()); // adapter: no ordering constraints
+        }
+        match self.last {
+            Some((last_slot, last_unit)) if last_unit == unit => {
+                ensure!(
+                    slot == last_slot + 1,
+                    "within-unit emission out of manifest order: unit {unit} jumped slot {last_slot} -> {slot}"
+                );
+            }
+            Some((_, last_unit)) => {
+                ensure!(
+                    !self.closed.contains(&unit),
+                    "unit {unit} re-entered after it was closed"
+                );
+                ensure!(
+                    unit < last_unit,
+                    "unit walk not strictly descending: unit {last_unit} then unit {unit}"
+                );
+                self.closed.insert(last_unit);
+                self.enter_unit(unit, slot)?;
+            }
+            None => {
+                self.enter_unit(unit, slot)?;
+            }
+        }
+        self.last = Some((slot, unit));
+        Ok(())
+    }
+
+    fn enter_unit(&self, unit: i64, slot: usize) -> Result<()> {
+        let min = self.unit_min[&unit];
+        if slot != min {
+            bail!("unit {unit} entered mid-block at slot {slot} (its first slot is {min})");
+        }
+        Ok(())
+    }
+
+    /// Coverage check after the walk: every expected gradient was emitted.
+    pub fn finalize(&self) -> Result<()> {
+        for (slot, seen) in self.seen.iter().enumerate() {
+            ensure!(
+                *seen,
+                "gradient {:?} (slot {slot}) never emitted",
+                self.expected[slot].0
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::manifest::ParamInfo;
+
+    fn pinfo(name: &str, unit: i64) -> ParamInfo {
+        ParamInfo { name: name.into(), shape: vec![1], unit, bitfit: false, offset: 0, size: 1 }
+    }
+
+    /// Two-unit variant plus one adapter param; slots in manifest order.
+    fn fixture() -> (VariantInfo, HashMap<String, usize>) {
+        let vinfo = VariantInfo {
+            params: vec![
+                pinfo("emb.w", 0),
+                pinfo("head.w", 1),
+                pinfo("head.b", 1),
+                pinfo("head.g", 1),
+                pinfo("lora.a", -1),
+            ],
+            n_base_params: 4,
+        };
+        let slots: HashMap<String, usize> = [
+            ("emb.w".to_string(), 0usize),
+            ("head.w".to_string(), 1),
+            ("head.b".to_string(), 2),
+            ("head.g".to_string(), 3),
+            ("lora.a".to_string(), 4),
+        ]
+        .into_iter()
+        .collect();
+        (vinfo, slots)
+    }
+
+    #[test]
+    fn descending_walk_passes() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        // head unit (1) first, then embedding (0); adapter anywhere.
+        c.observe(4, "lora.a").unwrap();
+        c.observe(1, "head.w").unwrap();
+        c.observe(2, "head.b").unwrap();
+        c.observe(3, "head.g").unwrap();
+        c.observe(0, "emb.w").unwrap();
+        c.finalize().unwrap();
+    }
+
+    #[test]
+    fn duplicate_emission_is_caught() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        c.observe(1, "head.w").unwrap();
+        let err = c.observe(1, "head.w").unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn ascending_unit_walk_is_caught() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        c.observe(0, "emb.w").unwrap();
+        let err = c.observe(1, "head.w").unwrap_err();
+        assert!(err.to_string().contains("descending"), "{err}");
+    }
+
+    #[test]
+    fn within_unit_jump_is_caught() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        c.observe(1, "head.w").unwrap();
+        let err = c.observe(3, "head.g").unwrap_err();
+        assert!(err.to_string().contains("manifest order"), "{err}");
+    }
+
+    #[test]
+    fn closed_unit_reentry_is_caught() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        c.observe(1, "head.w").unwrap();
+        c.observe(2, "head.b").unwrap();
+        c.observe(3, "head.g").unwrap();
+        c.observe(0, "emb.w").unwrap();
+        // Unit 1 closed when the walk moved to unit 0; head.w also dups.
+        let err = c.observe(1, "head.w").unwrap_err();
+        assert!(err.to_string().contains("twice") || err.to_string().contains("re-entered"), "{err}");
+    }
+
+    #[test]
+    fn mid_block_entry_is_caught() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        let err = c.observe(2, "head.b").unwrap_err();
+        assert!(err.to_string().contains("mid-block"), "{err}");
+    }
+
+    #[test]
+    fn wrong_name_and_missing_coverage_are_caught() {
+        let (vinfo, slots) = fixture();
+        let mut c = EmitChecker::new(&vinfo, &slots).unwrap();
+        assert!(c.observe(1, "emb.w").is_err());
+        c.observe(1, "head.w").unwrap();
+        let err = c.finalize().unwrap_err();
+        assert!(err.to_string().contains("never emitted"), "{err}");
+    }
+
+    #[test]
+    fn unknown_slot_name_rejected_at_build() {
+        let (vinfo, mut slots) = fixture();
+        slots.insert("ghost".into(), 5);
+        assert!(EmitChecker::new(&vinfo, &slots).is_err());
+    }
+}

@@ -64,8 +64,9 @@
 //! bit-identical to the historical path.
 //!
 //! Deeper docs: `docs/ARCHITECTURE.md` (layering + contracts),
-//! `docs/PAPER_MAP.md` (paper exhibit → harness map), `docs/CLI.md`
-//! (flags + `HIFT_*` env inventory).
+//! `docs/CONTRACTS.md` (machine-checked invariants: lints + runtime
+//! assertions), `docs/PAPER_MAP.md` (paper exhibit → harness map),
+//! `docs/CLI.md` (flags + `HIFT_*` env inventory).
 //!
 //! ## Module map
 //!
@@ -84,6 +85,7 @@
 //! | [`metrics`] | loss/accuracy/throughput trackers |
 //! | [`bench`] | table/figure harnesses shared by `cargo bench` targets |
 //! | [`proptest`] | minimal property-testing harness (offline substitute) |
+//! | [`contracts`] | runtime contract checks (`contracts` feature / `HIFT_CHECK`): emission order, ledger conservation, lease balance — the dynamic half of `cargo xtask lint` (see `docs/CONTRACTS.md`) |
 
 // Portable SIMD is still nightly-gated; the `simd` cargo feature opts in
 // (see `backend::kernels` — scalar blocked kernels compile without it).
@@ -92,6 +94,7 @@
 pub mod backend;
 pub mod bench;
 pub mod cli;
+pub mod contracts;
 pub mod coordinator;
 pub mod data;
 pub mod memmodel;

@@ -48,10 +48,12 @@ impl Series {
     }
 
     pub fn min(&self) -> f64 {
+        // hift-lint: allow(float-reduction): min is order-insensitive (associative, commutative)
         self.values.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
     pub fn max(&self) -> f64 {
+        // hift-lint: allow(float-reduction): max is order-insensitive (associative, commutative)
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 

@@ -89,6 +89,7 @@ impl Optimizer for Adafactor {
                     }
                     c[j] = beta2 * c[j] + (1.0 - beta2) * (s / rows as f32);
                 }
+                // hift-lint: allow(float-reduction): sequential factored-moment mean over per-param state — single fixed schedule
                 let r_mean = r.iter().sum::<f32>() / rows as f32 + eps;
                 for i in 0..rows {
                     for j in 0..cols {
@@ -106,6 +107,7 @@ impl Optimizer for Adafactor {
             }
         }
         // RMS clipping: scale so rms(update) <= d.
+        // hift-lint: allow(float-reduction): sequential RMS over the per-tensor update, never crosses threads
         let rms = (upd.iter().map(|x| x * x).sum::<f32>() / n as f32).sqrt();
         let denom = (rms / d_clip).max(1.0);
         par::par_apply2(&mut param.data, &upd, |p, u| {

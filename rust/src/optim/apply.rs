@@ -180,23 +180,30 @@ impl GradSink for FusedApply<'_> {
     }
 
     fn finish(&mut self, params: &mut TensorSet) -> Result<()> {
-        if self.policy != NonFinitePolicy::SkipStep {
-            return Ok(());
-        }
-        let deferred = std::mem::take(&mut self.deferred);
-        if self.overflow {
-            // Atomic skip: nothing was applied, so params and optimizer
-            // state are bit-identical to pre-step by construction.
-            self.step_skipped = true;
-            for (_, g) in &deferred {
-                if let Some(l) = self.ledger.as_deref_mut() {
-                    l.grad_out(g.bytes() as u64);
+        if self.policy == NonFinitePolicy::SkipStep {
+            let deferred = std::mem::take(&mut self.deferred);
+            if self.overflow {
+                // Atomic skip: nothing was applied, so params and optimizer
+                // state are bit-identical to pre-step by construction.
+                self.step_skipped = true;
+                for (_, g) in &deferred {
+                    if let Some(l) = self.ledger.as_deref_mut() {
+                        l.grad_out(g.bytes() as u64);
+                    }
+                }
+            } else {
+                for (idx, grad) in deferred {
+                    self.apply_now(idx, grad, params);
                 }
             }
-            return Ok(());
         }
-        for (idx, grad) in deferred {
-            self.apply_now(idx, grad, params);
+        // Contracts (HIFT_CHECK): the end-of-step seam must be quiesced —
+        // every gradient consumed, every paged state back out, bytes
+        // conserved (see docs/CONTRACTS.md).
+        if crate::contracts::enabled() {
+            if let Some(l) = self.ledger.as_deref() {
+                l.check_sink_quiesced()?;
+            }
         }
         Ok(())
     }

@@ -248,6 +248,11 @@ pub struct OffloadLedger {
     /// Streamed fused updates keep this at ≈ one tensor; the old collected
     /// path held the whole group.
     pub peak_grad_resident_bytes: u64,
+    /// Conservation totals (see [`OffloadLedger::check_conservation`]):
+    /// lifetime bytes allocated on device, and lifetime gradient in/out.
+    alloc_bytes: u64,
+    grad_in_bytes: u64,
+    grad_out_bytes: u64,
 }
 
 impl OffloadLedger {
@@ -274,6 +279,7 @@ impl OffloadLedger {
     pub fn alloc_on_device(&mut self, bytes: u64) {
         self.device_resident += bytes;
         self.peak_device_bytes = self.peak_device_bytes.max(self.device_resident);
+        self.alloc_bytes += bytes;
     }
 
     /// Move `bytes` back device → host (Algorithm 1 step k).  Zero-byte
@@ -296,15 +302,65 @@ impl OffloadLedger {
     pub fn grad_in(&mut self, bytes: u64) {
         self.grad_resident += bytes;
         self.peak_grad_resident_bytes = self.peak_grad_resident_bytes.max(self.grad_resident);
+        self.grad_in_bytes += bytes;
     }
 
     /// A gradient was consumed (updated into the parameters) and dropped.
     pub fn grad_out(&mut self, bytes: u64) {
         self.grad_resident = self.grad_resident.saturating_sub(bytes);
+        self.grad_out_bytes += bytes;
     }
 
     pub fn grad_resident(&self) -> u64 {
         self.grad_resident
+    }
+
+    /// Byte-conservation invariant (the runtime half of the ledger
+    /// contract, see docs/CONTRACTS.md): everything that ever landed on the
+    /// device (paged in or allocated there) either left again or is still
+    /// resident, and likewise for sink-held gradients.  The saturating
+    /// subtractions in [`OffloadLedger::page_out`] / `grad_out` make any
+    /// over-release show up here as an inequality instead of a wrap.
+    ///
+    /// Always compiled (it is cheap and unit-testable); call sites on the
+    /// hot paths are gated by [`crate::contracts::enabled`].
+    pub fn check_conservation(&self) -> anyhow::Result<()> {
+        let landed = self.h2d_bytes as u128 + self.alloc_bytes as u128;
+        let accounted = self.d2h_bytes as u128 + self.device_resident as u128;
+        anyhow::ensure!(
+            landed == accounted,
+            "OffloadLedger conservation breach: h2d {} + alloc {} != d2h {} + resident {}",
+            self.h2d_bytes,
+            self.alloc_bytes,
+            self.d2h_bytes,
+            self.device_resident
+        );
+        anyhow::ensure!(
+            self.grad_in_bytes as u128 == self.grad_out_bytes as u128 + self.grad_resident as u128,
+            "OffloadLedger gradient conservation breach: in {} != out {} + resident {}",
+            self.grad_in_bytes,
+            self.grad_out_bytes,
+            self.grad_resident
+        );
+        Ok(())
+    }
+
+    /// Conservation plus full quiescence: nothing still resident at a
+    /// sink's end-of-step seam (every tensor's state paged back out, every
+    /// gradient consumed).
+    pub fn check_sink_quiesced(&self) -> anyhow::Result<()> {
+        self.check_conservation()?;
+        anyhow::ensure!(
+            self.grad_resident == 0,
+            "update sink finished with {} gradient bytes still resident",
+            self.grad_resident
+        );
+        anyhow::ensure!(
+            self.device_resident == 0,
+            "update sink finished with {} state bytes still on device",
+            self.device_resident
+        );
+        Ok(())
     }
 }
 
@@ -433,6 +489,33 @@ mod tests {
         let norm = clip_grad(&mut g, 1.0);
         assert!(norm.is_nan());
         assert_eq!(g.data[1], 0.5);
+    }
+
+    #[test]
+    fn ledger_conservation_checks() {
+        // Balanced traffic: page in 100, alloc 28, page everything out.
+        let mut l = OffloadLedger::new();
+        l.page_in(100);
+        l.alloc_on_device(28);
+        l.page_out(128);
+        l.grad_in(64);
+        l.grad_out(64);
+        l.check_conservation().unwrap();
+        l.check_sink_quiesced().unwrap();
+
+        // Residency is fine for conservation but fails quiescence.
+        let mut l = OffloadLedger::new();
+        l.page_in(100);
+        l.check_conservation().unwrap();
+        let err = l.check_sink_quiesced().unwrap_err();
+        assert!(err.to_string().contains("still on device"), "{err}");
+
+        // A gradient over-release saturates instead of wrapping, and the
+        // conservation equation exposes it.
+        let mut l = OffloadLedger::new();
+        l.grad_in(10);
+        l.grad_out(25);
+        assert!(l.check_conservation().is_err(), "gradient over-release must not balance");
     }
 
     #[test]

@@ -239,10 +239,17 @@ impl GradSink for PipelinedApply<'_> {
         match self.done.recv().map_err(|_| anyhow!("update worker died"))? {
             Done::Optimizer(opt) => {
                 self.optimizer_back = Some(opt);
-                Ok(())
             }
             Done::Applied { .. } => bail!("update worker returned out-of-order result"),
         }
+        // Contracts (HIFT_CHECK): with the pipeline drained, the sink seam
+        // must be quiesced exactly like the serial FusedApply.
+        if crate::contracts::enabled() {
+            if let Some(l) = self.ledger.as_deref() {
+                l.check_sink_quiesced()?;
+            }
+        }
+        Ok(())
     }
 }
 

@@ -162,13 +162,20 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
 }
 
 /// Parse error with 1-based line/column.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at {line}:{col}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub line: usize,
     pub col: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at {}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -207,7 +214,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), JsonError> {
         if self.bump() == Some(c) {
             Ok(())
         } else {
@@ -249,7 +256,10 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let s = match std::str::from_utf8(&self.b[start..self.pos]) {
+            Ok(s) => s,
+            Err(_) => return self.err("non-utf8 bytes in number"),
+        };
         match s.parse::<f64>() {
             Ok(n) => Ok(Value::Num(n)),
             Err(_) => self.err(format!("bad number '{s}'")),
@@ -257,7 +267,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.bump() {
@@ -289,7 +299,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -308,7 +318,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut obj = Obj::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -319,7 +329,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             obj.insert(key, val);
             self.skip_ws();

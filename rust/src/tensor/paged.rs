@@ -281,6 +281,7 @@ impl PagedStore {
         }
         let (jobs, job_rx) = channel::<Job>();
         let (done_tx, done) = channel::<Done>();
+        // hift-lint: allow(budget-lease): IO-bound prefetch worker, blocked on the job channel while compute runs — a budget slot would permanently steal a compute thread
         let worker = std::thread::spawn(move || {
             let mut pool = HostPool::new(compress);
             while let Ok(job) = job_rx.recv() {
@@ -655,6 +656,11 @@ impl UnitPager {
             if self.managed[idx] && self.resident[idx] && !self.keep[idx] {
                 self.evict(set, idx)?;
             }
+        }
+        // Contracts (HIFT_CHECK): conservation only — staged units stay
+        // resident across runs by design, so no quiescence requirement.
+        if crate::contracts::enabled() {
+            self.ledger.check_conservation()?;
         }
         Ok(())
     }

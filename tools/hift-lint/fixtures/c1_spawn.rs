@@ -1,0 +1,12 @@
+// Fixture: C1 (budget-lease). Linted as if at rust/src/optim/fixture.rs.
+// The spawn on line 6 must be the only finding: the site on line 11 leases
+// a worker slot from the ThreadBudget in the same function.
+
+pub fn unleased() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}
+
+pub fn leased() -> std::thread::JoinHandle<()> {
+    let _slot = par::register_worker();
+    std::thread::spawn(|| {})
+}

@@ -1,0 +1,10 @@
+// Fixture: D1 (fma). Linted as if at rust/src/backend/kernels/fixture.rs.
+// The mul_add on line 7 must be the only finding.
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc = a[i].mul_add(b[i], acc);
+    }
+    acc
+}

@@ -1,0 +1,29 @@
+// Fixture: D2 (hash-iteration). Linted as if at rust/src/backend/fixture.rs.
+// The for-loop on line 12 must be the only finding: the tagged iteration on
+// line 20 is suppressed, and the range loop on line 25 is not hash iteration.
+
+use std::collections::HashMap;
+
+pub fn order_sensitive(slots: &HashMap<String, u64>) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut index = HashMap::new();
+    index.insert(0u32, 0u64);
+    let _ = index.get(&0);
+    for (_name, slot) in slots {
+        out.push(*slot);
+    }
+    out
+}
+
+pub fn order_insensitive(slots: &HashMap<String, u64>) -> u64 {
+    // hift-lint: allow(hash-iteration): commutative sum, order-insensitive
+    slots.values().sum::<u64>()
+}
+
+pub fn ranged(slots: &HashMap<String, u64>) -> usize {
+    let mut n = 0;
+    for _ in 0..slots.len() {
+        n += 1;
+    }
+    n
+}

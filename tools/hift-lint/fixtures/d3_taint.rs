@@ -1,0 +1,18 @@
+// Fixture: D3 (timing-taint). Linted as if at rust/src/backend/fixture.rs.
+// The assignment on line 16 must be the only finding: `tick` (line 8) is a
+// sanctioned sink that terminates taint, so line 10 stays clean.
+
+use std::time::Instant;
+
+pub fn mixes_into_numerics(weights: &mut [f32]) {
+    let tick_secs = Instant::now().elapsed().as_secs_f64();
+    let mut throughput = 0.0f64;
+    throughput = throughput + tick_secs;
+    let _ = throughput;
+
+    let raw = Instant::now().elapsed().as_secs_f64();
+    let jitter = raw * 1e-9;
+    let mut scale = 1.0f64;
+    scale = scale + jitter;
+    weights[0] *= scale as f32;
+}

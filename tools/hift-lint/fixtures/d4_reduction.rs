@@ -1,0 +1,19 @@
+// Fixture: D4 (float-reduction). Linted as if at rust/src/optim/fixture.rs.
+// The .sum::<f32>() on line 6 and the .fold() on line 10 must both fire;
+// try_fold (line 14) and .sum::<u64>() (line 18) must not.
+
+pub fn naive_sum(v: &[f32]) -> f32 {
+    v.iter().sum::<f32>()
+}
+
+pub fn naive_fold(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |a, b| a + b)
+}
+
+pub fn checked(v: &[f32]) -> Option<f32> {
+    v.iter().try_fold(0.0f32, |a, b| Some(a + b))
+}
+
+pub fn integral(v: &[u64]) -> u64 {
+    v.iter().sum::<u64>()
+}

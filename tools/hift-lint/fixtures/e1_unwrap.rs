@@ -1,0 +1,25 @@
+// Fixture: E1 (ratchet counting). Library-path count must be exactly 3:
+// the unwrap on line 7, the expect on line 11, and the panic! on line 15.
+// The unwrap inside #[cfg(test)] (line 23) and anything inside comments or
+// string literals must not count.
+
+pub fn first(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn second(x: Option<u32>) -> u32 {
+    x.expect("present")
+}
+
+pub fn third() {
+    panic!("boom");
+    // the literal "panic!(...)" in a string: "panic!(no)"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn exempt() {
+        Some(1u32).unwrap();
+    }
+}

@@ -1,0 +1,387 @@
+//! A small, honest Rust lexer: enough structure to run token-level contract
+//! lints, and nothing more.
+//!
+//! The offline vendor set has no `syn`/`proc-macro2`, so this is a
+//! hand-rolled scanner rather than an AST.  It understands exactly what the
+//! lints need:
+//!
+//! * comments (line, nested block) and string/char literals are stripped so
+//!   they can never produce false tokens — newlines are preserved so every
+//!   token keeps its 1-based line number;
+//! * `// hift-lint: allow(<lint>): <justification>` tags are extracted from
+//!   line comments *before* stripping;
+//! * `#[cfg(test)]` item regions are brace-matched so test code is exempt
+//!   from library-path lints;
+//! * multi-char operators (`::`, `==`, `=>`, `+=`, `..`, …) come out as
+//!   single tokens so `=` unambiguously means assignment.
+
+/// One `// hift-lint: allow(name): justification` tag.  A tag covers its
+/// own line and the line directly below it.
+#[derive(Debug, Clone)]
+pub struct AllowTag {
+    pub line: usize,
+    pub lint: String,
+    /// The justification text after `):` was present and non-empty.
+    pub justified: bool,
+}
+
+/// A lexed token: its text, 1-based line, and whether it is an identifier.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub s: String,
+    pub line: usize,
+    pub ident: bool,
+}
+
+/// The lexed view of one source file.
+pub struct FileLex {
+    /// Source with comments and string/char literals blanked to spaces
+    /// (newlines kept, so byte offsets map to the original lines).
+    pub code: String,
+    pub toks: Vec<Tok>,
+    pub tags: Vec<AllowTag>,
+    /// `in_test[line]` (1-based; index 0 unused) — line sits inside a
+    /// `#[cfg(test)]` item's braces.
+    pub in_test: Vec<bool>,
+}
+
+impl FileLex {
+    pub fn new(src: &str) -> FileLex {
+        let (code, tags) = strip(src);
+        let toks = tokenize(&code);
+        let in_test = test_regions(&code);
+        FileLex { code, toks, tags, in_test }
+    }
+
+    pub fn line_is_test(&self, line: usize) -> bool {
+        self.in_test.get(line).copied().unwrap_or(false)
+    }
+
+    /// Is a finding of `lint` on `line` covered by a justified allow tag?
+    pub fn allowed(&self, lint: &str, line: usize) -> bool {
+        self.tags
+            .iter()
+            .any(|t| t.justified && t.lint == lint && (t.line == line || t.line + 1 == line))
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Blank comments and string/char literals; collect allow tags.
+fn strip(src: &str) -> (String, Vec<AllowTag>) {
+    let b = src.as_bytes();
+    let mut out = vec![b' '; b.len()];
+    let mut tags = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out[i] = b'\n';
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment — scan to end of line, look for an allow tag.
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            if let Some(tag) = parse_tag(&src[start..i], line) {
+                tags.push(tag);
+            }
+            continue;
+        }
+        // Block comment — Rust block comments nest.
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    out[i] = b'\n';
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw strings: r"..." / r#"..."# / br#"..."# (any # count).
+        if (c == b'r' || (c == b'b' && b.get(i + 1) == Some(&b'r')))
+            && (i == 0 || !is_ident_char(b[i - 1]))
+        {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while b.get(j) == Some(&b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&b'"') {
+                j += 1;
+                'raw: while j < b.len() {
+                    if b[j] == b'\n' {
+                        out[j] = b'\n';
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == b'"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while seen < hashes && b.get(k) == Some(&b'#') {
+                            seen += 1;
+                            k += 1;
+                        }
+                        if seen == hashes {
+                            j = k;
+                            break 'raw;
+                        }
+                        j += 1;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+                continue;
+            }
+            // Not a raw string — fall through and emit the ident char.
+        }
+        // Plain / byte strings.
+        if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"') && (i == 0 || !is_ident_char(b[i - 1])))
+        {
+            i += if c == b'b' { 2 } else { 1 };
+            while i < b.len() {
+                if b[i] == b'\n' {
+                    out[i] = b'\n';
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.  `'\...'` and `'x'` are chars; `'ident`
+        // with no closing quote right after is a lifetime.
+        if c == b'\'' {
+            let is_char = match b.get(i + 1) {
+                Some(&b'\\') => true,
+                Some(&n) if is_ident_char(n) => b.get(i + 2) == Some(&b'\''),
+                Some(_) => true, // e.g. '(' — only valid as a char literal
+                None => false,
+            };
+            if is_char {
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'\'' {
+                        i += 1;
+                        break;
+                    } else {
+                        if b[i] == b'\n' {
+                            out[i] = b'\n';
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // Lifetime: keep the quote (tokenizer skips it as punct).
+        }
+        out[i] = c;
+        i += 1;
+    }
+    (String::from_utf8(out).expect("blanking preserves utf-8 structure"), tags)
+}
+
+/// Parse `hift-lint: allow(name)[: justification]` out of a line comment.
+fn parse_tag(comment: &str, line: usize) -> Option<AllowTag> {
+    let idx = comment.find("hift-lint:")?;
+    let rest = comment[idx + "hift-lint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let lint = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let justified = after
+        .strip_prefix(':')
+        .map(|j| !j.trim().is_empty())
+        .unwrap_or(false);
+    Some(AllowTag { line, lint, justified })
+}
+
+const MULTI_OPS: &[&str] =
+    &["::", "->", "=>", "==", "!=", "<=", ">=", "+=", "-=", "*=", "/=", "..", "&&", "||"];
+
+fn tokenize(code: &str) -> Vec<Tok> {
+    let b = code.as_bytes();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < b.len() && is_ident_char(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { s: code[start..i].to_string(), line, ident: true });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // Numeric literal (incl. suffixes like 1.0f32, 0x1f, 1_000u64):
+            // one opaque token so suffixes never masquerade as identifiers.
+            let start = i;
+            while i < b.len() && (is_ident_char(b[i]) || b[i] == b'.') {
+                // Stop a `0..n` range from being eaten as one number.
+                if b[i] == b'.' && b.get(i + 1) == Some(&b'.') {
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok { s: code[start..i].to_string(), line, ident: false });
+            continue;
+        }
+        if let Some(op) = MULTI_OPS.iter().find(|op| code[i..].starts_with(**op)) {
+            toks.push(Tok { s: op.to_string(), line, ident: false });
+            i += op.len();
+            continue;
+        }
+        toks.push(Tok { s: (c as char).to_string(), line, ident: false });
+        i += 1;
+    }
+    toks
+}
+
+/// Mark every line inside a `#[cfg(test)]` item's braces.
+fn test_regions(code: &str) -> Vec<bool> {
+    let n_lines = code.bytes().filter(|&c| c == b'\n').count() + 2;
+    let mut in_test = vec![false; n_lines];
+    let b = code.as_bytes();
+    let line_of = |pos: usize| 1 + code[..pos].bytes().filter(|&c| c == b'\n').count();
+    let mut from = 0usize;
+    while let Some(rel) = code[from..].find("#[cfg(test)]") {
+        let attr = from + rel;
+        // Find the item's opening brace (skipping further attributes and
+        // the `mod name` header); bail at a `;` (e.g. `mod tests;`).
+        let mut i = attr + "#[cfg(test)]".len();
+        let mut open = None;
+        while i < b.len() {
+            match b[i] {
+                b'{' => {
+                    open = Some(i);
+                    break;
+                }
+                b';' => break,
+                _ => i += 1,
+            }
+        }
+        if let Some(open) = open {
+            let mut depth = 0usize;
+            let mut j = open;
+            while j < b.len() {
+                match b[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let (a, z) = (line_of(attr), line_of(j.min(b.len().saturating_sub(1))));
+            for l in a..=z.min(n_lines - 1) {
+                in_test[l] = true;
+            }
+            from = j.min(b.len());
+        } else {
+            from = attr + 1;
+        }
+        if from >= b.len() {
+            break;
+        }
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_strings_and_chars() {
+        let lex = FileLex::new(
+            "let a = \"mul_add\"; // mul_add\nlet b = 'x'; /* mul_add /* nested */ */ let c = r#\"mul_add\"#;\n",
+        );
+        assert!(!lex.toks.iter().any(|t| t.s == "mul_add"));
+        assert_eq!(lex.toks.iter().filter(|t| t.s == "let").count(), 3);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let lex = FileLex::new("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(lex.toks.iter().any(|t| t.s == "str"));
+        assert!(lex.toks.iter().any(|t| t.s == "{"));
+    }
+
+    #[test]
+    fn allow_tags_parse_and_require_justification() {
+        let lex = FileLex::new(
+            "// hift-lint: allow(fma): fixture needs it\nx.mul_add(y, z);\n// hift-lint: allow(fma)\ny.mul_add(y, z);\n",
+        );
+        assert_eq!(lex.tags.len(), 2);
+        assert!(lex.allowed("fma", 2), "tag on line 1 covers line 2");
+        assert!(!lex.allowed("fma", 4), "unjustified tag does not allow");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn lib2() {}\n";
+        let lex = FileLex::new(src);
+        assert!(!lex.line_is_test(1));
+        assert!(lex.line_is_test(4));
+        assert!(!lex.line_is_test(6));
+    }
+
+    #[test]
+    fn multi_char_ops_fuse() {
+        let lex = FileLex::new("a += b; c == d; e => f; g.. ; h::i\n");
+        let ops: Vec<_> = lex.toks.iter().filter(|t| !t.ident).map(|t| t.s.as_str()).collect();
+        assert!(ops.contains(&"+="));
+        assert!(ops.contains(&"=="));
+        assert!(ops.contains(&"=>"));
+        assert!(ops.contains(&".."));
+        assert!(ops.contains(&"::"));
+        assert!(!ops.contains(&"="));
+    }
+}

@@ -1,0 +1,175 @@
+//! hift-lint — determinism & concurrency contract linter for the `hift`
+//! crate, run as `cargo xtask lint` from the repo root.
+//!
+//! The repo's headline claims (bit-identical group sweeps across kernel
+//! schedules, worker counts, checkpoint policies, and kill+resume) rest on
+//! written-but-unchecked invariants.  This crate checks the static half of
+//! each one; the `contracts` feature of the `hift` crate checks the dynamic
+//! half at runtime.  `docs/CONTRACTS.md` is the map between the two.
+//!
+//! The analysis is a self-contained token-level lexer (`lex`), not an AST:
+//! the offline vendor set has no `syn`, so the lints trade a little
+//! precision for zero dependencies.  Each lint is documented in `lints` with
+//! exactly what it matches.
+
+pub mod lex;
+pub mod lints;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint diagnostic, rendered as `error[{lint}] {file}:{line}: {msg}`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: String,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "error[{}] {}:{}: {}", self.lint, self.file, self.line, self.msg)
+    }
+}
+
+/// Lint one file's source. `rel` is the repo-relative path with forward
+/// slashes — lint scoping keys off it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    lints::lint_file(rel, &lex::FileLex::new(src))
+}
+
+/// E1 count for one file's source (library-path unwrap/expect/panic sites).
+pub fn e1_count(src: &str) -> usize {
+    lints::e1_count(&lex::FileLex::new(src))
+}
+
+/// Result of linting the whole tree.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Non-fatal notes (e.g. an E1 count dropped below its baseline).
+    pub warnings: Vec<String>,
+    pub files_checked: usize,
+}
+
+const BASELINE_REL: &str = "tools/hift-lint/e1-baseline.txt";
+
+/// Lint every `.rs` file under `<root>/rust/src`, in sorted order, and apply
+/// the E1 ratchet against `<root>/tools/hift-lint/e1-baseline.txt`.
+///
+/// With `write_baseline`, the baseline file is rewritten from the current
+/// counts (nonzero entries only) instead of being enforced.
+pub fn lint_tree(root: &Path, write_baseline: bool) -> io::Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+
+    let baseline = read_baseline(&root.join(BASELINE_REL))?;
+    let mut findings = Vec::new();
+    let mut warnings = Vec::new();
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = fs::read_to_string(path)?;
+        findings.extend(lint_source(&rel, &src));
+        let n = e1_count(&src);
+        counts.insert(rel.clone(), n);
+        if write_baseline {
+            continue;
+        }
+        let base = baseline.get(&rel).copied().unwrap_or(0);
+        if n > base {
+            findings.push(Finding {
+                lint: "e1-ratchet".into(),
+                file: rel.clone(),
+                line: 0,
+                msg: format!(
+                    "{n} unwrap/expect/panic site(s) on library paths exceeds the ratchet baseline of {base}; \
+                     convert to Result (the baseline only goes down — see {BASELINE_REL})"
+                ),
+            });
+        } else if n < base {
+            warnings.push(format!(
+                "{rel}: E1 count dropped {base} -> {n}; run `cargo xtask lint --write-baseline` to ratchet the baseline down"
+            ));
+        }
+    }
+
+    if write_baseline {
+        let mut out = String::from(
+            "# E1 ratchet baseline: library-path unwrap/expect/panic sites per file.\n\
+             # Counts may only decrease. Regenerate with: cargo xtask lint --write-baseline\n",
+        );
+        for (rel, n) in &counts {
+            if *n > 0 {
+                out.push_str(&format!("{n} {rel}\n"));
+            }
+        }
+        fs::write(root.join(BASELINE_REL), out)?;
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report { findings, warnings, files_checked: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("source root {} not found — run from the repo root or pass --root", dir.display()),
+        ));
+    }
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    // Normalize to forward slashes so lint scoping is platform-independent.
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn read_baseline(path: &Path) -> io::Result<BTreeMap<String, usize>> {
+    let mut map = BTreeMap::new();
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(map), // treated as all-zero
+        Err(e) => return Err(e),
+    };
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.splitn(2, ' ');
+        let (n, rel) = (it.next().unwrap_or(""), it.next().unwrap_or("").trim());
+        match n.parse::<usize>() {
+            Ok(n) if !rel.is_empty() => {
+                map.insert(rel.to_string(), n);
+            }
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("{}:{}: malformed baseline line `{line}`", path.display(), i + 1),
+                ));
+            }
+        }
+    }
+    Ok(map)
+}

@@ -1,0 +1,525 @@
+//! The six contract lints.  Each is a token-level pass over a [`FileLex`];
+//! see `docs/CONTRACTS.md` for the invariant each one guards and the runtime
+//! assertion that backs it.
+//!
+//! | name              | contract                                                    |
+//! |-------------------|-------------------------------------------------------------|
+//! | `fma`             | D1: no `mul_add` in kernel/model/shard reduction code       |
+//! | `hash-iteration`  | D2: no hash-order iteration in emit-order-sensitive modules |
+//! | `timing-taint`    | D3: clock values only flow into timing/throughput sinks     |
+//! | `float-reduction` | D4: float reductions confined to kernels + `tree_fold`      |
+//! | `budget-lease`    | C1: every spawn site leases from `ThreadBudget` in-function |
+//! | `e1-ratchet`      | E1: library-path `unwrap`/`expect`/`panic!` only decreases  |
+//!
+//! Findings on `#[cfg(test)]` lines are dropped (tests are exempt), and any
+//! finding except `bad-allow-tag`/`e1-ratchet` can be suppressed by a
+//! justified `// hift-lint: allow(<name>): <why>` tag on the same or the
+//! preceding line.
+
+use crate::lex::{FileLex, Tok};
+use crate::Finding;
+use std::collections::HashSet;
+
+/// Lint names a `hift-lint: allow(...)` tag may reference.
+pub const SUPPRESSIBLE: &[&str] =
+    &["fma", "hash-iteration", "timing-taint", "float-reduction", "budget-lease"];
+
+const ASSIGN_OPS: &[&str] = &["=", "+=", "-=", "*=", "/="];
+
+fn is(t: Option<&Tok>, s: &str) -> bool {
+    t.is_some_and(|t| t.s == s)
+}
+
+/// Run every lint over one file. `rel` is the repo-relative path with
+/// forward slashes (e.g. `rust/src/backend/model.rs`) — several lints are
+/// scoped by path.
+pub fn lint_file(rel: &str, lex: &FileLex) -> Vec<Finding> {
+    let mut out = Vec::new();
+    bad_allow_tags(rel, lex, &mut out);
+    d1_fma(rel, lex, &mut out);
+    d2_hash_iteration(rel, lex, &mut out);
+    d3_timing_taint(rel, lex, &mut out);
+    d4_float_reduction(rel, lex, &mut out);
+    c1_budget_lease(rel, lex, &mut out);
+    // Drop test-region findings, then honor justified allow tags.
+    out.retain(|f| !lex.line_is_test(f.line));
+    out.retain(|f| f.lint == "bad-allow-tag" || !lex.allowed(&f.lint, f.line));
+    out.sort_by(|a, b| (a.line, &a.lint).cmp(&(b.line, &b.lint)));
+    out.dedup_by(|a, b| a.line == b.line && a.lint == b.lint);
+    out
+}
+
+fn push(out: &mut Vec<Finding>, lint: &str, rel: &str, line: usize, msg: String) {
+    out.push(Finding { lint: lint.to_string(), file: rel.to_string(), line, msg });
+}
+
+/// A malformed tag is itself a finding — an allowlist nobody can audit is
+/// worse than no allowlist.
+fn bad_allow_tags(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
+    for t in &lex.tags {
+        if !SUPPRESSIBLE.contains(&t.lint.as_str()) {
+            push(out, "bad-allow-tag", rel, t.line,
+                format!("unknown lint `{}` in allow tag (known: {})", t.lint, SUPPRESSIBLE.join(", ")));
+        } else if !t.justified {
+            push(out, "bad-allow-tag", rel, t.line,
+                format!("allow({}) tag has no justification — write `// hift-lint: allow({}): <why>`", t.lint, t.lint));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D1 — no FMA in reduction code
+// ---------------------------------------------------------------------------
+
+fn d1_in_scope(rel: &str) -> bool {
+    rel.contains("backend/kernels/")
+        || rel.ends_with("backend/model.rs")
+        || rel.ends_with("backend/shard.rs")
+}
+
+fn d1_fma(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
+    if !d1_in_scope(rel) {
+        return;
+    }
+    for t in &lex.toks {
+        if t.ident && t.s == "mul_add" {
+            push(out, "fma", rel, t.line,
+                "mul_add fuses rounding and breaks cross-schedule bit-identity; use separate mul + add".into());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D2 — no hash-order iteration in emit-order-sensitive modules
+// ---------------------------------------------------------------------------
+
+fn d2_in_scope(rel: &str) -> bool {
+    rel.contains("/backend/")
+        || rel.contains("/optim/")
+        || rel.contains("/ser/")
+        || rel.ends_with("tensor/paged.rs")
+}
+
+const ITER_METHODS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "into_keys",
+    "into_values", "retain",
+];
+
+fn d2_hash_iteration(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
+    if !d2_in_scope(rel) {
+        return;
+    }
+    let toks = &lex.toks;
+    // Pass 1: a per-file symbol table of names that hold a HashMap/HashSet —
+    // type aliases, `name: HashMap<..>` declarations (params, fields, lets),
+    // and `name = HashMap::new()` style constructions.
+    let mut aliases: HashSet<&str> = HashSet::new();
+    let mut vars: HashSet<&str> = HashSet::new();
+    let is_hash = |s: &str, aliases: &HashSet<&str>| {
+        s == "HashMap" || s == "HashSet" || aliases.contains(s)
+    };
+    for i in 0..toks.len() {
+        // `type Name = ... HashMap ... ;`
+        if toks[i].ident && toks[i].s == "type" {
+            if let (Some(name), true) = (toks.get(i + 1), is(toks.get(i + 2), "=")) {
+                let mut j = i + 3;
+                while j < toks.len() && toks[j].s != ";" {
+                    if toks[j].ident && (toks[j].s == "HashMap" || toks[j].s == "HashSet") {
+                        aliases.insert(name.s.as_str());
+                        break;
+                    }
+                    j += 1;
+                }
+            }
+        }
+        // `name : [& ' mut std::collections::] HashMap<..>`
+        if toks[i].ident && is(toks.get(i + 1), ":") {
+            let mut j = i + 2;
+            while j < toks.len() {
+                match toks[j].s.as_str() {
+                    "&" | "'" | "mut" | "::" | "std" | "collections" => j += 1,
+                    _ => break,
+                }
+            }
+            if toks.get(j).is_some_and(|t| t.ident && is_hash(&t.s, &aliases)) {
+                vars.insert(toks[i].s.as_str());
+            }
+        }
+        // `name = HashMap::...` (covers `let [mut] name = HashMap::new()`)
+        if toks[i].ident
+            && is(toks.get(i + 1), "=")
+            && toks.get(i + 2).is_some_and(|t| t.ident && is_hash(&t.s, &aliases))
+        {
+            vars.insert(toks[i].s.as_str());
+        }
+    }
+    // Pass 2: flag order-dependent consumption of those names.
+    for i in 0..toks.len() {
+        // `name.iter()` and friends
+        if toks[i].ident
+            && ITER_METHODS.contains(&toks[i].s.as_str())
+            && is(toks.get(i + 1), "(")
+            && i >= 2
+            && toks[i - 1].s == "."
+            && vars.contains(toks[i - 2].s.as_str())
+        {
+            push(out, "hash-iteration", rel, toks[i].line,
+                format!("`{}.{}()` iterates in hash order in an emit-order-sensitive module; use BTreeMap or tag with a justification", toks[i - 2].s, toks[i].s));
+        }
+        // `for pat in <expr containing a hash var> {`
+        if toks[i].ident && toks[i].s == "for" {
+            let in_pos = (i + 1..toks.len().min(i + 40)).find(|&j| toks[j].ident && toks[j].s == "in");
+            if let Some(ip) = in_pos {
+                let mut j = ip + 1;
+                let mut hit: Option<&Tok> = None;
+                let mut ranged = false;
+                while j < toks.len() && toks[j].s != "{" && j < ip + 60 {
+                    if toks[j].s == ".." {
+                        ranged = true;
+                    }
+                    if toks[j].ident && vars.contains(toks[j].s.as_str()) {
+                        hit = Some(&toks[j]);
+                    }
+                    j += 1;
+                }
+                if let (Some(v), false) = (hit, ranged) {
+                    push(out, "hash-iteration", rel, toks[i].line,
+                        format!("for-loop over hash collection `{}` in an emit-order-sensitive module; use BTreeMap or tag with a justification", v.s));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D3 — timing taint
+// ---------------------------------------------------------------------------
+
+/// Identifier fragments that mark a sanctioned timing sink (counters,
+/// durations, throughput).  Short markers (`t0`, `t1`, `dt`) must match a
+/// whole underscore-delimited word to avoid hitting e.g. `width`.
+const MARKERS: &[&str] = &[
+    "nano", "micro", "milli", "sec", "time", "elapsed", "stall", "throughput", "gflops", "rate",
+    "start", "t0", "t1", "dt", "dur", "wall", "clock", "tick", "deadline", "stamp", "bench",
+    "prof",
+];
+
+fn has_marker(ident: &str) -> bool {
+    let l = ident.to_ascii_lowercase();
+    MARKERS.iter().any(|m| {
+        if m.len() <= 2 {
+            l == *m || l.starts_with(&format!("{m}_")) || l.ends_with(&format!("_{m}"))
+        } else {
+            l.contains(m)
+        }
+    })
+}
+
+struct FnSpan {
+    name: String,
+    start: usize,
+    end: usize,
+}
+
+/// Token spans of every `fn` body, plus the innermost enclosing fn of each
+/// token.  Brace-depth based; `;` before the body brace cancels a pending
+/// header (trait method declarations), ignoring `;` inside `[u8; 4]`-style
+/// signature types.
+fn fn_spans(toks: &[Tok]) -> (Vec<FnSpan>, Vec<Option<usize>>) {
+    let mut spans: Vec<FnSpan> = Vec::new();
+    let mut fn_of: Vec<Option<usize>> = vec![None; toks.len()];
+    let mut stack: Vec<(usize, usize)> = Vec::new(); // (span idx, body depth)
+    let mut depth = 0usize;
+    let mut pending: Option<(String, usize)> = None;
+    let mut sig_nest = 0isize; // () / [] nesting inside a pending signature
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.ident && t.s == "fn" {
+            if let Some(n) = toks.get(i + 1) {
+                if n.ident {
+                    pending = Some((n.s.clone(), i));
+                    sig_nest = 0;
+                }
+            }
+        } else if pending.is_some() && (t.s == "(" || t.s == "[") {
+            sig_nest += 1;
+        } else if pending.is_some() && (t.s == ")" || t.s == "]") {
+            sig_nest -= 1;
+        } else if t.s == ";" && sig_nest == 0 {
+            pending = None;
+        } else if t.s == "{" {
+            depth += 1;
+            if let Some((name, start)) = pending.take() {
+                spans.push(FnSpan { name, start, end: toks.len().saturating_sub(1) });
+                stack.push((spans.len() - 1, depth));
+            }
+        } else if t.s == "}" {
+            if let Some(&(si, bd)) = stack.last() {
+                if bd == depth {
+                    spans[si].end = i;
+                    stack.pop();
+                }
+            }
+            depth = depth.saturating_sub(1);
+        }
+        fn_of[i] = stack.last().map(|&(si, _)| si);
+    }
+    (spans, fn_of)
+}
+
+fn d3_timing_taint(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
+    let toks = &lex.toks;
+    let (spans, fn_of) = fn_spans(toks);
+    for (si, sp) in spans.iter().enumerate() {
+        // A function that is itself a timing utility is a sink end-to-end.
+        if has_marker(&sp.name) {
+            continue;
+        }
+        // Statements of this fn only (nested fns analyzed on their own).
+        let idxs: Vec<usize> =
+            (sp.start..=sp.end.min(toks.len() - 1)).filter(|&i| fn_of[i] == Some(si)).collect();
+        let mut taint: HashSet<String> = HashSet::new();
+        let mut stmt: Vec<usize> = Vec::new();
+        for &i in &idxs {
+            let s = toks[i].s.as_str();
+            if s == ";" || s == "{" || s == "}" {
+                d3_statement(rel, toks, &stmt, &mut taint, out);
+                stmt.clear();
+            } else {
+                stmt.push(i);
+            }
+        }
+        d3_statement(rel, toks, &stmt, &mut taint, out);
+    }
+}
+
+fn d3_rhs_tainted(toks: &[Tok], rhs: &[usize], taint: &HashSet<String>) -> bool {
+    for (k, &i) in rhs.iter().enumerate() {
+        let t = &toks[i];
+        if !t.ident {
+            continue;
+        }
+        if t.s == "Instant" || t.s == "SystemTime" {
+            return true;
+        }
+        if t.s == "elapsed" && k > 0 && toks[rhs[k - 1]].s == "." {
+            return true;
+        }
+        if taint.contains(&t.s) {
+            return true;
+        }
+    }
+    false
+}
+
+fn d3_statement(
+    rel: &str,
+    toks: &[Tok],
+    stmt: &[usize],
+    taint: &mut HashSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    if stmt.is_empty() {
+        return;
+    }
+    let eq = match stmt.iter().position(|&i| ASSIGN_OPS.contains(&toks[i].s.as_str())) {
+        Some(p) => p,
+        None => return,
+    };
+    let (lhs, rhs) = (&stmt[..eq], &stmt[eq + 1..]);
+    if !d3_rhs_tainted(toks, rhs, taint) {
+        return;
+    }
+    let head = &toks[stmt[0]];
+    if head.ident && head.s == "let" {
+        // Marker-named binding is a sanctioned sink: taint terminates there.
+        // Otherwise the new name silently joins the taint set.
+        if !lhs.iter().any(|&i| toks[i].ident && has_marker(&toks[i].s)) {
+            for &i in lhs.iter().skip(1) {
+                if toks[i].ident && toks[i].s != "mut" {
+                    taint.insert(toks[i].s.clone());
+                }
+            }
+        }
+        return;
+    }
+    // Plain assignment (`x = ...`, `x += ...`): only statements headed by an
+    // identifier count — `if`, `while`, `return`, `match` heads are reads.
+    const HEADS_SKIP: &[&str] = &["if", "while", "match", "for", "return", "else", "loop"];
+    if !head.ident || HEADS_SKIP.contains(&head.s.as_str()) {
+        return;
+    }
+    if lhs.iter().any(|&i| toks[i].ident && has_marker(&toks[i].s)) {
+        return;
+    }
+    push(out, "timing-taint", rel, head.line,
+        "clock-derived value assigned into computed state; route timing through a *_nanos/throughput-named sink".into());
+}
+
+// ---------------------------------------------------------------------------
+// D4 — float reductions confined to the kernel layer
+// ---------------------------------------------------------------------------
+
+fn d4_exempt(rel: &str) -> bool {
+    rel.contains("backend/kernels/") || rel.ends_with("backend/shard.rs")
+}
+
+fn d4_float_reduction(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
+    if d4_exempt(rel) {
+        return;
+    }
+    let toks = &lex.toks;
+    for i in 0..toks.len() {
+        if toks[i].ident
+            && toks[i].s == "sum"
+            && is(toks.get(i + 1), "::")
+            && is(toks.get(i + 2), "<")
+            && toks.get(i + 3).is_some_and(|t| t.s == "f32")
+        {
+            push(out, "float-reduction", rel, toks[i].line,
+                ".sum::<f32>() outside the kernel layer; reduction order must be owned by kernels/shard::tree_fold".into());
+        }
+        if toks[i].ident
+            && toks[i].s == "fold"
+            && i > 0
+            && toks[i - 1].s == "."
+            && is(toks.get(i + 1), "(")
+        {
+            push(out, "float-reduction", rel, toks[i].line,
+                "raw .fold() reduction outside the kernel layer; use a kernel primitive or shard::tree_fold, or tag with a justification".into());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// C1 — spawn sites must lease from ThreadBudget in the same function
+// ---------------------------------------------------------------------------
+
+fn c1_budget_lease(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
+    let toks = &lex.toks;
+    let (spans, fn_of) = fn_spans(toks);
+    for i in 0..toks.len() {
+        if !(toks[i].ident && toks[i].s == "spawn" && is(toks.get(i + 1), "(")) {
+            continue;
+        }
+        if i > 0 && toks[i - 1].s == "fn" {
+            continue; // a fn named `spawn`, not a call site
+        }
+        let leased = fn_of[i].is_some_and(|si| {
+            let sp = &spans[si];
+            toks[sp.start..=sp.end.min(toks.len() - 1)]
+                .iter()
+                .any(|t| t.ident && matches!(t.s.as_str(), "lease" | "register_worker" | "ThreadBudget"))
+        });
+        if !leased {
+            push(out, "budget-lease", rel, toks[i].line,
+                "spawn site without a ThreadBudget lease/register_worker in the same function (oversubscription hazard)".into());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E1 — unwrap/expect/panic ratchet
+// ---------------------------------------------------------------------------
+
+/// Count library-path `.unwrap(` / `.expect(` / `panic!` sites (test regions
+/// excluded).  The count per file is compared against
+/// `tools/hift-lint/e1-baseline.txt` and may only go down.
+pub fn e1_count(lex: &FileLex) -> usize {
+    let toks = &lex.toks;
+    let mut n = 0usize;
+    for i in 0..toks.len() {
+        if lex.line_is_test(toks[i].line) {
+            continue;
+        }
+        if toks[i].ident
+            && (toks[i].s == "unwrap" || toks[i].s == "expect")
+            && i > 0
+            && toks[i - 1].s == "."
+            && is(toks.get(i + 1), "(")
+        {
+            n += 1;
+        }
+        if toks[i].ident && toks[i].s == "panic" && is(toks.get(i + 1), "!") {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::FileLex;
+
+    fn lint(rel: &str, src: &str) -> Vec<Finding> {
+        lint_file(rel, &FileLex::new(src))
+    }
+
+    #[test]
+    fn d1_only_fires_in_scope() {
+        let src = "fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }\n";
+        assert_eq!(lint("rust/src/backend/model.rs", src).len(), 1);
+        assert_eq!(lint("rust/src/metrics/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn d2_tracks_aliases_and_for_loops() {
+        let src = "use std::collections::HashMap;\ntype Slots = HashMap<String, u64>;\nfn f(slots: &Slots) {\n    for (k, v) in slots {\n        let _ = (k, v);\n    }\n}\n";
+        let fs = lint("rust/src/backend/native.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].lint, "hash-iteration");
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn d2_ignores_ranges_and_lookups() {
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, u32>) -> Option<&u32> {\n    for i in 0..m.len() { let _ = i; }\n    m.get(&3)\n}\n";
+        assert!(lint("rust/src/backend/native.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_marker_let_terminates_taint() {
+        let clean = "fn f() {\n    let t0 = Instant::now();\n    let secs = t0.elapsed().as_secs_f64();\n    let gflops = work / secs;\n    naive = gflops;\n}\n";
+        assert!(lint("rust/src/bench/exhibits.rs", clean).is_empty());
+        let dirty = "fn f() {\n    let x = Instant::now().elapsed().as_secs_f64();\n    let y = x * 2.0;\n    weight = y;\n}\n";
+        let fs = lint("rust/src/bench/exhibits.rs", dirty);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].lint, "timing-taint");
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn d4_exempts_kernels() {
+        let src = "fn f(v: &[f32]) -> f32 { v.iter().sum::<f32>() }\n";
+        assert_eq!(lint("rust/src/optim/adafactor.rs", src).len(), 1);
+        assert!(lint("rust/src/backend/kernels/gemm.rs", src).is_empty());
+        assert!(lint("rust/src/backend/shard.rs", src).is_empty());
+    }
+
+    #[test]
+    fn c1_requires_in_function_lease() {
+        let bad = "fn f() { std::thread::spawn(|| {}); }\n";
+        let fs = lint("rust/src/tensor/paged.rs", bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].lint, "budget-lease");
+        let good = "fn f() { let slot = par::register_worker(); std::thread::spawn(|| {}); }\n";
+        assert!(lint("rust/src/tensor/paged.rs", good).is_empty());
+    }
+
+    #[test]
+    fn allow_tag_suppresses_and_bad_tag_fires() {
+        let tagged = "fn f(v: &[f32]) -> f32 {\n    // hift-lint: allow(float-reduction): sequential, fixed order\n    v.iter().sum::<f32>()\n}\n";
+        assert!(lint("rust/src/optim/adafactor.rs", tagged).is_empty());
+        let bad = "// hift-lint: allow(no-such-lint): whatever\nfn f() {}\n";
+        let fs = lint("rust/src/optim/adafactor.rs", bad);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].lint, "bad-allow-tag");
+    }
+
+    #[test]
+    fn e1_counts_library_sites_only() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\nfn g() { panic!(\"boom\") }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+        assert_eq!(e1_count(&FileLex::new(src)), 2);
+    }
+}

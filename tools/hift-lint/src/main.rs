@@ -1,0 +1,67 @@
+//! CLI for hift-lint.  Invoked as `cargo xtask lint [--root <dir>]
+//! [--write-baseline]` (the alias lives in `.cargo/config.toml`).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage or I/O error.
+
+use std::env;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo xtask lint [--root <repo-root>] [--write-baseline]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args = env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {}
+        _ => return usage(),
+    }
+    let mut root: Option<PathBuf> = None;
+    let mut write_baseline = false;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(r) => root = Some(PathBuf::from(r)),
+                None => return usage(),
+            },
+            "--write-baseline" => write_baseline = true,
+            _ => return usage(),
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        // `cargo xtask lint` runs with the invoker's cwd; fall back to the
+        // workspace root derived from this crate's manifest dir.
+        if PathBuf::from("rust/src").is_dir() {
+            PathBuf::from(".")
+        } else {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+        }
+    });
+
+    let report = match hift_lint::lint_tree(&root, write_baseline) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("hift-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if write_baseline {
+        println!("hift-lint: baseline rewritten from {} file(s)", report.files_checked);
+        return ExitCode::SUCCESS;
+    }
+    if report.findings.is_empty() {
+        println!("hift-lint: {} file(s) clean", report.files_checked);
+        ExitCode::SUCCESS
+    } else {
+        println!("hift-lint: {} finding(s) across {} file(s)", report.findings.len(), report.files_checked);
+        ExitCode::FAILURE
+    }
+}

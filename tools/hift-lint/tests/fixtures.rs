@@ -1,0 +1,84 @@
+//! Fixture tests: each lint fires on its intentional violation (asserting
+//! diagnostic name and file:line), suppression and exemptions behave, and —
+//! the real gate — the repo's own tree lints clean.
+
+use hift_lint::{e1_count, lint_source, lint_tree};
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    // tools/hift-lint/tests -> repo root is two levels above the manifest.
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../.."))
+}
+
+/// (lint, line) pairs of all findings for a fixture linted under `rel`.
+fn findings(rel: &str, src: &str) -> Vec<(String, usize)> {
+    lint_source(rel, src).into_iter().map(|f| (f.lint, f.line)).collect()
+}
+
+#[test]
+fn d1_fma_fixture() {
+    let src = include_str!("../fixtures/d1_fma.rs");
+    let fs = findings("rust/src/backend/kernels/fixture.rs", src);
+    assert_eq!(fs, vec![("fma".to_string(), 7)]);
+    // Same code outside the D1 scope is clean.
+    assert!(findings("rust/src/metrics/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn d2_hash_iteration_fixture() {
+    let src = include_str!("../fixtures/d2_hash_iter.rs");
+    let fs = findings("rust/src/backend/fixture.rs", src);
+    assert_eq!(fs, vec![("hash-iteration".to_string(), 12)]);
+}
+
+#[test]
+fn d3_timing_taint_fixture() {
+    let src = include_str!("../fixtures/d3_taint.rs");
+    let fs = findings("rust/src/backend/fixture.rs", src);
+    assert_eq!(fs, vec![("timing-taint".to_string(), 16)]);
+}
+
+#[test]
+fn d4_float_reduction_fixture() {
+    let src = include_str!("../fixtures/d4_reduction.rs");
+    let fs = findings("rust/src/optim/fixture.rs", src);
+    assert_eq!(
+        fs,
+        vec![("float-reduction".to_string(), 6), ("float-reduction".to_string(), 10)]
+    );
+    // The kernel layer owns its reduction order: same code is exempt there.
+    assert!(findings("rust/src/backend/kernels/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn c1_budget_lease_fixture() {
+    let src = include_str!("../fixtures/c1_spawn.rs");
+    let fs = findings("rust/src/optim/fixture.rs", src);
+    assert_eq!(fs, vec![("budget-lease".to_string(), 6)]);
+}
+
+#[test]
+fn e1_count_fixture() {
+    let src = include_str!("../fixtures/e1_unwrap.rs");
+    assert_eq!(e1_count(src), 3);
+}
+
+#[test]
+fn unjustified_tag_is_a_finding_and_does_not_suppress() {
+    let src = "fn f(v: &[f32]) -> f32 {\n    // hift-lint: allow(float-reduction)\n    v.iter().sum::<f32>()\n}\n";
+    let fs = findings("rust/src/optim/fixture.rs", src);
+    assert_eq!(
+        fs,
+        vec![("bad-allow-tag".to_string(), 2), ("float-reduction".to_string(), 3)]
+    );
+}
+
+/// The acceptance gate in miniature: the repo's own tree must produce zero
+/// findings with the checked-in E1 baseline.
+#[test]
+fn repo_tree_is_clean() {
+    let report = lint_tree(repo_root(), false).expect("lint_tree walks rust/src");
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(rendered.is_empty(), "repo tree has findings:\n{}", rendered.join("\n"));
+    assert!(report.files_checked > 20, "walked only {} files", report.files_checked);
+}
