@@ -1,0 +1,12 @@
+//! `cargo bench --bench bench_evalmatrix` — the strategy × task-family
+//! eval matrix over the forge templates: every strategy trains on every
+//! `MATRIX_FAMILIES` stream and the scoreboard JSON (`runs/evalmatrix.json`)
+//! records per-cell loss/accuracy, residency peaks, kernel throughput, and
+//! stream diversity/dedup stats (see hift::bench::exhibits::evalmatrix).
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut b = hift::bench::Bench::from_env()?;
+    hift::bench::exhibits::evalmatrix(&mut b)?;
+    eprintln!("[bench_evalmatrix] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -12,12 +12,14 @@ use crate::backend::kernels::{self, KernelKind};
 use crate::backend::par;
 use crate::backend::{ActCkpt, Compression, ExecBackend, OffloadCfg, Precision};
 use crate::coordinator::strategy::UpdateStrategy;
+use crate::data::templates::MATRIX_FAMILIES;
 use crate::memmodel::{
     account, account_ckpt, account_prec, by_name, native_probs_bytes, paged_host_bound,
     paged_param_bound, workers_overhead, Dtype, Method, Workload, GIB, MIB,
 };
 use crate::optim::OptimKind;
 use crate::ser::Value;
+use crate::strategies::STRATEGY_NAMES;
 
 /// Table 1 — few-shot prompt-style comparison: gradient-free (MeZO family)
 /// vs gradient-based (FPFT/LoRA/prefix/HiFT), at two data scales
@@ -1210,6 +1212,58 @@ pub fn parallel(b: &mut Bench) -> Result<()> {
         &rows,
     );
     b.save("parallel", &Value::Arr(json))
+}
+
+/// Strategy × task-family eval matrix over the forge templates (ISSUE 9):
+/// every [`STRATEGY_NAMES`] strategy trains on every
+/// [`MATRIX_FAMILIES`] stream at the current preset, and the scoreboard JSON
+/// records per-cell quality (final loss / eval acc), residency peaks, kernel
+/// throughput, and the stream's diversity / dedup statistics — the
+/// MeZO-motivated "rankings flip across task families" regression surface.
+pub fn evalmatrix(b: &mut Bench) -> Result<()> {
+    let steps = b.steps(32);
+    let seed = 1u64;
+    let mut rows = Vec::new();
+    let mut cells = Vec::new();
+    for strat in STRATEGY_NAMES {
+        let spec = default_spec(strat, steps);
+        let mut row = vec![strat.to_string()];
+        for fam in MATRIX_FAMILIES {
+            let rec = b.run_one(&spec, fam, steps, seed)?;
+            let d = rec.diversity.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("forge stream for {fam} recorded no diversity stats")
+            })?;
+            row.push(format!("{:.2}", rec.final_eval.acc));
+            cells.push(Value::obj(vec![
+                ("strategy", strat.into()),
+                ("task", fam.into()),
+                ("steps", (steps as usize).into()),
+                ("final_eval_acc", rec.final_eval.acc.into()),
+                ("final_eval_loss", rec.final_eval.loss.into()),
+                ("final_train_loss", rec.losses.tail_mean(8).into()),
+                (
+                    "peak_grad_resident_bytes",
+                    (rec.backend.peak_grad_resident_bytes as usize).into(),
+                ),
+                ("peak_act_resident_bytes", (rec.backend.peak_act_resident_bytes as usize).into()),
+                ("kernel_gflops", rec.backend.kernel_gflops().into()),
+                ("diversity", d.to_json()),
+            ]));
+        }
+        rows.push(row);
+    }
+    let mut headers: Vec<&str> = vec!["strategy"];
+    headers.extend(MATRIX_FAMILIES);
+    print_table("Eval matrix — final eval accuracy per strategy × task family", &headers, &rows);
+    let board = Value::obj(vec![
+        ("schema", "evalmatrix/1".into()),
+        ("preset", b.rt.manifest().preset.as_str().into()),
+        ("steps", (steps as usize).into()),
+        ("strategies", STRATEGY_NAMES.to_vec().into()),
+        ("families", MATRIX_FAMILIES.to_vec().into()),
+        ("cells", Value::Arr(cells)),
+    ]);
+    b.save("evalmatrix", &board)
 }
 
 /// Appendix-B sanity print: closed-form ratio vs k.

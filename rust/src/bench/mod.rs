@@ -75,8 +75,7 @@ impl Bench {
         spec.total = steps as usize;
         let mut strategy = spec.build(self.rt.manifest())?;
         let mut params = self.rt.load_params(strategy.variant())?;
-        let mut task = build_task(task_name, self.geom(), seed)
-            .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
+        let mut task = build_task(task_name, self.geom(), seed)?;
         trainer::train(
             self.rt.as_mut(),
             strategy.as_mut(),
@@ -107,7 +106,7 @@ impl Bench {
     /// Zero-shot (untrained) accuracy on a task.
     pub fn zero_shot(&mut self, task_name: &str, seed: u64) -> Result<f64> {
         let mut params = self.rt.load_params("base")?;
-        let task = build_task(task_name, self.geom(), seed).unwrap();
+        let task = build_task(task_name, self.geom(), seed)?;
         let ev =
             trainer::evaluate(self.rt.as_mut(), "fwd_base", &mut params, task.eval_batches())?;
         // With offload on, evaluation parks this throwaway set's masters in

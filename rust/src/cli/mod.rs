@@ -21,9 +21,12 @@
 //!             [--precision f32|bf16|f16]
 //! hift info   [--preset tiny | --artifacts DIR] [--seed 0]
 //! hift bench  <table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-//!              |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|parallel|all>
+//!              |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|parallel
+//!              |evalmatrix|all>
 //!             [--preset P] [--artifacts DIR] [--act-ckpt P] [--precision P]
 //!             [--kernels K] [--offload host] [--workers N]
+//! hift evalmatrix [--preset P] [--artifacts DIR] [--precision P] [--kernels K]
+//!             [--workers N]   (alias for `hift bench evalmatrix`)
 //! ```
 //!
 //! `docs/CLI.md` documents every flag and `HIFT_*` environment variable;
@@ -59,7 +62,7 @@ use crate::ser::emit_pretty;
 use crate::strategies::{StrategySpec, STRATEGY_NAMES};
 use crate::tensor::checkpoint;
 
-const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
+const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench|evalmatrix> [flags]
   backends: --preset tiny|small|base|e2e|e2e100m (native CPU, default)
             --artifacts DIR (PJRT; needs the `pjrt` cargo feature)
 
@@ -77,9 +80,13 @@ const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench> [flags]
   memory-report --model NAME --batch N --seq N --m M --precision f32|bf16|f16
   info   (prints manifest, variants, artifacts, strategies, tasks)
   bench  table1|table2|table3|table4|table5|mtbench|fig3|fig4|fig5|fig6
-         |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|parallel|all
+         |tables8_12|appendix_b|act_ckpt|offload|precision|kernels|parallel
+         |evalmatrix|all
          (flags --preset/--artifacts/--act-ckpt/--precision/--kernels/
           --offload*/--workers set the HIFT_* env)
+  evalmatrix  every strategy x every task family on the current preset;
+         writes the runs/evalmatrix.json scoreboard (alias for
+         `hift bench evalmatrix`; same flags as bench)
 
   env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_PRECISION
        HIFT_KERNELS HIFT_OFFLOAD HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH
@@ -101,6 +108,7 @@ pub fn main_entry() -> Result<()> {
         "memory-report" => cmd_memory_report(&args),
         "info" => cmd_info(&args),
         "bench" => cmd_bench(&args),
+        "evalmatrix" => cmd_evalmatrix(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -171,8 +179,7 @@ fn cmd_train(a: &Args) -> Result<()> {
 
     let mut strategy = spec.build(be.manifest())?;
     let mut params = be.load_params(strategy.variant())?;
-    let mut task = build_task(task_name, geom(be.as_ref()), seed)
-        .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
+    let mut task = build_task(task_name, geom(be.as_ref()), seed)?;
 
     let mut ckpt_opts = CkptOpts {
         save_dir: a.get("save-ckpt").map(std::path::PathBuf::from),
@@ -273,8 +280,7 @@ fn cmd_eval(a: &Args) -> Result<()> {
         be.set_workers(w as usize)?;
     }
     let mut params = be.load_params(variant)?;
-    let task = build_task(task_name, geom(be.as_ref()), seed)
-        .with_context(|| format!("unknown task; have {TASK_NAMES:?}"))?;
+    let task = build_task(task_name, geom(be.as_ref()), seed)?;
     let ev = trainer::evaluate(
         be.as_mut(),
         &format!("fwd_{variant}"),
@@ -385,8 +391,9 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_bench(a: &Args) -> Result<()> {
-    let which = a.positional.first().map(String::as_str).unwrap_or("all");
+/// Forward the bench-relevant flags into the `HIFT_*` env, which
+/// [`Bench::from_env`] (and the backend it builds) reads.
+fn bench_env_from_flags(a: &Args) {
     if let Some(dir) = a.get("artifacts") {
         std::env::set_var("HIFT_ARTIFACTS", dir);
     }
@@ -419,6 +426,19 @@ fn cmd_bench(a: &Args) -> Result<()> {
     if let Some(p) = a.get("workers") {
         std::env::set_var("HIFT_WORKERS", p);
     }
+}
+
+/// `hift evalmatrix` — the strategy × task-family scoreboard, promoted to a
+/// top-level command (alias for `hift bench evalmatrix`).
+fn cmd_evalmatrix(a: &Args) -> Result<()> {
+    bench_env_from_flags(a);
+    let mut b = Bench::from_env()?;
+    exhibits::evalmatrix(&mut b)
+}
+
+fn cmd_bench(a: &Args) -> Result<()> {
+    let which = a.positional.first().map(String::as_str).unwrap_or("all");
+    bench_env_from_flags(a);
     let mut b = Bench::from_env()?;
     let run = |b: &mut Bench, name: &str| -> Result<()> {
         match name {
@@ -439,13 +459,14 @@ fn cmd_bench(a: &Args) -> Result<()> {
             "precision" => exhibits::precision(b),
             "kernels" => exhibits::kernels(b),
             "parallel" => exhibits::parallel(b),
+            "evalmatrix" => exhibits::evalmatrix(b),
             other => bail!("unknown exhibit {other:?}"),
         }
     };
     if which == "all" {
         for name in ["tables8_12", "fig6", "appendix_b", "act_ckpt", "offload", "precision",
-                     "kernels", "parallel", "table5", "fig3", "fig4", "table3", "table4",
-                     "mtbench", "table2", "table1", "fig5"] {
+                     "kernels", "parallel", "evalmatrix", "table5", "fig3", "fig4", "table3",
+                     "table4", "mtbench", "table2", "table1", "fig5"] {
             run(&mut b, name)?;
         }
         Ok(())

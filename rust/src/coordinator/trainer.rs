@@ -101,6 +101,9 @@ pub struct RunRecord {
     /// per-run deltas; peak fields are end-of-run values) — the upload-
     /// cache hit rates the bench tables report.
     pub backend: RuntimeStats,
+    /// Diversity / dedup statistics of the task's emitted train stream;
+    /// `Some` whenever the task came from the forge ([`crate::data::build_task`]).
+    pub diversity: Option<crate::data::quality::StreamStats>,
 }
 
 impl RunRecord {
@@ -196,6 +199,9 @@ impl RunRecord {
         }
         // Host paging tier (all-zero when --offload is off): measured
         // transfers, enforced residency peaks, prefetch effectiveness.
+        if let Some(d) = &self.diversity {
+            pairs.push(("diversity", d.to_json()));
+        }
         if b.offload_page_ins + b.offload_page_outs > 0 {
             pairs.push((
                 "offload",
@@ -383,6 +389,7 @@ pub fn train_ckpt(
             .map(|l| (l.h2d_bytes, l.d2h_bytes, l.max_inflight_bytes, l.peak_device_bytes)),
         peak_grad_resident_bytes: strategy.ledger().map(|l| l.peak_grad_resident_bytes),
         backend: backend_stats,
+        diversity: task.stream_stats(),
     })
 }
 

@@ -13,12 +13,24 @@
 //! | Alpaca instruction FT (Fig. 2) | [`InstructTask`] | multi-task with task-id prefix |
 //! | LM pre-training corpora (Fig. 3) | [`MarkovLm`] | language modelling |
 //!
+//! The presets generalize into the parameterized template families of the
+//! task forge ([`templates`]): `motif<N>`, `markovlm<N>`, `modsum<N>`, plus
+//! the new [`templates::BracketTask`] / [`templates::KvRecallTask`] /
+//! [`templates::ReverseTask`] families and `mix:` mixtures.  Every stream
+//! built through [`build_task`] runs behind the [`quality::ForgeStream`]
+//! dedup gate and records per-stream diversity stats (see `docs/TASKS.md`).
+//!
 //! Every task emits [`Batch`]es: `tokens` (input), `targets` (gold,
 //! position-aligned) and `weights` (loss mask — 1 only where the task
 //! defines supervision).
 
+use anyhow::Result;
+
 use crate::backend::Batch;
 use crate::rng::Pcg32;
+
+pub mod quality;
+pub mod templates;
 
 /// A supervised task: a train-batch sampler plus a fixed eval set.
 pub trait Task {
@@ -29,6 +41,18 @@ pub trait Task {
 
     /// The held-out evaluation set (fixed at construction).
     fn eval_batches(&self) -> &[Batch];
+
+    /// Per-template batch counts for multi-template streams (mixtures,
+    /// instruct); `None` for plain single-template tasks.
+    fn coverage(&self) -> Option<Vec<(String, u64)>> {
+        None
+    }
+
+    /// Diversity / dedup statistics of the emitted train stream; `Some` only
+    /// for forge-wrapped streams ([`quality::ForgeStream`]).
+    fn stream_stats(&self) -> Option<quality::StreamStats> {
+        None
+    }
 
     /// Sum of loss-mask weights in a batch (accuracy denominator).
     fn weight_sum(batch: &Batch) -> f64
@@ -383,6 +407,8 @@ impl Task for ModSumTask {
 /// quality = held-out masked accuracy per category, Figure 2 / Table 7).
 pub struct InstructTask {
     subs: Vec<Box<dyn Task>>,
+    /// Train batches emitted per sub-task (template-coverage statistic).
+    emits: Vec<u64>,
     rng: Pcg32,
     eval: Vec<Batch>,
     name: String,
@@ -395,8 +421,14 @@ impl InstructTask {
             Box::new(CopyTask::new(geom, false, seed ^ 2)),
             Box::new(ModSumTask::new(geom, 4.min(geom.s - 2), 8, seed ^ 3)),
         ];
-        let mut t =
-            InstructTask { subs, rng: Pcg32::new(seed, 505), eval: Vec::new(), name: "instruct".into() };
+        let emits = vec![0u64; subs.len()];
+        let mut t = InstructTask {
+            subs,
+            emits,
+            rng: Pcg32::new(seed, 505),
+            eval: Vec::new(),
+            name: "instruct".into(),
+        };
         t.eval = (0..6).map(|i| t.tagged_batch(i % t.subs.len())).collect();
         t
     }
@@ -433,36 +465,41 @@ impl Task for InstructTask {
 
     fn train_batch(&mut self) -> Batch {
         let which = self.rng.below(self.subs.len());
+        self.emits[which] += 1;
         self.tagged_batch(which)
     }
 
     fn eval_batches(&self) -> &[Batch] {
         &self.eval
     }
+
+    fn coverage(&self) -> Option<Vec<(String, u64)>> {
+        Some(
+            self.subs
+                .iter()
+                .zip(&self.emits)
+                .map(|(sub, &n)| (sub.name().to_string(), n))
+                .collect(),
+        )
+    }
 }
 
-/// Build a task by name — the CLI/bench entry point.
-pub fn build_task(name: &str, geom: TaskGeom, seed: u64) -> Option<Box<dyn Task>> {
-    Some(match name {
-        "motif2" => Box::new(MotifClass::new(geom, 2, 0.0, seed)),
-        "motif4" => Box::new(MotifClass::new(geom, 4, 0.0, seed)),
-        "motif8" => Box::new(MotifClass::new(geom, 8, 0.05, seed)),
-        "motif16" => Box::new(MotifClass::new(geom, 16, 0.1, seed)),
-        "markovlm" => Box::new(MarkovLm::new(geom, 2, seed)),
-        "markovlm4" => Box::new(MarkovLm::new(geom, 4, seed)),
-        "copy" => Box::new(CopyTask::new(geom, false, seed)),
-        "sort" => Box::new(CopyTask::new(geom, true, seed)),
-        "modsum" => Box::new(ModSumTask::new(geom, 4, 8, seed)),
-        "modsum6" => Box::new(ModSumTask::new(geom, 6, 10, seed)),
-        "instruct" => Box::new(InstructTask::new(geom, seed)),
-        _ => return None,
-    })
+/// Build a task by name — the CLI/bench entry point.  Accepts every
+/// [`TASK_NAMES`] entry plus the parameterized template grammar of
+/// [`templates::TemplateSpec::parse`]; unknown names are a proper `Err`
+/// listing the known families.  The stream comes wrapped in the
+/// [`quality::ForgeStream`] dedup/diversity layer.
+pub fn build_task(name: &str, geom: TaskGeom, seed: u64) -> Result<Box<dyn Task>> {
+    let spec = templates::TemplateSpec::parse(name)?;
+    let inner = spec.build(geom, seed)?;
+    Ok(Box::new(quality::ForgeStream::new(inner, quality::DedupCfg::default())))
 }
 
-/// All task names `build_task` accepts.
-pub const TASK_NAMES: [&str; 11] = [
+/// Historical task names `build_task` accepts (the forge grammar accepts
+/// more — see [`templates::TemplateSpec::parse`]).
+pub const TASK_NAMES: [&str; 14] = [
     "motif2", "motif4", "motif8", "motif16", "markovlm", "markovlm4", "copy", "sort", "modsum",
-    "modsum6", "instruct",
+    "modsum6", "instruct", "bracket", "kvrecall", "reverse",
 ];
 
 #[cfg(test)]
@@ -493,6 +530,15 @@ mod tests {
                 check_batch_well_formed(e, 64);
             }
         }
+    }
+
+    #[test]
+    fn unknown_task_name_is_a_listed_error() {
+        let err = build_task("nope", geom(), 7).err().expect("unknown name must be Err");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown task"), "{msg}");
+        assert!(msg.contains("motif4"), "error lists known families: {msg}");
+        assert!(msg.contains("mix:"), "error mentions the mixture grammar: {msg}");
     }
 
     #[test]

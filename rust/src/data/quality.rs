@@ -1,0 +1,405 @@
+//! Stream quality gates + diversity accounting for the task forge (ISSUE 9).
+//!
+//! [`ForgeStream`] wraps any [`Task`] and adds the dataforge-style quality
+//! layer (SNIPPETS.md §06-data-quality):
+//!
+//! - **Dedup gate** — every emitted row is fingerprinted (FNV-1a over its
+//!   tokens + targets); a train batch whose rows are mostly already-seen is
+//!   resampled from the underlying stream up to [`DedupCfg::max_retries`]
+//!   times before being emitted anyway.  The gate is a pure function of the
+//!   inner stream, so a wrapped stream is still deterministic per seed and a
+//!   checkpoint-resume replay reproduces the identical gate decisions.
+//! - **Diversity accounting** — n-gram novelty over emitted tokens, the
+//!   label histogram at supervised positions (normalized entropy), and
+//!   per-template coverage (from [`Task::coverage`], e.g. mixtures), all
+//!   summarized as a [`StreamStats`] that `RunRecord` serializes per run.
+//!
+//! High-entropy generators never trip the gate, so wrapping is emission-
+//! transparent for the historical presets: the wrapped stream yields
+//! bit-identical batches to the raw task.
+//!
+//! Memory for the seen-sets is bounded by [`DedupCfg::max_entries`]; past
+//! that the gate stops remembering new fingerprints (counters keep running).
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::backend::Batch;
+use crate::ser::Value;
+
+use super::Task;
+
+/// Dedup-gate tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct DedupCfg {
+    /// n-gram width for the novelty statistic.
+    pub ngram: usize,
+    /// How many times a mostly-duplicate batch is resampled before emission.
+    pub max_retries: u32,
+    /// Fingerprint-set capacity bound (rows and n-grams each).
+    pub max_entries: usize,
+}
+
+impl Default for DedupCfg {
+    fn default() -> Self {
+        DedupCfg { ngram: 4, max_retries: 3, max_entries: 1 << 20 }
+    }
+}
+
+/// Diversity / dedup summary of one emitted train stream.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StreamStats {
+    pub batches_emitted: u64,
+    pub rows_emitted: u64,
+    /// Emitted rows whose fingerprint had been seen before.
+    pub dup_rows: u64,
+    /// Batches the dedup gate rejected and redrew.
+    pub resampled_batches: u64,
+    pub ngrams_total: u64,
+    pub ngrams_distinct: u64,
+    /// Normalized label entropy at supervised positions, in `[0, 1]`.
+    pub label_entropy: f64,
+    /// Per-template batch counts (single entry for plain families).
+    pub coverage: Vec<(String, u64)>,
+}
+
+impl StreamStats {
+    /// Fraction of emitted token n-grams never seen before, in `(0, 1]`.
+    pub fn ngram_distinct_ratio(&self) -> f64 {
+        if self.ngrams_total == 0 {
+            0.0
+        } else {
+            self.ngrams_distinct as f64 / self.ngrams_total as f64
+        }
+    }
+
+    /// Normalized entropy of the per-template coverage histogram: 1.0 for a
+    /// single-template stream or a perfectly balanced mixture, → 0 as one
+    /// template dominates.
+    pub fn coverage_balance(&self) -> f64 {
+        if self.coverage.len() <= 1 {
+            return 1.0;
+        }
+        let mut total = 0u64;
+        for &(_, n) in &self.coverage {
+            total += n;
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        let mut h = 0.0f64;
+        for &(_, n) in &self.coverage {
+            if n > 0 {
+                let p = n as f64 / total as f64;
+                h -= p * p.ln();
+            }
+        }
+        h / (self.coverage.len() as f64).ln()
+    }
+
+    /// Scalar diversity score in `[0, 1]`: label entropy and template
+    /// coverage, equally weighted (the two axes the forge can steer).
+    pub fn diversity_score(&self) -> f64 {
+        0.5 * self.label_entropy + 0.5 * self.coverage_balance()
+    }
+
+    /// Serialize for the `RunRecord` / scoreboard JSON.
+    pub fn to_json(&self) -> Value {
+        let coverage: Vec<Value> = self
+            .coverage
+            .iter()
+            .map(|(name, n)| {
+                Value::obj(vec![("template", name.as_str().into()), ("batches", (*n).into())])
+            })
+            .collect();
+        Value::obj(vec![
+            ("batches_emitted", self.batches_emitted.into()),
+            ("rows_emitted", self.rows_emitted.into()),
+            ("dup_rows", self.dup_rows.into()),
+            ("resampled_batches", self.resampled_batches.into()),
+            ("ngrams_total", self.ngrams_total.into()),
+            ("ngrams_distinct", self.ngrams_distinct.into()),
+            ("ngram_distinct_ratio", self.ngram_distinct_ratio().into()),
+            ("label_entropy", self.label_entropy.into()),
+            ("coverage_balance", self.coverage_balance().into()),
+            ("diversity_score", self.diversity_score().into()),
+            ("coverage", Value::Arr(coverage)),
+        ])
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+
+fn fnv1a_i32s(mut h: u64, xs: &[i32]) -> u64 {
+    for &x in xs {
+        for byte in x.to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// A [`Task`] wrapped with the dedup gate and diversity accounting.
+pub struct ForgeStream {
+    inner: Box<dyn Task>,
+    cfg: DedupCfg,
+    rows_seen: HashSet<u64>,
+    ngrams_seen: HashSet<u64>,
+    /// Target-token histogram at supervised positions (BTreeMap: the lint
+    /// contract bans hash-order iteration in `data/`).
+    labels: BTreeMap<i32, u64>,
+    batches_emitted: u64,
+    rows_emitted: u64,
+    dup_rows: u64,
+    resampled_batches: u64,
+    ngrams_total: u64,
+    ngrams_distinct: u64,
+}
+
+impl ForgeStream {
+    pub fn new(inner: Box<dyn Task>, cfg: DedupCfg) -> Self {
+        ForgeStream {
+            inner,
+            cfg,
+            rows_seen: HashSet::new(),
+            ngrams_seen: HashSet::new(),
+            labels: BTreeMap::new(),
+            batches_emitted: 0,
+            rows_emitted: 0,
+            dup_rows: 0,
+            resampled_batches: 0,
+            ngrams_total: 0,
+            ngrams_distinct: 0,
+        }
+    }
+
+    fn row_fingerprint(batch: &Batch, row: usize) -> u64 {
+        let s = batch.s;
+        let h = fnv1a_i32s(FNV_OFFSET, &batch.tokens[row * s..(row + 1) * s]);
+        fnv1a_i32s(h, &batch.targets[row * s..(row + 1) * s])
+    }
+
+    /// Rows of `batch` whose fingerprint is already in the seen-set.
+    fn dup_rows_in(&self, batch: &Batch) -> usize {
+        let mut dups = 0;
+        for row in 0..batch.b {
+            if self.rows_seen.contains(&Self::row_fingerprint(batch, row)) {
+                dups += 1;
+            }
+        }
+        dups
+    }
+
+    /// Fold an accepted batch into the fingerprint sets and statistics.
+    fn admit(&mut self, batch: &Batch) {
+        let s = batch.s;
+        for row in 0..batch.b {
+            self.rows_emitted += 1;
+            let fp = Self::row_fingerprint(batch, row);
+            if self.rows_seen.contains(&fp) {
+                self.dup_rows += 1;
+            } else if self.rows_seen.len() < self.cfg.max_entries {
+                self.rows_seen.insert(fp);
+            }
+            let toks = &batch.tokens[row * s..(row + 1) * s];
+            for window in toks.windows(self.cfg.ngram.clamp(1, s)) {
+                self.ngrams_total += 1;
+                let g = fnv1a_i32s(FNV_OFFSET, window);
+                if !self.ngrams_seen.contains(&g) {
+                    self.ngrams_distinct += 1;
+                    if self.ngrams_seen.len() < self.cfg.max_entries {
+                        self.ngrams_seen.insert(g);
+                    }
+                }
+            }
+            for col in 0..s {
+                if batch.weights[row * s + col] > 0.0 {
+                    *self.labels.entry(batch.targets[row * s + col]).or_insert(0) += 1;
+                }
+            }
+        }
+        self.batches_emitted += 1;
+    }
+
+    /// Snapshot the stream's diversity / dedup statistics.
+    pub fn stats(&self) -> StreamStats {
+        let mut total = 0u64;
+        for &n in self.labels.values() {
+            total += n;
+        }
+        let mut h = 0.0f64;
+        if total > 0 {
+            for &n in self.labels.values() {
+                if n > 0 {
+                    let p = n as f64 / total as f64;
+                    h -= p * p.ln();
+                }
+            }
+        }
+        let label_entropy =
+            if self.labels.len() <= 1 { 0.0 } else { h / (self.labels.len() as f64).ln() };
+        let coverage = self
+            .inner
+            .coverage()
+            .unwrap_or_else(|| vec![(self.inner.name().to_string(), self.batches_emitted)]);
+        StreamStats {
+            batches_emitted: self.batches_emitted,
+            rows_emitted: self.rows_emitted,
+            dup_rows: self.dup_rows,
+            resampled_batches: self.resampled_batches,
+            ngrams_total: self.ngrams_total,
+            ngrams_distinct: self.ngrams_distinct,
+            label_entropy,
+            coverage,
+        }
+    }
+}
+
+impl Task for ForgeStream {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        let mut batch = self.inner.train_batch();
+        let mut tries = 0u32;
+        // Resample while more than half the rows are already-seen; always
+        // emit after max_retries so degenerate streams still make progress.
+        while tries < self.cfg.max_retries && 2 * self.dup_rows_in(&batch) > batch.b {
+            self.resampled_batches += 1;
+            batch = self.inner.train_batch();
+            tries += 1;
+        }
+        self.admit(&batch);
+        batch
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        self.inner.eval_batches()
+    }
+
+    fn coverage(&self) -> Option<Vec<(String, u64)>> {
+        self.inner.coverage()
+    }
+
+    fn stream_stats(&self) -> Option<StreamStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{build_task, MotifClass, TaskGeom};
+
+    fn geom() -> TaskGeom {
+        TaskGeom::new(64, 4, 16)
+    }
+
+    /// A degenerate stream: the same batch forever.
+    struct ConstTask {
+        batch: Batch,
+        eval: Vec<Batch>,
+    }
+
+    impl ConstTask {
+        fn new() -> Self {
+            let mut t = MotifClass::new(geom(), 2, 0.0, 1);
+            let batch = t.train_batch();
+            ConstTask { eval: vec![batch.clone()], batch }
+        }
+    }
+
+    impl Task for ConstTask {
+        fn name(&self) -> &str {
+            "const"
+        }
+
+        fn train_batch(&mut self) -> Batch {
+            self.batch.clone()
+        }
+
+        fn eval_batches(&self) -> &[Batch] {
+            &self.eval
+        }
+    }
+
+    #[test]
+    fn dedup_gate_fires_on_a_degenerate_stream() {
+        let mut fs = ForgeStream::new(Box::new(ConstTask::new()), DedupCfg::default());
+        for _ in 0..5 {
+            let _ = fs.train_batch();
+        }
+        let st = fs.stats();
+        assert_eq!(st.batches_emitted, 5);
+        assert!(st.dup_rows > 0, "constant stream re-emits seen rows");
+        // Every batch after the first is fully duplicate → max_retries redraws each.
+        assert_eq!(st.resampled_batches, 4 * u64::from(DedupCfg::default().max_retries));
+        assert!(st.ngram_distinct_ratio() < 0.25, "got {}", st.ngram_distinct_ratio());
+    }
+
+    #[test]
+    fn gate_is_transparent_for_high_entropy_streams() {
+        let mut raw = MotifClass::new(geom(), 4, 0.0, 9);
+        let mut fs =
+            ForgeStream::new(Box::new(MotifClass::new(geom(), 4, 0.0, 9)), DedupCfg::default());
+        for _ in 0..10 {
+            let a = raw.train_batch();
+            let b = fs.train_batch();
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.targets, b.targets);
+            assert_eq!(a.weights, b.weights);
+        }
+        let st = fs.stats();
+        assert_eq!(st.resampled_batches, 0);
+        assert_eq!(st.batches_emitted, 10);
+        assert_eq!(st.rows_emitted, 40);
+    }
+
+    #[test]
+    fn stats_are_deterministic_per_seed() {
+        let mut a =
+            ForgeStream::new(Box::new(MotifClass::new(geom(), 4, 0.0, 9)), DedupCfg::default());
+        let mut b =
+            ForgeStream::new(Box::new(MotifClass::new(geom(), 4, 0.0, 9)), DedupCfg::default());
+        for _ in 0..8 {
+            let _ = a.train_batch();
+            let _ = b.train_batch();
+        }
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn label_entropy_is_normalized() {
+        // motif2: two classes drawn uniformly → entropy near 1.
+        let mut fs =
+            ForgeStream::new(Box::new(MotifClass::new(geom(), 2, 0.0, 3)), DedupCfg::default());
+        for _ in 0..50 {
+            let _ = fs.train_batch();
+        }
+        let st = fs.stats();
+        assert!(st.label_entropy > 0.5 && st.label_entropy <= 1.0, "got {}", st.label_entropy);
+        assert!(st.diversity_score() > 0.0 && st.diversity_score() <= 1.0);
+        assert_eq!(st.coverage_balance(), 1.0, "single-template stream");
+    }
+
+    #[test]
+    fn stats_serialize_with_all_fields() {
+        let mut fs =
+            ForgeStream::new(build_task("motif4", geom(), 7).unwrap(), DedupCfg::default());
+        let _ = fs.train_batch();
+        let json = crate::ser::emit_pretty(&fs.stats().to_json());
+        for key in [
+            "batches_emitted",
+            "dup_rows",
+            "resampled_batches",
+            "ngram_distinct_ratio",
+            "label_entropy",
+            "coverage_balance",
+            "diversity_score",
+            "coverage",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+}

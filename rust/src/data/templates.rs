@@ -1,0 +1,732 @@
+//! Task forge: parameterized, seeded task templates (ISSUE 9 tentpole).
+//!
+//! The five hand-rolled presets in [`crate::data`] generalize into template
+//! *families*: a [`TemplateSpec`] names a family plus its parameters, parses
+//! from the same strings the CLI always accepted (`motif4`, `modsum6`, …) and
+//! from new parameterized forms (`motif32`, `markovlm3`, `bracket4`,
+//! `kvrecall6`, `reverse3`, `mix:motif4+copy`), and builds a `Box<dyn Task>`
+//! whose stream is deterministic in `(template, geometry, seed)`.
+//!
+//! New families beyond the original five:
+//!
+//! | family | stand-in | task type |
+//! |---|---|---|
+//! | [`BracketTask`] | CoLA-style acceptability | balanced-bracket classification |
+//! | [`KvRecallTask`] | closed-book QA / retrieval | key-value recall after `SEP` |
+//! | [`ReverseTask`] | structured rewriting | reverse payload, ignore distractors |
+//! | [`MixtureTask`] | multi-domain corpora | uniform mixture of plain families |
+//!
+//! Every template built through [`TemplateSpec::build`] (and therefore through
+//! [`crate::data::build_task`]) is wrapped in a
+//! [`crate::data::quality::ForgeStream`], which adds the dedup gate and the
+//! per-stream diversity statistics recorded in `RunRecord`.
+
+use anyhow::{bail, Result};
+
+use super::{
+    CopyTask, InstructTask, MarkovLm, ModSumTask, MotifClass, Task, TaskGeom, CLS_BASE, SEP,
+};
+use crate::backend::Batch;
+use crate::rng::Pcg32;
+
+/// The family × parameter space the forge knows how to instantiate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TemplateKind {
+    /// Planted-motif classification (`motifN`).
+    Motif { n_classes: usize, noise: f32 },
+    /// Order-2 Markov language modelling (`markovlm`, `markovlmN`).
+    Markov { branch: usize },
+    /// Copy / sorted-copy seq2seq (`copy`, `sort`).
+    Copy { sorted: bool },
+    /// Modular-sum reasoning (`modsum`, `modsumN`).
+    ModSum { n_terms: usize, base: usize },
+    /// Instruction-prefixed multi-task mixture (`instruct`).
+    Instruct,
+    /// Balanced-bracket acceptability classification (`bracket`, `bracketN`).
+    Bracket { pairs: usize },
+    /// Key-value recall (`kvrecall`, `kvrecallN`).
+    KvRecall { n_pairs: usize },
+    /// Sequence reversal with planted distractors (`reverse`, `reverseN`).
+    Reverse { distractors: usize },
+    /// Uniform mixture over plain families (`mix:a+b+…`).
+    Mixture { parts: Vec<TemplateSpec> },
+}
+
+/// A named, parameterized task template; `parse` then `build`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemplateSpec {
+    /// The canonical name the spec was parsed from (used for mixture labels).
+    pub name: String,
+    pub kind: TemplateKind,
+}
+
+/// Noise level the historical presets used: `motif8` → 0.05, `motif16` → 0.1.
+fn motif_noise(n_classes: usize) -> f32 {
+    if n_classes >= 16 {
+        0.1
+    } else if n_classes >= 8 {
+        0.05
+    } else {
+        0.0
+    }
+}
+
+impl TemplateSpec {
+    /// Parse a template name.  Accepts every historical `TASK_NAMES` entry
+    /// unchanged plus the parameterized forms documented in `docs/TASKS.md`.
+    pub fn parse(name: &str) -> Result<TemplateSpec> {
+        let kind = Self::parse_kind(name)?;
+        Ok(TemplateSpec { name: name.to_string(), kind })
+    }
+
+    fn parse_kind(name: &str) -> Result<TemplateKind> {
+        if let Some(rest) = name.strip_prefix("mix:") {
+            let mut parts = Vec::new();
+            for part in rest.split('+') {
+                if part.is_empty() {
+                    bail!("empty component in mixture template {name:?}");
+                }
+                let spec = TemplateSpec::parse(part)?;
+                if matches!(spec.kind, TemplateKind::Mixture { .. }) {
+                    bail!("mixture components must be plain families, got {part:?} in {name:?}");
+                }
+                parts.push(spec);
+            }
+            if parts.len() < 2 {
+                bail!("mixture template {name:?} needs at least two '+'-separated families");
+            }
+            return Ok(TemplateKind::Mixture { parts });
+        }
+        // Bare family names with their historical default parameters.
+        match name {
+            "copy" => return Ok(TemplateKind::Copy { sorted: false }),
+            "sort" => return Ok(TemplateKind::Copy { sorted: true }),
+            "instruct" => return Ok(TemplateKind::Instruct),
+            "markovlm" => return Ok(TemplateKind::Markov { branch: 2 }),
+            "modsum" => return Ok(TemplateKind::ModSum { n_terms: 4, base: 8 }),
+            "bracket" => return Ok(TemplateKind::Bracket { pairs: 2 }),
+            "kvrecall" => return Ok(TemplateKind::KvRecall { n_pairs: 4 }),
+            "reverse" => return Ok(TemplateKind::Reverse { distractors: 2 }),
+            _ => {}
+        }
+        // Parameterized forms: family prefix + decimal parameter.
+        for (prefix, lo, hi) in [
+            ("motif", 2, 62),
+            ("markovlm", 1, 64),
+            ("modsum", 1, 48),
+            ("bracket", 1, 8),
+            ("kvrecall", 1, 8),
+            ("reverse", 0, 64),
+        ] {
+            let Some(digits) = name.strip_prefix(prefix) else { continue };
+            let Ok(n) = digits.parse::<usize>() else {
+                bail!("bad parameter {digits:?} in template {name:?} (want {prefix}<N>)");
+            };
+            if !(lo..=hi).contains(&n) {
+                bail!("parameter {n} out of range [{lo}, {hi}] for template family {prefix:?}");
+            }
+            return Ok(match prefix {
+                "motif" => TemplateKind::Motif { n_classes: n, noise: motif_noise(n) },
+                "markovlm" => TemplateKind::Markov { branch: n },
+                "modsum" => {
+                    // Historical presets: modsum → (4, 8), modsum6 → (6, 10).
+                    TemplateKind::ModSum { n_terms: n, base: if n <= 4 { 8 } else { 10 } }
+                }
+                "bracket" => TemplateKind::Bracket { pairs: n },
+                "kvrecall" => TemplateKind::KvRecall { n_pairs: n },
+                _ => TemplateKind::Reverse { distractors: n },
+            });
+        }
+        bail!(
+            "unknown task {name:?}; known families: {:?}, parameterized forms \
+             motif<N>/markovlm<N>/modsum<N>/bracket<N>/kvrecall<N>/reverse<N>, \
+             and mixtures like mix:motif4+copy",
+            crate::data::TASK_NAMES
+        )
+    }
+
+    /// Instantiate the template for a geometry and seed, validating that the
+    /// parameters fit (`Err`, not panic, so the CLI can surface it).
+    pub fn build(&self, geom: TaskGeom, seed: u64) -> Result<Box<dyn Task>> {
+        let v = geom.vocab;
+        let s = geom.s;
+        Ok(match &self.kind {
+            TemplateKind::Motif { n_classes, noise } => {
+                let n = *n_classes;
+                if CLS_BASE as usize + n >= v {
+                    bail!("motif{n}: needs vocab > {} for the class tokens, got {v}", 2 + n);
+                }
+                if 16 + n >= v {
+                    bail!("motif{n}: needs vocab > {} for the motif alphabet, got {v}", 16 + n);
+                }
+                Box::new(MotifClass::new(geom, n, *noise, seed))
+            }
+            TemplateKind::Markov { branch } => Box::new(MarkovLm::new(geom, *branch, seed)),
+            TemplateKind::Copy { sorted } => {
+                if s < 4 {
+                    bail!("copy/sort: needs seq_len >= 4, got {s}");
+                }
+                Box::new(CopyTask::new(geom, *sorted, seed))
+            }
+            TemplateKind::ModSum { n_terms, base } => {
+                if *n_terms + 2 > s {
+                    bail!("modsum{n_terms}: needs seq_len >= {}, got {s}", n_terms + 2);
+                }
+                if 16 + *base > v {
+                    bail!("modsum{n_terms}: needs vocab >= {}, got {v}", 16 + base);
+                }
+                Box::new(ModSumTask::new(geom, *n_terms, *base, seed))
+            }
+            TemplateKind::Instruct => Box::new(InstructTask::new(geom, seed)),
+            TemplateKind::Bracket { pairs } => Box::new(BracketTask::new(geom, *pairs, seed)?),
+            TemplateKind::KvRecall { n_pairs } => Box::new(KvRecallTask::new(geom, *n_pairs, seed)?),
+            TemplateKind::Reverse { distractors } => {
+                Box::new(ReverseTask::new(geom, *distractors, seed)?)
+            }
+            TemplateKind::Mixture { parts } => {
+                let mut subs: Vec<Box<dyn Task>> = Vec::with_capacity(parts.len());
+                for (i, p) in parts.iter().enumerate() {
+                    // Decorrelate component streams the way InstructTask does.
+                    subs.push(p.build(geom, seed ^ ((i as u64 + 1) << 8))?);
+                }
+                Box::new(MixtureTask::new(self.name.clone(), subs, seed))
+            }
+        })
+    }
+}
+
+/// The default family set the `evalmatrix` scoreboard runs every strategy
+/// against: all five historical families plus the three new ones and one
+/// mixture (ISSUE 9 acceptance requires ≥ 8).
+pub const MATRIX_FAMILIES: [&str; 11] = [
+    "motif4",
+    "motif8",
+    "markovlm",
+    "copy",
+    "sort",
+    "modsum",
+    "instruct",
+    "bracket",
+    "kvrecall",
+    "reverse",
+    "mix:motif4+copy+modsum",
+];
+
+// ---------------------------------------------------------------------------
+// BracketTask — balanced-bracket acceptability classification
+// ---------------------------------------------------------------------------
+
+/// Token id of the opening bracket of pair type `t` (pairs live at 16+2t /
+/// 17+2t, above the control/class/instruction ranges).
+fn bracket_open(t: usize) -> i32 {
+    (16 + 2 * t) as i32
+}
+
+fn bracket_close(t: usize) -> i32 {
+    (17 + 2 * t) as i32
+}
+
+/// Whether `body` is a balanced bracket sequence over `pairs` pair types
+/// (openers at `16+2t`, closers at `17+2t`).  Non-bracket tokens make the
+/// sequence unbalanced.  Exposed so tests can recheck emitted labels.
+pub fn is_balanced(body: &[i32], pairs: usize) -> bool {
+    let hi = (16 + 2 * pairs) as i32;
+    let mut stack: Vec<i32> = Vec::new();
+    for &tok in body {
+        if !(16..hi).contains(&tok) {
+            return false;
+        }
+        if (tok - 16) % 2 == 0 {
+            stack.push(tok);
+        } else if stack.pop() != Some(tok - 1) {
+            return false;
+        }
+    }
+    stack.is_empty()
+}
+
+/// Binary acceptability: is the bracket string balanced?  Class 0 = balanced,
+/// class 1 = corrupted.  Answer at the final position, MotifClass-style (SEP
+/// input, class-token target, weight 1).
+pub struct BracketTask {
+    geom: TaskGeom,
+    pairs: usize,
+    /// Even-length bracket body occupying columns `0..body`.
+    body: usize,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+impl BracketTask {
+    pub fn new(geom: TaskGeom, pairs: usize, seed: u64) -> Result<Self> {
+        if 16 + 2 * pairs > geom.vocab {
+            bail!("bracket{pairs}: needs vocab >= {}, got {}", 16 + 2 * pairs, geom.vocab);
+        }
+        let body = (geom.s.saturating_sub(2)) & !1;
+        if body < 2 {
+            bail!("bracket{pairs}: needs seq_len >= 4, got {}", geom.s);
+        }
+        let mut t = BracketTask {
+            geom,
+            pairs,
+            body,
+            rng: Pcg32::new(seed, 707),
+            eval: Vec::new(),
+            name: format!("bracket{pairs}"),
+        };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        Ok(t)
+    }
+
+    /// Stack-walk generator: always emits a balanced string of length `body`.
+    fn gen_balanced(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.body);
+        let mut stack: Vec<usize> = Vec::new();
+        while out.len() < self.body {
+            let remaining = self.body - out.len();
+            let must_close = stack.len() == remaining;
+            let must_open = stack.is_empty();
+            if must_open || (!must_close && self.rng.below(2) == 0) {
+                let t = self.rng.below(self.pairs);
+                stack.push(t);
+                out.push(bracket_open(t));
+            } else {
+                let t = stack.pop().unwrap_or(0);
+                out.push(bracket_close(t));
+            }
+        }
+        out
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { b, s, .. } = self.geom;
+        let mut batch = Batch::new(b, s);
+        for row in 0..b {
+            let balanced = self.rng.below(2) == 0;
+            let mut body = self.gen_balanced();
+            if !balanced {
+                // Corrupt one position with a random bracket token; if the
+                // result is (rarely) still balanced, force a leading closer.
+                let i = self.rng.below(self.body);
+                let t = self.rng.below(self.pairs);
+                body[i] = if self.rng.below(2) == 0 { bracket_open(t) } else { bracket_close(t) };
+                if is_balanced(&body, self.pairs) {
+                    body[0] = bracket_close(0);
+                }
+            }
+            for (col, &tok) in body.iter().enumerate() {
+                batch.tokens[row * s + col] = tok;
+            }
+            batch.tokens[row * s + s - 1] = SEP;
+            batch.targets[row * s + s - 1] = CLS_BASE + i32::from(!balanced);
+            batch.weights[row * s + s - 1] = 1.0;
+        }
+        batch
+    }
+}
+
+impl Task for BracketTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KvRecallTask — key-value recall after SEP
+// ---------------------------------------------------------------------------
+
+/// `k₁ v₁ … k_n v_n SEP k_q` → the model must emit `v_q` at the query
+/// position.  Keys come from a small fixed alphabet (16..24) and are distinct
+/// within a row; values come from the open vocab (24..V).
+pub struct KvRecallTask {
+    geom: TaskGeom,
+    n_pairs: usize,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+/// Key alphabet: 8 tokens starting at 16.
+const KV_KEYS: usize = 8;
+const KV_VAL_LO: usize = 16 + KV_KEYS;
+
+impl KvRecallTask {
+    pub fn new(geom: TaskGeom, n_pairs: usize, seed: u64) -> Result<Self> {
+        if !(1..=KV_KEYS).contains(&n_pairs) {
+            bail!("kvrecall{n_pairs}: pair count must be in 1..={KV_KEYS}");
+        }
+        if 2 * n_pairs + 2 > geom.s {
+            bail!("kvrecall{n_pairs}: needs seq_len >= {}, got {}", 2 * n_pairs + 2, geom.s);
+        }
+        if geom.vocab <= KV_VAL_LO {
+            bail!("kvrecall{n_pairs}: needs vocab > {KV_VAL_LO}, got {}", geom.vocab);
+        }
+        let mut t = KvRecallTask {
+            geom,
+            n_pairs,
+            rng: Pcg32::new(seed, 808),
+            eval: Vec::new(),
+            name: format!("kvrecall{n_pairs}"),
+        };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        Ok(t)
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { vocab, b, s } = self.geom;
+        let n = self.n_pairs;
+        let mut batch = Batch::new(b, s);
+        for row in 0..b {
+            let mut keys: Vec<usize> = (0..KV_KEYS).collect();
+            self.rng.shuffle(&mut keys);
+            let mut vals = vec![0i32; n];
+            for (j, val) in vals.iter_mut().enumerate() {
+                let k = (16 + keys[j]) as i32;
+                *val = (KV_VAL_LO + self.rng.below(vocab - KV_VAL_LO)) as i32;
+                batch.tokens[row * s + 2 * j] = k;
+                batch.tokens[row * s + 2 * j + 1] = *val;
+            }
+            batch.tokens[row * s + 2 * n] = SEP;
+            let q = self.rng.below(n);
+            let col = 2 * n + 1;
+            batch.tokens[row * s + col] = (16 + keys[q]) as i32;
+            batch.targets[row * s + col] = vals[q];
+            batch.weights[row * s + col] = 1.0;
+        }
+        batch
+    }
+}
+
+impl Task for KvRecallTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReverseTask — sequence reversal with planted distractors
+// ---------------------------------------------------------------------------
+
+/// The input half holds a payload interleaved with `distractors` tokens from
+/// a reserved alphabet (16..24); after `SEP` the model must emit the payload
+/// *reversed*, skipping the distractors (CopyTask-style next-token
+/// supervision).
+pub struct ReverseTask {
+    geom: TaskGeom,
+    /// Input-half length (payload + distractor slots).
+    src_len: usize,
+    distractors: usize,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+const REV_DISTRACT: usize = 8;
+const REV_PAYLOAD_LO: usize = 16 + REV_DISTRACT;
+
+impl ReverseTask {
+    pub fn new(geom: TaskGeom, distractors: usize, seed: u64) -> Result<Self> {
+        let src_len = (geom.s.saturating_sub(2)) / 2;
+        if distractors + 1 > src_len {
+            bail!(
+                "reverse{distractors}: {distractors} distractors leave no payload in an \
+                 input half of {src_len} (seq_len {})",
+                geom.s
+            );
+        }
+        if geom.vocab <= REV_PAYLOAD_LO {
+            bail!("reverse{distractors}: needs vocab > {REV_PAYLOAD_LO}, got {}", geom.vocab);
+        }
+        let mut t = ReverseTask {
+            geom,
+            src_len,
+            distractors,
+            rng: Pcg32::new(seed, 909),
+            eval: Vec::new(),
+            name: format!("reverse{distractors}"),
+        };
+        t.eval = (0..4).map(|_| t.gen_batch()).collect();
+        Ok(t)
+    }
+
+    fn gen_batch(&mut self) -> Batch {
+        let TaskGeom { vocab, b, s } = self.geom;
+        let l = self.src_len;
+        let mut batch = Batch::new(b, s);
+        for row in 0..b {
+            let mut slots: Vec<usize> = (0..l).collect();
+            self.rng.shuffle(&mut slots);
+            let mut is_distractor = vec![false; l];
+            for &sl in &slots[..self.distractors] {
+                is_distractor[sl] = true;
+            }
+            let mut payload: Vec<i32> = Vec::with_capacity(l - self.distractors);
+            for (col, &d) in is_distractor.iter().enumerate() {
+                let tok = if d {
+                    (16 + self.rng.below(REV_DISTRACT)) as i32
+                } else {
+                    let t = (REV_PAYLOAD_LO + self.rng.below(vocab - REV_PAYLOAD_LO)) as i32;
+                    payload.push(t);
+                    t
+                };
+                batch.tokens[row * s + col] = tok;
+            }
+            batch.tokens[row * s + l] = SEP;
+            let p = payload.len();
+            for j in 0..p {
+                let tok = payload[p - 1 - j];
+                let col = l + 1 + j;
+                batch.tokens[row * s + col] = tok;
+                batch.targets[row * s + col - 1] = tok;
+                batch.weights[row * s + col - 1] = 1.0;
+            }
+        }
+        batch
+    }
+}
+
+impl Task for ReverseTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        self.gen_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MixtureTask — uniform mixture over plain families
+// ---------------------------------------------------------------------------
+
+/// Multi-task stream: each train batch comes from one component, chosen
+/// uniformly by the mixture's own RNG stream; the eval set is the
+/// concatenation of the components' eval sets.  Tracks per-component emit
+/// counts so the forge can report template coverage.
+pub struct MixtureTask {
+    subs: Vec<Box<dyn Task>>,
+    emits: Vec<u64>,
+    rng: Pcg32,
+    eval: Vec<Batch>,
+    name: String,
+}
+
+impl MixtureTask {
+    pub fn new(name: String, subs: Vec<Box<dyn Task>>, seed: u64) -> Self {
+        let mut eval = Vec::new();
+        for sub in &subs {
+            eval.extend(sub.eval_batches().iter().cloned());
+        }
+        let emits = vec![0u64; subs.len()];
+        MixtureTask { subs, emits, rng: Pcg32::new(seed, 606), eval, name }
+    }
+}
+
+impl Task for MixtureTask {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn train_batch(&mut self) -> Batch {
+        let which = self.rng.below(self.subs.len());
+        self.emits[which] += 1;
+        self.subs[which].train_batch()
+    }
+
+    fn eval_batches(&self) -> &[Batch] {
+        &self.eval
+    }
+
+    fn coverage(&self) -> Option<Vec<(String, u64)>> {
+        Some(
+            self.subs
+                .iter()
+                .zip(&self.emits)
+                .map(|(sub, &n)| (sub.name().to_string(), n))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> TaskGeom {
+        TaskGeom::new(64, 4, 16)
+    }
+
+    #[test]
+    fn parse_preserves_historical_presets() {
+        let cases = [
+            ("motif2", TemplateKind::Motif { n_classes: 2, noise: 0.0 }),
+            ("motif4", TemplateKind::Motif { n_classes: 4, noise: 0.0 }),
+            ("motif8", TemplateKind::Motif { n_classes: 8, noise: 0.05 }),
+            ("motif16", TemplateKind::Motif { n_classes: 16, noise: 0.1 }),
+            ("markovlm", TemplateKind::Markov { branch: 2 }),
+            ("markovlm4", TemplateKind::Markov { branch: 4 }),
+            ("copy", TemplateKind::Copy { sorted: false }),
+            ("sort", TemplateKind::Copy { sorted: true }),
+            ("modsum", TemplateKind::ModSum { n_terms: 4, base: 8 }),
+            ("modsum6", TemplateKind::ModSum { n_terms: 6, base: 10 }),
+            ("instruct", TemplateKind::Instruct),
+        ];
+        for (name, want) in cases {
+            assert_eq!(TemplateSpec::parse(name).unwrap().kind, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn parse_new_families_and_mixtures() {
+        assert_eq!(
+            TemplateSpec::parse("bracket").unwrap().kind,
+            TemplateKind::Bracket { pairs: 2 }
+        );
+        assert_eq!(
+            TemplateSpec::parse("kvrecall6").unwrap().kind,
+            TemplateKind::KvRecall { n_pairs: 6 }
+        );
+        assert_eq!(
+            TemplateSpec::parse("reverse3").unwrap().kind,
+            TemplateKind::Reverse { distractors: 3 }
+        );
+        let mix = TemplateSpec::parse("mix:motif4+copy").unwrap();
+        match mix.kind {
+            TemplateKind::Mixture { ref parts } => {
+                assert_eq!(parts.len(), 2);
+                assert_eq!(parts[0].name, "motif4");
+            }
+            other => panic!("expected mixture, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_names() {
+        for bad in ["", "motif", "motif1", "motifx", "bracket9", "mix:", "mix:motif4",
+            "mix:motif4+", "mix:motif4+mix:copy+sort", "kvrecall0", "nope"]
+        {
+            assert!(TemplateSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn build_rejects_impossible_geometry() {
+        // 14 kv pairs can never fit in seq_len 16 — and can't even parse (cap 8).
+        assert!(TemplateSpec::parse("kvrecall14").is_err());
+        // 7 distractors leave no payload in an input half of 7.
+        let spec = TemplateSpec::parse("reverse7").unwrap();
+        assert!(spec.build(geom(), 3).is_err());
+        // motif with more classes than the vocab can host.
+        let spec = TemplateSpec::parse("motif60").unwrap();
+        assert!(spec.build(geom(), 3).is_err());
+    }
+
+    #[test]
+    fn bracket_labels_match_balance() {
+        let mut t = BracketTask::new(geom(), 2, 11).unwrap();
+        let mut saw = [false; 2];
+        for _ in 0..8 {
+            let b = t.train_batch();
+            for row in 0..b.b {
+                let body: Vec<i32> = (0..t.body).map(|c| b.tokens[row * b.s + c]).collect();
+                let class = (b.targets[row * b.s + b.s - 1] - CLS_BASE) as usize;
+                assert_eq!(is_balanced(&body, 2), class == 0);
+                saw[class] = true;
+            }
+        }
+        assert!(saw[0] && saw[1], "both classes appear");
+    }
+
+    #[test]
+    fn kvrecall_answer_is_the_queried_value() {
+        let n = 4;
+        let mut t = KvRecallTask::new(geom(), n, 11).unwrap();
+        let b = t.train_batch();
+        for row in 0..b.b {
+            let base = row * b.s;
+            assert_eq!(b.tokens[base + 2 * n], SEP);
+            let query = b.tokens[base + 2 * n + 1];
+            let answer = b.targets[base + 2 * n + 1];
+            assert_eq!(b.weights[base + 2 * n + 1], 1.0);
+            let mut found = 0;
+            for j in 0..n {
+                if b.tokens[base + 2 * j] == query {
+                    assert_eq!(b.tokens[base + 2 * j + 1], answer, "value of the queried key");
+                    found += 1;
+                }
+            }
+            assert_eq!(found, 1, "keys are distinct and the query names one of them");
+        }
+    }
+
+    #[test]
+    fn reverse_targets_are_reversed_payload() {
+        let d = 2;
+        let mut t = ReverseTask::new(geom(), d, 11).unwrap();
+        let b = t.train_batch();
+        let l = (16 - 2) / 2;
+        for row in 0..b.b {
+            let base = row * b.s;
+            assert_eq!(b.tokens[base + l], SEP);
+            let payload: Vec<i32> = (0..l)
+                .map(|c| b.tokens[base + c])
+                .filter(|&tok| tok >= REV_PAYLOAD_LO as i32)
+                .collect();
+            assert_eq!(payload.len(), l - d);
+            let out: Vec<i32> = (l..l + payload.len()).map(|c| b.targets[base + c]).collect();
+            let mut rev = payload.clone();
+            rev.reverse();
+            assert_eq!(out, rev, "supervised output is the reversed payload");
+        }
+    }
+
+    #[test]
+    fn mixture_tracks_component_coverage() {
+        let spec = TemplateSpec::parse("mix:motif4+copy+modsum").unwrap();
+        let mut t = spec.build(geom(), 5).unwrap();
+        for _ in 0..30 {
+            let _ = t.train_batch();
+        }
+        let cov = t.coverage().expect("mixture reports coverage");
+        assert_eq!(cov.len(), 3);
+        let mut total = 0u64;
+        for &(_, n) in &cov {
+            assert!(n > 0, "every component drawn at least once in 30 batches");
+            total += n;
+        }
+        assert_eq!(total, 30);
+    }
+
+    #[test]
+    fn matrix_families_all_parse_and_build() {
+        assert!(MATRIX_FAMILIES.len() >= 8);
+        for name in MATRIX_FAMILIES {
+            let spec = TemplateSpec::parse(name).unwrap();
+            let mut t = spec.build(geom(), 7).unwrap();
+            let b = t.train_batch();
+            assert!(b.validate().is_ok(), "{name}");
+            assert!(!t.eval_batches().is_empty(), "{name}");
+        }
+    }
+}

@@ -140,6 +140,11 @@ impl From<i64> for Value {
         Value::Num(n as f64)
     }
 }
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
 impl From<bool> for Value {
     fn from(b: bool) -> Self {
         Value::Bool(b)

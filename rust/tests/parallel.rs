@@ -19,7 +19,10 @@
 //!   and staged prefetch page-ins post once per group transition, never
 //!   once per worker;
 //! * the shard helpers (`split_rows`, `batch_denom`, `tree_fold`) hold
-//!   their documented contracts.
+//!   their documented contracts;
+//! * the task forge's stream statistics (ISSUE 9) are bit-identical
+//!   across worker counts — the batch stream and its dedup/diversity
+//!   accounting live above the sharding seam.
 
 use hift::backend::shard::{batch_denom, split_rows, tree_fold, tree_fold_stats};
 use hift::backend::{
@@ -220,6 +223,20 @@ fn sharded_training_lands_on_identical_params() {
     assert_eq!(rec2.workers, 2, "RunRecord must surface the worker count");
     let json = hift::ser::emit_pretty(&rec2.to_json());
     assert!(json.contains("workers"), "RunRecord JSON must surface workers");
+}
+
+#[test]
+fn forge_stream_stats_are_identical_across_worker_counts() {
+    let steps = 6u64;
+    let (rec1, _) = train_tiny_hift(1, steps);
+    let (rec2, _) = train_tiny_hift(2, steps);
+    assert_eq!(
+        rec1.diversity, rec2.diversity,
+        "dedup/diversity accounting must not depend on the worker count"
+    );
+    let d = rec1.diversity.expect("forge-built tasks record stream stats");
+    assert_eq!(d.batches_emitted, steps, "one emitted batch per step");
+    assert!(d.ngrams_total > 0);
 }
 
 #[test]

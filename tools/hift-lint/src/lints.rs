@@ -97,6 +97,7 @@ fn d2_in_scope(rel: &str) -> bool {
     rel.contains("/backend/")
         || rel.contains("/optim/")
         || rel.contains("/ser/")
+        || rel.contains("/data/")
         || rel.ends_with("tensor/paged.rs")
 }
 
@@ -470,6 +471,17 @@ mod tests {
         assert_eq!(fs.len(), 1, "{fs:?}");
         assert_eq!(fs[0].lint, "hash-iteration");
         assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn d2_covers_the_data_forge() {
+        let src = "use std::collections::HashSet;\nfn f(seen: &HashSet<u64>) {\n    for h in seen {\n        let _ = h;\n    }\n}\n";
+        let fs = lint("rust/src/data/quality.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].lint, "hash-iteration");
+        // BTreeMap iteration (the forge's label histogram) stays clean.
+        let ordered = "use std::collections::BTreeMap;\nfn g(m: &BTreeMap<i32, u64>) {\n    for (k, v) in m {\n        let _ = (k, v);\n    }\n}\n";
+        assert!(lint("rust/src/data/quality.rs", ordered).is_empty());
     }
 
     #[test]
