@@ -560,6 +560,20 @@ impl NativeBackend {
     pub fn offload_counters(&self) -> Option<crate::tensor::paged::OffloadCounters> {
         self.pager.as_ref().map(|p| p.counters())
     }
+
+    /// Record the paging tier's steady-state [`PageEvent`] stream (the
+    /// `plancheck` cross-validation seam).  No-op when offload is off.
+    pub fn set_offload_tracing(&mut self, on: bool) {
+        if let Some(pg) = self.pager.as_mut() {
+            pg.set_tracing(on);
+        }
+    }
+
+    /// Drain the recorded paging events (empty when offload or tracing is
+    /// off).
+    pub fn take_offload_trace(&mut self) -> Vec<crate::tensor::paged::PageEvent> {
+        self.pager.as_mut().map(|pg| pg.take_trace()).unwrap_or_default()
+    }
 }
 
 /// Unit → parameter-index map for `variant` (managed tensors only: every

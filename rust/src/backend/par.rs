@@ -585,6 +585,35 @@ mod tests {
         drop(w);
     }
 
+    /// Mutation test for the lease-balance contract: hand-build guards that
+    /// release more than was ever charged — the double-release / spurious
+    /// worker-exit mutants — and assert the drop guards kill them by name.
+    #[test]
+    #[cfg(feature = "contracts")]
+    fn unbalanced_release_is_caught() {
+        if !crate::contracts::enabled() {
+            return; // HIFT_CHECK=0 disarms the drop guards
+        }
+        let panic_message = |f: Box<dyn FnOnce() + Send>| -> String {
+            let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+                .expect_err("the unbalanced release must not pass");
+            p.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default()
+        };
+        let fresh = ThreadBudget::new(8);
+        let msg = panic_message(Box::new(move || {
+            drop(Lease { budget: &fresh, extra: 3 });
+        }));
+        assert!(msg.contains("ThreadBudget lease imbalance"), "{msg}");
+        let fresh = ThreadBudget::new(8);
+        let msg = panic_message(Box::new(move || {
+            drop(WorkerSlot { budget: &fresh });
+        }));
+        assert!(msg.contains("worker slot released with nothing in flight"), "{msg}");
+    }
+
     #[test]
     fn par_items_assign_disjoint_slices() {
         let mut a = vec![0.0f32; 6 * 3];

@@ -27,6 +27,9 @@
 //!             [--kernels K] [--offload host] [--workers N]
 //! hift evalmatrix [--preset P] [--artifacts DIR] [--precision P] [--kernels K]
 //!             [--workers N]   (alias for `hift bench evalmatrix`)
+//! hift plancheck [--preset tiny] [--steps N] [--out runs/plancheck.json]
+//!             [--inject none|drop-evict|evict-pinned|prefetch-pinned
+//!              |swap-emits|hoard-grads]
 //! ```
 //!
 //! `docs/CLI.md` documents every flag and `HIFT_*` environment variable;
@@ -62,7 +65,7 @@ use crate::ser::emit_pretty;
 use crate::strategies::{StrategySpec, STRATEGY_NAMES};
 use crate::tensor::checkpoint;
 
-const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench|evalmatrix> [flags]
+const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench|evalmatrix|plancheck> [flags]
   backends: --preset tiny|small|base|e2e|e2e100m (native CPU, default)
             --artifacts DIR (PJRT; needs the `pjrt` cargo feature)
 
@@ -87,6 +90,12 @@ const USAGE: &str = "usage: hift <train|eval|memory-report|info|bench|evalmatrix
   evalmatrix  every strategy x every task family on the current preset;
          writes the runs/evalmatrix.json scoreboard (alias for
          `hift bench evalmatrix`; same flags as bench)
+  plancheck  statically verify the full config lattice (strategy x m x
+         act-ckpt x offload x prefetch x precision x workers): derive
+         every step plan symbolically and prove the residency/ordering
+         invariants; writes the runs/plancheck.json proof artifact
+         (--steps N overrides the 2-sweep default; --inject KIND seeds a
+         deliberate violation the verifier must catch)
 
   env: HIFT_PRESET HIFT_ARTIFACTS HIFT_SEED HIFT_ACT_CKPT HIFT_PRECISION
        HIFT_KERNELS HIFT_OFFLOAD HIFT_OFFLOAD_COMPRESS HIFT_PREFETCH
@@ -109,6 +118,7 @@ pub fn main_entry() -> Result<()> {
         "info" => cmd_info(&args),
         "bench" => cmd_bench(&args),
         "evalmatrix" => cmd_evalmatrix(&args),
+        "plancheck" => cmd_plancheck(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -136,7 +146,26 @@ fn offload_from(a: &Args) -> Result<OffloadCfg> {
     )
 }
 
+/// Count flags where `0` is always a configuration error, never a value:
+/// `--workers 0` would mean no execution, `--m 0` an empty group, and
+/// `--save-every 0` used to be silently conflated with "flag unset".
+/// Rejected here — before any backend is built — with the flag named, and
+/// non-numeric values rejected too instead of being dropped on the floor.
+fn reject_zero_count(a: &Args, flag: &str, why: &str) -> Result<()> {
+    let Some(raw) = a.get(flag) else { return Ok(()) };
+    let n = a
+        .get_num(flag)
+        .with_context(|| format!("--{flag} wants a number, got {raw:?}"))?;
+    if n < 1.0 {
+        bail!("--{flag} must be >= 1 ({why}); got {raw}");
+    }
+    Ok(())
+}
+
 fn cmd_train(a: &Args) -> Result<()> {
+    reject_zero_count(a, "workers", "1 = the plain serial walk")?;
+    reject_zero_count(a, "m", "one unit per step is the finest schedule")?;
+    reject_zero_count(a, "save-every", "omit the flag to disable periodic checkpoints")?;
     let strategy_name = a.get("strategy").unwrap_or("hift");
     let task_name = a.get("task").unwrap_or("motif4");
     let steps: u64 = a.get_num("steps").unwrap_or(200.0) as u64;
@@ -262,6 +291,7 @@ fn cmd_train(a: &Args) -> Result<()> {
 }
 
 fn cmd_eval(a: &Args) -> Result<()> {
+    reject_zero_count(a, "workers", "1 = the plain serial walk")?;
     let variant = a.get("variant").unwrap_or("base");
     let task_name = a.get("task").unwrap_or("motif4");
     let seed = a.get_num("seed").unwrap_or(0.0) as u64;
@@ -472,5 +502,98 @@ fn cmd_bench(a: &Args) -> Result<()> {
         Ok(())
     } else {
         run(&mut b, which)
+    }
+}
+
+/// `hift plancheck` — statically verify the full configuration lattice and
+/// write the machine-readable proof artifact.  Exits non-zero if any valid
+/// point violates a rule (or any mutually-exclusive point is not rejected),
+/// which is what makes `cargo xtask plancheck` a CI gate.
+fn cmd_plancheck(a: &Args) -> Result<()> {
+    let seed = a.get_num("seed").unwrap_or(0.0) as u64;
+    let be = backend_from(a, seed)?;
+    let inject = match a.get("inject") {
+        Some(s) => crate::plancheck::Inject::parse(s)?,
+        None => crate::plancheck::Inject::None,
+    };
+    reject_zero_count(a, "steps", "a plan needs at least one step")?;
+    let steps = a.get_num("steps").map(|n| n as u64);
+    let report = crate::plancheck::check_lattice(be.manifest(), inject, steps)?;
+    let out = a.get("out").unwrap_or("runs/plancheck.json");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, emit_pretty(&crate::plancheck::report_json(&report)))?;
+    let total_checks: u64 = report.checks.values().sum();
+    eprintln!(
+        "plancheck [{}] inject={}: {} configs ({} verified, {} rejected-invalid, {} failed), \
+         {} rule checks across {} rules; wrote {out}",
+        report.preset,
+        report.inject.name(),
+        report.points.len(),
+        report.verified,
+        report.rejected,
+        report.failed,
+        total_checks,
+        report.checks.len(),
+    );
+    if !report.ok() {
+        for p in report.points.iter().filter(|p| !p.violations.is_empty()).take(5) {
+            for v in p.violations.iter().take(3) {
+                eprintln!("  {} step {}: [{}] {}", p.point.name(), v.step, v.rule, v.detail);
+            }
+        }
+        bail!("plancheck failed: {} of {} configs violated a rule", report.failed,
+              report.points.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn workers_zero_is_rejected_by_name() {
+        let err = cmd_train(&args(&["--workers", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--workers"), "error must name the flag: {err}");
+        assert!(err.contains(">= 1"), "error must state the bound: {err}");
+        let err = cmd_eval(&args(&["--workers", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--workers"), "eval too: {err}");
+    }
+
+    #[test]
+    fn m_zero_is_rejected_by_name() {
+        let err = cmd_train(&args(&["--m", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--m"), "error must name the flag: {err}");
+        assert!(err.contains(">= 1"), "error must state the bound: {err}");
+    }
+
+    #[test]
+    fn save_every_zero_is_rejected_by_name() {
+        let err = cmd_train(&args(&["--save-every", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--save-every"), "error must name the flag: {err}");
+        assert!(err.contains("omit the flag"), "error must point at the fix: {err}");
+    }
+
+    #[test]
+    fn non_numeric_counts_are_rejected_not_ignored() {
+        let err = cmd_train(&args(&["--workers", "two"])).unwrap_err().to_string();
+        assert!(err.contains("--workers"), "error must name the flag: {err}");
+        assert!(err.contains("number"), "error must say what it wants: {err}");
+    }
+
+    #[test]
+    fn unset_counts_still_default() {
+        // The guard only fires on explicit values; the defaults (workers 1,
+        // m 1, save-every disabled) are untouched.
+        assert!(reject_zero_count(&args(&[]), "workers", "x").is_ok());
+        assert!(reject_zero_count(&args(&["--workers", "4"]), "workers", "x").is_ok());
     }
 }

@@ -86,6 +86,7 @@
 //! | [`bench`] | table/figure harnesses shared by `cargo bench` targets |
 //! | [`proptest`] | minimal property-testing harness (offline substitute) |
 //! | [`contracts`] | runtime contract checks (`contracts` feature / `HIFT_CHECK`): emission order, ledger conservation, lease balance — the dynamic half of `cargo xtask lint` (see `docs/CONTRACTS.md`) |
+//! | [`plancheck`] | static schedule & memory-model verifier: derives every config's full step plan symbolically and proves the residency/ordering claims over the whole lattice (`hift plancheck`, `cargo xtask plancheck`) |
 
 // Portable SIMD is still nightly-gated; the `simd` cargo feature opts in
 // (see `backend::kernels` — scalar blocked kernels compile without it).
@@ -100,6 +101,7 @@ pub mod data;
 pub mod memmodel;
 pub mod metrics;
 pub mod optim;
+pub mod plancheck;
 pub mod proptest;
 pub mod rng;
 #[cfg(feature = "pjrt")]

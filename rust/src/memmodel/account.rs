@@ -143,15 +143,15 @@ fn state_bytes(shapes: &[&[usize]], opt: OptimKind) -> f64 {
             OptimKind::AdamW => 8.0 * n as f64,
             OptimKind::Sgdm | OptimKind::Adagrad => 4.0 * n as f64,
             OptimKind::Sgd => 0.0,
-            OptimKind::Adafactor => {
-                if shape.len() >= 2 {
-                    let cols = *shape.last().unwrap();
+            OptimKind::Adafactor => match shape.last() {
+                // Factored moments for matrices: one row vector + one
+                // column vector per tensor.
+                Some(&cols) if shape.len() >= 2 && cols > 0 => {
                     let rows = n / cols;
                     4.0 * (rows + cols) as f64
-                } else {
-                    4.0 * n as f64
                 }
-            }
+                _ => 4.0 * n as f64,
+            },
         };
     }
     total
@@ -475,6 +475,37 @@ pub fn paged_param_bound(arch: &Arch, m: usize, slots: usize) -> f64 {
     let group = arch.peak_group_params(m);
     let unit = arch.unit_sizes().into_iter().max().unwrap_or(0);
     4.0 * (group + slots * unit) as f64
+}
+
+/// Schedule-aware byte-level form of [`paged_param_bound`]: the enforced
+/// residency bound computed from the *actual* per-step groups a scheduler
+/// plans rather than the contiguous index chunks `peak_group_params`
+/// assumes (Top2Down/Random groups are chunks of a permuted unit order, so
+/// the chunked formula does not bound them).
+///
+/// `schedule` is one `(group, staged)` pair of unit-index lists per step —
+/// `staged` empty in sync mode (staged units become arena-resident once the
+/// walk ensures them and survive the end-of-run eviction, so a prefetch-mode
+/// step co-holds the next group too).  `walk_slots` is the number of
+/// transient non-group walk units co-held at the peak: 1 for the plain
+/// walk, 2 under an activation-checkpointing policy (the outer backward
+/// unit plus one unit of the recompute chain).  This is the bound
+/// `plancheck` proves every lattice point's simulated peak stays under, and
+/// `tests/offload.rs` asserts the measured peaks against the same shape.
+pub fn paged_param_bound_bytes(
+    unit_bytes: &[u64],
+    schedule: &[(Vec<usize>, Vec<usize>)],
+    walk_slots: usize,
+) -> u64 {
+    let sum = |units: &[usize]| units.iter().map(|&u| unit_bytes.get(u).copied().unwrap_or(0));
+    let max_unit = unit_bytes.iter().copied().max().unwrap_or(0);
+    let per_step = schedule.iter().map(|(group, staged)| {
+        // A unit both active and staged is one residency, not two.
+        let staged_extra: u64 =
+            sum(staged).zip(staged).filter(|(_, u)| !group.contains(u)).map(|(b, _)| b).sum();
+        sum(group).sum::<u64>() + staged_extra
+    });
+    per_step.max().unwrap_or(0) + walk_slots as u64 * max_unit
 }
 
 /// Host-tier footprint bound of the paged masters: everything but the

@@ -41,7 +41,7 @@ impl Adafactor {
         if shape.len() < 2 {
             return None;
         }
-        let cols = *shape.last().unwrap();
+        let cols = *shape.last()?;
         let rows = shape.iter().rev().skip(1).product();
         Some((rows, cols))
     }

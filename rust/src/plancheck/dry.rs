@@ -1,0 +1,457 @@
+//! Side-effect-free "dry" twins of the runtime state machines.
+//!
+//! `plancheck` derives a full step plan — paging events, parameter reads,
+//! gradient emits — without touching a single float.  To do that it replays
+//! the *decision logic* of the real components over shapes and byte counts:
+//!
+//! * [`DryPager`] mirrors `tensor::paged::UnitPager` bit-for-bit at the
+//!   policy level (managed / resident / pinned / keep / requested flags,
+//!   admit/evict/prefetch ordering) but holds no tensor data.
+//! * [`generate_plan`] mirrors the streamed execution walk: the call order
+//!   in `Hift::step` (schedule → stage next group → run), the forward walk
+//!   in `model::forward_ckpt` (ensure/prefetch/release per unit, activation
+//!   caching policy), and the backward walk in `model::backward_streamed`
+//!   (head phase, recompute chains, manifest-order emits, descent
+//!   truncation at `min_unit`).
+//!
+//! The generator also hosts the fault-injection knobs ([`Inject`]): each
+//! knob makes the *generator* misbehave in a specific way so the
+//! independent verifier in the parent module can prove it still catches
+//! the corruption.  Injection never touches the verifier.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::backend::manifest::Manifest;
+use crate::backend::ActCkpt;
+use crate::coordinator::scheduler::{HiftScheduler, SchedulerCfg};
+use crate::coordinator::LrSchedule;
+use crate::tensor::paged::PageEvent;
+
+use super::{Inject, LatticePoint, Plan, PlanStep, TraceOp};
+
+/// Shapes-only view of one model variant: per-parameter byte counts plus
+/// the unit layout the pager and emit checker operate on.
+pub(crate) struct SymModel {
+    pub n_layers: usize,
+    pub n_units: usize,
+    /// Parameter indices of each layer unit, in manifest order.
+    pub unit_params: Vec<Vec<usize>>,
+    /// f32 bytes of each parameter tensor.
+    pub param_bytes: Vec<u64>,
+    /// f32 bytes of each layer unit (sum over its parameters).
+    pub unit_bytes: Vec<u64>,
+}
+
+impl SymModel {
+    pub fn new(manifest: &Manifest) -> Result<SymModel> {
+        let vinfo = manifest.variant("base")?;
+        let n_units = manifest.n_units;
+        if n_units < 3 {
+            bail!("plancheck needs embeddings + >=1 block + head, got {n_units} units");
+        }
+        let unit_params: Vec<Vec<usize>> =
+            (0..n_units).map(|u| vinfo.unit_indices(u)).collect();
+        let param_bytes: Vec<u64> =
+            vinfo.params.iter().map(|p| p.size as u64 * 4).collect();
+        let unit_bytes = manifest.unit_param_bytes("base")?;
+        Ok(SymModel { n_layers: n_units - 2, n_units, unit_params, param_bytes, unit_bytes })
+    }
+}
+
+/// Symbolic twin of `UnitPager`.  Same flag lattice, same event ordering,
+/// no data.  When `enabled` is false every method is a no-op — mirroring a
+/// run with offload off (or `workers > 1`, where the backend refuses to
+/// combine paging with sharded execution).
+pub(crate) struct DryPager {
+    enabled: bool,
+    prefetch: bool,
+    attached: bool,
+    managed: Vec<bool>,
+    resident: Vec<bool>,
+    pinned: Vec<bool>,
+    keep: Vec<bool>,
+    requested: Vec<bool>,
+    inject: Inject,
+    /// One-shot injections (DropEvict) fire exactly once.
+    fired: bool,
+}
+
+impl DryPager {
+    pub fn new(point: &LatticePoint, inject: Inject) -> DryPager {
+        // The real backend rejects offload × workers>1; a plan for such a
+        // point is never generated (validate_point bails first), but the
+        // guard keeps the twin honest if called directly.
+        let enabled = point.offload.enabled && point.workers <= 1;
+        DryPager {
+            enabled,
+            prefetch: point.offload.prefetch,
+            attached: false,
+            managed: Vec::new(),
+            resident: Vec::new(),
+            pinned: Vec::new(),
+            keep: Vec::new(),
+            requested: Vec::new(),
+            inject,
+            fired: false,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Mirror of `UnitPager::attach`: unit-mapped tensors move to host
+    /// (initial placement — not a steady-state event, so nothing is
+    /// recorded), everything else stays resident.
+    pub fn attach(&mut self, model: &SymModel) {
+        if !self.enabled {
+            return;
+        }
+        let n = model.param_bytes.len();
+        self.managed = vec![false; n];
+        self.resident = vec![true; n];
+        self.pinned = vec![false; n];
+        self.keep = vec![false; n];
+        self.requested = vec![false; n];
+        for idxs in &model.unit_params {
+            for &i in idxs {
+                self.managed[i] = true;
+                self.resident[i] = false;
+            }
+        }
+        self.attached = true;
+    }
+
+    pub fn pin_unit(&mut self, model: &SymModel, u: usize) {
+        if !self.enabled || !self.attached {
+            return;
+        }
+        for &i in &model.unit_params[u] {
+            self.pinned[i] = true;
+        }
+    }
+
+    pub fn clear_pins(&mut self) {
+        if self.enabled {
+            self.pinned.iter_mut().for_each(|p| *p = false);
+        }
+    }
+
+    pub fn clear_staged(&mut self) {
+        if self.enabled {
+            self.keep.iter_mut().for_each(|k| *k = false);
+        }
+    }
+
+    /// Mirror of `stage_unit`: prefetch mode only — pre-attach (step 1,
+    /// before the first `run_group_streamed`) this is a silent no-op, which
+    /// is exactly why the verifier treats the first step's staged set as
+    /// empty.
+    pub fn stage_unit(&mut self, model: &SymModel, u: usize, ops: &mut Vec<TraceOp>) {
+        if !self.enabled || !self.attached || !self.prefetch {
+            return;
+        }
+        for &i in &model.unit_params[u] {
+            self.keep[i] = true;
+        }
+        self.prefetch_unit(model, u, ops);
+    }
+
+    pub fn prefetch_unit(&mut self, model: &SymModel, u: usize, ops: &mut Vec<TraceOp>) {
+        if !self.enabled || !self.attached || !self.prefetch {
+            return;
+        }
+        for &i in &model.unit_params[u] {
+            if !self.resident[i] && !self.requested[i] {
+                self.requested[i] = true;
+                ops.push(TraceOp::Page(PageEvent::Prefetch { idx: i }));
+            }
+        }
+    }
+
+    pub fn ensure_unit(&mut self, model: &SymModel, u: usize, ops: &mut Vec<TraceOp>) {
+        if !self.enabled || !self.attached {
+            return;
+        }
+        for &i in &model.unit_params[u] {
+            if !self.resident[i] {
+                self.resident[i] = true;
+                self.requested[i] = false;
+                ops.push(TraceOp::Page(PageEvent::Admit { idx: i }));
+            }
+        }
+    }
+
+    pub fn release_unit(&mut self, model: &SymModel, u: usize, ops: &mut Vec<TraceOp>) {
+        if !self.enabled || !self.attached {
+            return;
+        }
+        for &i in &model.unit_params[u] {
+            let pinned = self.pinned[i] && self.inject != Inject::EvictPinned;
+            if self.resident[i] && !pinned && !self.keep[i] {
+                self.evict(i, ops);
+            }
+        }
+    }
+
+    /// Mirror of `end_run`: drop pins, then page out everything managed
+    /// that is not staged for the next group.  The [`TraceOp::EndRun`]
+    /// marker records where the pins lift, so the verifier can tell these
+    /// legitimate post-update evictions from a mid-walk evict of a pinned
+    /// master.
+    pub fn end_run(&mut self, _model: &SymModel, ops: &mut Vec<TraceOp>) {
+        if !self.enabled || !self.attached {
+            return;
+        }
+        ops.push(TraceOp::EndRun);
+        self.clear_pins();
+        // Global index order, exactly like the real `end_run` loop.
+        for i in 0..self.resident.len() {
+            if self.managed[i] && self.resident[i] && !self.keep[i] {
+                self.evict(i, ops);
+            }
+        }
+    }
+
+    fn evict(&mut self, idx: usize, ops: &mut Vec<TraceOp>) {
+        self.resident[idx] = false;
+        if self.inject == Inject::DropEvict && !self.fired {
+            // Corrupt plan: the page-out happened but the event vanished
+            // from the trace.  The verifier must notice the ledger no
+            // longer conserves bytes.
+            self.fired = true;
+            return;
+        }
+        ops.push(TraceOp::Page(PageEvent::Evict { idx }));
+    }
+}
+
+/// Activation-cache bookkeeping of the forward walk: which layer inputs
+/// were kept live (`layers`) vs parked at checkpoint boundaries
+/// (`boundaries`) — determines the recompute chains the backward walk runs.
+struct CacheState {
+    layers: Vec<bool>,
+    boundaries: Vec<bool>,
+}
+
+/// Derive the full static plan for one lattice point.
+///
+/// Replays `HiftScheduler` for the real unit schedule, then for each step
+/// mirrors `Hift::step` + `NativeBackend::exec_streamed`: stage the *next*
+/// group (peeked after `next()`, exactly like the strategy does), pin the
+/// current group, run the forward/backward walk, page out at end-of-run.
+pub(crate) fn generate_plan(
+    manifest: &Manifest,
+    point: &LatticePoint,
+    n_steps: u64,
+    inject: Inject,
+) -> Result<Plan> {
+    let model = SymModel::new(manifest)?;
+    let mut sched = HiftScheduler::new(
+        SchedulerCfg {
+            m: point.m,
+            strategy: point.strategy,
+            schedule: LrSchedule::Const { lr: super::PLAN_LR },
+        },
+        model.n_units,
+    );
+    let mut pager = DryPager::new(point, inject);
+    let mut steps = Vec::with_capacity(n_steps as usize);
+
+    for _ in 0..n_steps {
+        let plan = sched.next();
+        let staged = sched.peek_next();
+        let mut ops = Vec::new();
+
+        // `Hift::step` calls `prefetch_units` (stage) before the group
+        // runs; on the very first step the pager is not attached yet, so
+        // staging silently does nothing — mirrored by the attach check
+        // inside stage_unit.
+        pager.clear_staged();
+        for &u in &staged {
+            pager.stage_unit(&model, u, &mut ops);
+        }
+        if !pager.attached {
+            pager.attach(&model);
+        }
+
+        pager.clear_pins();
+        for &u in &plan.units {
+            pager.pin_unit(&model, u);
+        }
+
+        // Slot map: `run_group_streamed` numbers slots over the group's
+        // parameters in group order.
+        let mut slot_of: HashMap<usize, usize> = HashMap::new();
+        for &u in &plan.units {
+            for &i in &model.unit_params[u] {
+                let slot = slot_of.len();
+                slot_of.insert(i, slot);
+            }
+        }
+        let min_unit = plan.units.iter().copied().min().unwrap_or(0);
+        let emit: Vec<bool> =
+            (0..model.n_units).map(|u| plan.units.contains(&u)).collect();
+
+        let cache = walk_forward(&model, &mut pager, point.act_ckpt, &mut ops);
+        walk_backward(&model, &mut pager, &emit, min_unit, cache, &slot_of, &mut ops);
+        if inject == Inject::PrefetchPinned && pager.enabled() {
+            // Corrupt plan: post an async fetch for a master that is
+            // resident and pinned under the fused in-place update (the walk
+            // just finished, so the group is exactly that).
+            if let Some(&idx) = plan.units.first().and_then(|&u| model.unit_params[u].first()) {
+                ops.push(TraceOp::Page(PageEvent::Prefetch { idx }));
+            }
+        }
+        pager.end_run(&model, &mut ops);
+
+        if inject == Inject::SwapEmits {
+            let emits: Vec<usize> = ops
+                .iter()
+                .enumerate()
+                .filter(|(_, op)| matches!(op, TraceOp::Emit { .. }))
+                .map(|(i, _)| i)
+                .take(2)
+                .collect();
+            if let [a, b] = emits[..] {
+                ops.swap(a, b);
+            }
+        }
+
+        steps.push(PlanStep {
+            step: plan.step,
+            units: plan.units,
+            staged,
+            lr: plan.lr,
+            sweep_boundary: plan.sweep_boundary,
+            ops,
+        });
+    }
+
+    Ok(Plan {
+        deferred: point.precision.needs_loss_scaling() || inject == Inject::HoardGrads,
+        steps,
+    })
+}
+
+/// Mirror of `model::forward_ckpt`'s unit walk: embeddings, each block with
+/// next-unit prefetch, then the head — which *stays resident* for the
+/// backward head phase (the real walk performs no ensure there).
+fn walk_forward(
+    model: &SymModel,
+    pg: &mut DryPager,
+    policy: ActCkpt,
+    ops: &mut Vec<TraceOp>,
+) -> CacheState {
+    let l = model.n_layers;
+    pg.ensure_unit(model, 0, ops);
+    pg.prefetch_unit(model, 1, ops);
+    ops.push(TraceOp::Read { unit: 0 });
+    pg.release_unit(model, 0, ops);
+
+    let seg = policy.seg_len(l);
+    let mut layers = vec![false; l];
+    let mut boundaries = vec![false; l];
+    for i in 0..l {
+        pg.ensure_unit(model, i + 1, ops);
+        let next = if i + 2 <= l { i + 2 } else { l + 1 };
+        pg.prefetch_unit(model, next, ops);
+        ops.push(TraceOp::Read { unit: i + 1 });
+        pg.release_unit(model, i + 1, ops);
+        match seg {
+            None => layers[i] = true,
+            Some(k) => boundaries[i] = i % k == 0,
+        }
+    }
+    pg.ensure_unit(model, l + 1, ops);
+    CacheState { layers, boundaries }
+}
+
+/// Mirror of `model::backward_streamed`: head phase (reads the head the
+/// forward left resident, emits in manifest order, releases), reverse block
+/// walk with recompute chains and descent truncation at `min_unit`, then
+/// the embedding emits — which perform no ensure: unit 0 is resident only
+/// because the group pin held it through the walk.
+fn walk_backward(
+    model: &SymModel,
+    pg: &mut DryPager,
+    emit: &[bool],
+    min_unit: usize,
+    cache: CacheState,
+    slot_of: &HashMap<usize, usize>,
+    ops: &mut Vec<TraceOp>,
+) {
+    let l = model.n_layers;
+    let head = l + 1;
+    ops.push(TraceOp::Read { unit: head });
+    if emit[head] {
+        emit_unit(model, head, slot_of, ops);
+    }
+    pg.release_unit(model, head, ops);
+
+    let mut scratch = vec![false; l];
+    for i in (0..l).rev() {
+        if i + 1 < min_unit {
+            // Descent truncation: every unit below the group's floor is
+            // frozen this step, so the real walk returns early.
+            return;
+        }
+        pg.ensure_unit(model, i + 1, ops);
+        if i > 0 {
+            pg.prefetch_unit(model, i, ops);
+        }
+        if !cache.layers[i] && !scratch[i] {
+            recompute_chain(model, pg, &cache, &mut scratch, i, ops);
+        }
+        scratch[i] = false; // the input is consumed by this layer's backward
+        ops.push(TraceOp::Read { unit: i + 1 });
+        if emit[i + 1] {
+            emit_unit(model, i + 1, slot_of, ops);
+        }
+        pg.release_unit(model, i + 1, ops);
+    }
+    if emit[0] {
+        emit_unit(model, 0, slot_of, ops);
+    }
+}
+
+/// Mirror of `model::recompute_layer`: walk back to the nearest parked
+/// activation (checkpoint boundary or scratch), then re-run the segment
+/// forward, parking intermediate inputs in scratch for the layers below.
+fn recompute_chain(
+    model: &SymModel,
+    pg: &mut DryPager,
+    cache: &CacheState,
+    scratch: &mut [bool],
+    i: usize,
+    ops: &mut Vec<TraceOp>,
+) {
+    let mut c = i;
+    while c > 0 && !scratch[c] && !cache.boundaries[c] {
+        c -= 1;
+    }
+    for j in c..i {
+        pg.ensure_unit(model, j + 1, ops);
+        ops.push(TraceOp::Read { unit: j + 1 });
+        pg.release_unit(model, j + 1, ops);
+        if !scratch[j + 1] && !cache.boundaries[j + 1] {
+            scratch[j + 1] = true;
+        }
+    }
+    // The final `layer_fwd(i)` runs under the outer loop's ensure; its
+    // parameter read is the phase-1 read the caller records.
+}
+
+fn emit_unit(
+    model: &SymModel,
+    u: usize,
+    slot_of: &HashMap<usize, usize>,
+    ops: &mut Vec<TraceOp>,
+) {
+    for &i in &model.unit_params[u] {
+        let slot = slot_of.get(&i).copied().unwrap_or(usize::MAX);
+        ops.push(TraceOp::Emit { slot, idx: i });
+    }
+}

@@ -1,0 +1,963 @@
+//! `hift plancheck` — static schedule & memory-model verification over the
+//! full configuration lattice.
+//!
+//! HiFT's memory claims (peak parameter residency = one group + staged
+//! prefetch + the walk's transient units; gradient residency = the single
+//! largest tensor) and its determinism guarantees are decidable from the
+//! plan alone: the strategy × m × act-ckpt × offload × prefetch ×
+//! precision × workers lattice is finite and the scheduler / pager / sink
+//! state machines are deterministic.  This module derives the complete
+//! step plan for every lattice point using only shapes and byte counts
+//! ([`dry`]), then replays it through an *independent* verifier that
+//! asserts, statically, every property the `contracts` checkers assert
+//! dynamically:
+//!
+//! | rule              | invariant                                          | runtime twin                        |
+//! |-------------------|----------------------------------------------------|-------------------------------------|
+//! | `ledger-conserve` | page-in/out balance, nothing resident past end-run | `OffloadLedger::check_conservation` |
+//! | `peak-bound`      | peak residency ≤ `memmodel` structural bound       | `tests/offload.rs` counter asserts  |
+//! | `grad-peak`       | grad residency = max single tensor (or group sum under deferred f16) | `LedgerStats::note_grad_resident` |
+//! | `evicted-read`    | no read/update of an evicted master                | `PagedStore::take` missing-page err |
+//! | `pinned-evict`    | pinned-through-update units never paged out        | `UnitPager` pin flags               |
+//! | `prefetch-overlap`| prefetch never overlaps a fused in-place update    | pager requested/pinned flags        |
+//! | `emit-order`      | gradient emit order = manifest order, descending   | `contracts::EmitChecker`            |
+//! | `sink-quiesce`    | optimizer sink drains every grad/state byte        | `OffloadLedger::check_sink_quiesced`|
+//! | `resume-align`    | `fast_forward(t)` reproduces step t exactly        | resume tests                        |
+//! | `exclusion`       | offload×workers / MeZO×offload rejected            | `set_workers`/`set_offload` bails   |
+//!
+//! The generator carries fault-injection knobs ([`Inject`]) that corrupt
+//! the *plan*; the verifier shares no state with them, so an injected run
+//! failing is positive proof the gate can catch a real regression.
+
+pub mod dry;
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::backend::manifest::Manifest;
+use crate::backend::{ActCkpt, Precision};
+use crate::contracts::EmitChecker;
+use crate::coordinator::{HiftScheduler, LrSchedule, SchedulerCfg, UpdateStrategy};
+use crate::memmodel::account::paged_param_bound_bytes;
+use crate::optim::OffloadLedger;
+use crate::ser::{self, Value};
+use crate::tensor::paged::{Compression, OffloadCfg, PageEvent};
+
+use dry::SymModel;
+
+/// Fixed learning rate used for symbolic plans (resume-alignment compares
+/// `lr` bit-for-bit, so generator and verifier must agree on the schedule).
+pub(crate) const PLAN_LR: f32 = 0.1;
+
+/// Cap on recorded violations per plan — injected faults can fire on every
+/// release of every step; a handful is plenty of evidence.
+const MAX_VIOLATIONS: usize = 64;
+
+/// Fault-injection knobs.  Each corrupts the generated plan in one specific
+/// way; the verifier must flag it (regression tests assert this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Inject {
+    #[default]
+    None,
+    /// Suppress the first page-out event (state changes, trace doesn't).
+    DropEvict,
+    /// Let `release_unit` evict tensors pinned through the update.
+    EvictPinned,
+    /// Post an async prefetch for a tensor pinned under the fused update.
+    PrefetchPinned,
+    /// Swap the first two gradient emits of every step.
+    SwapEmits,
+    /// Defer (hoard) gradients even when loss scaling is off.
+    HoardGrads,
+}
+
+impl Inject {
+    pub fn parse(s: &str) -> Result<Inject> {
+        Ok(match s {
+            "none" => Inject::None,
+            "drop-evict" => Inject::DropEvict,
+            "evict-pinned" => Inject::EvictPinned,
+            "prefetch-pinned" => Inject::PrefetchPinned,
+            "swap-emits" => Inject::SwapEmits,
+            "hoard-grads" => Inject::HoardGrads,
+            other => bail!(
+                "unknown injection {other:?} (want none|drop-evict|evict-pinned|\
+                 prefetch-pinned|swap-emits|hoard-grads)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Inject::None => "none",
+            Inject::DropEvict => "drop-evict",
+            Inject::EvictPinned => "evict-pinned",
+            Inject::PrefetchPinned => "prefetch-pinned",
+            Inject::SwapEmits => "swap-emits",
+            Inject::HoardGrads => "hoard-grads",
+        }
+    }
+}
+
+/// Strategy family axis — MeZO rides along only for the mutual-exclusion
+/// rule (its zeroth-order probes mutate parameters in place, which the
+/// paging tier must never interleave with).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Hift,
+    Mezo,
+}
+
+/// One point of the configuration lattice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatticePoint {
+    pub family: Family,
+    pub strategy: UpdateStrategy,
+    pub m: usize,
+    pub act_ckpt: ActCkpt,
+    pub offload: OffloadCfg,
+    pub precision: Precision,
+    pub workers: usize,
+}
+
+impl LatticePoint {
+    /// Stable human/machine-readable name (used as the JSON key).
+    pub fn name(&self) -> String {
+        format!(
+            "{}|{}|m={}|ckpt={}|offload={}|prec={}|workers={}",
+            match self.family {
+                Family::Hift => "hift",
+                Family::Mezo => "mezo",
+            },
+            self.strategy.name(),
+            self.m,
+            self.act_ckpt.name(),
+            self.offload.name(),
+            self.precision.name(),
+            self.workers,
+        )
+    }
+
+    /// Whether this point exercises the paging tier at all.
+    pub fn paged(&self) -> bool {
+        self.offload.enabled && self.workers <= 1
+    }
+}
+
+/// One derived step: the scheduler's decision plus the ordered event trace
+/// the streamed walk produces for it.
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    pub step: u64,
+    pub units: Vec<usize>,
+    /// Units staged for the *next* step (peeked after `next()`, exactly as
+    /// `Hift::step` does).  Empty on step 1: the pager attaches lazily
+    /// inside the first group run, after staging was requested.
+    pub staged: Vec<usize>,
+    pub lr: f32,
+    pub sweep_boundary: bool,
+    pub ops: Vec<TraceOp>,
+}
+
+impl PlanStep {
+    /// Just the paging events, in order — the stream
+    /// `NativeBackend::take_offload_trace` must reproduce.
+    pub fn page_events(&self) -> Vec<PageEvent> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Page(ev) => Some(*ev),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Just the gradient emits `(slot, param_idx)`, in order.
+    pub fn emits(&self) -> Vec<(usize, usize)> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::Emit { slot, idx } => Some((*slot, *idx)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// One event of the derived trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// A steady-state paging action (shared vocabulary with the real pager).
+    Page(PageEvent),
+    /// The compute walk reads unit `unit`'s parameters.
+    Read { unit: usize },
+    /// A gradient for parameter `idx` is handed to the update sink as `slot`.
+    Emit { slot: usize, idx: usize },
+    /// The pager's end-of-run point: pins lift here, so evictions after
+    /// this marker are the legitimate post-update page-outs.
+    EndRun,
+}
+
+/// A full static plan for one lattice point.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Whether the sink defers grads to step end (f16 loss-scaling path).
+    pub deferred: bool,
+    pub steps: Vec<PlanStep>,
+}
+
+/// A verified-property failure.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub step: u64,
+    pub detail: String,
+}
+
+/// Byte-level facts the verifier proved for one plan.
+#[derive(Debug, Clone, Default)]
+pub struct PlanMetrics {
+    pub peak_param_bytes: u64,
+    pub bound_bytes: u64,
+    pub peak_grad_bytes: u64,
+    pub expected_grad_bytes: u64,
+    pub page_ins: u64,
+    pub page_outs: u64,
+    pub prefetches: u64,
+    pub emits: u64,
+}
+
+/// Outcome of verifying one plan: per-rule assertion counts + violations.
+#[derive(Debug, Clone, Default)]
+pub struct Verification {
+    pub metrics: PlanMetrics,
+    pub checks: BTreeMap<&'static str, u64>,
+    pub violations: Vec<Violation>,
+}
+
+impl Verification {
+    fn check(&mut self, rule: &'static str, step: u64, ok: bool, detail: impl FnOnce() -> String) {
+        *self.checks.entry(rule).or_insert(0) += 1;
+        if !ok && self.violations.len() < MAX_VIOLATIONS {
+            self.violations.push(Violation { rule, step, detail: detail() });
+        }
+    }
+}
+
+/// Static mirror of the runtime mutual exclusions (`set_workers` /
+/// `set_offload` bails, MeZO's in-place probe constraint) plus the
+/// degenerate-value guards the CLI enforces at parse time.
+pub fn validate_point(p: &LatticePoint) -> Result<()> {
+    if p.workers == 0 {
+        bail!("--workers must be >= 1 (1 = the plain serial walk)");
+    }
+    if p.m == 0 {
+        bail!("-m must be >= 1 (one unit per step is the finest schedule)");
+    }
+    if p.offload.enabled && p.workers > 1 {
+        bail!("offload x workers exclusion: the sharded walk bypasses the unit pager");
+    }
+    if p.family == Family::Mezo && p.offload.enabled {
+        bail!("MeZO x offload exclusion: in-place perturbation probes cannot run over paged masters");
+    }
+    Ok(())
+}
+
+/// Derive the static plan for one lattice point (see [`dry`]).
+pub fn generate_plan(
+    manifest: &Manifest,
+    point: &LatticePoint,
+    n_steps: u64,
+    inject: Inject,
+) -> Result<Plan> {
+    dry::generate_plan(manifest, point, n_steps, inject)
+}
+
+/// Replay `plan` through the independent verifier.  Shares no state with
+/// the generator beyond the manifest: every rule below re-derives the
+/// expected machine state from the event stream itself.
+pub fn verify_plan(manifest: &Manifest, point: &LatticePoint, plan: &Plan) -> Result<Verification> {
+    let model = SymModel::new(manifest)?;
+    let vinfo = manifest.variant("base")?;
+    let mut out = Verification::default();
+    let paging = point.paged();
+    let n = model.param_bytes.len();
+
+    // --- replayed pager state -------------------------------------------
+    let mut managed = vec![false; n];
+    for idxs in &model.unit_params {
+        for &i in idxs {
+            managed[i] = true;
+        }
+    }
+    // Managed tensors start on host (initial placement, not an event).
+    let mut resident: Vec<bool> = managed.iter().map(|m| !m).collect();
+    let mut requested = vec![false; n];
+    let mut device_bytes: u64 = 0;
+    let mut peak_param: u64 = 0;
+    let mut ledger = OffloadLedger::default();
+
+    // --- replayed update-sink state (FusedApply over AdamW) --------------
+    let mut sink_ledger = OffloadLedger::default();
+    let mut state_seen = vec![false; n];
+    let mut peak_grad: u64 = 0;
+    let mut expected_grad: u64 = 0;
+
+    // --- structural residency bound over the *actual* schedule -----------
+    let schedule: Vec<(Vec<usize>, Vec<usize>)> = plan
+        .steps
+        .iter()
+        .enumerate()
+        .map(|(t, s)| (s.units.clone(), staged_eff(point, t, s).to_vec()))
+        .collect();
+    let walk_slots = if point.act_ckpt.seg_len(model.n_layers).is_some() { 2 } else { 1 };
+    let bound = if paging {
+        paged_param_bound_bytes(&model.unit_bytes, &schedule, walk_slots)
+    } else {
+        0
+    };
+
+    for (t, step) in plan.steps.iter().enumerate() {
+        let sn = step.step;
+        let keep_units = staged_eff(point, t, step);
+        let mut pinned = vec![false; n];
+        for &u in &step.units {
+            for &i in &model.unit_params[u] {
+                pinned[i] = true;
+            }
+        }
+        let mut keep = vec![false; n];
+        for &u in keep_units {
+            for &i in &model.unit_params[u] {
+                keep[i] = true;
+            }
+        }
+
+        // Slot table exactly as `run_group_streamed` builds it.
+        let mut slots: HashMap<String, usize> = HashMap::new();
+        for &u in &step.units {
+            for &i in &model.unit_params[u] {
+                let slot = slots.len();
+                slots.insert(vinfo.params[i].name.clone(), slot);
+            }
+        }
+        let mut checker = EmitChecker::new(vinfo, &slots)?;
+        let mut deferred: Vec<usize> = Vec::new();
+        let mut grad_resident: u64 = 0;
+
+        for op in &step.ops {
+            match *op {
+                TraceOp::Page(PageEvent::Prefetch { idx }) => {
+                    out.metrics.prefetches += 1;
+                    out.check("prefetch-overlap", sn, paging && point.offload.prefetch, || {
+                        format!("prefetch of {} posted with async prefetch disabled", pname(vinfo, idx))
+                    });
+                    // Prefetching a *non-resident* pinned tensor is how
+                    // staging works; the hazard is a fetch posted while the
+                    // device master is live — resident and, worst case,
+                    // pinned under the fused in-place update.
+                    out.check("prefetch-overlap", sn, !resident[idx], || {
+                        if pinned[idx] {
+                            format!(
+                                "prefetch of {} overlaps the fused in-place update (resident and pinned)",
+                                pname(vinfo, idx)
+                            )
+                        } else {
+                            format!("prefetch of resident master {}", pname(vinfo, idx))
+                        }
+                    });
+                    out.check("prefetch-overlap", sn, !requested[idx], || {
+                        format!("duplicate prefetch request for {}", pname(vinfo, idx))
+                    });
+                    requested[idx] = true;
+                }
+                TraceOp::Page(PageEvent::Admit { idx }) => {
+                    out.metrics.page_ins += 1;
+                    if resident[idx] {
+                        out.check("ledger-conserve", sn, false, || {
+                            format!("{} paged in while already resident (double page-in)", pname(vinfo, idx))
+                        });
+                    } else {
+                        resident[idx] = true;
+                        requested[idx] = false;
+                        device_bytes += model.param_bytes[idx];
+                        peak_param = peak_param.max(device_bytes);
+                        ledger.page_in(model.param_bytes[idx]);
+                    }
+                }
+                TraceOp::Page(PageEvent::Evict { idx }) => {
+                    out.metrics.page_outs += 1;
+                    out.check("pinned-evict", sn, !pinned[idx], || {
+                        format!("{} paged out while pinned through the update", pname(vinfo, idx))
+                    });
+                    if resident[idx] {
+                        resident[idx] = false;
+                        device_bytes = device_bytes.saturating_sub(model.param_bytes[idx]);
+                        ledger.page_out(model.param_bytes[idx]);
+                    } else {
+                        out.check("ledger-conserve", sn, false, || {
+                            format!("{} paged out while not resident (double page-out)", pname(vinfo, idx))
+                        });
+                    }
+                }
+                TraceOp::Read { unit } => {
+                    if paging {
+                        for &i in &model.unit_params[unit] {
+                            out.check("evicted-read", sn, resident[i], || {
+                                format!("unit {unit} read touches evicted master {}", pname(vinfo, i))
+                            });
+                        }
+                    }
+                }
+                TraceOp::EndRun => {
+                    pinned.iter_mut().for_each(|p| *p = false);
+                }
+                TraceOp::Emit { slot, idx } => {
+                    out.metrics.emits += 1;
+                    if paging {
+                        out.check("evicted-read", sn, resident[idx], || {
+                            format!("update of evicted master {}", pname(vinfo, idx))
+                        });
+                    }
+                    if let Err(e) = checker.observe(slot, &vinfo.params[idx].name) {
+                        out.check("emit-order", sn, false, || e.to_string());
+                    }
+                    let g = model.param_bytes[idx];
+                    sink_ledger.grad_in(g);
+                    grad_resident += g;
+                    peak_grad = peak_grad.max(grad_resident);
+                    if plan.deferred {
+                        deferred.push(idx);
+                    } else {
+                        apply_update(&mut sink_ledger, idx, &mut state_seen, &model.param_bytes);
+                        sink_ledger.grad_out(g);
+                        grad_resident -= g;
+                    }
+                }
+            }
+        }
+
+        // Step boundary: the sink finishes (draining any deferred grads),
+        // the emit checker proves completeness, the pager's end-of-run
+        // state must leave nothing resident except the staged next group.
+        for idx in deferred.drain(..) {
+            apply_update(&mut sink_ledger, idx, &mut state_seen, &model.param_bytes);
+            sink_ledger.grad_out(model.param_bytes[idx]);
+            grad_resident -= model.param_bytes[idx];
+        }
+        if let Err(e) = checker.finalize() {
+            out.check("emit-order", sn, false, || e.to_string());
+        }
+        if let Err(e) = sink_ledger.check_sink_quiesced() {
+            out.check("sink-quiesce", sn, false, || e.to_string());
+        } else {
+            out.check("sink-quiesce", sn, true, String::new);
+        }
+        if paging {
+            for i in 0..n {
+                out.check("ledger-conserve", sn, !(managed[i] && resident[i] && !keep[i]), || {
+                    format!(
+                        "{} still resident past end-of-step without being staged",
+                        pname(vinfo, i)
+                    )
+                });
+            }
+            if let Err(e) = ledger.check_conservation() {
+                out.check("ledger-conserve", sn, false, || e.to_string());
+            }
+        }
+
+        // Per-step expected gradient residency.
+        let step_param_bytes: Vec<u64> = step
+            .units
+            .iter()
+            .flat_map(|&u| model.unit_params[u].iter().map(|&i| model.param_bytes[i]))
+            .collect();
+        expected_grad = expected_grad.max(if point.precision.needs_loss_scaling() {
+            step_param_bytes.iter().sum()
+        } else {
+            step_param_bytes.iter().copied().max().unwrap_or(0)
+        });
+    }
+
+    // --- whole-plan rules -------------------------------------------------
+    if paging {
+        out.check("peak-bound", 0, peak_param <= bound, || {
+            format!("peak param residency {peak_param} exceeds structural bound {bound}")
+        });
+    }
+    out.check("grad-peak", 0, peak_grad == expected_grad, || {
+        format!("peak grad residency {peak_grad} != expected {expected_grad} (max single tensor, or group sum under deferred f16)")
+    });
+
+    // Resume alignment: a fresh scheduler fast-forwarded to t must plan
+    // step t identically (checkpoint/resume takes exactly this path).
+    let k = model.n_units.div_ceil(point.m.max(1));
+    let samples =
+        [0usize, k.saturating_sub(1), k, k + 1, 2 * k, plan.steps.len().saturating_sub(1)];
+    let mut done: Vec<usize> = Vec::new();
+    for &t in &samples {
+        if t >= plan.steps.len() || done.contains(&t) {
+            continue;
+        }
+        done.push(t);
+        let mut sched = HiftScheduler::new(
+            SchedulerCfg {
+                m: point.m,
+                strategy: point.strategy,
+                schedule: LrSchedule::Const { lr: PLAN_LR },
+            },
+            model.n_units,
+        );
+        sched.fast_forward(t as u64);
+        let replay = sched.next();
+        let want = &plan.steps[t];
+        let ok = replay.step == want.step
+            && replay.units == want.units
+            && replay.lr == want.lr
+            && replay.sweep_boundary == want.sweep_boundary;
+        out.check("resume-align", want.step, ok, || {
+            format!(
+                "fast_forward({t}) replans step {} as units {:?} lr {} boundary {} (plan had {:?} lr {} boundary {})",
+                replay.step, replay.units, replay.lr, replay.sweep_boundary,
+                want.units, want.lr, want.sweep_boundary
+            )
+        });
+    }
+
+    out.metrics.peak_param_bytes = peak_param;
+    out.metrics.bound_bytes = bound;
+    out.metrics.peak_grad_bytes = peak_grad;
+    out.metrics.expected_grad_bytes = expected_grad;
+    Ok(out)
+}
+
+/// Effective staged set for step `t`: empty on the first step (the pager
+/// attaches lazily *after* staging was requested) and in sync offload mode
+/// (`stage_unit` is prefetch-only); the plan's staged units otherwise.
+fn staged_eff<'a>(point: &LatticePoint, t: usize, step: &'a PlanStep) -> &'a [usize] {
+    if t == 0 || !point.paged() || !point.offload.prefetch {
+        &[]
+    } else {
+        &step.staged
+    }
+}
+
+/// Replay `FusedApply::apply_now`'s ledger traffic for one AdamW update:
+/// page in the (m, v) moments — zero bytes before the tensor's first-ever
+/// update — allocate any growth, page the post-update state back out.
+fn apply_update(led: &mut OffloadLedger, idx: usize, state_seen: &mut [bool], param_bytes: &[u64]) {
+    let post = 2 * param_bytes[idx]; // two f32 moments per f32 parameter
+    let pre = if state_seen[idx] { post } else { 0 };
+    led.page_in(pre);
+    led.alloc_on_device(post - pre);
+    led.page_out(post);
+    state_seen[idx] = true;
+}
+
+fn pname(vinfo: &crate::backend::manifest::VariantInfo, idx: usize) -> String {
+    vinfo.params.get(idx).map_or_else(|| format!("param#{idx}"), |p| p.name.clone())
+}
+
+/// Enumerate the full lattice for a model with `n_units` layer units.
+/// MeZO points are included only on the offload-enabled slice — every one
+/// must be *rejected* (the exclusion rule), never planned.
+pub fn enumerate_lattice(n_units: usize) -> Vec<LatticePoint> {
+    let strategies = [
+        UpdateStrategy::Bottom2Up,
+        UpdateStrategy::Top2Down,
+        UpdateStrategy::Random { seed: 7 },
+    ];
+    let acts = [ActCkpt::None, ActCkpt::EveryK(1), ActCkpt::EveryK(2), ActCkpt::Sqrt];
+    let offloads = [
+        OffloadCfg { enabled: false, compress: Compression::Lossless, prefetch: false },
+        OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: false },
+        OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: true },
+        OffloadCfg { enabled: true, compress: Compression::F16, prefetch: false },
+        OffloadCfg { enabled: true, compress: Compression::F16, prefetch: true },
+    ];
+    let precisions = [Precision::F32, Precision::Bf16, Precision::F16];
+    let mut points = Vec::new();
+    for &strategy in &strategies {
+        for m in 1..=n_units {
+            for &act_ckpt in &acts {
+                for &offload in &offloads {
+                    for &precision in &precisions {
+                        for workers in [1usize, 2] {
+                            points.push(LatticePoint {
+                                family: Family::Hift,
+                                strategy,
+                                m,
+                                act_ckpt,
+                                offload,
+                                precision,
+                                workers,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for offload in offloads.into_iter().filter(|o| o.enabled) {
+        points.push(LatticePoint {
+            family: Family::Mezo,
+            strategy: UpdateStrategy::Bottom2Up,
+            m: 1,
+            act_ckpt: ActCkpt::None,
+            offload,
+            precision: Precision::F32,
+            workers: 1,
+        });
+    }
+    points
+}
+
+/// Per-point outcome in the lattice report.
+#[derive(Debug, Clone)]
+pub enum PointStatus {
+    /// Plan derived and every rule held.
+    Verified,
+    /// Statically rejected, as the exclusion rules demand.
+    Rejected(String),
+    /// At least one rule was violated.
+    Failed,
+}
+
+#[derive(Debug, Clone)]
+pub struct PointReport {
+    pub point: LatticePoint,
+    pub status: PointStatus,
+    pub steps: u64,
+    pub metrics: Option<PlanMetrics>,
+    pub violations: Vec<Violation>,
+}
+
+/// Whole-lattice result: the machine-readable proof artifact's source.
+#[derive(Debug)]
+pub struct LatticeReport {
+    pub preset: String,
+    pub inject: Inject,
+    pub points: Vec<PointReport>,
+    pub checks: BTreeMap<&'static str, u64>,
+    pub verified: usize,
+    pub rejected: usize,
+    pub failed: usize,
+}
+
+impl LatticeReport {
+    pub fn ok(&self) -> bool {
+        self.failed == 0
+    }
+}
+
+/// Verify every lattice point.  `steps` overrides the per-point default of
+/// two full sweeps plus two wraparound steps (`2k + 2`).
+pub fn check_lattice(manifest: &Manifest, inject: Inject, steps: Option<u64>) -> Result<LatticeReport> {
+    let mut report = LatticeReport {
+        preset: manifest.preset.clone(),
+        inject,
+        points: Vec::new(),
+        checks: BTreeMap::new(),
+        verified: 0,
+        rejected: 0,
+        failed: 0,
+    };
+    for point in enumerate_lattice(manifest.n_units) {
+        let expect_reject = (point.offload.enabled && point.workers > 1)
+            || (point.family == Family::Mezo && point.offload.enabled);
+        *report.checks.entry("exclusion").or_insert(0) += 1;
+        let entry = match (validate_point(&point), expect_reject) {
+            (Err(e), true) => {
+                report.rejected += 1;
+                PointReport {
+                    point,
+                    status: PointStatus::Rejected(e.to_string()),
+                    steps: 0,
+                    metrics: None,
+                    violations: Vec::new(),
+                }
+            }
+            (Err(e), false) => {
+                report.failed += 1;
+                PointReport {
+                    point,
+                    status: PointStatus::Failed,
+                    steps: 0,
+                    metrics: None,
+                    violations: vec![Violation {
+                        rule: "exclusion",
+                        step: 0,
+                        detail: format!("valid point rejected: {e}"),
+                    }],
+                }
+            }
+            (Ok(()), true) => {
+                report.failed += 1;
+                PointReport {
+                    point,
+                    status: PointStatus::Failed,
+                    steps: 0,
+                    metrics: None,
+                    violations: vec![Violation {
+                        rule: "exclusion",
+                        step: 0,
+                        detail: "mutually-exclusive point was not rejected".into(),
+                    }],
+                }
+            }
+            (Ok(()), false) => {
+                let k = manifest.n_units.div_ceil(point.m) as u64;
+                let n_steps = steps.unwrap_or(2 * k + 2);
+                let plan = generate_plan(manifest, &point, n_steps, inject)?;
+                let v = verify_plan(manifest, &point, &plan)?;
+                for (rule, c) in &v.checks {
+                    *report.checks.entry(rule).or_insert(0) += *c;
+                }
+                let status = if v.violations.is_empty() {
+                    report.verified += 1;
+                    PointStatus::Verified
+                } else {
+                    report.failed += 1;
+                    PointStatus::Failed
+                };
+                PointReport {
+                    point,
+                    status,
+                    steps: n_steps,
+                    metrics: Some(v.metrics),
+                    violations: v.violations,
+                }
+            }
+        };
+        report.points.push(entry);
+    }
+    Ok(report)
+}
+
+/// Render the report as the `plancheck.json` proof artifact (schema 1).
+pub fn report_json(report: &LatticeReport) -> Value {
+    let mut rules = ser::Obj::new();
+    for (rule, checks) in &report.checks {
+        let violations: u64 = report
+            .points
+            .iter()
+            .flat_map(|p| &p.violations)
+            .filter(|v| v.rule == *rule)
+            .count() as u64;
+        rules.insert(
+            *rule,
+            Value::obj(vec![
+                ("checks", Value::Num(*checks as f64)),
+                ("violations", Value::Num(violations as f64)),
+            ]),
+        );
+    }
+    let configs: Vec<Value> = report
+        .points
+        .iter()
+        .map(|p| {
+            let mut o = ser::Obj::new();
+            o.insert("name", Value::Str(p.point.name()));
+            o.insert(
+                "status",
+                Value::Str(
+                    match &p.status {
+                        PointStatus::Verified => "verified",
+                        PointStatus::Rejected(_) => "rejected",
+                        PointStatus::Failed => "failed",
+                    }
+                    .into(),
+                ),
+            );
+            o.insert("steps", Value::Num(p.steps as f64));
+            if let PointStatus::Rejected(why) = &p.status {
+                o.insert("reason", Value::Str(why.clone()));
+            }
+            if let Some(m) = &p.metrics {
+                o.insert(
+                    "metrics",
+                    Value::obj(vec![
+                        ("peak_param_bytes", Value::Num(m.peak_param_bytes as f64)),
+                        ("bound_bytes", Value::Num(m.bound_bytes as f64)),
+                        ("peak_grad_bytes", Value::Num(m.peak_grad_bytes as f64)),
+                        ("page_ins", Value::Num(m.page_ins as f64)),
+                        ("page_outs", Value::Num(m.page_outs as f64)),
+                        ("prefetches", Value::Num(m.prefetches as f64)),
+                        ("emits", Value::Num(m.emits as f64)),
+                    ]),
+                );
+            }
+            if !p.violations.is_empty() {
+                o.insert(
+                    "violations",
+                    Value::Arr(
+                        p.violations
+                            .iter()
+                            .map(|v| {
+                                Value::obj(vec![
+                                    ("rule", Value::Str(v.rule.into())),
+                                    ("step", Value::Num(v.step as f64)),
+                                    ("detail", Value::Str(v.detail.clone())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            Value::Obj(o)
+        })
+        .collect();
+    Value::obj(vec![
+        ("schema", Value::Str("plancheck/1".into())),
+        ("preset", Value::Str(report.preset.clone())),
+        ("inject", Value::Str(report.inject.name().into())),
+        ("configs_total", Value::Num(report.points.len() as f64)),
+        ("verified", Value::Num(report.verified as f64)),
+        ("rejected_invalid", Value::Num(report.rejected as f64)),
+        ("failed", Value::Num(report.failed as f64)),
+        ("rules", Value::Obj(rules)),
+        ("configs", Value::Arr(configs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+
+    fn manifest() -> Manifest {
+        NativeBackend::preset("tiny", 42).expect("tiny preset").manifest().clone()
+    }
+
+    fn point(offload: OffloadCfg) -> LatticePoint {
+        LatticePoint {
+            family: Family::Hift,
+            strategy: UpdateStrategy::Bottom2Up,
+            m: 2,
+            act_ckpt: ActCkpt::None,
+            offload,
+            precision: Precision::F32,
+            workers: 1,
+        }
+    }
+
+    fn host(prefetch: bool) -> OffloadCfg {
+        OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch }
+    }
+
+    #[test]
+    fn clean_lattice_verifies_everywhere() {
+        let m = manifest();
+        let report = check_lattice(&m, Inject::None, None).unwrap();
+        assert!(report.points.len() > 100, "lattice too small: {}", report.points.len());
+        assert!(report.verified > 0 && report.rejected > 0);
+        for p in &report.points {
+            assert!(
+                p.violations.is_empty(),
+                "clean config {} violated: {:?}",
+                p.point.name(),
+                p.violations
+            );
+        }
+        assert!(report.ok());
+    }
+
+    #[test]
+    fn every_injection_is_caught() {
+        let m = manifest();
+        for inject in [
+            Inject::DropEvict,
+            Inject::EvictPinned,
+            Inject::PrefetchPinned,
+            Inject::SwapEmits,
+            Inject::HoardGrads,
+        ] {
+            let report = check_lattice(&m, inject, Some(4)).unwrap();
+            assert!(
+                report.failed > 0,
+                "injected fault {:?} slipped past the verifier",
+                inject
+            );
+        }
+    }
+
+    #[test]
+    fn injected_faults_name_the_right_rule() {
+        let m = manifest();
+        let cases = [
+            (Inject::DropEvict, "ledger-conserve", host(false)),
+            (Inject::EvictPinned, "pinned-evict", host(false)),
+            (Inject::PrefetchPinned, "prefetch-overlap", host(true)),
+            (Inject::SwapEmits, "emit-order", host(false)),
+            (Inject::HoardGrads, "grad-peak", host(false)),
+        ];
+        for (inject, rule, offload) in cases {
+            let p = point(offload);
+            let plan = generate_plan(&m, &p, 4, inject).unwrap();
+            let v = verify_plan(&m, &p, &plan).unwrap();
+            assert!(
+                v.violations.iter().any(|viol| viol.rule == rule),
+                "{inject:?} should trip {rule}, got {:?}",
+                v.violations
+            );
+        }
+    }
+
+    #[test]
+    fn exclusions_are_enforced() {
+        let mut p = point(host(false));
+        p.workers = 2;
+        assert!(validate_point(&p).unwrap_err().to_string().contains("offload x workers"));
+        let mut p = point(host(false));
+        p.family = Family::Mezo;
+        assert!(validate_point(&p).unwrap_err().to_string().contains("MeZO"));
+        let mut p = point(host(false));
+        p.workers = 0;
+        assert!(validate_point(&p).unwrap_err().to_string().contains("--workers"));
+        let mut p = point(host(false));
+        p.m = 0;
+        assert!(validate_point(&p).unwrap_err().to_string().contains("-m"));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let m = manifest();
+        let report = check_lattice(&m, Inject::None, Some(3)).unwrap();
+        let v = report_json(&report);
+        assert_eq!(v.get("schema").as_str(), Some("plancheck/1"));
+        assert_eq!(
+            v.get("configs_total").as_usize(),
+            Some(report.points.len())
+        );
+        assert_eq!(v.get("failed").as_usize(), Some(0));
+        let text = ser::emit(&v);
+        let back = ser::parse(&text).unwrap();
+        assert_eq!(back.get("verified").as_usize(), Some(report.verified));
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let m = manifest();
+        let p = point(host(true));
+        let a = generate_plan(&m, &p, 6, Inject::None).unwrap();
+        let b = generate_plan(&m, &p, 6, Inject::None).unwrap();
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.units, sb.units);
+            assert_eq!(sa.ops, sb.ops);
+        }
+    }
+
+    #[test]
+    fn grad_peak_is_max_single_tensor_when_streaming() {
+        let m = manifest();
+        let p = point(host(false));
+        let plan = generate_plan(&m, &p, 6, Inject::None).unwrap();
+        let v = verify_plan(&m, &p, &plan).unwrap();
+        assert!(v.violations.is_empty(), "{:?}", v.violations);
+        // tiny: largest tensor is head.w / tok_emb (vocab x d_model) = 64*32*4.
+        assert_eq!(v.metrics.peak_grad_bytes, 64 * 32 * 4);
+    }
+}

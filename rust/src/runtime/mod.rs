@@ -149,7 +149,10 @@ impl Runtime {
         args.push(&tgt_buf);
         args.push(&w_buf);
 
-        let exe = self.exes.get(artifact).expect("ensured above");
+        let exe = self
+            .exes
+            .get(artifact)
+            .with_context(|| format!("artifact {artifact} not compiled before execution"))?;
         let t0 = Instant::now();
         let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
         let exec_time = t0.elapsed();

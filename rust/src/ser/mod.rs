@@ -6,4 +6,4 @@
 
 mod json;
 
-pub use json::{emit, emit_pretty, parse, JsonError, Value};
+pub use json::{emit, emit_pretty, parse, JsonError, Obj, Value};

@@ -89,10 +89,10 @@ impl Tensor {
     pub fn from_le_bytes(bytes: &[u8], shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         assert!(bytes.len() >= n * 4, "buffer too small: {} < {}", bytes.len(), n * 4);
-        let mut data = Vec::with_capacity(n);
-        for i in 0..n {
-            data.push(f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap()));
-        }
+        let data = bytes[..n * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
         Tensor { data, shape: shape.to_vec() }
     }
 

@@ -423,6 +423,26 @@ impl Drop for PagedStore {
 // UnitPager — layer-unit policy over a TensorSet
 // ---------------------------------------------------------------------------
 
+/// One steady-state paging action, at parameter-tensor granularity — the
+/// shared event vocabulary of the real pager trace
+/// ([`UnitPager::set_tracing`]) and the static plans `plancheck` derives.
+/// The initial placement at [`UnitPager::attach`] is setup, not paging, and
+/// is not an event (matching the ledger, which skips it too).  Whether a
+/// posted page-in *lands* before the walk blocks on it (hit vs miss) is
+/// timing, not schedule, so it is deliberately not part of an event's
+/// identity — the sequence below is fully deterministic for a given
+/// configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageEvent {
+    /// Parameter `idx` admitted to the arena (one ledger page-in).
+    Admit { idx: usize },
+    /// Parameter `idx` evicted to the host pool (one ledger page-out).
+    Evict { idx: usize },
+    /// Async page-in posted for `idx` (prefetch mode only; no arena
+    /// residency change until the matching `Admit`).
+    Prefetch { idx: usize },
+}
+
 /// A snapshot of the pager's accounting, used by the backend to fold deltas
 /// into its [`crate::backend::RuntimeStats`].
 #[derive(Debug, Clone, Copy, Default)]
@@ -485,6 +505,9 @@ pub struct UnitPager {
     prefetch_hits: u64,
     prefetch_misses: u64,
     stall_nanos: u64,
+    /// Steady-state event trace, recorded only while tracing is on
+    /// (`plancheck` cross-validation; off by default — zero steady cost).
+    trace: Option<Vec<PageEvent>>,
 }
 
 impl UnitPager {
@@ -508,11 +531,29 @@ impl UnitPager {
             prefetch_hits: 0,
             prefetch_misses: 0,
             stall_nanos: 0,
+            trace: None,
         }
     }
 
     pub fn cfg(&self) -> OffloadCfg {
         self.cfg
+    }
+
+    /// Start/stop recording the steady-state [`PageEvent`] stream.  Turning
+    /// tracing on clears any previous recording.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.trace = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Drain the recorded events (empty when tracing is off).
+    pub fn take_trace(&mut self) -> Vec<PageEvent> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    fn note(&mut self, ev: PageEvent) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(ev);
+        }
     }
 
     /// Is the pager attached to this parameter set's lineage?
@@ -604,6 +645,7 @@ impl UnitPager {
                 self.requested[idx] = true;
                 self.buffer_bytes += self.full_bytes[idx] as u64;
                 self.peak_buffer_bytes = self.peak_buffer_bytes.max(self.buffer_bytes);
+                self.note(PageEvent::Prefetch { idx });
             }
         }
     }
@@ -711,6 +753,7 @@ impl UnitPager {
             self.requested[idx] = false;
             self.buffer_bytes -= self.full_bytes[idx] as u64;
         }
+        self.note(PageEvent::Admit { idx });
         Ok(())
     }
 
@@ -722,6 +765,7 @@ impl UnitPager {
         self.peak_host_bytes = self.peak_host_bytes.max(self.host_bytes);
         self.store.store(idx, data)?;
         self.resident[idx] = false;
+        self.note(PageEvent::Evict { idx });
         Ok(())
     }
 

@@ -1,0 +1,176 @@
+//! Mutation-style negative tests for the runtime contract checkers
+//! (ISSUE 10 satellite): take the *correct* event stream a real HiFT step
+//! produces — derived from the static plan, the same stream
+//! `tests/plancheck.rs` proves the backend emits — mutate it the way a
+//! buggy backend would, and assert each checker kills the mutant with the
+//! message docs/CONTRACTS.md promises.
+//!
+//! The checkers themselves compile unconditionally (only their hot-path
+//! call sites are feature-gated), so these tests run in the default build.
+
+use std::collections::HashMap;
+
+use hift::backend::{
+    ActCkpt, Compression, ExecBackend, NativeBackend, OffloadCfg, Precision, VariantInfo,
+};
+use hift::contracts::EmitChecker;
+use hift::coordinator::UpdateStrategy;
+use hift::optim::OffloadLedger;
+use hift::plancheck::{generate_plan, Family, Inject, LatticePoint};
+
+/// One whole-network group (m = n_units on the tiny preset), so a single
+/// step's emission stream covers every unit boundary the checker guards.
+fn whole_net_point() -> LatticePoint {
+    LatticePoint {
+        family: Family::Hift,
+        strategy: UpdateStrategy::Bottom2Up,
+        m: 4,
+        act_ckpt: ActCkpt::None,
+        offload: OffloadCfg { enabled: false, compress: Compression::Lossless, prefetch: false },
+        precision: Precision::F32,
+        workers: 1,
+    }
+}
+
+/// The correct `(slot, name)` stream for one tiny whole-network step, plus
+/// the slot map and variant it was built against.
+fn tiny_seam() -> (VariantInfo, HashMap<String, usize>, Vec<(usize, String)>) {
+    let be = NativeBackend::preset("tiny", 42).unwrap();
+    let manifest = be.manifest().clone();
+    let vinfo = manifest.variant("base").unwrap().clone();
+    let plan = generate_plan(&manifest, &whole_net_point(), 1, Inject::None).unwrap();
+    let step = &plan.steps[0];
+    let slot_param: Vec<usize> =
+        step.units.iter().flat_map(|&u| vinfo.unit_indices(u)).collect();
+    let slots: HashMap<String, usize> =
+        slot_param.iter().enumerate().map(|(s, &p)| (vinfo.params[p].name.clone(), s)).collect();
+    let emits: Vec<(usize, String)> = step
+        .emits()
+        .iter()
+        .map(|&(slot, idx)| (slot, vinfo.params[idx].name.clone()))
+        .collect();
+    (vinfo, slots, emits)
+}
+
+/// Replay a (possibly mutated) stream; `Ok` only if every observation and
+/// the coverage finalize pass.
+fn replay(
+    vinfo: &VariantInfo,
+    slots: &HashMap<String, usize>,
+    emits: &[(usize, String)],
+) -> hift::Result<()> {
+    let mut checker = EmitChecker::new(vinfo, slots)?;
+    for (slot, name) in emits {
+        checker.observe(*slot, name)?;
+    }
+    checker.finalize()
+}
+
+#[test]
+fn unmutated_stream_is_accepted() {
+    let (vinfo, slots, emits) = tiny_seam();
+    assert!(emits.len() > 4, "tiny preset should stream many gradients");
+    replay(&vinfo, &slots, &emits).expect("the plan-derived stream is the correct one");
+}
+
+/// Every adjacent transposition of the correct stream — the minimal
+/// out-of-order-emit mutants — must be rejected, and the kill messages must
+/// include each ordering rule at least once.
+#[test]
+fn every_adjacent_transposition_is_killed() {
+    let (vinfo, slots, emits) = tiny_seam();
+    let mut messages = Vec::new();
+    for i in 0..emits.len() - 1 {
+        let mut mutant = emits.clone();
+        mutant.swap(i, i + 1);
+        match replay(&vinfo, &slots, &mutant) {
+            Ok(()) => panic!("swapping emits {i} and {} must not pass", i + 1),
+            Err(err) => messages.push(err.to_string()),
+        }
+    }
+    assert!(
+        messages.iter().any(|m| m.contains("out of manifest order")),
+        "no within-unit jump among the mutants: {messages:?}"
+    );
+    assert!(
+        messages.iter().any(|m| m.contains("mid-block")),
+        "no mid-block unit entry among the mutants: {messages:?}"
+    );
+}
+
+#[test]
+fn ascending_unit_order_is_killed() {
+    let (vinfo, slots, emits) = tiny_seam();
+    // The embedding unit's first slot (slot 0 — units concatenate in
+    // ascending order in the slot map), then the head's first slot: a
+    // strictly ascending walk, the mirror image of the contract.
+    let mut checker = EmitChecker::new(&vinfo, &slots).unwrap();
+    let (emb_slot, emb_name) =
+        emits.iter().find(|(s, _)| *s == 0).expect("slot 0 is in the stream");
+    checker.observe(*emb_slot, emb_name).unwrap();
+    let (head_slot, head_name) = &emits[0];
+    let err = checker.observe(*head_slot, head_name).unwrap_err();
+    assert!(err.to_string().contains("not strictly descending"), "{err}");
+}
+
+#[test]
+fn duplicated_and_dropped_emits_are_killed() {
+    let (vinfo, slots, emits) = tiny_seam();
+    // Duplicate the first emission.
+    let mut doubled = emits.clone();
+    doubled.insert(1, emits[0].clone());
+    let err = replay(&vinfo, &slots, &doubled).unwrap_err();
+    assert!(err.to_string().contains("emitted twice"), "{err}");
+    // Drop the last: coverage must notice at finalize.
+    let mut dropped = emits.clone();
+    dropped.pop();
+    let err = replay(&vinfo, &slots, &dropped).unwrap_err();
+    assert!(err.to_string().contains("never emitted"), "{err}");
+}
+
+/// Over-releasing gradients — the grad-side double page-out — must show up
+/// as a conservation inequality, not wrap silently.
+#[test]
+fn gradient_over_release_breaks_conservation() {
+    let mut ledger = OffloadLedger::new();
+    ledger.grad_in(64);
+    ledger.grad_out(64);
+    ledger.check_conservation().expect("balanced in/out conserves");
+    ledger.grad_out(64); // the mutant: a second release of the same bytes
+    let err = ledger.check_conservation().unwrap_err();
+    assert!(err.to_string().contains("gradient conservation breach"), "{err}");
+}
+
+/// Paging out device state twice trips the resident-bytes guard (the
+/// device-side double page-out); debug builds stop it at the call site.
+#[test]
+#[cfg(debug_assertions)]
+fn double_page_out_is_caught_at_the_call_site() {
+    let panic = std::panic::catch_unwind(|| {
+        let mut ledger = OffloadLedger::new();
+        ledger.page_in(128);
+        ledger.page_out(128);
+        ledger.page_out(128);
+    })
+    .expect_err("the second page-out must not be accepted");
+    let msg = panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("paging out more than resident"), "{msg}");
+}
+
+#[test]
+fn sink_quiesce_catches_hoarded_grads_and_unpaged_state() {
+    let mut hoarder = OffloadLedger::new();
+    hoarder.grad_in(32);
+    hoarder.check_conservation().expect("a resident gradient still conserves");
+    let err = hoarder.check_sink_quiesced().unwrap_err();
+    assert!(err.to_string().contains("still resident"), "{err}");
+
+    let mut lingerer = OffloadLedger::new();
+    lingerer.page_in(128);
+    let err = lingerer.check_sink_quiesced().unwrap_err();
+    assert!(err.to_string().contains("still on device"), "{err}");
+}

@@ -1,0 +1,257 @@
+//! Static-plan ↔ real-backend cross-validation (ISSUE 10 acceptance).
+//!
+//! For a sampled set of verified lattice points, the statically derived
+//! plan from `hift::plancheck` is replayed through the *real*
+//! `NativeBackend` with paging-event tracing on, and the measured streams
+//! must match the symbolic ones **event for event**:
+//!
+//! * `NativeBackend::take_offload_trace()` (every Prefetch / Admit / Evict
+//!   the pager actually performed, in order) == the plan step's
+//!   `page_events()`;
+//! * the `(slot, name)` sequence a recording sink observes == the plan
+//!   step's `emits()` mapped through the manifest;
+//! * the update-sink ledger's measured `peak_grad_resident_bytes` == the
+//!   verifier's proven `peak_grad_bytes`, and the pager's measured
+//!   `peak_param_resident_bytes` == the proven `peak_param_bytes` (which
+//!   the verifier already bounded by the memmodel's structural bound).
+//!
+//! Run in CI with `--features contracts` under `HIFT_CHECK=1` so the
+//! runtime checkers (emission order, ledger conservation) are armed on the
+//! same steps the static verifier signed off.
+
+use hift::backend::{
+    ActCkpt, Batch, Compression, ExecBackend, NativeBackend, OffloadCfg, Precision,
+};
+use hift::coordinator::{HiftScheduler, LrSchedule, SchedulerCfg, UpdateStrategy};
+use hift::optim::{self, FusedApply, NonFinitePolicy, OffloadLedger, OptimCfg, OptimKind};
+use hift::plancheck::{generate_plan, verify_plan, Family, Inject, LatticePoint};
+use hift::rng::Pcg32;
+use hift::tensor::{Tensor, TensorSet};
+
+const NO_OFFLOAD: OffloadCfg =
+    OffloadCfg { enabled: false, compress: Compression::Lossless, prefetch: false };
+const HOST_SYNC: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: false };
+const HOST_PREFETCH: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::Lossless, prefetch: true };
+const HOST_F16_SYNC: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::F16, prefetch: false };
+const HOST_F16_PREFETCH: OffloadCfg =
+    OffloadCfg { enabled: true, compress: Compression::F16, prefetch: true };
+
+/// Deterministic one-sequence batch (same idiom as `tests/offload.rs`).
+fn small_batch(vocab: usize, s: usize, seed: u64) -> Batch {
+    let mut rng = Pcg32::seeded(seed);
+    let mut b = Batch::new(1, s);
+    for t in &mut b.tokens {
+        *t = rng.below(vocab) as i32;
+    }
+    for t in &mut b.targets {
+        *t = rng.below(vocab) as i32;
+    }
+    for w in &mut b.weights {
+        *w = 1.0;
+    }
+    b
+}
+
+fn point(
+    strategy: UpdateStrategy,
+    m: usize,
+    act_ckpt: ActCkpt,
+    offload: OffloadCfg,
+    precision: Precision,
+    workers: usize,
+) -> LatticePoint {
+    LatticePoint { family: Family::Hift, strategy, m, act_ckpt, offload, precision, workers }
+}
+
+/// The sampled lattice points the acceptance criteria call for (≥ 8):
+/// every strategy, sync + prefetch + f16-compressed paging, every
+/// activation-checkpoint policy, the single-group edge (m = n_units), the
+/// deferred f16 sink, and the no-offload sharded walk (emit-only trace).
+fn sampled_points() -> Vec<LatticePoint> {
+    use UpdateStrategy::{Bottom2Up, Random, Top2Down};
+    vec![
+        point(Bottom2Up, 1, ActCkpt::None, HOST_SYNC, Precision::F32, 1),
+        point(Bottom2Up, 2, ActCkpt::None, HOST_PREFETCH, Precision::F32, 1),
+        point(Top2Down, 1, ActCkpt::Sqrt, HOST_F16_PREFETCH, Precision::F32, 1),
+        point(Random { seed: 7 }, 3, ActCkpt::EveryK(1), HOST_F16_SYNC, Precision::F32, 1),
+        point(Bottom2Up, 2, ActCkpt::EveryK(2), HOST_PREFETCH, Precision::Bf16, 1),
+        point(Top2Down, 2, ActCkpt::Sqrt, HOST_SYNC, Precision::F16, 1),
+        point(Random { seed: 3 }, 4, ActCkpt::None, HOST_PREFETCH, Precision::F32, 1),
+        point(Bottom2Up, 3, ActCkpt::EveryK(1), HOST_F16_PREFETCH, Precision::F32, 1),
+        point(Bottom2Up, 2, ActCkpt::None, NO_OFFLOAD, Precision::F32, 2),
+    ]
+}
+
+/// A pass-through sink that records the `(slot, name)` emission sequence
+/// the backend's streamed backward actually produced, then forwards each
+/// gradient to the real `FusedApply`.
+struct RecordingSink<'a> {
+    inner: FusedApply<'a>,
+    emits: Vec<(usize, String)>,
+}
+
+impl hift::backend::GradSink for RecordingSink<'_> {
+    fn grad(
+        &mut self,
+        slot: usize,
+        name: &str,
+        grad: Tensor,
+        params: &mut TensorSet,
+    ) -> hift::Result<()> {
+        self.emits.push((slot, name.to_string()));
+        self.inner.grad(slot, name, grad, params)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.inner.resident_bytes()
+    }
+
+    fn finish(&mut self, params: &mut TensorSet) -> hift::Result<()> {
+        self.inner.finish(params)
+    }
+}
+
+/// Generate + statically verify the plan for `pt`, then drive the real
+/// backend through the same schedule and compare the measured event
+/// streams step by step.
+fn cross_validate(pt: &LatticePoint) {
+    let label = pt.name();
+
+    // --- the static side --------------------------------------------------
+    let mut be = NativeBackend::preset("tiny", 42).unwrap();
+    let manifest = be.manifest().clone();
+    let k = manifest.n_units.div_ceil(pt.m) as u64;
+    let n_steps = 2 * k + 2; // two full sweeps + a boundary crossing
+    let plan = generate_plan(&manifest, pt, n_steps, Inject::None).unwrap();
+    let verdict = verify_plan(&manifest, pt, &plan).unwrap();
+    assert!(
+        verdict.violations.is_empty(),
+        "[{label}] static verifier rejected the clean plan: {:?}",
+        verdict.violations
+    );
+
+    // --- the real side ----------------------------------------------------
+    if pt.offload.enabled {
+        be.set_offload(pt.offload).unwrap();
+    }
+    if pt.workers > 1 {
+        be.set_workers(pt.workers).unwrap();
+    }
+    be.set_act_ckpt(pt.act_ckpt).unwrap();
+    be.set_offload_tracing(true);
+    let mut params = be.load_params("base").unwrap();
+    let vinfo = manifest.variant("base").unwrap();
+    let unit_params: Vec<Vec<usize>> =
+        (0..manifest.n_units).map(|u| vinfo.unit_indices(u)).collect();
+    let mut sched = HiftScheduler::new(
+        SchedulerCfg {
+            m: pt.m,
+            strategy: pt.strategy,
+            schedule: LrSchedule::Const { lr: 0.1 }, // == plancheck's PLAN_LR
+        },
+        manifest.n_units,
+    );
+    let mut opt = optim::build(OptimCfg::new(OptimKind::AdamW), vinfo.params.len());
+    let mut ledger = OffloadLedger::new();
+    let batch = small_batch(manifest.config.vocab, manifest.config.seq_len, 9);
+    // Events are precision-invariant (compute width changes float values,
+    // never the walk), so the backend runs at its default f32 width; the
+    // sink policy is the one thing precision selects, mirrored here.
+    let policy = if plan.deferred {
+        NonFinitePolicy::SkipStep
+    } else {
+        NonFinitePolicy::SkipTensor
+    };
+
+    for (t, planned) in plan.steps.iter().enumerate() {
+        let real = sched.next();
+        assert_eq!(real.units, planned.units, "[{label}] step {t}: schedule diverged");
+        assert_eq!(real.lr, planned.lr, "[{label}] step {t}: lr diverged");
+        assert_eq!(
+            real.sweep_boundary, planned.sweep_boundary,
+            "[{label}] step {t}: sweep boundary diverged"
+        );
+        be.prefetch_units(&sched.peek_next());
+
+        let slot_param: Vec<usize> =
+            planned.units.iter().flat_map(|&u| unit_params[u].iter().copied()).collect();
+        let mut sink = RecordingSink {
+            inner: FusedApply::new(&mut *opt, Some(&mut ledger), &slot_param, 1.0, planned.lr)
+                .non_finite(policy),
+            emits: Vec::new(),
+        };
+        be.run_group_streamed(&planned.units, &mut params, &batch, &mut sink).unwrap();
+
+        // Paging: every Prefetch / Admit / Evict, in order.
+        let measured = be.take_offload_trace();
+        assert_eq!(
+            measured,
+            planned.page_events(),
+            "[{label}] step {t}: measured paging trace diverged from the static plan"
+        );
+
+        // Emits: the (slot, param) sequence, in order, names included.
+        let expect: Vec<(usize, String)> = planned
+            .emits()
+            .iter()
+            .map(|&(slot, idx)| (slot, vinfo.params[idx].name.clone()))
+            .collect();
+        assert_eq!(
+            sink.emits, expect,
+            "[{label}] step {t}: measured emit sequence diverged from the static plan"
+        );
+    }
+
+    // Byte-level peaks: the verifier's proven numbers are the measured ones.
+    assert_eq!(
+        ledger.peak_grad_resident_bytes, verdict.metrics.peak_grad_bytes,
+        "[{label}] measured peak gradient residency != statically proven peak"
+    );
+    if pt.paged() {
+        let counters = be.offload_counters().expect("offload on, counters exist");
+        assert_eq!(
+            counters.peak_param_resident_bytes, verdict.metrics.peak_param_bytes,
+            "[{label}] measured peak parameter residency != statically proven peak"
+        );
+        assert!(
+            counters.peak_param_resident_bytes <= verdict.metrics.bound_bytes,
+            "[{label}] measured residency {} above the memmodel bound {}",
+            counters.peak_param_resident_bytes,
+            verdict.metrics.bound_bytes
+        );
+    }
+}
+
+#[test]
+fn sampled_plans_replay_exactly_on_the_real_backend() {
+    let pts = sampled_points();
+    assert!(pts.len() >= 8, "acceptance criteria want >= 8 sampled configs");
+    for pt in &pts {
+        cross_validate(pt);
+    }
+}
+
+/// The no-offload sharded point must produce a *silent* pager: no trace at
+/// all, while the emit order still matches the serial plan (the reduce
+/// rendezvous emits in the exact plain-walk order).
+#[test]
+fn sharded_walk_has_no_paging_and_serial_emit_order() {
+    let pt = point(
+        UpdateStrategy::Bottom2Up,
+        2,
+        ActCkpt::None,
+        NO_OFFLOAD,
+        Precision::F32,
+        2,
+    );
+    let be = NativeBackend::preset("tiny", 42).unwrap();
+    let manifest = be.manifest().clone();
+    let plan = generate_plan(&manifest, &pt, 4, Inject::None).unwrap();
+    for step in &plan.steps {
+        assert!(step.page_events().is_empty(), "unpaged plan must contain no page events");
+        assert!(!step.emits().is_empty(), "every step emits its group's gradients");
+    }
+}

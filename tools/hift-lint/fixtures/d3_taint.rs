@@ -1,6 +1,6 @@
 // Fixture: D3 (timing-taint). Linted as if at rust/src/backend/fixture.rs.
-// The assignment on line 16 must be the only finding: `tick` (line 8) is a
-// sanctioned sink that terminates taint, so line 10 stays clean.
+// Findings: line 16 (the `jitter` chain) and line 25 (taint carried across
+// a `move ||` closure edge); marker-named bindings terminate taint.
 
 use std::time::Instant;
 
@@ -15,4 +15,16 @@ pub fn mixes_into_numerics(weights: &mut [f32]) {
     let mut scale = 1.0f64;
     scale = scale + jitter;
     weights[0] *= scale as f32;
+}
+
+pub fn closure_carries_taint(weights: &mut [f32]) {
+    // Taint must survive the move-closure edge: the braced body reads the
+    // clock, so `probe` (and then `v`) is clock-derived.
+    let probe = move || { Instant::now().elapsed().as_secs_f64() };
+    let v = probe();
+    weights[1] = v as f32;
+
+    // Marker-named closure bindings stay sanctioned sinks.
+    let bench_probe = move || { Instant::now().elapsed().as_secs_f64() };
+    let _ = bench_probe();
 }

@@ -276,22 +276,75 @@ fn d3_timing_taint(rel: &str, lex: &FileLex, out: &mut Vec<Finding>) {
         if has_marker(&sp.name) {
             continue;
         }
-        // Statements of this fn only (nested fns analyzed on their own).
-        let idxs: Vec<usize> =
-            (sp.start..=sp.end.min(toks.len() - 1)).filter(|&i| fn_of[i] == Some(si)).collect();
+        // Walk the whole span so brace depth stays balanced across nested
+        // items, but only this fn's own tokens (nested fns are analyzed on
+        // their own) join statements and closure-body scans.
         let mut taint: HashSet<String> = HashSet::new();
         let mut stmt: Vec<usize> = Vec::new();
-        for &i in &idxs {
+        // Open braced-closure bindings: (bound names, body depth, body start).
+        let mut closures: Vec<(Vec<String>, usize, usize)> = Vec::new();
+        let mut depth = 0usize;
+        for i in sp.start..=sp.end.min(toks.len() - 1) {
             let s = toks[i].s.as_str();
-            if s == ";" || s == "{" || s == "}" {
+            if s == "{" {
+                depth += 1;
+                if let Some(names) = d3_closure_binding(toks, &stmt) {
+                    closures.push((names, depth, i + 1));
+                }
                 d3_statement(rel, toks, &stmt, &mut taint, out);
                 stmt.clear();
-            } else {
+            } else if s == "}" {
+                if closures.last().is_some_and(|&(_, d, _)| d == depth) {
+                    // The braced closure body closes.  Taint must survive the
+                    // `|..|` edge: if anything inside read the clock or a
+                    // tainted name, the binding carries it from here on.
+                    if let Some((names, _, start)) = closures.pop() {
+                        let body: Vec<usize> =
+                            (start..i).filter(|&j| fn_of[j] == Some(si)).collect();
+                        if d3_rhs_tainted(toks, &body, &taint) {
+                            taint.extend(names);
+                        }
+                    }
+                }
+                depth = depth.saturating_sub(1);
+                d3_statement(rel, toks, &stmt, &mut taint, out);
+                stmt.clear();
+            } else if s == ";" {
+                d3_statement(rel, toks, &stmt, &mut taint, out);
+                stmt.clear();
+            } else if fn_of[i] == Some(si) {
                 stmt.push(i);
             }
         }
         d3_statement(rel, toks, &stmt, &mut taint, out);
     }
+}
+
+/// `let name = … |…| {` — a braced-closure binding whose body is about to
+/// open.  Returns the bound names, or `None` when the statement isn't a
+/// closure binding or the name is a marker (a sanctioned sink, same rule as
+/// plain `let`).  Requiring the statement to *end* on a `|` / `||` token
+/// keeps bitwise-or rhs (`let x = a | B { .. }`) out.
+fn d3_closure_binding(toks: &[Tok], stmt: &[usize]) -> Option<Vec<String>> {
+    let (&first, &last) = (stmt.first()?, stmt.last()?);
+    if !(toks[first].ident && toks[first].s == "let") {
+        return None;
+    }
+    if toks[last].s != "|" && toks[last].s != "||" {
+        return None;
+    }
+    let eq = stmt.iter().position(|&i| toks[i].s == "=")?;
+    let lhs = &stmt[..eq];
+    if lhs.iter().any(|&i| toks[i].ident && has_marker(&toks[i].s)) {
+        return None;
+    }
+    let names: Vec<String> = lhs
+        .iter()
+        .skip(1)
+        .filter(|&&i| toks[i].ident && toks[i].s != "mut")
+        .map(|&i| toks[i].s.clone())
+        .collect();
+    if names.is_empty() { None } else { Some(names) }
 }
 
 fn d3_rhs_tainted(toks: &[Tok], rhs: &[usize], taint: &HashSet<String>) -> bool {
@@ -499,6 +552,21 @@ mod tests {
         assert_eq!(fs.len(), 1, "{fs:?}");
         assert_eq!(fs[0].lint, "timing-taint");
         assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn d3_taint_crosses_closure_boundaries() {
+        // The braced body reads the clock, so the binding (and everything
+        // derived from calling it) is clock-tainted.
+        let dirty = "fn f(weights: &mut [f32]) {\n    let probe = move || {\n        Instant::now().elapsed().as_secs_f64()\n    };\n    let v = probe();\n    weights[1] = v as f32;\n}\n";
+        let fs = lint("rust/src/bench/exhibits.rs", dirty);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].lint, "timing-taint");
+        assert_eq!(fs[0].line, 6);
+        // Marker-named closure bindings stay sanctioned sinks, and a
+        // bitwise-or rhs with a struct literal is not a closure.
+        let clean = "fn f(w: &mut [f32]) {\n    let bench_probe = move || { Instant::now().elapsed().as_secs_f64() };\n    let x = bench_probe();\n    let _ = x;\n    let flags = BASE | Flags { raw: 1 }.raw;\n    w[0] = flags as f32;\n}\n";
+        assert!(lint("rust/src/bench/exhibits.rs", clean).is_empty());
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! CLI for hift-lint.  Invoked as `cargo xtask lint [--root <dir>]
-//! [--write-baseline]` (the alias lives in `.cargo/config.toml`).
+//! [--write-baseline]` (the alias lives in `.cargo/config.toml`), or as
+//! `cargo xtask plancheck [flags]`, which delegates to
+//! `hift plancheck` — the static schedule & memory-model verifier — so the
+//! static analyses share one CI entry point.
 //!
 //! Exit codes: 0 clean, 1 findings, 2 usage or I/O error.
 
@@ -8,14 +11,35 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn usage() -> ExitCode {
-    eprintln!("usage: cargo xtask lint [--root <repo-root>] [--write-baseline]");
+    eprintln!(
+        "usage: cargo xtask lint [--root <repo-root>] [--write-baseline]\n       \
+         cargo xtask plancheck [--preset P] [--steps N] [--out FILE] [--inject KIND]"
+    );
     ExitCode::from(2)
+}
+
+/// Delegate `cargo xtask plancheck ...` to the hift binary (`hift
+/// plancheck`), passing every flag through verbatim.
+fn run_plancheck(extra: Vec<String>) -> ExitCode {
+    let status = std::process::Command::new(env::var("CARGO").unwrap_or_else(|_| "cargo".into()))
+        .args(["run", "--quiet", "--release", "-p", "hift", "--", "plancheck"])
+        .args(&extra)
+        .status();
+    match status {
+        Ok(s) if s.success() => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("hift-lint: launching `hift plancheck` failed: {e}");
+            ExitCode::from(2)
+        }
+    }
 }
 
 fn main() -> ExitCode {
     let mut args = env::args().skip(1);
     match args.next().as_deref() {
         Some("lint") => {}
+        Some("plancheck") => return run_plancheck(args.collect()),
         _ => return usage(),
     }
     let mut root: Option<PathBuf> = None;

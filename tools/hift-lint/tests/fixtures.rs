@@ -35,7 +35,13 @@ fn d2_hash_iteration_fixture() {
 fn d3_timing_taint_fixture() {
     let src = include_str!("../fixtures/d3_taint.rs");
     let fs = findings("rust/src/backend/fixture.rs", src);
-    assert_eq!(fs, vec![("timing-taint".to_string(), 16)]);
+    // Line 16: plain tainted chain.  Line 25: the taint crossed a braced
+    // `move ||` closure binding (the historical false negative).  The
+    // marker-named `bench_probe` closure stays a sanctioned sink.
+    assert_eq!(
+        fs,
+        vec![("timing-taint".to_string(), 16), ("timing-taint".to_string(), 25)]
+    );
 }
 
 #[test]
